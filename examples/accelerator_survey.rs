@@ -1,0 +1,66 @@
+//! Accelerator survey (Fig. 2 style, extended): every zoo network on every
+//! accelerator substrate, with latency, throughput, energy, and the
+//! dominant bottleneck term — the "generic performance of the AI
+//! accelerators" study of paper §III.
+
+use mpai::accel::{deployed_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
+use mpai::net::models;
+
+fn main() {
+    let accels: Vec<(&str, Box<dyn Accelerator>)> = vec![
+        ("dpu", Box::new(Dpu)),
+        ("tpu", Box::new(Tpu)),
+        ("vpu", Box::new(Vpu)),
+        ("cpu-fp16", Box::new(Cpu::zcu104())),
+        ("cpu-fp32", Box::new(Cpu::devboard())),
+    ];
+
+    for name in [
+        "mobilenet_v2",
+        "resnet50",
+        "inception_v4",
+        "ursonet_full",
+        "ursonet_lite",
+    ] {
+        let g = models::by_name(name).unwrap();
+        println!(
+            "\n{} — {:.2} GMACs, {:.1} M params",
+            name,
+            g.total_macs() as f64 / 1e9,
+            g.total_params() as f64 / 1e6
+        );
+        println!(
+            "  {:<10} {:>11} {:>9} {:>10} {:>12} {:>12}  {}",
+            "accel", "latency ms", "FPS", "energy J", "compute ms", "stream ms", "bottleneck"
+        );
+        for (label, accel) in &accels {
+            let lat = deployed_latency(accel.as_ref(), &g);
+            let compute_ms = lat.layers_s * 1e3;
+            let stream_ms = lat.model.param_stream_s * 1e3;
+            let energy = accel.power().energy_j(lat.total_s(), lat.total_s());
+            let bottleneck = if stream_ms > compute_ms {
+                "param streaming"
+            } else if lat.model.host_io_s * 1e3 > compute_ms {
+                "host link"
+            } else {
+                "compute"
+            };
+            println!(
+                "  {:<10} {:>11.2} {:>9.1} {:>10.2} {:>12.2} {:>12.2}  {}",
+                label,
+                lat.total_ms(),
+                lat.fps(),
+                energy,
+                compute_ms,
+                stream_ms,
+                bottleneck
+            );
+        }
+    }
+    println!(
+        "\nFig. 2 mechanisms visible above: MobileNetV2 fits the TPU SRAM \
+         (compute-bound, fast) but collapses VPU SHAVE utilization \
+         (depthwise); ResNet-50/Inception-V4 overflow TPU SRAM (param \
+         streaming dominates) while the VPU stays compute-bound."
+    );
+}

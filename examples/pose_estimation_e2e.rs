@@ -1,0 +1,74 @@
+//! End-to-end driver (DESIGN.md §6, EXPERIMENTS.md §E2E): the synthetic
+//! camera streams the whole eval set through the full coordinator —
+//! ingest -> preprocess -> batch -> partitioned DPU/VPU execution via PJRT
+//! -> pose decode — for every Table I mode, reporting accuracy, per-stage
+//! host latency, throughput, and the modeled device latency.
+//!
+//! This is the run recorded in EXPERIMENTS.md: it proves all layers compose
+//! (L1 Pallas kernels inside L2 HLO artifacts driven by the L3 coordinator).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use mpai::coordinator::{self, Config, Mode};
+use mpai::pose::EvalSet;
+use mpai::runtime::Manifest;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(Path::new("artifacts"))
+        .context("run `make artifacts` first")?;
+    let eval = Arc::new(EvalSet::load(&manifest.eval_file)?);
+    println!(
+        "e2e pose estimation: {} frames, camera {}x{}, net {:?}\n",
+        eval.len(),
+        eval.frame_w,
+        eval.frame_h,
+        manifest.net_input
+    );
+
+    let profiles = coordinator::profile_modes(&manifest);
+    println!(
+        "{:<10} {:>8} {:>9} | {:>11} {:>11} {:>11} | {:>9} | {:>10}",
+        "mode", "LOCE m", "ORIE deg", "pre ms/f", "inf ms/f", "e2e ms/f", "host FPS", "model ms*"
+    );
+
+    for mode in Mode::ALL {
+        let cfg = Config {
+            artifacts_dir: manifest.dir.clone(),
+            mode: Some(mode),
+            batch_timeout: Duration::from_millis(20),
+            camera_fps: 1000.0, // drive as fast as the host allows
+            frames: eval.len() as u64,
+            pipelined: false,
+        };
+        let backend = coordinator::PjrtBackend::new(&manifest, mode)?;
+        let t0 = Instant::now();
+        let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)?;
+        let wall = t0.elapsed();
+
+        let (loce, orie) = out.telemetry.accuracy();
+        let pre = out.telemetry.preprocess_summary().mean() * 1e3;
+        let inf = out.telemetry.inference_summary().mean() * 1e3;
+        let e2e = out.telemetry.e2e_summary().mean() * 1e3;
+        let fps = out.estimates.len() as f64 / wall.as_secs_f64();
+        println!(
+            "{:<10} {:>8.3} {:>9.2} | {:>11.2} {:>11.2} {:>11.2} | {:>9.1} | {:>10.1}",
+            mode.label(),
+            loce,
+            orie,
+            pre,
+            inf,
+            e2e,
+            fps,
+            profiles[&mode].inference_ms,
+        );
+    }
+    println!(
+        "\n* modeled device inference at paper scale (Table I column); host \
+         columns are measured wall-clock on this testbed's PJRT CPU backend"
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: load the MPAI artifacts, push one camera frame through the
+//! partitioned DPU->VPU pipeline, print the pose and the latency budget.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use mpai::coordinator::{Mode, PjrtBackend, Scheduler};
+use mpai::coordinator::batcher::Batch;
+use mpai::pose::EvalSet;
+use mpai::runtime::Manifest;
+use mpai::sensor::Camera;
+
+fn main() -> Result<()> {
+    // 1. Artifacts: the contract produced by `make artifacts`.
+    let manifest = Manifest::load(Path::new("artifacts"))
+        .context("run `make artifacts` first")?;
+    println!(
+        "manifest: batch={} net_input={:?} artifacts={:?}",
+        manifest.batch,
+        manifest.net_input,
+        manifest.artifacts.keys().collect::<Vec<_>>()
+    );
+
+    // 2. The synthetic camera (streams the build-time eval set).
+    let eval = Arc::new(EvalSet::load(&manifest.eval_file)?);
+    let mut camera = Camera::new(eval, 10.0, 4);
+
+    // 3. The MPAI backend: DPU-side INT8 backbone + VPU-side FP16 heads,
+    //    exactly the two executables the paper's partition deploys.
+    let backend = PjrtBackend::new(&manifest, Mode::Mpai)?;
+    let (h, w, _) = manifest.net_input;
+    let mut scheduler = Scheduler::new(backend, manifest.batch, h, w);
+
+    // 4. One batch of frames through the full path.
+    let frames: Vec<_> = camera.by_ref().collect();
+    let t_ready = frames.last().unwrap().t_capture;
+    let batch = Batch {
+        size: manifest.batch,
+        t_ready,
+        frames,
+    };
+    let estimates = scheduler.process(&batch)?;
+
+    for est in &estimates {
+        println!(
+            "frame {}: loc ({:+.2}, {:+.2}, {:+.2}) m  quat ({:+.3}, {:+.3}, {:+.3}, {:+.3})  \
+             truth z {:+.2} m",
+            est.frame_id,
+            est.loc[0],
+            est.loc[1],
+            est.loc[2],
+            est.quat[0],
+            est.quat[1],
+            est.quat[2],
+            est.quat[3],
+            est.truth.loc[2],
+        );
+    }
+    println!("\n{}", scheduler.telemetry.report());
+    Ok(())
+}

@@ -1,0 +1,272 @@
+"""AOT pipeline: dataset -> train -> calibrate -> QAT -> lower -> artifacts/.
+
+This is the entire build-time python path (`make artifacts`).  It runs once;
+afterwards the Rust coordinator is self-contained: it loads the HLO-text
+artifacts through PJRT and never touches python again (DESIGN.md §2).
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly
+(/opt/xla-example/README.md).  Weights are baked into the HLO as constants
+(``print_large_constants=True`` so the text round-trips them fully).
+
+Outputs (all under --out-dir, default ../artifacts):
+
+    ursonet_fp32.hlo.txt            Table I row: Cortex-A53 FP32
+    ursonet_fp16.hlo.txt            Table I rows: A53 FP16, MyriadX VPU
+    ursonet_dpu_int8.hlo.txt        Table I row: MPSoC DPU   (pow2 PTQ)
+    ursonet_tpu_int8.hlo.txt        Table I row: Edge TPU    (per-channel PTQ)
+    ursonet_mpai_backbone.hlo.txt   Table I row: DPU+VPU, DPU side (QAT INT8)
+    ursonet_mpai_head.hlo.txt       Table I row: DPU+VPU, VPU side (FP16)
+    eval_set.mpt                    64 camera frames + ground-truth poses
+                                    + golden preprocessed frame 0
+    params_fp32.npz / params_qat.npz   checkpoints (cached across runs)
+    calib_stats.json                activation calibration stats
+    manifest.json                   everything the Rust side needs to know
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import dataset, quantize, train, ursonet
+from compile.mpt import write_mpt
+
+BATCH = 4  # fixed artifact batch size (manifest.batch)
+EVAL_SEED = 2024
+EVAL_COUNT = 64
+
+
+# ---------------------------------------------------------------------------
+# Lowering.
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> HLO text with full constants (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(fn, in_specs) -> str:
+    lowered = jax.jit(fn).lower(*in_specs)
+    return to_hlo_text(lowered)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint I/O (plain npz; flat "layer/param" keys).
+# ---------------------------------------------------------------------------
+
+
+def save_params(path: str, params: dict) -> None:
+    flat = {f"{layer}/{k}": np.asarray(v) for layer, p in params.items() for k, v in p.items()}
+    np.savez(path, **flat)
+
+
+def load_params(path: str) -> dict:
+    flat = np.load(path)
+    params: dict = {}
+    for key in flat.files:
+        layer, k = key.split("/")
+        params.setdefault(layer, {})[k] = jnp.asarray(flat[key])
+    return params
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Main pipeline.
+# ---------------------------------------------------------------------------
+
+
+def build(out_dir: str, steps: int, qat_steps: int, eval_count: int, retrain: bool):
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+    report: dict = {"version": 1, "batch": BATCH}
+
+    # -- 1. Eval set (deterministic) ---------------------------------------
+    print("[aot] generating eval set ...", flush=True)
+    frames, locs, quats = dataset.generate_eval_set(EVAL_SEED, eval_count)
+    golden = dataset.preprocess(frames[0])
+    write_mpt(
+        os.path.join(out_dir, "eval_set.mpt"),
+        {
+            "frames": frames,  # (N, 240, 320, 3) u8
+            "loc": locs,  # (N, 3) f32
+            "quat": quats,  # (N, 4) f32
+            "golden_pre0": golden,  # (96, 128, 3) f32 — preprocess parity check
+        },
+    )
+
+    # -- 2. FP32 baseline ---------------------------------------------------
+    fp32_ckpt = os.path.join(out_dir, "params_fp32.npz")
+    if os.path.exists(fp32_ckpt) and not retrain:
+        print("[aot] loading cached FP32 checkpoint", flush=True)
+        params = load_params(fp32_ckpt)
+        fp32_losses = []
+    else:
+        print(f"[aot] training FP32 baseline ({steps} steps) ...", flush=True)
+        params, fp32_losses = train.train_fp32(steps=steps)
+        save_params(fp32_ckpt, params)
+
+    # -- 3. Calibration -----------------------------------------------------
+    print("[aot] calibrating ...", flush=True)
+    calib_rng = np.random.default_rng(EVAL_SEED + 1)
+    calib_x, _, _ = dataset.generate_training_batch(calib_rng, 16)
+    act_stats = quantize.calibrate(params, calib_x)
+    with open(os.path.join(out_dir, "calib_stats.json"), "w") as f:
+        json.dump(act_stats, f, indent=2, sort_keys=True)
+
+    # -- 4. Partition-aware QAT (paper §III) ---------------------------------
+    qat_ckpt = os.path.join(out_dir, "params_qat.npz")
+    if os.path.exists(qat_ckpt) and not retrain:
+        print("[aot] loading cached QAT checkpoint", flush=True)
+        qat_params = load_params(qat_ckpt)
+        qat_losses = []
+    else:
+        print(f"[aot] partition-aware QAT ({qat_steps} steps) ...", flush=True)
+        scales = quantize.act_scales_pow2(act_stats)
+        qat_params, qat_losses = train.train_qat(params, scales, steps=qat_steps)
+        save_params(qat_ckpt, qat_params)
+    # MPAI deploys the QAT weights; its activation scales are re-calibrated
+    # on the fine-tuned model (the Vitis-AI flow re-runs quantize-calibrate
+    # after fine-tuning).
+    qat_act_stats = quantize.calibrate(qat_params, calib_x)
+
+    # -- 5. DeployConfigs (one per Table I arithmetic) ------------------------
+    cfgs = {
+        "fp32": (params, quantize.config_fp32()),
+        "fp16": (params, quantize.config_fp16()),
+        "dpu_int8": (params, quantize.config_dpu_int8(params, act_stats)),
+        "tpu_int8": (params, quantize.config_tpu_int8(params, act_stats)),
+        "mpai": (qat_params, quantize.config_mpai(qat_params, qat_act_stats)),
+    }
+
+    # -- 6. Lower artifacts ---------------------------------------------------
+    h, w, c = ursonet.N_INPUT
+    img_spec = _spec((BATCH, h, w, c))
+    feat_spec = _spec((BATCH, ursonet.FEAT_DIM))
+    artifacts: dict = {}
+
+    def emit(name, fn, in_specs, inputs, outputs):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        print(f"[aot] lowering {name} ...", flush=True)
+        text = lower_variant(fn, in_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+            "sha256": _sha256(path),
+            "chars": len(text),
+        }
+
+    img_io = [{"name": "image", "shape": [BATCH, h, w, c], "dtype": "f32"}]
+    pose_io = [
+        {"name": "loc", "shape": [BATCH, 3], "dtype": "f32"},
+        {"name": "quat", "shape": [BATCH, 4], "dtype": "f32"},
+    ]
+    feat_io = [{"name": "features", "shape": [BATCH, ursonet.FEAT_DIM], "dtype": "f32"}]
+
+    for variant in ("fp32", "fp16", "dpu_int8", "tpu_int8"):
+        p, cfg = cfgs[variant]
+        emit(
+            f"ursonet_{variant}",
+            lambda x, p=p, cfg=cfg: ursonet.forward_deploy(p, x, cfg),
+            [img_spec],
+            img_io,
+            pose_io,
+        )
+
+    p_mpai, cfg_mpai = cfgs["mpai"]
+    emit(
+        "ursonet_mpai_backbone",
+        lambda x: ursonet.forward_deploy_backbone(p_mpai, x, cfg_mpai),
+        [img_spec],
+        img_io,
+        feat_io,
+    )
+    emit(
+        "ursonet_mpai_head",
+        lambda f: ursonet.forward_deploy_head(p_mpai, f, cfg_mpai),
+        [feat_spec],
+        feat_io,
+        pose_io,
+    )
+
+    # -- 7. Python-side truth for the rust cross-check -------------------------
+    print("[aot] evaluating variants (python-side expected metrics) ...", flush=True)
+    expected = {}
+    for variant, (p, cfg) in cfgs.items():
+        fwd = lambda pp, x, cfg=cfg: ursonet.forward_deploy(pp, x, cfg)
+        l, o = train.evaluate(fwd, p, frames, locs, quats, batch=BATCH)
+        expected[variant] = {"loce_m": l, "orie_deg": o}
+        print(f"[aot]   {variant:10s} LOCE {l:.3f} m  ORIE {o:.2f} deg", flush=True)
+
+    # -- 8. Manifest ------------------------------------------------------------
+    manifest = {
+        "version": 1,
+        "batch": BATCH,
+        "net_input": [h, w, c],
+        "camera": [dataset.CAM_H, dataset.CAM_W, 3],
+        "paper_camera": [960, 1280, 3],
+        "artifacts": artifacts,
+        "eval": {"file": "eval_set.mpt", "count": int(frames.shape[0])},
+        "expected_metrics": expected,
+        "quant": {v: quantize.config_summary(cfg) for v, (p, cfg) in cfgs.items()},
+        "layers": {
+            "backbone": list(ursonet.BACKBONE_LAYERS),
+            "head": list(ursonet.HEAD_LAYERS),
+        },
+        "training": {
+            "fp32_steps": steps,
+            "qat_steps": qat_steps,
+            "fp32_final_loss": fp32_losses[-1] if fp32_losses else None,
+            "qat_final_loss": qat_losses[-1] if qat_losses else None,
+            "fp32_loss_curve": fp32_losses,
+            "qat_loss_curve": qat_losses,
+        },
+        "param_count": ursonet.param_count(params),
+        "build_seconds": round(time.time() - t_start, 1),
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] done in {manifest['build_seconds']}s -> {out_dir}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--steps", type=int, default=1500, help="FP32 training steps")
+    ap.add_argument("--qat-steps", type=int, default=400, help="QAT fine-tune steps")
+    ap.add_argument("--eval-count", type=int, default=EVAL_COUNT)
+    ap.add_argument("--retrain", action="store_true", help="ignore cached checkpoints")
+    args = ap.parse_args()
+    build(os.path.abspath(args.out_dir), args.steps, args.qat_steps, args.eval_count, args.retrain)
+
+
+if __name__ == "__main__":
+    main()

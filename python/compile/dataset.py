@@ -1,0 +1,354 @@
+"""Synthetic satellite pose dataset — the "soyuz_easy" substitute.
+
+The paper benchmarks UrsoNet [Proença & Gao, ICRA'20] on the photorealistic
+"soyuz_easy" renders, which are not redistributable.  We substitute a
+procedural renderer whose images are a *deterministic function of the pose*:
+a parametric satellite (box body + two solar panels + antenna dish) is
+ray-traced with a pinhole camera under fixed sun illumination, plus a static
+star field and sensor noise.  This preserves the property the experiment
+measures — pose-estimation error as a function of arithmetic precision —
+because the network must extract the same geometric cues (scale, shading,
+silhouette orientation) that drive LOCE/ORIE on the real dataset
+(DESIGN.md §1).
+
+Conventions
+-----------
+* Camera frame: +z into the scene, +x right, +y down (image rows).
+* Pose = (location t in metres, unit quaternion q = (w, x, y, z), w >= 0)
+  mapping object-frame vectors into the camera frame: v_cam = R(q) v_obj + t.
+* Camera images are 240x320 RGB u8 (the stored eval "camera" resolution;
+  the paper's 1280x960 sensor is represented at 1/4 scale to bound artifact
+  size — the latency models still charge preprocessing at 1280x960, see
+  DESIGN.md §1 "Scaling note").
+* Network input is 96x128 RGB f32 in [0, 1], produced by `preprocess`
+  (bilinear resample + normalize).  rust/src/sensor/preprocess.rs implements
+  the identical resample; parity is asserted via a golden frame in the
+  eval-set artifact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Geometry of the procedural satellite (object frame, metres).
+# ---------------------------------------------------------------------------
+BODY_HALF = np.array([0.45, 0.45, 0.65])  # box half-extents
+# Asymmetric panels (span and albedo) — real spacecraft are not symmetric,
+# and the asymmetry is what makes full-attitude estimation well-posed.
+PANEL_CENTERS = np.array([[1.35, 0.0, 0.0], [-1.0, 0.0, 0.0]])
+PANEL_HALFS = np.array([[0.85, 0.45], [0.5, 0.35]])  # per-panel (x, z) half-ext
+DISH_CENTER = np.array([0.0, -0.6, 0.5])
+DISH_RADIUS = 0.42
+DISH_NORMAL = np.array([0.0, -0.35, 0.937])  # unit-ish, normalized below
+
+# Channel albedos (RGB): grey body, dark-blue vs copper panels, bright dish.
+BODY_ALBEDO = np.array([0.62, 0.60, 0.58])
+PANEL_ALBEDOS = np.array([[0.15, 0.18, 0.42], [0.55, 0.32, 0.12]])
+DISH_ALBEDO = np.array([0.85, 0.85, 0.88])
+
+SUN_DIR = np.array([0.35, -0.5, 0.79])  # light travels +z: the camera-facing side is lit
+AMBIENT = 0.12
+
+CAM_W, CAM_H = 320, 240  # stored camera resolution
+NET_W, NET_H = 128, 96  # network input resolution
+FOCAL = 0.9 * CAM_W  # pinhole focal length in pixels
+
+# Pose sampling ranges ("easy" regime: satellite always well inside frustum,
+# attitude within MAX_ATT_DEG of the canonical camera-facing attitude — the
+# "soyuz_easy" split is likewise the constrained-pose regime).
+Z_RANGE = (4.5, 9.0)
+XY_FRAC = 0.30  # |x|,|y| <= XY_FRAC * z * (half_fov extent)
+MAX_ATT_DEG = 75.0
+
+
+def _normalize(v):
+    return v / np.linalg.norm(v)
+
+
+_DISH_N = _normalize(DISH_NORMAL)
+
+
+def quat_to_rot(q: np.ndarray) -> np.ndarray:
+    """Unit quaternion (w,x,y,z) -> 3x3 rotation matrix."""
+    w, x, y, z = q
+    return np.array(
+        [
+            [1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)],
+            [2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)],
+            [2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)],
+        ]
+    )
+
+
+def random_quat(rng: np.random.Generator) -> np.ndarray:
+    """Uniform random unit quaternion with w >= 0 (canonical double cover)."""
+    q = rng.normal(size=4)
+    q = q / np.linalg.norm(q)
+    if q[0] < 0:
+        q = -q
+    return q
+
+
+def random_attitude(rng: np.random.Generator, max_angle_deg: float = MAX_ATT_DEG):
+    """Random rotation of bounded angle about a uniform random axis, w >= 0."""
+    axis = rng.normal(size=3)
+    axis /= np.linalg.norm(axis)
+    angle = np.radians(rng.uniform(0.0, max_angle_deg))
+    q = np.concatenate([[np.cos(angle / 2)], np.sin(angle / 2) * axis])
+    if q[0] < 0:
+        q = -q
+    return q
+
+
+def sample_pose(rng: np.random.Generator):
+    """Sample one pose (t, q) from the easy regime."""
+    z = rng.uniform(*Z_RANGE)
+    half_span = XY_FRAC * z * (CAM_W / (2 * FOCAL))
+    x = rng.uniform(-half_span, half_span)
+    y = rng.uniform(-half_span, half_span)
+    return np.array([x, y, z]), random_attitude(rng)
+
+
+# ---------------------------------------------------------------------------
+# Ray tracing (vectorized over all pixels of one frame).
+# ---------------------------------------------------------------------------
+
+
+def _ray_grid(w: int, h: int, focal: float) -> np.ndarray:
+    """(h*w, 3) unit ray directions through each pixel center."""
+    cx, cy = (w - 1) / 2.0, (h - 1) / 2.0
+    us, vs = np.meshgrid(np.arange(w), np.arange(h))
+    d = np.stack(
+        [(us - cx) / focal, (vs - cy) / focal, np.ones_like(us, dtype=np.float64)],
+        axis=-1,
+    ).reshape(-1, 3)
+    return d / np.linalg.norm(d, axis=1, keepdims=True)
+
+
+def _intersect_box(o, d, half):
+    """Slab test: ray origin o (3,), dirs d (P,3) vs AABB ±half.
+
+    Returns (t, normal) with t=inf on miss.
+    """
+    with np.errstate(divide="ignore", invalid="ignore"):
+        inv = 1.0 / d
+    t1 = (-half - o) * inv
+    t2 = (half - o) * inv
+    tmin = np.minimum(t1, t2)
+    tmax = np.maximum(t1, t2)
+    t_near = tmin.max(axis=1)
+    t_far = tmax.min(axis=1)
+    hit = (t_near <= t_far) & (t_far > 1e-6)
+    t = np.where(hit & (t_near > 1e-6), t_near, np.inf)
+    # Normal = axis of the entering slab.
+    axis = tmin.argmax(axis=1)
+    sign = -np.sign(np.take_along_axis(d, axis[:, None], axis=1))[:, 0]
+    normal = np.zeros_like(d)
+    normal[np.arange(len(d)), axis] = sign
+    return t, normal
+
+
+def _intersect_rect(o, d, center, normal, u_axis, half_u, half_v):
+    """Thin rectangle: plane hit + 2-D bound check. Returns (t, normal)."""
+    v_axis = np.cross(normal, u_axis)
+    denom = d @ normal
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = ((center - o) @ normal) / denom
+    p = o + t[:, None] * d - center
+    in_u = np.abs(p @ u_axis) <= half_u
+    in_v = np.abs(p @ v_axis) <= half_v
+    hit = (np.abs(denom) > 1e-9) & (t > 1e-6) & in_u & in_v
+    t = np.where(hit, t, np.inf)
+    n = np.where((d @ normal)[:, None] < 0, normal, -normal)
+    return t, np.broadcast_to(n, d.shape).copy()
+
+
+def _intersect_disk(o, d, center, normal, radius):
+    denom = d @ normal
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t = ((center - o) @ normal) / denom
+    p = o + t[:, None] * d - center
+    r2 = (p * p).sum(axis=1) - (p @ normal) ** 2
+    hit = (np.abs(denom) > 1e-9) & (t > 1e-6) & (r2 <= radius * radius)
+    t = np.where(hit, t, np.inf)
+    n = np.where((d @ normal)[:, None] < 0, normal, -normal)
+    return t, np.broadcast_to(n, d.shape).copy()
+
+
+def _star_field(w: int, h: int) -> np.ndarray:
+    """Deterministic sparse star background, (h*w,) intensity in [0,1]."""
+    us, vs = np.meshgrid(np.arange(w), np.arange(h))
+    # Integer hash (xorshift-flavoured) — identical across runs/platforms.
+    hv = (us * 374761393 + vs * 668265263).astype(np.uint32)
+    hv ^= hv >> 13
+    hv = (hv * np.uint32(1274126177)) & np.uint32(0xFFFFFFFF)
+    hv ^= hv >> 16
+    frac = (hv & 0xFFFF).astype(np.float64) / 65535.0
+    stars = np.where(frac > 0.9985, (frac - 0.9985) / 0.0015, 0.0)
+    return stars.reshape(-1)
+
+
+_STARS = {}
+
+
+def render_frame(
+    t: np.ndarray,
+    q: np.ndarray,
+    w: int = CAM_W,
+    h: int = CAM_H,
+    noise_rng: np.random.Generator | None = None,
+    noise_sigma: float = 2.0,
+    hot_pixel_rate: float = 1.5e-3,
+) -> np.ndarray:
+    """Render one RGB u8 frame (h, w, 3) of the satellite at pose (t, q).
+
+    When ``noise_rng`` is given the frame also gets the sensor artifacts of
+    on-orbit imaging: per-frame exposure jitter (auto-exposure hunting,
+    0.6–1.4x) and radiation-induced hot pixels (transient saturated pixels —
+    SEE speckle).  These produce the wide activation dynamic range that
+    makes max-calibrated power-of-two PTQ (the Vitis-AI/DPU flow) lose
+    accuracy in Table I while percentile-calibrated per-channel PTQ (the
+    TFLite/TPU flow) does not (DESIGN.md §1).
+    """
+    focal = 0.9 * w
+    key = (w, h)
+    if key not in _STARS:
+        _STARS[key] = _star_field(w, h)
+    d_cam = _ray_grid(w, h, focal)
+
+    # Transform rays into the object frame: o' = R^T(-t), d' = R^T d.
+    rot = quat_to_rot(q)
+    o_obj = rot.T @ (-t)
+    d_obj = d_cam @ rot  # (P,3) @ (3,3): row-vector form of R^T d
+
+    hits = []
+    tt, nn = _intersect_box(o_obj, d_obj, BODY_HALF)
+    hits.append((tt, nn, BODY_ALBEDO))
+    for c, half, albedo in zip(PANEL_CENTERS, PANEL_HALFS, PANEL_ALBEDOS):
+        tt, nn = _intersect_rect(
+            o_obj,
+            d_obj,
+            c,
+            np.array([0.0, 1.0, 0.0]),
+            np.array([1.0, 0.0, 0.0]),
+            half[0],
+            half[1],
+        )
+        hits.append((tt, nn, albedo))
+    tt, nn = _intersect_disk(o_obj, d_obj, DISH_CENTER, _DISH_N, DISH_RADIUS)
+    hits.append((tt, nn, DISH_ALBEDO))
+
+    t_all = np.stack([h_[0] for h_ in hits], axis=0)  # (prims, P)
+    nearest = t_all.argmin(axis=0)
+    t_best = t_all.min(axis=0)
+    miss = ~np.isfinite(t_best)
+
+    # Shade: Lambertian against the fixed sun, in the camera frame.
+    img = np.zeros((d_cam.shape[0], 3))
+    sun = _normalize(SUN_DIR)
+    for idx, (tt, nn, albedo) in enumerate(hits):
+        sel = (nearest == idx) & ~miss
+        if not sel.any():
+            continue
+        n_cam = nn[sel] @ rot.T  # object->camera normals
+        lam = np.maximum(-(n_cam @ sun), 0.0)
+        img[sel] = (AMBIENT + (1 - AMBIENT) * lam)[:, None] * albedo
+
+    img[miss] = _STARS[key][miss, None] * np.array([0.9, 0.9, 1.0])
+
+    out = np.clip(img * 255.0, 0, 255)
+    if noise_rng is not None:
+        # Exposure jitter (global gain).
+        out = out * noise_rng.uniform(0.6, 1.4)
+        if noise_sigma > 0:
+            out = out + noise_rng.normal(0.0, noise_sigma, out.shape)
+        # Radiation hot pixels: saturate a sparse random set.
+        if hot_pixel_rate > 0:
+            n_pix = out.shape[0]
+            hot = noise_rng.random(n_pix) < hot_pixel_rate
+            out[hot] = noise_rng.uniform(180.0, 255.0, (int(hot.sum()), 1))
+    return np.clip(out, 0, 255).reshape(h, w, 3).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Preprocessing — MUST match rust/src/sensor/preprocess.rs bit-for-bit in
+# algorithm (bilinear, half-pixel centers, clamp-to-edge) if not in float ULPs.
+# ---------------------------------------------------------------------------
+
+
+def preprocess(frame_u8: np.ndarray, out_h: int = NET_H, out_w: int = NET_W) -> np.ndarray:
+    """Camera frame (H,W,3) u8 -> network input (out_h,out_w,3) f32 in [0,1].
+
+    Bilinear resample with half-pixel sample positions (align_corners=False),
+    clamp-to-edge, then scale by 1/255.
+    """
+    h, w, _ = frame_u8.shape
+    sy, sx = h / out_h, w / out_w
+    ys = (np.arange(out_h) + 0.5) * sy - 0.5
+    xs = (np.arange(out_w) + 0.5) * sx - 0.5
+    y0 = np.clip(np.floor(ys).astype(int), 0, h - 1)
+    x0 = np.clip(np.floor(xs).astype(int), 0, w - 1)
+    y1 = np.clip(y0 + 1, 0, h - 1)
+    x1 = np.clip(x0 + 1, 0, w - 1)
+    wy = np.clip(ys - y0, 0.0, 1.0)[:, None, None]
+    wx = np.clip(xs - x0, 0.0, 1.0)[None, :, None]
+    f = frame_u8.astype(np.float32)
+    top = f[y0][:, x0] * (1 - wx) + f[y0][:, x1] * wx
+    bot = f[y1][:, x0] * (1 - wx) + f[y1][:, x1] * wx
+    out = top * (1 - wy) + bot * wy
+    return (out / 255.0).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Batched generation.
+# ---------------------------------------------------------------------------
+
+
+def generate_training_batch(rng: np.random.Generator, batch: int):
+    """Render `batch` frames and return (net inputs, locations, quaternions).
+
+    Training frames go through the same camera-resolution render +
+    preprocess path as evaluation, so train and eval distributions match.
+    """
+    xs = np.zeros((batch, NET_H, NET_W, 3), np.float32)
+    ts = np.zeros((batch, 3), np.float32)
+    qs = np.zeros((batch, 4), np.float32)
+    for i in range(batch):
+        t, q = sample_pose(rng)
+        frame = render_frame(t, q, noise_rng=rng)
+        xs[i] = preprocess(frame)
+        ts[i] = t
+        qs[i] = q
+    return xs, ts, qs
+
+
+def generate_eval_set(seed: int, count: int):
+    """Deterministic eval set: (frames u8 (N,H,W,3), locations, quaternions)."""
+    rng = np.random.default_rng(seed)
+    frames = np.zeros((count, CAM_H, CAM_W, 3), np.uint8)
+    ts = np.zeros((count, 3), np.float32)
+    qs = np.zeros((count, 4), np.float32)
+    for i in range(count):
+        t, q = sample_pose(rng)
+        frames[i] = render_frame(t, q, noise_rng=rng)
+        ts[i] = t
+        qs[i] = q
+    return frames, ts, qs
+
+
+# ---------------------------------------------------------------------------
+# Pose error metrics (paper Table I: LOCE metres, ORIE degrees).
+# ---------------------------------------------------------------------------
+
+
+def loce(t_pred: np.ndarray, t_true: np.ndarray) -> float:
+    """Mean localization error ||t̂ - t||₂ in metres."""
+    return float(np.linalg.norm(t_pred - t_true, axis=-1).mean())
+
+
+def orie(q_pred: np.ndarray, q_true: np.ndarray) -> float:
+    """Mean orientation error 2·acos(|q̂·q|) in degrees."""
+    qp = q_pred / np.linalg.norm(q_pred, axis=-1, keepdims=True)
+    dots = np.clip(np.abs((qp * q_true).sum(axis=-1)), 0.0, 1.0)
+    return float(np.degrees(2.0 * np.arccos(dots)).mean())

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the MPAI reproduction.
+
+Every kernel is authored for the TPU programming model (MXU tiles staged
+through VMEM via BlockSpec) but lowered with ``interpret=True`` so the AOT
+HLO runs on the CPU PJRT client used by the Rust coordinator.  Pure-jnp
+oracles live in :mod:`compile.kernels.ref` and are the correctness signal
+for pytest.
+"""
+
+from compile.kernels.conv2d_int8 import quantized_matmul, conv2d_int8
+from compile.kernels.matmul_fp16 import matmul_fp16, dense_fp16
+from compile.kernels.fakequant import fake_quant_ste
+
+__all__ = [
+    "quantized_matmul",
+    "conv2d_int8",
+    "matmul_fp16",
+    "dense_fp16",
+    "fake_quant_ste",
+]

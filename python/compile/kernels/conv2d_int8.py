@@ -1,0 +1,173 @@
+"""Quantized INT8 convolution as a Pallas MXU-tile kernel.
+
+Hardware adaptation (DESIGN.md §3): the DPUCZDX8G implements INT8 conv with
+fine-grained DSP-block MACs fed by BRAM line buffers.  On TPU the same
+insight — keep the INT8 operands resident in fast on-chip memory and stream
+MAC tiles through the array — maps to:
+
+* im2col the activation patches (L2, outside the kernel) so the conv becomes
+  a (M, K) x (K, N) matmul, the shape the 128x128 MXU consumes natively;
+* BlockSpec tiles A by (BM, BK) and B by (BK, BN) into VMEM — the analogue of
+  the DPU's line-buffer HBM<->BRAM schedule;
+* accumulate in INT32 in a VMEM scratch accumulator across the K grid axis
+  (the DPU's cascaded DSP accumulator chain);
+* fuse dequantization (and optional ReLU) into the write-back, exactly where
+  the DPU's PE write-back stage applies its power-of-two shift.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tile sizes.  128 matches the MXU systolic-array edge;
+# K tiles are larger because INT8 operands cost 1 byte/elem in VMEM.
+# VMEM footprint per grid step at the defaults:
+#   A tile 128x256 i8 (32 KiB) + B tile 256x128 i8 (32 KiB)
+#   + acc 128x128 i32 (64 KiB) + out 128x128 f32 (64 KiB)  ~= 192 KiB << 16 MiB.
+BM = 128
+BN = 128
+BK = 256
+
+
+def _pad_to(x, multiple: int, axis: int):
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _qmm_kernel(a_ref, b_ref, scale_ref, o_ref, acc_ref, *, n_k: int, relu: bool):
+    """One (BM, BN) output tile; grid = (M/BM, N/BN, K/BK), K innermost.
+
+    a_ref:   (BM, BK) int8  VMEM tile of im2col patches
+    b_ref:   (BK, BN) int8  VMEM tile of weights
+    scale_ref: (1, BN) f32  per-output-channel dequant scale tile
+    o_ref:   (BM, BN) f32   output tile
+    acc_ref: (BM, BN) i32   scratch accumulator, live across the K axis
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _writeback():
+        out = acc_ref[...].astype(jnp.float32) * scale_ref[...]
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _adaptive_tiles(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Shrink tiles to the (128-aligned) problem size.
+
+    Perf (EXPERIMENTS.md §Perf L1-1): fixed 128x256 tiles pad small
+    contractions (stem conv has K=27) up to the full tile and burn grid
+    steps; snapping each tile to the 128-aligned problem extent removes the
+    padding FLOPs and cuts grid steps, without changing MXU alignment.
+    """
+    align = lambda v, cap: min(cap, ((v + 127) // 128) * 128)
+    return align(m, bm * 4), align(k, bk * 2), align(n, bn)
+
+
+def quantized_matmul(
+    a_q,
+    b_q,
+    scale,
+    relu: bool = False,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+):
+    """INT8 x INT8 -> INT32 -> dequantized f32 matmul (fused optional ReLU).
+
+    ``a_q``: (M, K) int8; ``b_q``: (K, N) int8;
+    ``scale``: scalar or (N,) f32 — s_a * s_w (per-tensor or per-channel).
+    Returns (M, N) f32.  Tile sizes adapt to the problem shape unless given.
+    """
+    m, k = a_q.shape
+    k2, n = b_q.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {k} vs {k2}")
+    if bm is None or bn is None or bk is None:
+        abm, abk, abn = _adaptive_tiles(m, k, n, BM, BK, BN)
+        bm = bm if bm is not None else abm
+        bk = bk if bk is not None else abk
+        bn = bn if bn is not None else abn
+    scale = jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (n,)).reshape(1, n)
+
+    a_p = _pad_to(_pad_to(a_q, bm, 0), bk, 1)
+    b_p = _pad_to(_pad_to(b_q, bk, 0), bn, 1)
+    s_p = _pad_to(scale, bn, 1)
+    mp, kp = a_p.shape
+    np_ = b_p.shape[1]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k, relu=relu),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.int32)],
+        interpret=True,
+    )(a_p, b_p, s_p)
+    return out[:m, :n]
+
+
+def im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """(N,H,W,C) -> ((N*OH*OW, KH*KW*C) patches, (n, oh, ow)); C fastest.
+
+    This is the L2 half of the conv: XLA fuses the slice/stack/reshape, and
+    the Pallas kernel only ever sees the MXU-shaped matmul.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                xp[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            )
+    stacked = jnp.stack(cols, axis=3)  # (N, OH, OW, KH*KW, C)
+    return stacked.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv2d_int8(
+    x_q, w_q, scale, stride: int = 1, padding: int = 0, relu: bool = False
+):
+    """Quantized conv2d: int8 activations x int8 weights -> f32 output.
+
+    ``x_q``: (N,H,W,Cin) int8; ``w_q``: (KH,KW,Cin,Cout) int8;
+    ``scale``: scalar or (Cout,) f32 (s_x * s_w, per-tensor or per-channel).
+    Returns (N,OH,OW,Cout) f32.
+    """
+    kh, kw, cin, cout = w_q.shape
+    a, (n, oh, ow) = im2col(x_q, kh, kw, stride, padding)
+    b = w_q.reshape(kh * kw * cin, cout)
+    out = quantized_matmul(a, b, scale, relu=relu)
+    return out.reshape(n, oh, ow, cout)

@@ -1,0 +1,108 @@
+"""Fake-quantization with a straight-through estimator (QAT building block).
+
+Partition-aware model training (paper §III: "The MPAI approach (DPU+VPU) is
+configured using partition-aware model training") trains the backbone through
+the INT8 grid the DPU will commit to while the heads stay FP16.  The forward
+pass quantize-dequantizes through the INT8 grid; the backward pass passes the
+gradient straight through inside the clip range (STE).
+
+The forward is a Pallas elementwise kernel so its arithmetic is byte-for-byte
+the one baked into the deployed artifacts; the custom VJP lives at the jnp
+level (Pallas interpret-mode kernels are not differentiated directly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elementwise kernel: flatten to (rows, LANE) tiles. LANE=128 matches the
+# VPU (vector lane) width; rows per tile sized so a tile is ~64 KiB.
+LANE = 128
+ROWS = 128
+
+
+def _fq_kernel(x_ref, scale_ref, o_ref, *, qmin: float, qmax: float):
+    s = scale_ref[0, 0]
+    q = jnp.clip(jnp.round(x_ref[...] / s), qmin, qmax)
+    o_ref[...] = q * s
+
+
+def _fake_quant_fwd_pallas(x, scale, qmin: float, qmax: float):
+    """Quantize-dequantize ``x`` (any shape, f32) through an INT8 grid."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per_tile = ROWS * LANE
+    rem = (-n) % per_tile
+    flat = jnp.pad(flat, (0, rem))
+    tiled = flat.reshape(-1, LANE)
+    rows = tiled.shape[0]
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_fq_kernel, qmin=qmin, qmax=qmax),
+        grid=(rows // ROWS,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=True,
+    )(tiled, scale_arr)
+    return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_quant_ste(x, scale, qmin: float = -128.0, qmax: float = 127.0):
+    """Fake-quantize with straight-through gradient.
+
+    Forward: ``round(clip(x/s)) * s`` on the INT8 grid.
+    Backward: dL/dx = dL/dy inside the representable range, 0 outside
+    (the standard STE); no gradient to ``scale`` (scales come from
+    calibration, as in the Vitis-AI flow).
+    """
+    return _fake_quant_fwd_pallas(x, scale, qmin, qmax)
+
+
+def _fq_fwd(x, scale, qmin, qmax):
+    y = _fake_quant_fwd_pallas(x, scale, qmin, qmax)
+    mask = (x / scale >= qmin) & (x / scale <= qmax)
+    return y, mask
+
+
+def _fq_bwd(qmin, qmax, mask, g):
+    return (jnp.where(mask, g, 0.0), None)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_jnp(x, scale, qmin: float = -128.0, qmax: float = 127.0):
+    """jnp-only fake-quant used inside hot training loops.
+
+    Numerically identical to :func:`fake_quant_ste`'s forward (asserted by
+    python/tests/test_kernels.py) but cheaper to trace: the QAT training loop
+    fake-quantizes every backbone tensor each step, and interpret-mode Pallas
+    inside grad() is needlessly slow on the 1-core testbed.  Deployed
+    artifacts always go through the Pallas path.
+    """
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def fake_quant_jnp_ste(x, scale, qmin: float = -128.0, qmax: float = 127.0):
+    """STE variant of :func:`fake_quant_jnp` for the QAT loss.
+
+    Identity-plus-stop_gradient formulation: forward value equals the
+    fake-quantized tensor; gradient flows straight through where x lies in
+    the representable range and is zero outside it.
+    """
+    y = fake_quant_jnp(x, scale, qmin, qmax)
+    mask = ((x / scale >= qmin) & (x / scale <= qmax)).astype(x.dtype)
+    passthrough = x * mask
+    return passthrough + jax.lax.stop_gradient(y - passthrough)

@@ -1,0 +1,115 @@
+"""FP16 dense / head kernel — the VPU side of the MPAI partition.
+
+Hardware adaptation (DESIGN.md §3): the MyriadX executes the FP16 fully-
+connected head with SHAVE vector units reading weights held resident in the
+2.5 MB CMX scratchpad.  On TPU the CMX-residency trick becomes: tile the
+weight matrix into VMEM blocks and keep each block live across the whole
+batch axis (grid iterates N-tiles outermost, batch rows innermost), driving
+the MXU in f16 with f32 accumulation.
+
+UrsoNet-lite head matrices are tiny (<= 128x64), so a single VMEM block
+covers them; the tiling machinery still matters for the full-size UrsoNet
+head (2048x1024 bottleneck) and is exercised by the hypothesis sweep in
+python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f16 operands: 2 bytes/elem. 128x512 f16 A tile + 512x128 f16 B tile
+# + 128x128 f32 acc ~= 256 KiB VMEM per grid step.
+BM = 128
+BN = 128
+BK = 512
+
+
+def _pad_to(x, multiple: int, axis: int):
+    rem = (-x.shape[axis]) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _mm_fp16_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """FP16 matmul tile with f32 accumulation across the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _writeback():
+        o_ref[...] = acc_ref[...]
+
+
+def matmul_fp16(a, b, bm: int | None = None, bn: int | None = None, bk: int | None = None):
+    """(M,K) x (K,N) in f16 with f32 accumulation -> (M,N) f32.
+
+    Inputs of any float dtype are cast to f16 first — this is the precision
+    commitment of the VPU deployment, applied in the kernel so the AOT HLO
+    carries it.  Tile sizes adapt to the problem shape unless given
+    (EXPERIMENTS.md §Perf L1-1).
+    """
+    a = a.astype(jnp.float16)
+    b = b.astype(jnp.float16)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {k} vs {k2}")
+    if bm is None or bn is None or bk is None:
+        from compile.kernels.conv2d_int8 import _adaptive_tiles
+
+        abm, abk, abn = _adaptive_tiles(m, k, n, BM, BK, BN)
+        bm = bm if bm is not None else abm
+        bk = bk if bk is not None else abk
+        bn = bn if bn is not None else abn
+
+    a_p = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b_p = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = a_p.shape
+    np_ = b_p.shape[1]
+    n_k = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_fp16_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def dense_fp16(x, w, b=None, relu: bool = False):
+    """FP16 dense layer: y = relu?(x @ w + b), accumulated in f32.
+
+    ``x``: (M, K) float; ``w``: (K, N) float; ``b``: (N,) float or None.
+    The bias add + activation stay in f32 (the VPU also accumulates FC in
+    f32 and converts on write-out).
+    """
+    y = matmul_fp16(x, w)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y

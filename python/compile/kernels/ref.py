@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the single source of truth for kernel correctness: pytest asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated shapes.
+They are intentionally written in the most obvious way possible — no tiling,
+no precision tricks — so a mismatch always indicts the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantized_matmul_ref(a_q, b_q, scale, out_dtype=jnp.float32):
+    """INT8 x INT8 -> INT32 accumulate -> dequantize with `scale`.
+
+    ``a_q``: (M, K) int8, ``b_q``: (K, N) int8.
+    ``scale``: scalar or (N,) float32 — per-tensor or per-output-channel.
+    Returns (M, N) ``out_dtype``.
+    """
+    acc = jnp.dot(
+        a_q.astype(jnp.int32),
+        b_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def requantize_ref(acc_i32, scale_in, scale_out):
+    """INT32 accumulator -> INT8 activation (DPU write-back stage).
+
+    value = acc * scale_in; q = clip(round(value / scale_out), -128, 127).
+    """
+    v = acc_i32.astype(jnp.float32) * scale_in / scale_out
+    return jnp.clip(jnp.round(v), -128.0, 127.0).astype(jnp.int8)
+
+
+def matmul_fp16_ref(a, b):
+    """FP16 matmul with FP32 accumulation: (M,K) f16 x (K,N) f16 -> (M,N) f32."""
+    return jnp.dot(
+        a.astype(jnp.float16),
+        b.astype(jnp.float16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fake_quant_ref(x, scale, qmin=-128.0, qmax=127.0):
+    """Fake-quantization: quantize-dequantize through an INT8 grid."""
+    q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+    return q * scale
+
+
+def im2col_ref(x, kh, kw, stride, padding):
+    """Reference im2col: (N,H,W,C) -> (N*OH*OW, KH*KW*C) patches.
+
+    Matches the layout conv2d_int8 feeds to the quantized matmul: the
+    flattened patch iterates (kh, kw, c) fastest-to-slowest = c fastest.
+    """
+    n, h, w, c = x.shape
+    x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            cols.append(patch)
+    # (N, OH, OW, KH*KW, C) -> (N*OH*OW, KH*KW*C)
+    stacked = jnp.stack(cols, axis=3)
+    return stacked.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d_int8_ref(x_q, w_q, scale, stride=1, padding=0):
+    """Reference quantized conv2d.
+
+    ``x_q``: (N,H,W,Cin) int8, ``w_q``: (KH,KW,Cin,Cout) int8,
+    ``scale``: scalar or (Cout,) — dequantization scale s_x * s_w.
+    Returns (N,OH,OW,Cout) float32.
+    """
+    kh, kw, cin, cout = w_q.shape
+    n, h, w_, _ = x_q.shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w_ + 2 * padding - kw) // stride + 1
+    a = im2col_ref(x_q, kh, kw, stride, padding)  # (M, K) int8
+    b = w_q.reshape(kh * kw * cin, cout)  # (K, N) int8
+    out = quantized_matmul_ref(a, b, scale)
+    return out.reshape(n, oh, ow, cout)
+
+
+def random_int8(rng: np.random.Generator, shape):
+    return rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8)

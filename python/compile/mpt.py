@@ -1,0 +1,88 @@
+"""MPT — a minimal multi-tensor binary container (python writer).
+
+The offline environment has no shared serialization crate (no serde, no
+npy/npz reader on the Rust side), so the eval set and golden tensors cross
+the python->rust boundary in a format we fully own:
+
+    magic   4 bytes  b"MPT1"
+    hdr_len u32 LE   length of the JSON header in bytes
+    header  JSON     {"tensors": [{"name", "dtype", "shape", "offset",
+                                   "nbytes"}, ...]}
+    data    raw little-endian tensor bytes, each at its header offset
+            (offsets are relative to the end of the header, 64-byte aligned)
+
+Supported dtypes: "u8", "f32", "i32".  rust/src/util/mpt.rs implements the
+reader; python/tests/test_mpt.py and rust unit tests pin the format from
+both sides.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+_DTYPES = {
+    "u8": np.uint8,
+    "f32": np.float32,
+    "i32": np.int32,
+}
+_NAMES = {np.dtype(v).name: k for k, v in _DTYPES.items()}
+_ALIGN = 64
+
+
+def write_mpt(path: str, tensors: dict) -> None:
+    """Write ``{name: ndarray}`` to ``path`` in MPT1 format.
+
+    Iteration order of the dict is preserved in the header.
+    """
+    entries = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        dt = _NAMES.get(arr.dtype.name)
+        if dt is None:
+            raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+        data = arr.astype(arr.dtype.newbyteorder("<")).tobytes()
+        pad = (-offset) % _ALIGN
+        offset += pad
+        blobs.append((pad, data))
+        entries.append(
+            {
+                "name": name,
+                "dtype": dt,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(data),
+            }
+        )
+        offset += len(data)
+
+    header = json.dumps({"tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(b"MPT1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for pad, data in blobs:
+            f.write(b"\x00" * pad)
+            f.write(data)
+
+
+def read_mpt(path: str) -> dict:
+    """Read an MPT1 file back into ``{name: ndarray}`` (round-trip tests)."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != b"MPT1":
+            raise ValueError(f"bad magic {magic!r}")
+        (hdr_len,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hdr_len).decode("utf-8"))
+        base = f.tell()
+        out = {}
+        for e in header["tensors"]:
+            f.seek(base + e["offset"])
+            raw = f.read(e["nbytes"])
+            arr = np.frombuffer(raw, dtype=_DTYPES[e["dtype"]]).reshape(e["shape"])
+            out[e["name"]] = arr.copy()
+    return out

@@ -1,0 +1,81 @@
+"""L2 profiling: HLO op histogram + size accounting of the AOT artifacts.
+
+The perf pass's L2 instrument (EXPERIMENTS.md §Perf): parses the HLO text
+of each artifact and reports op counts, dot/convolution totals, constant
+bytes, and fusion-relevant stats (elementwise ops that XLA will fuse vs
+structural ops).  Usage:
+
+    python -m compile.profile_hlo [--artifacts DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+from collections import Counter
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[a-z0-9\[\]{},\s]*?\b([a-z][a-z0-9\-]*)\(")
+
+# Ops the XLA CPU backend fuses into loops (cheap); structural ops are the
+# real cost carriers.
+FUSIBLE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "clamp",
+    "round-nearest-even", "convert", "broadcast", "reshape", "select",
+    "compare", "negate", "exponential", "constant", "iota", "slice", "pad",
+    "concatenate", "transpose", "bitcast",
+}
+HEAVY = {"dot", "convolution", "reduce", "reduce-window", "while", "fusion",
+         "custom-call", "dynamic-slice", "dynamic-update-slice", "sort",
+         "gather", "scatter"}
+
+
+def profile_text(text: str) -> dict:
+    """Histogram the ops of one HLO module text."""
+    ops = Counter()
+    for line in text.splitlines():
+        m = _OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    heavy = {k: v for k, v in ops.items() if k in HEAVY}
+    fusible = sum(v for k, v in ops.items() if k in FUSIBLE)
+    other = {k: v for k, v in ops.items() if k not in HEAVY and k not in FUSIBLE}
+    return {
+        "total_ops": sum(ops.values()),
+        "heavy": heavy,
+        "fusible_count": fusible,
+        "other": other,
+        "ops": dict(ops),
+    }
+
+
+def profile_artifact(path: str) -> dict:
+    text = open(path).read()
+    out = profile_text(text)
+    out["chars"] = len(text)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--artifacts",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    args = ap.parse_args()
+    art = os.path.abspath(args.artifacts)
+    for name in sorted(os.listdir(art)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        p = profile_artifact(os.path.join(art, name))
+        heavy = ", ".join(f"{k}={v}" for k, v in sorted(p["heavy"].items()))
+        print(f"{name}: {p['total_ops']} ops ({p['chars']/1e6:.1f} MB text)")
+        print(f"  heavy:   {heavy}")
+        print(f"  fusible: {p['fusible_count']}")
+        if p["other"]:
+            other = ", ".join(f"{k}={v}" for k, v in sorted(p["other"].items()))
+            print(f"  other:   {other}")
+
+
+if __name__ == "__main__":
+    main()

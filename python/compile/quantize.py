@@ -1,0 +1,197 @@
+"""Quantization toolchain — the Vitis-AI / TFLite toolflow substitutes.
+
+The paper deploys the same network through three vendor toolflows, each
+committing to different arithmetic:
+
+* **Vitis AI (DPU)** — INT8, *per-tensor power-of-two* scales for weights and
+  activations (the DPU's write-back stage implements dequantization as a
+  bit-shift).  Coarsest scheme → worst accuracy in Table I (LOCE 0.96 m).
+* **TFLite / Edge TPU** — INT8, *per-output-channel symmetric* weight scales
+  + per-tensor activation scales.  Much finer weight resolution → Table I
+  accuracy close to FP32 (LOCE 0.66 m) *despite the same 8-bit width*.
+* **OpenVINO (VPU)** — FP16 everywhere (LOCE 0.69 m).
+
+Reproducing the *mechanism* of that accuracy spread — scheme granularity,
+not bit width — is the point of this module (DESIGN.md §1).
+
+Calibration runs the FP32 model over a representative batch and records the
+max-abs of every layer's input activation; PTQ then derives scales.  QAT
+(partition-aware training, ursonet.forward_qat) uses the same frozen
+activation scales.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import ursonet
+from compile.ursonet import (
+    ALL_LAYERS,
+    BACKBONE_LAYERS,
+    CONV_LAYERS,
+    HEAD_LAYERS,
+    DeployConfig,
+    LayerQuant,
+)
+
+# ---------------------------------------------------------------------------
+# Calibration.
+# ---------------------------------------------------------------------------
+
+
+def calibrate(params: dict, calib_x: np.ndarray) -> dict:
+    """Run FP32 forward over ``calib_x``; return per-layer activation stats.
+
+    Returns {layer: {"max": max_abs, "p999": 99.9th-percentile_abs}} of the
+    tensor feeding each layer, recorded at the exact point where the deploy
+    graph inserts its quantize op (ursonet.forward_intermediates).
+
+    The two statistics correspond to the two vendor calibration flows:
+    Vitis-AI's default maximal calibrator ("max", used with pow2 scales by
+    the DPU) and TFLite's averaging/trimming calibrator ("p999", used with
+    affine scales by the Edge TPU).  With on-orbit sensor artifacts (hot
+    pixels) in the data, the difference between them is exactly the Table I
+    accuracy spread mechanism.
+    """
+    res = ursonet.forward_intermediates(params, jnp.asarray(calib_x))
+    out = {}
+    for name, a in res["acts"].items():
+        mag = np.abs(np.asarray(a)).ravel()
+        out[name] = {
+            "max": float(mag.max()),
+            "p999": float(np.percentile(mag, 99.9)),
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Scale derivations.
+# ---------------------------------------------------------------------------
+
+
+def pow2_scale(max_abs: float) -> float:
+    """Vitis-AI-style scale: smallest power of two with 127*s >= max_abs."""
+    max_abs = max(float(max_abs), 1e-8)
+    return float(2.0 ** math.ceil(math.log2(max_abs / 127.0)))
+
+
+def affine_scale(max_abs: float) -> float:
+    """TFLite-style symmetric scale: exactly max_abs / 127."""
+    return max(float(max_abs), 1e-8) / 127.0
+
+
+def weight_scale_pow2(w: np.ndarray) -> float:
+    """Per-tensor pow2 weight scale (DPU)."""
+    return pow2_scale(float(np.max(np.abs(w))))
+
+
+def weight_scale_per_channel(w: np.ndarray) -> np.ndarray:
+    """Per-output-channel symmetric scales (TPU).  Last axis = Cout."""
+    flat = np.abs(np.asarray(w)).reshape(-1, w.shape[-1])
+    return np.maximum(flat.max(axis=0), 1e-8) / 127.0
+
+
+def quantize_weight(w: np.ndarray, scale) -> np.ndarray:
+    """Quantize weights to the INT8 grid (returns int8 array)."""
+    return np.clip(np.round(np.asarray(w) / scale), -128, 127).astype(np.int8)
+
+
+def quant_error(w: np.ndarray, scale) -> float:
+    """RMS round-trip error of quantizing ``w`` with ``scale`` (diagnostics)."""
+    w = np.asarray(w)
+    deq = quantize_weight(w, scale).astype(np.float32) * scale
+    return float(np.sqrt(np.mean((deq - w) ** 2)))
+
+
+# ---------------------------------------------------------------------------
+# DeployConfig builders — one per Table I row.
+# ---------------------------------------------------------------------------
+
+
+def config_fp32() -> DeployConfig:
+    return DeployConfig({name: LayerQuant("fp32") for name in ALL_LAYERS})
+
+
+def config_fp16() -> DeployConfig:
+    return DeployConfig({name: LayerQuant("fp16") for name in ALL_LAYERS})
+
+
+def config_dpu_int8(params: dict, act_stats: dict) -> DeployConfig:
+    """Full-network INT8, per-tensor pow2, max calibration (Vitis-AI PTQ):
+    the DPU row."""
+    layers = {}
+    for name in ALL_LAYERS:
+        layers[name] = LayerQuant(
+            "int8",
+            s_x=pow2_scale(act_stats[name]["max"]),
+            s_w=weight_scale_pow2(np.asarray(params[name]["w"])),
+        )
+    return DeployConfig(layers)
+
+
+def config_tpu_int8(params: dict, act_stats: dict) -> DeployConfig:
+    """Full-network INT8, per-channel affine weights + min/max-calibrated
+    per-tensor activations (the TFLite defaults): the TPU row.
+
+    The affine scale is exactly max/127 while the DPU's pow2 scale rounds up
+    to the next power of two (up to 2x coarser), and per-channel weight
+    scales are finer than the DPU's per-tensor one — both effects compound
+    into the Table I accuracy gap.  (A p99.9 percentile calibrator is also
+    recorded in the stats for the ablation in python/tests/test_quantize.py:
+    with radiation hot pixels *trained into* the model, clipping calibration
+    hurts — saturated activations carry signal.)"""
+    layers = {}
+    for name in ALL_LAYERS:
+        layers[name] = LayerQuant(
+            "int8",
+            s_x=affine_scale(act_stats[name]["max"]),
+            s_w=weight_scale_per_channel(np.asarray(params[name]["w"])),
+        )
+    return DeployConfig(layers)
+
+
+def config_mpai(params: dict, act_stats: dict) -> DeployConfig:
+    """The MPAI partition: backbone INT8 pow2 (DPU), heads FP16 (VPU)."""
+    layers = {}
+    for name in BACKBONE_LAYERS:
+        layers[name] = LayerQuant(
+            "int8",
+            s_x=pow2_scale(act_stats[name]["max"]),
+            s_w=weight_scale_pow2(np.asarray(params[name]["w"])),
+        )
+    for name in HEAD_LAYERS:
+        layers[name] = LayerQuant("fp16")
+    return DeployConfig(layers)
+
+
+def act_scales_pow2(act_stats: dict) -> dict:
+    """Frozen pow2 activation scales for QAT (backbone layers only)."""
+    return {
+        name: jnp.float32(pow2_scale(act_stats[name]["max"])) for name in CONV_LAYERS
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serialization of quantization metadata (consumed by the Rust manifest
+# loader and by EXPERIMENTS.md tooling).
+# ---------------------------------------------------------------------------
+
+
+def config_summary(cfg: DeployConfig) -> dict:
+    out = {}
+    for name, lq in cfg.layers.items():
+        s_w = lq.s_w
+        if isinstance(s_w, np.ndarray):
+            s_w_desc = {
+                "kind": "per_channel",
+                "min": float(s_w.min()),
+                "max": float(s_w.max()),
+                "n": int(s_w.size),
+            }
+        else:
+            s_w_desc = {"kind": "per_tensor", "value": float(s_w)}
+        out[name] = {"mode": lq.mode, "s_x": float(lq.s_x), "s_w": s_w_desc}
+    return out

@@ -1,0 +1,220 @@
+"""Training loops for UrsoNet-lite (build-time only).
+
+Two phases, mirroring the paper's deployment flow:
+
+1. **FP32 baseline** — plain training; this checkpoint feeds the PTQ rows of
+   Table I (CPU/VPU/TPU/DPU) exactly as the authors quantize a trained model
+   with the vendor toolflows.
+2. **Partition-aware QAT** (paper §III) — fine-tune from the FP32 checkpoint
+   with the backbone fake-quantized through the DPU's INT8/pow2 grid and the
+   heads in FP16; this checkpoint feeds the MPAI (DPU+VPU) row.
+
+Adam is hand-rolled (no optax in the offline environment).  Everything is
+seeded and renders its training data on the fly from compile.dataset, so
+`make artifacts` is reproducible bit-for-bit given one thread.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import dataset, ursonet
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam.
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=1e-4):
+    """AdamW step (decoupled weight decay — capacity control on the flatten
+    head, which would otherwise memorize the finite render pool)."""
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads
+    )
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / (jnp.sqrt(v_) + eps) + wd * p),
+        params,
+        mh,
+        vh,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step: int, total: int, base: float, warmup: int = 20) -> float:
+    if step < warmup:
+        return base * (step + 1) / warmup
+    prog = (step - warmup) / max(1, total - warmup)
+    return base * 0.5 * (1.0 + float(np.cos(np.pi * prog)))
+
+
+# ---------------------------------------------------------------------------
+# Loss: Huber on location + angular term on the quaternion.
+# ---------------------------------------------------------------------------
+
+
+def pose_loss(loc_pred, q_pred, loc_true, q_true, beta: float = 8.0):
+    """Scalar pose loss.
+
+    Location: Huber (delta=1 m) — robust to the occasional far sample.
+    Orientation: 1 - |q̂·q| — the standard double-cover-safe angular loss.
+    ``beta`` balances metres against radians-ish units.
+    """
+    d = loc_pred - loc_true
+    absd = jnp.abs(d)
+    huber = jnp.where(absd <= 1.0, 0.5 * d * d, absd - 0.5).sum(axis=-1)
+    dot = jnp.abs(jnp.sum(q_pred * q_true, axis=-1))
+    ang = 1.0 - jnp.clip(dot, 0.0, 1.0)
+    return huber.mean() + beta * ang.mean()
+
+
+def _make_step(forward: Callable):
+    """Build a jitted (params, opt, batch, lr) -> (params, opt, loss) step."""
+
+    def loss_fn(params, x, t, q):
+        loc, quat = forward(params, x)
+        return pose_loss(loc, quat, t, q)
+
+    @jax.jit
+    def step(params, m, v, tcount, x, t, q, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, t, q)
+        state = {"m": m, "v": v, "t": tcount}
+        params, state = adam_update(params, grads, state, lr)
+        return params, state["m"], state["v"], loss
+
+    return step
+
+
+_TRAIN_POOL_SIZE = 3200
+_train_pool_cache: dict = {}
+
+
+def _train_pool(seed: int, size: int = _TRAIN_POOL_SIZE):
+    """Fixed, pre-rendered training set (cached within the process).
+
+    A finite training set is both faster on the 1-core testbed (rendering
+    dominated the step time) and closer to the paper's setting: UrsoNet
+    trains on a fixed set of "soyuz_easy" renders.
+    """
+    key = (seed, size)
+    if key not in _train_pool_cache:
+        rng = np.random.default_rng(seed)
+        t0 = time.time()
+        xs, ts, qs = dataset.generate_training_batch(rng, size)
+        print(f"[train] rendered pool of {size} frames in {time.time() - t0:.0f}s",
+              flush=True)
+        _train_pool_cache[key] = (xs, ts, qs)
+    return _train_pool_cache[key]
+
+
+def _run(
+    params,
+    forward: Callable,
+    steps: int,
+    batch: int,
+    base_lr: float,
+    seed: int,
+    log_every: int = 50,
+    tag: str = "train",
+    pool_seed: int = 1234,
+):
+    xs_all, ts_all, qs_all = _train_pool(pool_seed)
+    rng = np.random.default_rng(seed)
+    step_fn = _make_step(forward)
+    opt = adam_init(params)
+    m, v = opt["m"], opt["v"]
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.choice(xs_all.shape[0], size=batch, replace=False)
+        lr = cosine_lr(s, steps, base_lr)
+        params, m, v, loss = step_fn(
+            params,
+            m,
+            v,
+            s,
+            jnp.asarray(xs_all[idx]),
+            jnp.asarray(ts_all[idx]),
+            jnp.asarray(qs_all[idx]),
+            lr,
+        )
+        losses.append(float(loss))
+        if log_every and (s % log_every == 0 or s == steps - 1):
+            print(
+                f"[{tag}] step {s:4d}/{steps}  loss {float(loss):.4f}  "
+                f"lr {lr:.2e}  ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Public entry points.
+# ---------------------------------------------------------------------------
+
+
+def train_fp32(
+    seed: int = 7, steps: int = 1500, batch: int = 16, base_lr: float = 2e-3
+):
+    """Phase 1: FP32 baseline. Returns (params, loss_curve)."""
+    params = ursonet.init_params(seed)
+    return _run(params, ursonet.forward_fp32, steps, batch, base_lr, seed + 1,
+                tag="fp32")
+
+
+def train_qat(
+    params,
+    act_scales: dict,
+    seed: int = 11,
+    steps: int = 200,
+    batch: int = 16,
+    base_lr: float = 4e-4,
+):
+    """Phase 2: partition-aware QAT fine-tune from the FP32 checkpoint.
+
+    ``act_scales``: frozen pow2 activation scales from calibration
+    (quantize.act_scales_pow2) — the Vitis-AI flow calibrates first, then
+    fine-tunes through the fixed grid.
+    """
+
+    def forward(p, x):
+        return ursonet.forward_qat(p, x, act_scales)
+
+    return _run(params, forward, steps, batch, base_lr, seed, tag="qat")
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helper (python-side truth for the manifest cross-check).
+# ---------------------------------------------------------------------------
+
+
+def evaluate(forward: Callable, params, frames_u8, locs, quats, batch: int = 4):
+    """Run ``forward`` over preprocessed eval frames; return (loce, orie)."""
+    n = frames_u8.shape[0]
+    n_use = (n // batch) * batch
+    preds_t, preds_q = [], []
+    fwd = jax.jit(lambda p, x: forward(p, x))
+    for i in range(0, n_use, batch):
+        xs = np.stack([dataset.preprocess(f) for f in frames_u8[i : i + batch]])
+        loc, q = fwd(params, jnp.asarray(xs))
+        preds_t.append(np.asarray(loc))
+        preds_q.append(np.asarray(q))
+    t_pred = np.concatenate(preds_t)
+    q_pred = np.concatenate(preds_q)
+    return (
+        dataset.loce(t_pred, locs[:n_use]),
+        dataset.orie(q_pred, quats[:n_use]),
+    )

@@ -1,0 +1,315 @@
+"""UrsoNet-lite: satellite pose-estimation DNN (L2, JAX).
+
+UrsoNet [Proença & Gao, ICRA'20] is a ResNet-backbone network with two heads:
+a 3-vector location head and an orientation head.  UrsoNet-lite keeps that
+topology class — conv backbone with residual stages, global-average pool,
+bottleneck FC, then a location-regression head and an orientation head
+(normalized quaternion regression; DESIGN.md §1 documents the substitution
+of UrsoNet's soft-classification decoding) — scaled to the 1-core testbed.
+
+Three forwards over one parameter pytree:
+
+* :func:`forward_fp32`     — ``lax.conv``-based, used for training (fast).
+* :func:`forward_qat`      — fake-quantized backbone (pow2/INT8 STE) + FP16
+                             heads: the paper's partition-aware training.
+* :func:`forward_deploy`   — Pallas-kernel-based, per-layer precision driven
+                             by a :class:`DeployConfig`; this is the forward
+                             that AOT-lowers into the artifacts the Rust
+                             coordinator executes.
+
+Layer naming matters: the names here ("stem", "s{i}_proj", "s{i}_a",
+"s{i}_b", "fc_bneck", "fc_loc", "fc_ori") are the partition vocabulary shared
+with calibration stats, DeployConfig, the manifest, and the Rust graph
+compiler's UrsoNet-lite descriptor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.conv2d_int8 import conv2d_int8, im2col, quantized_matmul
+from compile.kernels.matmul_fp16 import dense_fp16, matmul_fp16
+from compile.kernels.fakequant import fake_quant_jnp, fake_quant_jnp_ste
+
+# Backbone stage output channels; input is 96x128x3.
+STAGE_CHANNELS = (16, 32, 64, 128)
+BNECK = 128
+N_INPUT = (96, 128, 3)
+# Backbone output: three stride-2 stages + stride-2 stem -> H/16 x W/16,
+# then a 2x2 average pool (capacity control) before flattening.
+# UrsoNet flattens the final feature map (no GAP): location regression needs
+# the spatial layout, which global pooling would destroy.
+FEAT_H, FEAT_W = N_INPUT[0] // 32, N_INPUT[1] // 32
+FEAT_DIM = FEAT_H * FEAT_W * STAGE_CHANNELS[-1]
+
+
+def _pool_flatten(y):
+    """2x2 avg pool + flatten — the backbone/head interface tensor."""
+    n, h, w, c = y.shape
+    y = y.reshape(n, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+    return y.reshape(n, -1)
+
+CONV_LAYERS = ("stem",) + tuple(
+    f"s{i}_{k}" for i in range(1, len(STAGE_CHANNELS)) for k in ("proj", "a", "b")
+)
+FC_LAYERS = ("fc_bneck", "fc_loc", "fc_ori")
+ALL_LAYERS = CONV_LAYERS + FC_LAYERS
+# The MPAI cut: convolutional backbone -> DPU, FC heads -> VPU (paper §III).
+BACKBONE_LAYERS = CONV_LAYERS
+HEAD_LAYERS = FC_LAYERS
+
+
+# ---------------------------------------------------------------------------
+# Parameters.
+# ---------------------------------------------------------------------------
+
+
+def init_params(seed: int = 0) -> dict:
+    """He-initialized parameter pytree: {layer: {"w": ..., "b": ...}}."""
+    rng = np.random.default_rng(seed)
+
+    def conv(kh, kw, cin, cout):
+        fan_in = kh * kw * cin
+        w = rng.normal(0.0, np.sqrt(2.0 / fan_in), (kh, kw, cin, cout))
+        return {"w": jnp.asarray(w, jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+    def dense(cin, cout, gain=2.0):
+        w = rng.normal(0.0, np.sqrt(gain / cin), (cin, cout))
+        return {"w": jnp.asarray(w, jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+    params = {"stem": conv(3, 3, 3, STAGE_CHANNELS[0])}
+    for i in range(1, len(STAGE_CHANNELS)):
+        cin, cout = STAGE_CHANNELS[i - 1], STAGE_CHANNELS[i]
+        params[f"s{i}_proj"] = conv(3, 3, cin, cout)
+        params[f"s{i}_a"] = conv(3, 3, cout, cout)
+        params[f"s{i}_b"] = conv(3, 3, cout, cout)
+    params["fc_bneck"] = dense(FEAT_DIM, BNECK)
+    params["fc_loc"] = dense(BNECK, 3, gain=1.0)
+    params["fc_ori"] = dense(BNECK, 4, gain=1.0)
+    # Bias the quaternion head towards identity so early training is stable.
+    params["fc_ori"]["b"] = jnp.array([1.0, 0.0, 0.0, 0.0], jnp.float32)
+    return params
+
+
+def param_count(params: dict) -> int:
+    return sum(int(np.prod(v.shape)) for p in params.values() for v in p.values())
+
+
+# ---------------------------------------------------------------------------
+# Generic forward skeleton.
+#
+# conv_fn(name, x, w, b, stride, relu) -> y     pad is always SAME (p=1, 3x3)
+# dense_fn(name, x, w, b, relu) -> y
+# ---------------------------------------------------------------------------
+
+
+def _forward(params: dict, x, conv_fn: Callable, dense_fn: Callable):
+    y = conv_fn("stem", x, params["stem"]["w"], params["stem"]["b"], 2, True)
+    for i in range(1, len(STAGE_CHANNELS)):
+        y = conv_fn(
+            f"s{i}_proj", y, params[f"s{i}_proj"]["w"], params[f"s{i}_proj"]["b"], 2, True
+        )
+        r = conv_fn(f"s{i}_a", y, params[f"s{i}_a"]["w"], params[f"s{i}_a"]["b"], 1, True)
+        r = conv_fn(f"s{i}_b", r, params[f"s{i}_b"]["w"], params[f"s{i}_b"]["b"], 1, False)
+        y = jnp.maximum(y + r, 0.0)  # residual add + relu
+    return _head(params, _pool_flatten(y), dense_fn)
+
+
+def _head(params: dict, feat, dense_fn: Callable):
+    h = dense_fn("fc_bneck", feat, params["fc_bneck"]["w"], params["fc_bneck"]["b"], True)
+    loc = dense_fn("fc_loc", h, params["fc_loc"]["w"], params["fc_loc"]["b"], False)
+    q = dense_fn("fc_ori", h, params["fc_ori"]["w"], params["fc_ori"]["b"], False)
+    q = q / jnp.sqrt(jnp.sum(q * q, axis=-1, keepdims=True) + 1e-8)
+    return loc, q
+
+
+def _backbone_only(params: dict, x, conv_fn: Callable):
+    y = conv_fn("stem", x, params["stem"]["w"], params["stem"]["b"], 2, True)
+    for i in range(1, len(STAGE_CHANNELS)):
+        y = conv_fn(
+            f"s{i}_proj", y, params[f"s{i}_proj"]["w"], params[f"s{i}_proj"]["b"], 2, True
+        )
+        r = conv_fn(f"s{i}_a", y, params[f"s{i}_a"]["w"], params[f"s{i}_a"]["b"], 1, True)
+        r = conv_fn(f"s{i}_b", r, params[f"s{i}_b"]["w"], params[f"s{i}_b"]["b"], 1, False)
+        y = jnp.maximum(y + r, 0.0)
+    return _pool_flatten(y)
+
+
+# ---------------------------------------------------------------------------
+# FP32 training forward.
+# ---------------------------------------------------------------------------
+
+
+def _conv_fp32(_name, x, w, b, stride, relu):
+    # Explicit symmetric (1,1) padding, NOT "SAME": XLA's SAME pads (0,1)
+    # for stride-2, which would shift features one pixel relative to the
+    # deploy path's symmetric im2col and desync training from deployment.
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        (stride, stride),
+        [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def _dense_fp32(_name, x, w, b, relu):
+    y = x @ w + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def forward_fp32(params: dict, x):
+    """Training forward: FP32, lax.conv. Returns (loc (N,3), quat (N,4))."""
+    return _forward(params, x, _conv_fp32, _dense_fp32)
+
+
+def forward_intermediates(params: dict, x) -> dict:
+    """FP32 forward that also returns every layer's *input* activation.
+
+    Used by calibration (quantize.py): activation scale of layer L is
+    computed from the tensor feeding L, matching where the deploy graph
+    inserts the quantize op.
+    """
+    acts = {}
+
+    def conv_fn(name, xx, w, b, stride, relu):
+        acts[name] = xx
+        return _conv_fp32(name, xx, w, b, stride, relu)
+
+    def dense_fn(name, xx, w, b, relu):
+        acts[name] = xx
+        return _dense_fp32(name, xx, w, b, relu)
+
+    out = _forward(params, x, conv_fn, dense_fn)
+    return {"out": out, "acts": acts}
+
+
+# ---------------------------------------------------------------------------
+# Partition-aware QAT forward (paper §III).
+# ---------------------------------------------------------------------------
+
+
+def pow2_scale(max_abs) -> jnp.ndarray:
+    """Vitis-AI-style power-of-two scale covering [-max_abs, max_abs] in INT8."""
+    max_abs = jnp.maximum(jnp.asarray(max_abs, jnp.float32), 1e-8)
+    return 2.0 ** jnp.ceil(jnp.log2(max_abs / 127.0))
+
+
+def forward_qat(params: dict, x, act_scales: dict):
+    """Fake-quantized backbone (INT8 pow2 weights+activations, STE) + FP16 heads.
+
+    ``act_scales``: {layer: f32 scalar} from calibration — activation scales
+    are frozen (Vitis-AI flow); weight scales track the live weights.
+    """
+
+    def conv_fn(name, xx, w, b, stride, relu):
+        s_x = act_scales[name]
+        xx_q = fake_quant_jnp_ste(xx, s_x)
+        s_w = pow2_scale(jnp.max(jnp.abs(jax.lax.stop_gradient(w))))
+        w_q = fake_quant_jnp_ste(w, s_w)
+        return _conv_fp32(name, xx_q, w_q, b, stride, relu)
+
+    def dense_fn(name, xx, w, b, relu):
+        # Heads stay FP16: commit to the precision the VPU will run.
+        y = xx.astype(jnp.float16) @ w.astype(jnp.float16) + b.astype(jnp.float16)
+        y = y.astype(jnp.float32)
+        return jnp.maximum(y, 0.0) if relu else y
+
+    return _forward(params, x, conv_fn, dense_fn)
+
+
+# ---------------------------------------------------------------------------
+# Deploy forward — Pallas kernels, per-layer precision.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """Per-layer deployment precision.
+
+    mode:  "fp32" | "fp16" | "int8"
+    s_x:   activation scale (int8 mode), python float
+    s_w:   weight scale(s): float for per-tensor, (Cout,) array per-channel
+    """
+
+    mode: str
+    s_x: float = 1.0
+    s_w: object = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployConfig:
+    """Maps every layer name to its LayerQuant. Built by quantize.py."""
+
+    layers: dict
+
+    def of(self, name: str) -> LayerQuant:
+        return self.layers[name]
+
+
+def _conv_deploy(cfg: DeployConfig):
+    def conv_fn(name, x, w, b, stride, relu):
+        lq = cfg.of(name)
+        if lq.mode == "fp32":
+            # Same im2col→matmul structure as the quantized path so every
+            # variant exercises the identical data movement.
+            a, (n, oh, ow) = im2col(x, 3, 3, stride, 1)
+            y = a @ w.reshape(-1, w.shape[-1])
+            y = y.reshape(n, oh, ow, -1) + b
+        elif lq.mode == "fp16":
+            a, (n, oh, ow) = im2col(x.astype(jnp.float16), 3, 3, stride, 1)
+            y = matmul_fp16(a, w.reshape(-1, w.shape[-1]))
+            y = y.reshape(n, oh, ow, -1) + b
+        elif lq.mode == "int8":
+            s_x = jnp.float32(lq.s_x)
+            x_q = jnp.clip(jnp.round(x / s_x), -128, 127).astype(jnp.int8)
+            s_w = jnp.asarray(lq.s_w, jnp.float32)
+            w_q = jnp.clip(jnp.round(w / s_w), -128, 127).astype(jnp.int8)
+            y = conv2d_int8(x_q, w_q, s_x * s_w, stride=stride, padding=1)
+            y = y + b
+        else:
+            raise ValueError(f"unknown mode {lq.mode}")
+        return jnp.maximum(y, 0.0) if relu else y
+
+    return conv_fn
+
+
+def _dense_deploy(cfg: DeployConfig):
+    def dense_fn(name, x, w, b, relu):
+        lq = cfg.of(name)
+        if lq.mode == "fp32":
+            y = x @ w + b
+        elif lq.mode == "fp16":
+            y = dense_fp16(x, w, b)
+        elif lq.mode == "int8":
+            s_x = jnp.float32(lq.s_x)
+            x_q = jnp.clip(jnp.round(x / s_x), -128, 127).astype(jnp.int8)
+            s_w = jnp.asarray(lq.s_w, jnp.float32)
+            w_q = jnp.clip(jnp.round(w / s_w), -128, 127).astype(jnp.int8)
+            y = quantized_matmul(x_q, w_q, s_x * s_w) + b
+        else:
+            raise ValueError(f"unknown mode {lq.mode}")
+        return jnp.maximum(y, 0.0) if relu else y
+
+    return dense_fn
+
+
+def forward_deploy(params: dict, x, cfg: DeployConfig):
+    """Deployment forward (per-layer precision; Pallas kernels). AOT target."""
+    return _forward(params, x, _conv_deploy(cfg), _dense_deploy(cfg))
+
+
+def forward_deploy_backbone(params: dict, x, cfg: DeployConfig):
+    """Backbone-only deployment forward -> (N, C) features (MPAI DPU side)."""
+    return _backbone_only(params, x, _conv_deploy(cfg))
+
+
+def forward_deploy_head(params: dict, feat, cfg: DeployConfig):
+    """Head-only deployment forward: features -> (loc, quat) (MPAI VPU side)."""
+    return _head(params, feat, _dense_deploy(cfg))

@@ -1,0 +1,12 @@
+"""pytest configuration: make `compile.*` importable and seed hypothesis."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import settings
+
+# 1-core testbed: keep example counts modest but meaningful.
+settings.register_profile("mpai", max_examples=25, deadline=None)
+settings.load_profile("mpai")

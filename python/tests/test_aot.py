@@ -1,0 +1,144 @@
+"""AOT pipeline tests: HLO-text lowering contract, checkpoint round-trip,
+and — when artifacts/ exists — manifest schema validation.
+
+The HLO-text contract is the backbone of the whole system: rust's
+HloModuleProto::from_text_file must accept what aot.to_hlo_text emits.
+These tests pin the text shape (parsable header, full constants, tuple
+root); the rust integration tests pin actual PJRT execution.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, quantize, ursonet
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+
+
+def test_to_hlo_text_basic():
+    f = lambda x: (x * 2.0 + 1.0,)
+    text = aot.to_hlo_text(jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+
+
+def test_to_hlo_text_keeps_large_constants():
+    """Weights are baked as constants; elision ({...}) would break the rust
+    loader silently — this is the regression test for that foot-gun."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)), jnp.float32)
+    f = lambda x: (x @ w,)
+    text = aot.to_hlo_text(jax.jit(f).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32)))
+    assert "constant({...}" not in text and "{...}" not in text
+
+
+def test_to_hlo_text_tuple_root():
+    """return_tuple=True: rust unwraps with decompose_tuple()."""
+    f = lambda x: (x + 1.0, x - 1.0)
+    text = aot.to_hlo_text(jax.jit(f).lower(jax.ShapeDtypeStruct((3,), jnp.float32)))
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root_lines, "entry root must be a tuple"
+
+
+def test_lower_variant_deploy_graph():
+    """The full deploy forward (Pallas int8 path) lowers to valid-looking HLO."""
+    params = ursonet.init_params(0)
+    x = np.random.default_rng(0).uniform(0, 1, (1, *ursonet.N_INPUT)).astype(np.float32)
+    stats = quantize.calibrate(params, x)
+    cfg = quantize.config_dpu_int8(params, stats)
+    spec = jax.ShapeDtypeStruct((1, *ursonet.N_INPUT), jnp.float32)
+    text = aot.lower_variant(lambda xx: ursonet.forward_deploy(params, xx, cfg), [spec])
+    assert text.startswith("HloModule")
+    assert "s8[" in text, "int8 weights must appear in the HLO"
+    assert len(text) > 100_000  # weights baked in
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = ursonet.init_params(3)
+    path = str(tmp_path / "ck.npz")
+    aot.save_params(path, params)
+    back = aot.load_params(path)
+    assert set(back) == set(params)
+    for layer in params:
+        for k in params[layer]:
+            np.testing.assert_array_equal(
+                np.asarray(back[layer][k]), np.asarray(params[layer][k])
+            )
+
+
+# ---------------------------------------------------------------------------
+# Built-artifact schema checks (skipped until `make artifacts` has run).
+# ---------------------------------------------------------------------------
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_schema():
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    assert m["version"] == 1
+    assert m["batch"] == aot.BATCH
+    expected_artifacts = {
+        "ursonet_fp32",
+        "ursonet_fp16",
+        "ursonet_dpu_int8",
+        "ursonet_tpu_int8",
+        "ursonet_mpai_backbone",
+        "ursonet_mpai_head",
+    }
+    assert set(m["artifacts"]) == expected_artifacts
+    for name, a in m["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, a["file"])), name
+        assert a["inputs"] and a["outputs"]
+        assert len(a["sha256"]) == 64
+
+
+@needs_artifacts
+def test_manifest_expected_metrics_shape():
+    """The headline shape of Table I, asserted on our measured numerics:
+    DPU (pow2 PTQ) must degrade accuracy more than TPU (per-channel PTQ),
+    and MPAI (partition-aware QAT) must land near the FP32 baseline."""
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    em = m["expected_metrics"]
+    fp32, dpu, tpu, mpai = (em[k] for k in ("fp32", "dpu_int8", "tpu_int8", "mpai"))
+    assert dpu["loce_m"] > tpu["loce_m"], "DPU must lose more accuracy than TPU"
+    assert mpai["loce_m"] < dpu["loce_m"], "MPAI must beat full-INT8 DPU"
+    # MPAI within 25% (relative) of baseline LOCE, the paper's 'almost matches'.
+    assert mpai["loce_m"] < fp32["loce_m"] * 1.25 + 0.05
+
+
+@needs_artifacts
+def test_artifact_hashes_match():
+    import hashlib
+
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    for name, a in m["artifacts"].items():
+        h = hashlib.sha256(open(os.path.join(ART, a["file"]), "rb").read()).hexdigest()
+        assert h == a["sha256"], f"{name} artifact modified after manifest"
+
+
+@needs_artifacts
+def test_eval_set_artifact():
+    from compile.mpt import read_mpt
+
+    m = json.load(open(os.path.join(ART, "manifest.json")))
+    t = read_mpt(os.path.join(ART, m["eval"]["file"]))
+    n = m["eval"]["count"]
+    assert t["frames"].shape == (n, 240, 320, 3)
+    assert t["loc"].shape == (n, 3)
+    assert t["quat"].shape == (n, 4)
+    assert t["golden_pre0"].shape == (96, 128, 3)
+    # Golden preprocessed frame must match a fresh preprocess of frame 0.
+    from compile import dataset
+
+    np.testing.assert_allclose(
+        t["golden_pre0"], dataset.preprocess(t["frames"][0]), rtol=1e-6
+    )

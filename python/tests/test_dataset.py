@@ -1,0 +1,144 @@
+"""Synthetic pose dataset tests: determinism, pose->image sensitivity,
+metric definitions, and preprocess geometry."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile import dataset
+
+
+def test_render_deterministic():
+    rng1 = np.random.default_rng(5)
+    rng2 = np.random.default_rng(5)
+    t, q = dataset.sample_pose(np.random.default_rng(1))
+    f1 = dataset.render_frame(t, q, noise_rng=rng1)
+    f2 = dataset.render_frame(t, q, noise_rng=rng2)
+    assert_array_equal(f1, f2)
+
+
+def test_eval_set_deterministic():
+    f1, t1, q1 = dataset.generate_eval_set(99, 3)
+    f2, t2, q2 = dataset.generate_eval_set(99, 3)
+    assert_array_equal(f1, f2)
+    assert_array_equal(t1, t2)
+    assert_array_equal(q1, q2)
+
+
+def test_image_depends_on_pose():
+    """The renderer must leak pose into pixels — otherwise the task is
+    unlearnable and precision effects unmeasurable."""
+    rng = np.random.default_rng(0)
+    t1, q1 = dataset.sample_pose(rng)
+    t2, q2 = dataset.sample_pose(rng)
+    f1 = dataset.render_frame(t1, q1)
+    f2 = dataset.render_frame(t2, q2)
+    assert np.abs(f1.astype(int) - f2.astype(int)).sum() > 1000
+
+
+def test_satellite_visible_in_frame():
+    """Across the sampled pose regime the satellite must land in frame."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        t, q = dataset.sample_pose(rng)
+        f = dataset.render_frame(t, q)
+        # Non-star pixels (stars are sparse & dim); the body is bright.
+        assert (f.max(axis=2) > 80).sum() > 50, f"satellite not visible at {t}"
+
+
+def test_closer_satellite_is_bigger():
+    q = np.array([1.0, 0, 0, 0])
+    near = dataset.render_frame(np.array([0, 0, 5.5]), q)
+    far = dataset.render_frame(np.array([0, 0, 9.0]), q)
+    lit = lambda f: (f.max(axis=2) > 60).sum()
+    # (9/5.5)^2 ≈ 2.7 without clipping; allow margin for edge clipping.
+    assert lit(near) > 1.8 * lit(far)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sample_pose_in_regime(seed):
+    rng = np.random.default_rng(seed)
+    t, q = dataset.sample_pose(rng)
+    assert dataset.Z_RANGE[0] <= t[2] <= dataset.Z_RANGE[1]
+    assert_allclose(np.linalg.norm(q), 1.0, rtol=1e-6)
+    assert q[0] >= 0
+    # Attitude bounded by the easy-regime cone.
+    angle = np.degrees(2 * np.arccos(np.clip(q[0], -1, 1)))
+    assert angle <= dataset.MAX_ATT_DEG + 1e-6
+
+
+def test_quat_to_rot_orthonormal():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        q = dataset.random_quat(rng)
+        r = dataset.quat_to_rot(q)
+        assert_allclose(r @ r.T, np.eye(3), atol=1e-9)
+        assert_allclose(np.linalg.det(r), 1.0, atol=1e-9)
+
+
+def test_preprocess_shape_and_range():
+    f = np.random.default_rng(0).integers(0, 256, (240, 320, 3)).astype(np.uint8)
+    x = dataset.preprocess(f)
+    assert x.shape == (dataset.NET_H, dataset.NET_W, 3)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0
+
+
+def test_preprocess_constant_image_invariant():
+    f = np.full((240, 320, 3), 128, np.uint8)
+    x = dataset.preprocess(f)
+    assert_allclose(x, 128.0 / 255.0, rtol=1e-6)
+
+
+def test_preprocess_preserves_gradient_direction():
+    """A horizontal ramp must stay monotonic after resampling."""
+    ramp = np.tile(np.linspace(0, 255, 320, dtype=np.uint8)[None, :, None], (240, 1, 3))
+    x = dataset.preprocess(ramp)
+    row = x[48, :, 0]
+    assert (np.diff(row) >= -1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Metrics (Table I definitions).
+# ---------------------------------------------------------------------------
+
+
+def test_loce_zero_for_exact():
+    t = np.random.default_rng(0).normal(size=(5, 3))
+    assert dataset.loce(t, t) == 0.0
+
+
+def test_loce_known_value():
+    t = np.zeros((2, 3))
+    p = np.array([[1.0, 0, 0], [0, 0, 2.0]])
+    assert_allclose(dataset.loce(p, t), 1.5)
+
+
+def test_orie_zero_for_same_quaternion():
+    rng = np.random.default_rng(1)
+    q = np.stack([dataset.random_quat(rng) for _ in range(4)])
+    assert dataset.orie(q, q) < 1e-3
+
+
+def test_orie_double_cover():
+    """q and -q are the same rotation: ORIE must be 0."""
+    rng = np.random.default_rng(2)
+    q = np.stack([dataset.random_quat(rng) for _ in range(4)])
+    assert dataset.orie(-q, q) < 1e-3
+
+
+def test_orie_known_angle():
+    """90° rotation about z vs identity -> 90°."""
+    q1 = np.array([[1.0, 0, 0, 0]])
+    q2 = np.array([[np.cos(np.pi / 4), 0, 0, np.sin(np.pi / 4)]])
+    assert_allclose(dataset.orie(q2, q1), 90.0, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_orie_bounded(seed):
+    rng = np.random.default_rng(seed)
+    q1 = np.stack([dataset.random_quat(rng) for _ in range(3)])
+    q2 = np.stack([dataset.random_quat(rng) for _ in range(3)])
+    o = dataset.orie(q1, q2)
+    assert 0.0 <= o <= 180.0

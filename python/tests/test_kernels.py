@@ -1,0 +1,222 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes (including non-tile-multiple edge cases) and value
+regimes; every kernel must match its ref bit-for-bit where the arithmetic is
+exact (integer paths) and to tight float tolerance elsewhere.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile.kernels import ref
+from compile.kernels.conv2d_int8 import conv2d_int8, im2col, quantized_matmul
+from compile.kernels.fakequant import fake_quant_jnp, fake_quant_ste
+from compile.kernels.matmul_fp16 import dense_fp16, matmul_fp16
+
+# Small tile overrides so hypothesis cases exercise multi-tile grids without
+# interpret-mode cost exploding.
+TILE = dict(bm=16, bn=16, bk=16)
+
+dims = st.integers(min_value=1, max_value=40)
+
+
+# ---------------------------------------------------------------------------
+# quantized_matmul
+# ---------------------------------------------------------------------------
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_quantized_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = ref.random_int8(rng, (m, k))
+    b = ref.random_int8(rng, (k, n))
+    scale = np.float32(rng.uniform(1e-4, 1e-1))
+    got = quantized_matmul(a, b, scale, **TILE)
+    want = ref.quantized_matmul_ref(a, b, scale)
+    # INT32 accumulation is exact; the only float op is the final scale.
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=0)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_quantized_matmul_per_channel_scale(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = ref.random_int8(rng, (m, k))
+    b = ref.random_int8(rng, (k, n))
+    scale = rng.uniform(1e-4, 1e-1, size=n).astype(np.float32)
+    got = quantized_matmul(a, b, scale, **TILE)
+    want = ref.quantized_matmul_ref(a, b, scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=0)
+
+
+def test_quantized_matmul_relu_fusion():
+    rng = np.random.default_rng(0)
+    a = ref.random_int8(rng, (17, 9))
+    b = ref.random_int8(rng, (9, 5))
+    got = quantized_matmul(a, b, 0.01, relu=True, **TILE)
+    want = jnp.maximum(ref.quantized_matmul_ref(a, b, 0.01), 0.0)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    assert (np.asarray(got) >= 0).all()
+
+
+def test_quantized_matmul_extreme_values_no_overflow():
+    """Worst-case accumulation (all ±128 over K=512) stays exact in INT32."""
+    a = np.full((4, 512), -128, np.int8)
+    b = np.full((512, 4), -128, np.int8)
+    got = quantized_matmul(a, b, 1.0, bm=4, bn=4, bk=64)
+    want = ref.quantized_matmul_ref(a, b, 1.0)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got)[0, 0] == 128 * 128 * 512
+
+
+def test_quantized_matmul_rejects_bad_shapes():
+    a = np.zeros((4, 8), np.int8)
+    b = np.zeros((9, 4), np.int8)
+    with pytest.raises(ValueError):
+        quantized_matmul(a, b, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# im2col + conv2d_int8
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    c=st.integers(1, 5),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_matches_ref(n, h, w, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = ref.random_int8(rng, (n, h, w, c))
+    got, _ = im2col(jnp.asarray(x), 3, 3, stride, 1)
+    want = ref.im2col_ref(jnp.asarray(x), 3, 3, stride, 1)
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15)
+def test_conv2d_int8_matches_ref(n, h, w, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = ref.random_int8(rng, (n, h, w, cin))
+    wts = ref.random_int8(rng, (3, 3, cin, cout))
+    scale = np.float32(0.02)
+    got = conv2d_int8(x, wts, scale, stride=stride, padding=1)
+    want = ref.conv2d_int8_ref(x, wts, scale, stride=stride, padding=1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=0)
+
+
+def test_conv2d_int8_against_float_conv():
+    """Dequantized INT8 conv ≈ float conv of the dequantized operands."""
+    import jax
+
+    rng = np.random.default_rng(3)
+    x = ref.random_int8(rng, (1, 8, 8, 3))
+    wts = ref.random_int8(rng, (3, 3, 3, 4))
+    s = np.float32(0.01)
+    got = conv2d_int8(x, wts, s * s, stride=1, padding=1)
+    xf = x.astype(np.float32) * s
+    wf = wts.astype(np.float32) * s
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(xf), jnp.asarray(wf), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# matmul_fp16 / dense_fp16
+# ---------------------------------------------------------------------------
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_fp16_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = matmul_fp16(jnp.asarray(a), jnp.asarray(b), bm=16, bn=16, bk=16)
+    want = ref.matmul_fp16_ref(jnp.asarray(a), jnp.asarray(b))
+    # f32 accumulation order differs between tilings; bound is tight anyway.
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_fp16_commits_to_fp16_precision():
+    """The kernel must quantize operands to f16 — feeding values that differ
+    only below f16 resolution must give identical outputs."""
+    a1 = np.full((4, 4), 1.0, np.float32)
+    a2 = np.full((4, 4), 1.0 + 1e-5, np.float32)  # below f16 ULP at 1.0
+    b = np.eye(4, dtype=np.float32)
+    y1 = matmul_fp16(jnp.asarray(a1), jnp.asarray(b), bm=4, bn=4, bk=4)
+    y2 = matmul_fp16(jnp.asarray(a2), jnp.asarray(b), bm=4, bn=4, bk=4)
+    assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_dense_fp16_bias_and_relu():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(3, 8)).astype(np.float32)
+    w = rng.normal(size=(8, 5)).astype(np.float32)
+    b = rng.normal(size=(5,)).astype(np.float32)
+    got = dense_fp16(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), relu=True)
+    want = np.maximum(np.asarray(ref.matmul_fp16_ref(x, w)) + b, 0.0)
+    assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    assert (np.asarray(got) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 4, 6), (1, 9, 3, 2)]),
+    scale=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_pallas_matches_jnp(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=2.0, size=shape).astype(np.float32)
+    got = fake_quant_ste(jnp.asarray(x), np.float32(scale))
+    want = fake_quant_jnp(jnp.asarray(x), np.float32(scale))
+    assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fake_quant_output_on_grid():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64,)).astype(np.float32)
+    s = np.float32(0.05)
+    y = np.asarray(fake_quant_ste(jnp.asarray(x), s))
+    q = y / s
+    assert_allclose(q, np.round(q), atol=1e-5)
+    assert q.min() >= -128 and q.max() <= 127
+
+
+def test_fake_quant_ste_gradient():
+    """STE: unit gradient inside the clip range, zero outside."""
+    import jax
+
+    s = 0.1  # range ±12.8
+    x = jnp.asarray([0.5, -0.3, 20.0, -20.0], jnp.float32)
+    g = jax.grad(lambda xx: fake_quant_ste(xx, s).sum())(x)
+    assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_fake_quant_idempotent():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(32,)).astype(np.float32)
+    s = np.float32(0.03)
+    y1 = np.asarray(fake_quant_jnp(jnp.asarray(x), s))
+    y2 = np.asarray(fake_quant_jnp(jnp.asarray(y1), s))
+    assert_allclose(y1, y2, atol=1e-6)

@@ -1,0 +1,96 @@
+"""MPT container format: round-trip, alignment, and header pinning.
+
+rust/src/util/mpt.rs implements the reader against this exact format; the
+byte-level assertions here are the python half of the cross-language pin.
+"""
+
+import json
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from numpy.testing import assert_array_equal
+
+from compile.mpt import read_mpt, write_mpt
+
+
+def test_roundtrip_mixed_dtypes(tmp_path):
+    path = str(tmp_path / "t.mpt")
+    tensors = {
+        "frames": np.arange(24, dtype=np.uint8).reshape(2, 3, 4),
+        "loc": np.random.default_rng(0).normal(size=(2, 3)).astype(np.float32),
+        "idx": np.array([[1, -2], [3, 4]], np.int32),
+    }
+    write_mpt(path, tensors)
+    back = read_mpt(path)
+    assert list(back) == list(tensors)
+    for k in tensors:
+        assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+@given(
+    shape=st.lists(st.integers(1, 7), min_size=1, max_size=4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_arbitrary_f32(tmp_path_factory, shape, seed):
+    path = str(tmp_path_factory.mktemp("mpt") / "t.mpt")
+    arr = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    write_mpt(path, {"x": arr})
+    assert_array_equal(read_mpt(path)["x"], arr)
+
+
+def test_header_layout_pinned(tmp_path):
+    """Byte-level format pin shared with the rust reader."""
+    path = str(tmp_path / "t.mpt")
+    write_mpt(path, {"a": np.array([1, 2, 3], np.int32)})
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"MPT1"
+    (hdr_len,) = struct.unpack("<I", raw[4:8])
+    header = json.loads(raw[8 : 8 + hdr_len])
+    e = header["tensors"][0]
+    assert e["name"] == "a"
+    assert e["dtype"] == "i32"
+    assert e["shape"] == [3]
+    assert e["offset"] == 0
+    assert e["nbytes"] == 12
+    data = raw[8 + hdr_len : 8 + hdr_len + 12]
+    assert np.frombuffer(data, np.int32).tolist() == [1, 2, 3]
+
+
+def test_offsets_are_64_byte_aligned(tmp_path):
+    path = str(tmp_path / "t.mpt")
+    write_mpt(
+        path,
+        {
+            "a": np.zeros(5, np.uint8),  # 5 bytes -> next offset pads to 64
+            "b": np.zeros(3, np.float32),
+            "c": np.zeros((2, 2), np.int32),
+        },
+    )
+    raw = open(path, "rb").read()
+    (hdr_len,) = struct.unpack("<I", raw[4:8])
+    header = json.loads(raw[8 : 8 + hdr_len])
+    for e in header["tensors"]:
+        assert e["offset"] % 64 == 0
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        write_mpt(str(tmp_path / "t.mpt"), {"x": np.zeros(3, np.float64)})
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.mpt")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        read_mpt(path)
+
+
+def test_empty_shape_scalarish(tmp_path):
+    """1-element tensors round-trip (used for golden scalars)."""
+    path = str(tmp_path / "t.mpt")
+    write_mpt(path, {"s": np.array([3.5], np.float32)})
+    assert read_mpt(path)["s"][0] == np.float32(3.5)

@@ -1,0 +1,41 @@
+"""HLO profiler tests (the §Perf L2 instrument)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.profile_hlo import profile_text
+
+
+def lower(f, *specs):
+    return aot.to_hlo_text(jax.jit(f).lower(*specs))
+
+
+def test_counts_dot():
+    text = lower(
+        lambda a, b: (a @ b,),
+        jax.ShapeDtypeStruct((4, 8), jnp.float32),
+        jax.ShapeDtypeStruct((8, 2), jnp.float32),
+    )
+    p = profile_text(text)
+    assert p["heavy"].get("dot", 0) >= 1
+    assert p["total_ops"] >= 3  # params + dot + tuple
+
+
+def test_elementwise_is_fusible():
+    text = lower(
+        lambda x: (jnp.maximum(x * 2.0 + 1.0, 0.0),),
+        jax.ShapeDtypeStruct((16,), jnp.float32),
+    )
+    p = profile_text(text)
+    assert p["fusible_count"] >= 3  # multiply, add, maximum + consts
+    assert not p["heavy"]
+
+
+def test_reduce_is_heavy():
+    text = lower(
+        lambda x: (x.sum(axis=0),),
+        jax.ShapeDtypeStruct((8, 4), jnp.float32),
+    )
+    p = profile_text(text)
+    assert p["heavy"].get("reduce", 0) >= 1

@@ -1,0 +1,106 @@
+"""Training machinery tests: Adam, schedules, loss properties, and a short
+smoke-train that must reduce the loss."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import train, ursonet
+
+
+# ---------------------------------------------------------------------------
+# Adam.
+# ---------------------------------------------------------------------------
+
+
+def test_adam_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = train.adam_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = train.adam_update(params, grads, state, lr=0.1)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adam_state_shapes_match_params():
+    params = ursonet.init_params(0)
+    state = train.adam_init(params)
+    for layer in params:
+        for k in params[layer]:
+            assert state["m"][layer][k].shape == params[layer][k].shape
+            assert state["v"][layer][k].shape == params[layer][k].shape
+
+
+def test_cosine_lr_schedule():
+    base = 1e-3
+    total = 100
+    # Warmup ramps up...
+    assert train.cosine_lr(0, total, base) < base / 2
+    assert train.cosine_lr(19, total, base) == pytest.approx(base)
+    # ...then cosine decays towards 0.
+    assert train.cosine_lr(50, total, base) < base
+    assert train.cosine_lr(99, total, base) < 0.1 * base
+    # Monotone decreasing after warmup.
+    lrs = [train.cosine_lr(s, total, base) for s in range(20, 100)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+
+
+def test_pose_loss_zero_at_truth():
+    t = jnp.asarray([[1.0, 2.0, 10.0]])
+    q = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+    assert float(train.pose_loss(t, q, t, q)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_pose_loss_double_cover_invariant():
+    t = jnp.asarray([[0.0, 0.0, 8.0]])
+    q = jnp.asarray([[0.6, 0.8, 0.0, 0.0]])
+    l1 = float(train.pose_loss(t, q, t, q))
+    l2 = float(train.pose_loss(t, -q, t, q))
+    assert l1 == pytest.approx(l2, abs=1e-6)
+
+
+def test_pose_loss_increases_with_error():
+    t = jnp.asarray([[0.0, 0.0, 8.0]])
+    q = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+    l0 = float(train.pose_loss(t, q, t, q))
+    l1 = float(train.pose_loss(t + 0.5, q, t, q))
+    l2 = float(train.pose_loss(t + 2.0, q, t, q))
+    assert l0 < l1 < l2
+
+
+def test_pose_loss_huber_saturates_gradient():
+    """Far outliers contribute linear (not quadratic) loss."""
+    t = jnp.asarray([[0.0, 0.0, 8.0]])
+    q = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+    g = jax.grad(lambda d: train.pose_loss(t + d, q, t, q))(jnp.float32(100.0))
+    assert abs(float(g)) <= 3.0 + 1e-5  # 3 coords x unit slope
+
+
+# ---------------------------------------------------------------------------
+# Smoke training (short but real).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_short_training_reduces_loss():
+    params, losses = train.train_fp32(steps=40, batch=8, base_lr=1e-3)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first * 0.9, (first, last)
+
+
+def test_evaluate_returns_finite_metrics():
+    from compile import dataset
+
+    params = ursonet.init_params(0)
+    frames, locs, quats = dataset.generate_eval_set(1, 4)
+    l, o = train.evaluate(ursonet.forward_fp32, params, frames, locs, quats, batch=4)
+    assert np.isfinite(l) and np.isfinite(o)
+    assert 0 <= o <= 180

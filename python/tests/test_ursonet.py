@@ -1,0 +1,126 @@
+"""UrsoNet-lite model tests: shapes, determinism, gradient flow, and
+agreement between the three forwards (train / QAT / deploy)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import quantize, ursonet
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = ursonet.init_params(0)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, size=(2, *ursonet.N_INPUT)).astype(np.float32)
+    return params, jnp.asarray(x)
+
+
+def test_init_params_layer_names(setup):
+    params, _ = setup
+    assert set(params) == set(ursonet.ALL_LAYERS)
+
+
+def test_init_params_deterministic():
+    p1 = ursonet.init_params(42)
+    p2 = ursonet.init_params(42)
+    for layer in p1:
+        for k in p1[layer]:
+            assert np.array_equal(np.asarray(p1[layer][k]), np.asarray(p2[layer][k]))
+
+
+def test_param_count_magnitude(setup):
+    params, _ = setup
+    n = ursonet.param_count(params)
+    assert 3e5 < n < 2e6, n  # "lite" but non-trivial
+
+
+def test_forward_fp32_shapes(setup):
+    params, x = setup
+    loc, q = ursonet.forward_fp32(params, x)
+    assert loc.shape == (2, 3)
+    assert q.shape == (2, 4)
+
+
+def test_quaternion_output_normalized(setup):
+    params, x = setup
+    _, q = ursonet.forward_fp32(params, x)
+    assert_allclose(np.asarray((q * q).sum(axis=-1)), 1.0, rtol=1e-5)
+
+
+def test_forward_intermediates_matches_forward(setup):
+    params, x = setup
+    loc, q = ursonet.forward_fp32(params, x)
+    res = ursonet.forward_intermediates(params, x)
+    assert_allclose(np.asarray(res["out"][0]), np.asarray(loc), rtol=1e-6)
+    assert set(res["acts"]) == set(ursonet.ALL_LAYERS)
+
+
+def test_gradients_flow_everywhere(setup):
+    params, x = setup
+
+    def loss(p):
+        loc, q = ursonet.forward_fp32(p, x)
+        return (loc**2).sum() + (q[:, 1:] ** 2).sum()
+
+    grads = jax.grad(loss)(params)
+    for layer, g in grads.items():
+        gnorm = float(sum(jnp.abs(v).sum() for v in g.values()))
+        assert gnorm > 0, f"dead gradient in {layer}"
+
+
+def test_deploy_fp32_matches_train_forward(setup):
+    """forward_deploy in fp32 mode must agree with forward_fp32 — same math,
+    different plumbing (im2col+matmul vs lax.conv)."""
+    params, x = setup
+    loc_a, q_a = ursonet.forward_fp32(params, x)
+    loc_b, q_b = ursonet.forward_deploy(params, x, quantize.config_fp32())
+    assert_allclose(np.asarray(loc_a), np.asarray(loc_b), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(q_a), np.asarray(q_b), rtol=1e-4, atol=1e-4)
+
+
+def test_deploy_backbone_head_composition(setup):
+    """backbone ∘ head == full deploy forward (the MPAI split is lossless
+    at the graph level; only precision/transfer differs)."""
+    params, x = setup
+    stats = quantize.calibrate(params, np.asarray(x))
+    cfg = quantize.config_mpai(params, stats)
+    loc_full, q_full = ursonet.forward_deploy(params, x, cfg)
+    feat = ursonet.forward_deploy_backbone(params, x, cfg)
+    loc_sp, q_sp = ursonet.forward_deploy_head(params, feat, cfg)
+    assert_allclose(np.asarray(loc_full), np.asarray(loc_sp), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(q_full), np.asarray(q_sp), rtol=1e-5, atol=1e-6)
+
+
+def test_qat_forward_runs_and_differs_from_fp32(setup):
+    params, x = setup
+    stats = quantize.calibrate(params, np.asarray(x))
+    scales = quantize.act_scales_pow2(stats)
+    loc_q, q_q = ursonet.forward_qat(params, x, scales)
+    loc_f, _ = ursonet.forward_fp32(params, x)
+    assert loc_q.shape == (2, 3)
+    # Fake-quant must actually bite (not be a no-op).
+    assert float(jnp.abs(loc_q - loc_f).max()) > 0
+
+
+def test_qat_gradients_flow_through_ste(setup):
+    params, x = setup
+    stats = quantize.calibrate(params, np.asarray(x))
+    scales = quantize.act_scales_pow2(stats)
+
+    def loss(p):
+        loc, q = ursonet.forward_qat(p, x, scales)
+        return (loc**2).sum()
+
+    grads = jax.grad(loss)(params)
+    for layer in ursonet.CONV_LAYERS:
+        gnorm = float(sum(jnp.abs(v).sum() for v in grads[layer].values()))
+        assert gnorm > 0, f"STE blocked gradient in {layer}"
+
+
+def test_backbone_feature_dimension(setup):
+    params, x = setup
+    feat = ursonet.forward_deploy_backbone(params, x, quantize.config_fp32())
+    assert feat.shape == (2, ursonet.FEAT_DIM)

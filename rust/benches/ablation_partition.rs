@@ -1,0 +1,93 @@
+//! Bench AB-P (DESIGN.md §5): partition cut-point ablation — the design
+//! space behind the paper's §IV future-work item ("methodology and design
+//! guidelines for the model partitioning").
+//!
+//! Sweeps every topological DPU->VPU cut of full-size UrsoNet (and of the
+//! deployed UrsoNet-lite), reporting modeled latency, boundary traffic, and
+//! pipelined throughput; verifies the paper's chosen cut (backbone|heads)
+//! is on the latency frontier.
+
+use std::collections::BTreeMap;
+
+use mpai::accel::interconnect::links;
+use mpai::accel::{deployed_latency, partition_latency, Accelerator, Dpu, Vpu};
+use mpai::net::compiler::{compile, enumerate_cuts, Partition};
+use mpai::net::models;
+
+fn sweep(name: &str) {
+    let g = models::by_name(name).unwrap();
+    let compiled = compile(&g);
+    let (dpu, vpu) = (Dpu, Vpu);
+    let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
+    accels.insert("dpu".into(), &dpu);
+    accels.insert("vpu".into(), &vpu);
+
+    let dpu_only = deployed_latency(&Dpu, &g).total_ms();
+    let vpu_only = deployed_latency(&Vpu, &g).total_ms();
+
+    let cuts = enumerate_cuts(&compiled, 1);
+    let mut rows: Vec<(f64, f64, String, usize)> = cuts
+        .iter()
+        .map(|c| {
+            let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
+            let lat = partition_latency(&compiled, &p, &accels, &links::USB3);
+            (
+                lat.total_ms(),
+                lat.pipelined_fps(),
+                c.layer_name.clone(),
+                c.boundary_bytes,
+            )
+        })
+        .collect();
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    println!(
+        "\n--- {name}: {} cuts | dpu-only {dpu_only:.1} ms, vpu-only {vpu_only:.1} ms ---",
+        rows.len()
+    );
+    println!(
+        "{:<26} {:>11} {:>13} {:>13}",
+        "cut after", "latency ms", "pipelined FPS", "boundary B"
+    );
+    for (ms, fps, layer, bytes) in rows.iter().take(8) {
+        println!("{layer:<26} {ms:>11.2} {fps:>13.1} {bytes:>13}");
+    }
+
+    // The paper's cut (whole backbone on DPU, FC heads on VPU) must be on
+    // the frontier: within 20% of the best cut.
+    let paper_cut = rows
+        .iter()
+        .find(|(_, _, layer, _)| layer == "gap" || layer == "feat_pool")
+        .expect("backbone/head boundary cut present");
+    let best = &rows[0];
+    assert!(
+        paper_cut.0 <= best.0 * 1.25,
+        "{name}: paper cut {:.1} ms too far from frontier best {:.1} ms",
+        paper_cut.0,
+        best.0
+    );
+
+    // At paper scale the best mixed cut beats VPU-only (the slow engine
+    // alone).  At lite scale this *fails by design* — host-link turnaround
+    // dominates a 0.05 GMAC network, so partitioning does not pay; that is
+    // itself a design guideline (recorded in EXPERIMENTS.md AB-P).
+    if name == "ursonet_full" {
+        assert!(
+            best.0 < vpu_only,
+            "{name}: best cut {:.2} must beat vpu-only {vpu_only:.2}",
+            best.0
+        );
+    } else if best.0 >= vpu_only {
+        println!(
+            "note: {name} is too small for partitioning to pay \
+             (best cut {:.2} ms vs vpu-only {vpu_only:.2} ms) — expected at this scale"
+        , best.0);
+    }
+}
+
+fn main() {
+    println!("=== AB-P: partition cut-point ablation ===");
+    sweep("ursonet_full");
+    sweep("ursonet_lite");
+    println!("\nfrontier checks passed (paper's backbone|head cut is near-optimal).");
+}

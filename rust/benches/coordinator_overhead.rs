@@ -1,0 +1,117 @@
+//! Bench OVH (DESIGN.md §5): L3 coordinator hot-path overhead.
+//!
+//! Target (DESIGN.md §8): routing + batching + dispatch accounting per frame
+//! must be far below the smallest modeled inference latency (53 ms), i.e.
+//! < 100 µs — the coordinator must never be the bottleneck (the paper's
+//! contribution *is* the coordination, so we hold it to the standard).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use mpai::accel::interconnect::links;
+use mpai::accel::{partition_latency, Accelerator, Dpu, Vpu};
+use mpai::coordinator::batcher::Batcher;
+use mpai::net::compiler::{compile, enumerate_cuts, Partition};
+use mpai::net::models;
+use mpai::pose::Pose;
+use mpai::sensor::{preprocess, Frame};
+use mpai::util::stats::Bench;
+
+/// Frame with camera-sized pixels (preprocess bench).
+fn mk_frame(id: u64) -> Frame {
+    Frame {
+        id,
+        t_capture: Duration::from_millis(id),
+        pixels: vec![80u8; 240 * 320 * 3],
+        h: 240,
+        w: 320,
+        truth: Pose {
+            loc: [0.0; 3],
+            quat: [1.0, 0.0, 0.0, 0.0],
+        },
+    }
+}
+
+/// Pixel-less frame: the batcher moves metadata only, so the bench must not
+/// charge it for the test harness's pixel allocation.
+fn mk_meta_frame(id: u64) -> Frame {
+    Frame {
+        id,
+        t_capture: Duration::from_millis(id),
+        pixels: Vec::new(),
+        h: 240,
+        w: 320,
+        truth: Pose {
+            loc: [0.0; 3],
+            quat: [1.0, 0.0, 0.0, 0.0],
+        },
+    }
+}
+
+fn main() {
+    println!("=== OVH: coordinator hot-path overhead ===\n");
+    let bench = Bench::new(5, 50);
+
+    // 1. Batcher push/poll per frame.
+    let r = bench.run("batcher push+poll (per frame)", || {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        for id in 0..64u64 {
+            let f = mk_meta_frame(id);
+            let t = f.t_capture;
+            let _ = b.push(f);
+            let _ = b.poll(t);
+        }
+    });
+    let per_frame_batch = r.mean / 64u32;
+    println!("{}", r.row());
+    println!("  -> {:?} per frame", per_frame_batch);
+
+    // 2. Preprocessing (the real per-frame host compute).
+    let f = mk_frame(0);
+    let r = bench.run("preprocess 320x240 -> 128x96", || {
+        let _ = preprocess(&f.pixels, f.h, f.w, 96, 128);
+    });
+    println!("{}", r.row());
+    let preprocess_time = r.p50;
+
+    // 3. Policy/partition evaluation (the dispatch decision).
+    let g = compile(&models::ursonet::build_lite());
+    let (dpu, vpu) = (Dpu, Vpu);
+    let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
+    accels.insert("dpu".into(), &dpu);
+    accels.insert("vpu".into(), &vpu);
+    let cut = g.layers.iter().position(|l| l.name == "feat_pool").unwrap();
+    let p = Partition::two_way(&g, cut, "dpu", "vpu");
+    let r = bench.run("partition latency estimate (dispatch)", || {
+        let _ = partition_latency(&g, &p, &accels, &links::USB3);
+    });
+    println!("{}", r.row());
+    let dispatch_time = r.p50;
+
+    // 4. Full cut enumeration (policy re-planning, cold path).
+    let r = bench.run("enumerate all cuts (re-planning)", || {
+        let _ = enumerate_cuts(&g, 1);
+    });
+    println!("{}", r.row());
+
+    // ---- Budget assertions -------------------------------------------------
+    let budget = Duration::from_micros(100);
+    assert!(
+        per_frame_batch < budget,
+        "batcher per-frame {per_frame_batch:?} exceeds 100 µs budget"
+    );
+    assert!(
+        dispatch_time < Duration::from_millis(1),
+        "dispatch estimate {dispatch_time:?} exceeds 1 ms"
+    );
+    // Preprocess is real work, budgeted against the modeled DPU row (53 ms).
+    assert!(
+        preprocess_time < Duration::from_millis(53),
+        "preprocess {preprocess_time:?} must stay below the fastest inference"
+    );
+    println!(
+        "\nbudgets held: batching {:?}/frame (<100 µs), dispatch {:?} (<1 ms), \
+         preprocess {:?} (<53 ms)",
+        per_frame_batch, dispatch_time, preprocess_time
+    );
+}

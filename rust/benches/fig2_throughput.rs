@@ -1,0 +1,79 @@
+//! Bench FIG2 (DESIGN.md §5): regenerate Fig. 2 — inference throughput of
+//! the AI accelerators over the three evaluated networks.
+//!
+//! Paper series: MobileNetV2 / ResNet-50 / Inception-V4 x {Edge TPU,
+//! MyriadX VPU}; expected shape: TPU ~8x VPU on MobileNetV2, VPU ~2x TPU
+//! on ResNet-50, both ~10 FPS on Inception-V4.  The model evaluation
+//! itself is also timed (it is the L3 hot path of the policy engine).
+
+use std::time::Instant;
+
+use mpai::accel::{deployed_latency, Accelerator, Dpu, Tpu, Vpu};
+use mpai::net::models;
+use mpai::util::stats::Bench;
+
+fn main() {
+    println!("=== FIG2: inference throughput of AI accelerators ===\n");
+
+    let nets = models::fig2_models();
+    let paper: [(&str, f64); 3] = [
+        // (name, paper TPU/VPU ratio)
+        ("mobilenet_v2", 8.0),
+        ("resnet50", 0.5),
+        ("inception_v4", 1.0),
+    ];
+
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>12} {:>14}",
+        "network", "TPU FPS", "VPU FPS", "DPU FPS", "TPU/VPU", "paper TPU/VPU"
+    );
+    for (g, (name, paper_ratio)) in nets.iter().zip(paper.iter()) {
+        let tpu = deployed_latency(&Tpu, g).fps();
+        let vpu = deployed_latency(&Vpu, g).fps();
+        let dpu = deployed_latency(&Dpu, g).fps();
+        println!(
+            "{:<14} {:>10.1} {:>10.1} {:>10.1} {:>11.2}x {:>13.2}x",
+            name,
+            tpu,
+            vpu,
+            dpu,
+            tpu / vpu,
+            paper_ratio
+        );
+        assert_eq!(&g.name, name);
+    }
+
+    // Shape assertions (the bench doubles as a regression gate).
+    let fps = |a: &dyn Accelerator, g: &mpai::net::Graph| deployed_latency(a, g).fps();
+    let mnv2 = &nets[0];
+    let r50 = &nets[1];
+    let iv4 = &nets[2];
+    assert!(
+        fps(&Tpu, mnv2) / fps(&Vpu, mnv2) > 4.0,
+        "MobileNetV2: TPU must dominate VPU"
+    );
+    assert!(
+        fps(&Vpu, r50) > fps(&Tpu, r50),
+        "ResNet-50: VPU must beat TPU (SRAM cliff)"
+    );
+    let (t_iv4, v_iv4) = (fps(&Tpu, iv4), fps(&Vpu, iv4));
+    assert!(
+        (0.4..2.5).contains(&(t_iv4 / v_iv4)),
+        "Inception-V4: rough parity expected"
+    );
+    println!("\nshape checks passed (crossover + ratios).");
+
+    // Time the estimator itself (policy hot path).
+    let bench = Bench::new(3, 30);
+    for g in &nets {
+        let r = bench.run(&format!("estimate {}", g.name), || {
+            let _ = deployed_latency(&Tpu, g);
+            let _ = deployed_latency(&Vpu, g);
+        });
+        println!("{}", r.row());
+    }
+
+    let t0 = Instant::now();
+    let _ = deployed_latency(&Tpu, &nets[2]);
+    println!("\nsingle estimate latency: {:?}", t0.elapsed());
+}

@@ -1,0 +1,117 @@
+//! Bench T1 (DESIGN.md §5): regenerate Table I — satellite pose estimation:
+//! per-mode accuracy (measured by executing the quantized artifacts via
+//! PJRT over the eval set) and latency (modeled at paper scale).
+//!
+//! Paper rows (1280x960x3):
+//!   A53 FP32   LOCE 0.68  ORIE 7.28  inf 9890 ms  total 9928 ms
+//!   A53 FP16   LOCE 0.87  ORIE 8.09  inf 4210 ms  total 4338 ms
+//!   VPU  FP16  LOCE 0.69  ORIE 8.71  inf  246 ms  total  252 ms
+//!   TPU  INT8  LOCE 0.66  ORIE 7.60  inf  149 ms  total  187 ms
+//!   DPU  INT8  LOCE 0.96  ORIE 9.29  inf   53 ms  total   66 ms
+//!   DPU+VPU    LOCE 0.68  ORIE 7.32  inf   79 ms  total   92 ms
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpai::coordinator::{self, Config, Mode};
+use mpai::pose::EvalSet;
+use mpai::runtime::Manifest;
+
+fn main() {
+    println!("=== T1: Table I — satellite pose estimation ===\n");
+    let manifest = match Manifest::load(Path::new("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP: artifacts not built ({e:#}) — run `make artifacts`");
+            return;
+        }
+    };
+    let eval = Arc::new(EvalSet::load(&manifest.eval_file).expect("eval set"));
+    let profiles = coordinator::profile_modes(&manifest);
+
+    let paper: [(Mode, f64, f64, f64); 6] = [
+        (Mode::CpuFp32, 0.68, 7.28, 9890.0),
+        (Mode::CpuFp16, 0.87, 8.09, 4210.0),
+        (Mode::VpuFp16, 0.69, 8.71, 246.0),
+        (Mode::TpuInt8, 0.66, 7.60, 149.0),
+        (Mode::DpuInt8, 0.96, 9.29, 53.0),
+        (Mode::Mpai, 0.68, 7.32, 79.0),
+    ];
+
+    println!(
+        "{:<10} | {:>8} {:>9} | {:>9} {:>9} | {:>10} {:>10} | {:>10} {:>8}",
+        "mode", "LOCE m", "ORIE deg", "paperLOCE", "paperORIE", "inf ms", "paper ms", "total ms", "ratio"
+    );
+
+    let mut measured = std::collections::BTreeMap::new();
+    for (mode, p_loce, p_orie, p_inf) in paper {
+        let cfg = Config {
+            artifacts_dir: manifest.dir.clone(),
+            mode: Some(mode),
+            batch_timeout: Duration::from_millis(1),
+            camera_fps: 1000.0,
+            frames: eval.len() as u64,
+            pipelined: false,
+        };
+        let backend = coordinator::PjrtBackend::new(&manifest, mode).expect("backend");
+        let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)
+            .expect("run");
+        let (loce, orie) = out.telemetry.accuracy();
+        let prof = profiles[&mode];
+        measured.insert(mode, (loce, orie, prof.inference_ms));
+        println!(
+            "{:<10} | {:>8.3} {:>9.2} | {:>9.2} {:>9.2} | {:>10.1} {:>10.1} | {:>10.1} {:>7.2}x",
+            mode.label(),
+            loce,
+            orie,
+            p_loce,
+            p_orie,
+            prof.inference_ms,
+            p_inf,
+            prof.total_ms,
+            prof.inference_ms / p_inf,
+        );
+    }
+
+    // ---- Shape assertions (the reproduction gate) -------------------------
+    let loce = |m: Mode| measured[&m].0;
+    let inf = |m: Mode| measured[&m].2;
+
+    // Accuracy shape: DPU (max/pow2 PTQ) degrades most; MPAI recovers.
+    assert!(
+        loce(Mode::DpuInt8) > loce(Mode::TpuInt8),
+        "DPU INT8 must lose more accuracy than TPU INT8 \
+         (pow2/max vs per-channel/percentile)"
+    );
+    assert!(
+        loce(Mode::Mpai) < loce(Mode::DpuInt8),
+        "MPAI must recover accuracy vs full-INT8 DPU"
+    );
+    assert!(
+        loce(Mode::Mpai) <= loce(Mode::CpuFp32) * 1.30 + 0.02,
+        "MPAI must land near the FP32 baseline"
+    );
+
+    // Latency shape: CPU32 > CPU16 > VPU > TPU > MPAI > DPU.
+    let order = [
+        Mode::CpuFp32,
+        Mode::CpuFp16,
+        Mode::VpuFp16,
+        Mode::TpuInt8,
+        Mode::Mpai,
+        Mode::DpuInt8,
+    ];
+    for pair in order.windows(2) {
+        assert!(
+            inf(pair[0]) > inf(pair[1]),
+            "latency ordering violated: {:?} !> {:?}",
+            pair[0],
+            pair[1]
+        );
+    }
+    let ratio = inf(Mode::Mpai) / inf(Mode::DpuInt8);
+    assert!((1.0..2.2).contains(&ratio), "MPAI/DPU latency ratio {ratio}");
+
+    println!("\nshape checks passed (accuracy spread + latency ordering).");
+}

@@ -1,0 +1,151 @@
+//! Cortex-A53 host-CPU model — the Table I software-baseline rows, and the
+//! host that runs preprocessing for every accelerator row.
+
+use crate::accel::calibration::cpu as cal;
+use crate::accel::traits::{Accelerator, LayerCost, ModelCost, PowerModel, Precision};
+use crate::net::graph::Graph;
+use crate::net::layers::{Layer, Op, Shape};
+
+/// Which board hosts the CPU (affects clock + preprocessing path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Host {
+    /// Coral DevBoard: 4xA53 @1.5 GHz, FP32 inference (Table I row 1).
+    DevBoard,
+    /// ZCU104 PS: 4xA53 @1.2 GHz, FP16 inference (Table I row 2).
+    Zcu104,
+}
+
+/// A53 CPU software inference.
+#[derive(Debug, Clone, Copy)]
+pub struct Cpu {
+    pub host: Host,
+}
+
+impl Cpu {
+    pub fn devboard() -> Cpu {
+        Cpu {
+            host: Host::DevBoard,
+        }
+    }
+
+    pub fn zcu104() -> Cpu {
+        Cpu { host: Host::Zcu104 }
+    }
+
+    fn macs_per_s(&self) -> f64 {
+        match self.host {
+            Host::DevBoard => cal::FP32_MACS,
+            Host::Zcu104 => cal::FP16_MACS,
+        }
+    }
+
+    /// Preprocessing (bilinear resample + normalize) time for a camera
+    /// frame of `src_bytes` — the Table I "Total minus Inference" column.
+    pub fn preprocess_s(&self, src_bytes: usize) -> f64 {
+        let bps = match self.host {
+            Host::DevBoard => cal::PREPROCESS_BPS_DEVBOARD,
+            Host::Zcu104 => cal::PREPROCESS_BPS_ZCU104,
+        };
+        src_bytes as f64 / bps
+    }
+}
+
+impl Accelerator for Cpu {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    fn hosting_device(&self) -> &str {
+        match self.host {
+            Host::DevBoard => "DevBoard",
+            Host::Zcu104 => "ZCU104",
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        match self.host {
+            Host::DevBoard => Precision::Fp32,
+            Host::Zcu104 => Precision::Fp16,
+        }
+    }
+
+    fn supports(&self, layer: &Layer, _in: &[Shape]) -> bool {
+        !matches!(layer.op, Op::Input) // software runs everything
+    }
+
+    fn layer_cost(&self, layer: &Layer, in_shapes: &[Shape]) -> LayerCost {
+        let macs = layer.macs(in_shapes) as f64;
+        let elem = self.precision().bytes() as f64;
+        let params_bytes = layer.params(in_shapes) as f64 * elem;
+        let compute_s = match &layer.op {
+            // Depthwise vectorizes tolerably on NEON (channel-last loops).
+            Op::Conv { .. } | Op::Dense { .. } => macs / self.macs_per_s(),
+            _ => macs / cal::VECTOR_OPS,
+        };
+        LayerCost {
+            compute_s,
+            memory_s: params_bytes / cal::DDR_BPS,
+            overhead_s: cal::LAYER_OVERHEAD_S,
+        }
+    }
+
+    fn model_cost(&self, _graph: &Graph, _in: usize, _out: usize) -> ModelCost {
+        ModelCost::default() // data is already in host memory
+    }
+
+    fn power(&self) -> PowerModel {
+        PowerModel {
+            idle_w: cal::IDLE_W,
+            active_w: cal::ACTIVE_W,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::calibration::PAPER_FRAME_BYTES;
+    use crate::accel::traits::deployed_latency;
+    use crate::net::models;
+
+    #[test]
+    fn ursonet_full_fp32_near_paper() {
+        // Table I: Cortex-A53 FP32 inference 9890 ms; within ~40%.
+        let lat = deployed_latency(&Cpu::devboard(), &models::ursonet::build_full()).total_s();
+        assert!((6.0..14.0).contains(&lat), "CPU FP32 {lat} s");
+    }
+
+    #[test]
+    fn ursonet_full_fp16_near_paper() {
+        // Table I: Cortex-A53 FP16 inference 4210 ms; within ~40%.
+        let lat = deployed_latency(&Cpu::zcu104(), &models::ursonet::build_full()).total_s();
+        assert!((2.5..6.0).contains(&lat), "CPU FP16 {lat} s");
+    }
+
+    #[test]
+    fn fp16_speedup_matches_table1_ratio() {
+        // 9890/4210 = 2.35; assert [1.8, 2.8].
+        let g = models::ursonet::build_full();
+        let r = deployed_latency(&Cpu::devboard(), &g).total_s()
+            / deployed_latency(&Cpu::zcu104(), &g).total_s();
+        assert!((1.8..2.8).contains(&r), "FP32/FP16 ratio {r}");
+    }
+
+    #[test]
+    fn preprocess_near_table1_gaps() {
+        // DevBoard: 187-149 = 38 ms; ZCU104 (DPU row): 66-53 = 13 ms.
+        let dev = Cpu::devboard().preprocess_s(PAPER_FRAME_BYTES) * 1e3;
+        let zcu = Cpu::zcu104().preprocess_s(PAPER_FRAME_BYTES) * 1e3;
+        assert!((25.0..50.0).contains(&dev), "DevBoard preprocess {dev} ms");
+        assert!((8.0..18.0).contains(&zcu), "ZCU104 preprocess {zcu} ms");
+    }
+
+    #[test]
+    fn cpu_orders_of_magnitude_slower_than_dpu() {
+        use crate::accel::dpu::Dpu;
+        let g = models::ursonet::build_full();
+        let cpu = deployed_latency(&Cpu::devboard(), &g).total_s();
+        let dpu = deployed_latency(&Dpu, &g).total_s();
+        assert!(cpu / dpu > 50.0, "CPU/DPU ratio {}", cpu / dpu);
+    }
+}

@@ -1,0 +1,142 @@
+//! DPUCZDX8G model — the MPSoC PL INT8 inference engine (paper §II).
+//!
+//! "Deep pipelined 8-bit architecture, with the processing elements taking
+//! full advantage of the fine-grained building blocks ... on-chip memory is
+//! used for storing input activations, intermediate feature-maps ... an
+//! instruction scheduler fetches instructions from off-chip memory."
+//!
+//! Model: one B4096 core; conv layers run at `CONV_EFF` of the 0.6 TMAC/s
+//! peak; depthwise at `DW_EFF` (no channel reuse across the PE array);
+//! FC layers are DDR-bandwidth-bound (weights stream from off-chip, exactly
+//! once, no caching); each layer pays an instruction-dispatch overhead.
+//! Input arrives over the on-chip AXI HP port (Fig. 1).
+
+use crate::accel::calibration::dpu as cal;
+use crate::accel::interconnect::links;
+use crate::accel::traits::{Accelerator, LayerCost, ModelCost, PowerModel, Precision};
+use crate::net::graph::Graph;
+use crate::net::layers::{Layer, Op, Shape};
+
+/// DPUCZDX8G-B4096 on the ZCU104.
+#[derive(Debug, Clone, Default)]
+pub struct Dpu;
+
+impl Accelerator for Dpu {
+    fn name(&self) -> &str {
+        "dpu"
+    }
+
+    fn hosting_device(&self) -> &str {
+        "ZCU104"
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Int8
+    }
+
+    fn supports(&self, layer: &Layer, _in: &[Shape]) -> bool {
+        // The DPU executes the standard CNN operator set; softmax runs on
+        // the host in the Vitis AI flow.
+        !matches!(layer.op, Op::Input)
+    }
+
+    fn layer_cost(&self, layer: &Layer, in_shapes: &[Shape]) -> LayerCost {
+        let macs = layer.macs(in_shapes) as f64;
+        let params = layer.params(in_shapes) as f64; // INT8: 1 byte each
+
+        let compute_s = match &layer.op {
+            Op::Conv { .. } if layer.is_depthwise(in_shapes) => {
+                macs / (cal::PEAK_MACS * cal::DW_EFF)
+            }
+            Op::Conv { .. } => macs / (cal::PEAK_MACS * cal::CONV_EFF),
+            Op::Dense { .. } => macs / (cal::PEAK_MACS * cal::CONV_EFF),
+            _ => macs / cal::VECTOR_OPS,
+        };
+        // Weights stream from DDR each inference (the DPU fetches weights
+        // per-layer); activations stay in on-chip BRAM with data reuse
+        // (paper §II: "data reuse is applied to reduce external memory
+        // bandwidth requirements").
+        let memory_s = params / cal::DDR_BPS;
+        LayerCost {
+            compute_s,
+            memory_s,
+            overhead_s: cal::LAYER_OVERHEAD_S,
+        }
+    }
+
+    fn model_cost(&self, _graph: &Graph, in_bytes: usize, out_bytes: usize) -> ModelCost {
+        ModelCost {
+            param_stream_s: 0.0, // charged per-layer via memory_s
+            host_io_s: links::AXI_HP.transfer_s(in_bytes) + links::AXI_HP.transfer_s(out_bytes),
+            invoke_s: cal::INVOKE_S,
+        }
+    }
+
+    fn power(&self) -> PowerModel {
+        PowerModel {
+            idle_w: cal::IDLE_W,
+            active_w: cal::ACTIVE_W,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::traits::deployed_latency;
+    use crate::net::models;
+
+    #[test]
+    fn ursonet_full_near_paper_latency() {
+        // Table I: DPU inference 53 ms. Model within ~40%.
+        let g = models::ursonet::build_full();
+        let lat = deployed_latency(&Dpu, &g).total_ms();
+        assert!((35.0..75.0).contains(&lat), "DPU UrsoNet {lat} ms");
+    }
+
+    #[test]
+    fn depthwise_slower_per_mac_than_dense_conv() {
+        let g = models::mobilenet_v2::build(1000);
+        let dpu = Dpu;
+        let mut dw_rate = f64::INFINITY;
+        let mut conv_rate: f64 = 0.0;
+        for (i, l) in g.layers.iter().enumerate() {
+            let ins = g.in_shapes(i);
+            let macs = l.macs(&ins) as f64;
+            if macs == 0.0 || !matches!(l.op, Op::Conv { .. }) {
+                continue;
+            }
+            let r = macs / dpu.layer_cost(l, &ins).compute_s;
+            if l.is_depthwise(&ins) {
+                dw_rate = dw_rate.min(r);
+            } else {
+                conv_rate = conv_rate.max(r);
+            }
+        }
+        assert!(dw_rate < conv_rate / 2.0);
+    }
+
+    #[test]
+    fn supports_whole_zoo() {
+        let dpu = Dpu;
+        for g in models::fig2_models() {
+            for (i, l) in g.layers.iter().enumerate() {
+                if matches!(l.op, Op::Input) {
+                    continue;
+                }
+                assert!(dpu.supports(l, &g.in_shapes(i)), "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fastest_table1_engine() {
+        // Table I ordering: DPU < TPU < VPU on UrsoNet inference latency.
+        use crate::accel::{tpu::Tpu, vpu::Vpu};
+        let g = models::ursonet::build_full();
+        let dpu = deployed_latency(&Dpu, &g).total_s();
+        let tpu = deployed_latency(&Tpu, &g).total_s();
+        let vpu = deployed_latency(&Vpu, &g).total_s();
+        assert!(dpu < tpu && tpu < vpu, "dpu {dpu} tpu {tpu} vpu {vpu}");
+    }
+}

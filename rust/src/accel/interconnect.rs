@@ -1,0 +1,93 @@
+//! Interconnect models: the links that carry frames, features, and weights
+//! between the MPSoC host and the accelerators (Fig. 1 of the paper).
+
+/// A point-to-point link with fixed turnaround latency and bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub name: &'static str,
+    /// Effective (not line-rate) bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    /// Fixed per-transfer latency (driver + protocol turnaround).
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub const fn new(name: &'static str, bandwidth_bps: f64, latency_s: f64) -> Link {
+        Link {
+            name,
+            bandwidth_bps,
+            latency_s,
+        }
+    }
+
+    /// Time to move `bytes` in one transfer.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Time for `n` back-to-back transfers of `bytes` each (latency paid
+    /// once per transfer — no pipelining across transactions).
+    pub fn transfers_s(&self, n: usize, bytes: usize) -> f64 {
+        n as f64 * self.transfer_s(bytes)
+    }
+}
+
+/// The links present in the MPAI topology (Fig. 1), with effective rates.
+pub mod links {
+    use super::Link;
+
+    /// PS <-> PL (DPU) AXI HP port on the MPSoC: on-chip, wide, low latency.
+    pub const AXI_HP: Link = Link::new("axi-hp", 2.0e9, 20e-6);
+    /// USB 3.0 to the NCS2 (VPU): effective app-level throughput.
+    pub const USB3: Link = Link::new("usb3", 350e6, 1.5e-3);
+    /// USB 2.0 fallback (NCS2 plugged into a USB2 port — ablation).
+    pub const USB2: Link = Link::new("usb2", 35e6, 2.5e-3);
+    /// PCIe x1 to the Edge TPU SoM on the DevBoard.
+    pub const PCIE_X1: Link = Link::new("pcie-x1", 350e6, 0.3e-3);
+    /// Camera CSI-2 ingest into the MPSoC.
+    pub const CSI2: Link = Link::new("csi2", 1.2e9, 100e-6);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let l = Link::new("t", 100e6, 1e-3);
+        // 1 MB at 100 MB/s = 10 ms + 1 ms latency.
+        let t = l.transfer_s(1_000_000);
+        assert!((t - 0.011).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_costs_latency_only() {
+        let l = links::USB3;
+        assert!((l.transfer_s(0) - l.latency_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_transfers_scale() {
+        let l = Link::new("t", 1e9, 1e-4);
+        assert!((l.transfers_s(10, 1000) - 10.0 * l.transfer_s(1000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topology_orderings() {
+        use links::*;
+        // On-chip beats every off-chip link.
+        assert!(AXI_HP.bandwidth_bps > USB3.bandwidth_bps);
+        assert!(AXI_HP.latency_s < USB3.latency_s);
+        // USB3 ≫ USB2.
+        assert!(USB3.bandwidth_bps / USB2.bandwidth_bps > 5.0);
+    }
+
+    #[test]
+    fn feature_transfer_is_cheap_over_usb3() {
+        // The MPAI boundary tensor (6x8x128 int8 = 6 KiB) must be dominated
+        // by turnaround latency, not bandwidth — the premise of the paper's
+        // DPU+VPU latency (79 ms ≈ DPU 53 + head + transfers).
+        let t = links::USB3.transfer_s(6 * 8 * 128);
+        assert!(t < 2.0e-3, "feature transfer {t}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Accelerator substrates: timing + power models of every device in the
+//! paper's testbed, plus the interconnects between them (DESIGN.md §1, §4.3).
+
+pub mod calibration;
+pub mod cpu;
+pub mod dpu;
+pub mod estimate;
+pub mod interconnect;
+pub mod tpu;
+pub mod traits;
+pub mod vpu;
+
+pub use cpu::Cpu;
+pub use dpu::Dpu;
+pub use estimate::{device_report, partition_latency, PartitionLatency};
+pub use interconnect::{links, Link};
+pub use tpu::Tpu;
+pub use vpu::Vpu;
+pub use traits::{deployed_latency, network_latency, Accelerator, LayerCost, NetworkLatency, Precision};

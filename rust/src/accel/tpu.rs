@@ -1,0 +1,143 @@
+//! Edge TPU model (paper §II).
+//!
+//! "Relies on a systolic array of multipliers & accumulators ... and an
+//! on-chip SRAM for storing the model's parameters and executable."
+//!
+//! The defining behaviour is the SRAM capacity cliff: a model whose INT8
+//! parameters fit in ~6.5 MB runs entirely on-chip (MobileNetV2 — 8x the
+//! VPU in Fig. 2); a larger model streams the excess weights over the host
+//! link on *every* inference (ResNet-50, Inception-V4 — the Fig. 2
+//! crossover where the VPU wins).
+
+use crate::accel::calibration::tpu as cal;
+use crate::accel::interconnect::links;
+use crate::accel::traits::{Accelerator, LayerCost, ModelCost, PowerModel, Precision};
+use crate::net::graph::Graph;
+use crate::net::layers::{Layer, Op, Shape};
+
+/// Coral Edge TPU (DevBoard SoM).
+#[derive(Debug, Clone, Default)]
+pub struct Tpu;
+
+impl Tpu {
+    /// INT8 parameter bytes that do not fit in SRAM and must stream.
+    pub fn streamed_bytes(graph: &Graph) -> usize {
+        (graph.total_params() as usize).saturating_sub(cal::PARAM_SRAM_BYTES)
+    }
+
+    /// Whether the model is fully SRAM-resident.
+    pub fn fits_sram(graph: &Graph) -> bool {
+        Self::streamed_bytes(graph) == 0
+    }
+}
+
+impl Accelerator for Tpu {
+    fn name(&self) -> &str {
+        "tpu"
+    }
+
+    fn hosting_device(&self) -> &str {
+        "DevBoard"
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Int8
+    }
+
+    fn supports(&self, layer: &Layer, _in: &[Shape]) -> bool {
+        !matches!(layer.op, Op::Input)
+    }
+
+    fn layer_cost(&self, layer: &Layer, in_shapes: &[Shape]) -> LayerCost {
+        let macs = layer.macs(in_shapes) as f64;
+        let compute_s = match &layer.op {
+            Op::Conv { .. } if layer.is_depthwise(in_shapes) => {
+                macs / (cal::PEAK_MACS * cal::DW_EFF)
+            }
+            Op::Conv { .. } | Op::Dense { .. } => macs / (cal::PEAK_MACS * cal::CONV_EFF),
+            _ => macs / cal::VECTOR_OPS,
+        };
+        // Activations live on-chip; weight movement is charged at the model
+        // level (param_stream_s) because it depends on whole-model size.
+        LayerCost {
+            compute_s,
+            memory_s: 0.0,
+            overhead_s: cal::LAYER_OVERHEAD_S,
+        }
+    }
+
+    fn model_cost(&self, graph: &Graph, in_bytes: usize, out_bytes: usize) -> ModelCost {
+        let streamed = Self::streamed_bytes(graph);
+        let n_layers = graph.layers.len();
+        let param_stream_s = if streamed > 0 {
+            // Stream the excess weights + pay a per-layer transaction cost
+            // while the executable alternates between cached and fetched
+            // parameter blocks.
+            links::PCIE_X1.transfer_s(streamed)
+                + n_layers as f64 * cal::STREAM_LAYER_OVERHEAD_S
+        } else {
+            0.0
+        };
+        ModelCost {
+            param_stream_s,
+            host_io_s: links::PCIE_X1.transfer_s(in_bytes)
+                + links::PCIE_X1.transfer_s(out_bytes),
+            invoke_s: cal::LINK_LATENCY_S,
+        }
+    }
+
+    fn power(&self) -> PowerModel {
+        PowerModel {
+            idle_w: cal::IDLE_W,
+            active_w: cal::ACTIVE_W,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::traits::deployed_latency;
+    use crate::net::models;
+
+    #[test]
+    fn mobilenet_fits_sram_resnet_does_not() {
+        assert!(Tpu::fits_sram(&models::mobilenet_v2::build(1000)));
+        assert!(!Tpu::fits_sram(&models::resnet50::build(1000)));
+        assert!(!Tpu::fits_sram(&models::inception_v4::build(1000)));
+    }
+
+    #[test]
+    fn mobilenet_latency_near_coral_datasheet() {
+        // Coral reports ~2.6 ms MobileNetV2 inference on the DevBoard.
+        let lat = deployed_latency(&Tpu, &models::mobilenet_v2::build(1000)).total_ms();
+        assert!((1.5..6.0).contains(&lat), "TPU MobileNetV2 {lat} ms");
+    }
+
+    #[test]
+    fn inception_v4_near_coral_datasheet() {
+        // Coral reports ~100 ms Inception-V4 on the DevBoard; paper Fig. 2
+        // shows ~10 FPS.
+        let lat = deployed_latency(&Tpu, &models::inception_v4::build(1000)).total_ms();
+        assert!((70.0..220.0).contains(&lat), "TPU InceptionV4 {lat} ms");
+    }
+
+    #[test]
+    fn streaming_cliff_dominates_resnet50() {
+        let g = models::resnet50::build(1000);
+        let lat = deployed_latency(&Tpu, &g);
+        assert!(
+            lat.model.param_stream_s > lat.layers_s,
+            "streaming {:.1} ms should dominate compute {:.1} ms",
+            lat.model.param_stream_s * 1e3,
+            lat.layers_s * 1e3
+        );
+    }
+
+    #[test]
+    fn ursonet_full_near_paper_latency() {
+        // Table I: TPU inference 149 ms; model within ~40%.
+        let lat = deployed_latency(&Tpu, &models::ursonet::build_full()).total_ms();
+        assert!((90.0..210.0).contains(&lat), "TPU UrsoNet {lat} ms");
+    }
+}

@@ -1,0 +1,204 @@
+//! Accelerator model interface.
+//!
+//! Every device (DPU, Edge TPU, MyriadX VPU, Cortex-A53) implements
+//! [`Accelerator`]: a *layer-level cycle-approximate* timing + power model.
+//! Latency of a layer is `max(compute, memory) + overhead` — the roofline
+//! shape that governs all four real devices — and whole-network latency adds
+//! the device's per-inference fixed costs (host I/O, parameter streaming).
+//!
+//! The models are calibrated against published device figures (see
+//! `calibration.rs` for every constant and its source) and are the
+//! substitute for the paper's physical testbed (DESIGN.md §1).
+
+use crate::net::graph::Graph;
+use crate::net::layers::{Layer, Shape};
+
+/// Arithmetic the device commits to (Table I "Model Precision" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Fp16 => 2,
+            Precision::Int8 => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "FP32",
+            Precision::Fp16 => "FP16",
+            Precision::Int8 => "INT8",
+        }
+    }
+}
+
+/// Cost breakdown for one layer on one device (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCost {
+    /// MAC-array / vector-unit busy time.
+    pub compute_s: f64,
+    /// Activation + weight movement time (overlappable with compute).
+    pub memory_s: f64,
+    /// Non-overlappable per-layer cost (instruction dispatch, kernel launch).
+    pub overhead_s: f64,
+}
+
+impl LayerCost {
+    /// Double-buffered execution: compute overlaps memory; overhead does not.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s.max(self.memory_s) + self.overhead_s
+    }
+}
+
+/// Per-inference costs that are not attributable to a single layer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModelCost {
+    /// Parameter streaming (weights that do not fit on-chip), per inference.
+    pub param_stream_s: f64,
+    /// Host -> device input transfer + device -> host output transfer.
+    pub host_io_s: f64,
+    /// Fixed invocation cost (driver, descriptor setup).
+    pub invoke_s: f64,
+}
+
+impl ModelCost {
+    pub fn total_s(&self) -> f64 {
+        self.param_stream_s + self.host_io_s + self.invoke_s
+    }
+}
+
+/// Simple two-state power model (watts).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    pub idle_w: f64,
+    pub active_w: f64,
+}
+
+impl PowerModel {
+    /// Energy for `busy_s` seconds of activity in a `window_s` window.
+    pub fn energy_j(&self, busy_s: f64, window_s: f64) -> f64 {
+        let idle = (window_s - busy_s).max(0.0);
+        self.active_w * busy_s + self.idle_w * idle
+    }
+}
+
+/// The accelerator model interface.
+pub trait Accelerator {
+    /// Short name used by partitions/telemetry ("dpu", "tpu", "vpu", "cpu").
+    fn name(&self) -> &str;
+
+    /// Hosting device string (Table I "Hosting Device" column).
+    fn hosting_device(&self) -> &str;
+
+    fn precision(&self) -> Precision;
+
+    /// Whether the device can execute this layer at all (feasibility check
+    /// used by the partitioner).
+    fn supports(&self, layer: &Layer, in_shapes: &[Shape]) -> bool;
+
+    /// Timing of one layer (batch 1).
+    fn layer_cost(&self, layer: &Layer, in_shapes: &[Shape]) -> LayerCost;
+
+    /// Per-inference fixed costs for running `graph` end-to-end, given the
+    /// bytes entering and leaving the device.
+    fn model_cost(&self, graph: &Graph, in_bytes: usize, out_bytes: usize) -> ModelCost;
+
+    fn power(&self) -> PowerModel;
+}
+
+/// Full-network single-device latency estimate.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkLatency {
+    pub layers_s: f64,
+    pub model: ModelCost,
+    pub per_layer: Vec<(String, LayerCost)>,
+}
+
+impl NetworkLatency {
+    pub fn total_s(&self) -> f64 {
+        self.layers_s + self.model.total_s()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_s() * 1e3
+    }
+
+    pub fn fps(&self) -> f64 {
+        1.0 / self.total_s()
+    }
+}
+
+/// Estimate the *deployed* graph on `accel`: applies the graph compiler
+/// (BN folding + activation fusion — what the vendor toolflows execute)
+/// before timing.  This is what Fig. 2 / Table I consume.
+pub fn deployed_latency(accel: &dyn Accelerator, graph: &Graph) -> NetworkLatency {
+    let compiled = crate::net::compiler::compile(graph);
+    network_latency(accel, &compiled)
+}
+
+/// Estimate running `graph` exactly as given on `accel` (batch 1).
+pub fn network_latency(accel: &dyn Accelerator, graph: &Graph) -> NetworkLatency {
+    let mut out = NetworkLatency::default();
+    for (i, layer) in graph.layers.iter().enumerate() {
+        if matches!(layer.op, crate::net::layers::Op::Input) {
+            continue;
+        }
+        let in_shapes = graph.in_shapes(i);
+        let c = accel.layer_cost(layer, &in_shapes);
+        out.layers_s += c.total_s();
+        out.per_layer.push((layer.name.clone(), c));
+    }
+    let eb = accel.precision().bytes();
+    let in_bytes: usize = graph
+        .layers
+        .iter()
+        .filter(|l| matches!(l.op, crate::net::layers::Op::Input))
+        .map(|l| l.out.numel() * eb)
+        .sum();
+    let out_bytes: usize = graph
+        .outputs()
+        .iter()
+        .map(|&i| graph.layers[i].out.numel() * eb)
+        .sum();
+    out.model = accel.model_cost(graph, in_bytes, out_bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_cost_overlap_semantics() {
+        let c = LayerCost {
+            compute_s: 3.0,
+            memory_s: 5.0,
+            overhead_s: 1.0,
+        };
+        assert_eq!(c.total_s(), 6.0); // max(3,5)+1
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert_eq!(Precision::Fp16.bytes(), 2);
+        assert_eq!(Precision::Int8.bytes(), 1);
+    }
+
+    #[test]
+    fn power_energy() {
+        let p = PowerModel {
+            idle_w: 1.0,
+            active_w: 5.0,
+        };
+        // 0.5s busy in a 2s window: 0.5*5 + 1.5*1 = 4 J.
+        assert!((p.energy_j(0.5, 2.0) - 4.0).abs() < 1e-12);
+    }
+}

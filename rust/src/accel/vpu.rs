@@ -1,0 +1,141 @@
+//! MyriadX VPU model (paper §II).
+//!
+//! "2 general-purpose LEON4 CPUs, 16 SIMD & VLIW programmable cores
+//! [SHAVEs], hardware imaging filters, and a dedicated AI accelerator
+//! engine ... models are built on 16-bit floating-point arithmetic."
+//!
+//! Model: FP16 compute at `CONV_EFF` of 0.35 TMAC/s; depthwise convolutions
+//! collapse utilization (`DW_EFF`, no channel vectorization across SHAVE
+//! lanes — the MobileNetV2 mechanism of Fig. 2); FC weights stream from the
+//! on-package LPDDR; every layer pays a LEON-dispatch overhead; inputs and
+//! outputs cross the USB3 link (NCS2 form factor).
+
+use crate::accel::calibration::vpu as cal;
+use crate::accel::interconnect::links;
+use crate::accel::traits::{Accelerator, LayerCost, ModelCost, PowerModel, Precision};
+use crate::net::graph::Graph;
+use crate::net::layers::{Layer, Op, Shape};
+
+/// Intel MyriadX on the NCS2 USB stick.
+#[derive(Debug, Clone, Default)]
+pub struct Vpu;
+
+impl Accelerator for Vpu {
+    fn name(&self) -> &str {
+        "vpu"
+    }
+
+    fn hosting_device(&self) -> &str {
+        "NCS2"
+    }
+
+    fn precision(&self) -> Precision {
+        Precision::Fp16
+    }
+
+    fn supports(&self, layer: &Layer, _in: &[Shape]) -> bool {
+        !matches!(layer.op, Op::Input)
+    }
+
+    fn layer_cost(&self, layer: &Layer, in_shapes: &[Shape]) -> LayerCost {
+        let macs = layer.macs(in_shapes) as f64;
+        let params_bytes = layer.params(in_shapes) as f64 * 2.0; // FP16
+        let compute_s = match &layer.op {
+            Op::Conv { .. } if layer.is_depthwise(in_shapes) => {
+                macs / (cal::PEAK_MACS * cal::DW_EFF)
+            }
+            Op::Conv { .. } | Op::Dense { .. } => macs / (cal::PEAK_MACS * cal::CONV_EFF),
+            _ => macs / cal::VECTOR_OPS,
+        };
+        // Conv weights are small enough to persist in CMX across rows; FC
+        // weights stream from LPDDR (the dominant term for the heads).
+        let memory_s = match &layer.op {
+            Op::Dense { .. } => params_bytes / cal::DDR_BPS,
+            _ => 0.0,
+        };
+        LayerCost {
+            compute_s,
+            memory_s,
+            overhead_s: cal::LAYER_OVERHEAD_S,
+        }
+    }
+
+    fn model_cost(&self, _graph: &Graph, in_bytes: usize, out_bytes: usize) -> ModelCost {
+        ModelCost {
+            param_stream_s: 0.0,
+            host_io_s: links::USB3.transfer_s(in_bytes) + links::USB3.transfer_s(out_bytes),
+            invoke_s: 0.0, // turnaround folded into the USB transfers
+        }
+    }
+
+    fn power(&self) -> PowerModel {
+        PowerModel {
+            idle_w: cal::IDLE_W,
+            active_w: cal::ACTIVE_W,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::tpu::Tpu;
+    use crate::accel::traits::deployed_latency;
+    use crate::net::models;
+
+    #[test]
+    fn fig2_mobilenet_tpu_wins_big() {
+        // Paper: "for small networks (MobileNet V2), TPU provides 8x more
+        // FPS than VPU" — assert the ratio in [4, 14].
+        let g = models::mobilenet_v2::build(1000);
+        let vpu_fps = deployed_latency(&Vpu, &g).fps();
+        let tpu_fps = deployed_latency(&Tpu, &g).fps();
+        let ratio = tpu_fps / vpu_fps;
+        assert!((4.0..14.0).contains(&ratio), "TPU/VPU ratio {ratio}");
+    }
+
+    #[test]
+    fn fig2_resnet50_vpu_wins() {
+        // Paper: "for a larger network (ResNet-50), VPU delivers 2x
+        // throughput" — assert VPU ahead by [1.3, 3.0].
+        let g = models::resnet50::build(1000);
+        let vpu_fps = deployed_latency(&Vpu, &g).fps();
+        let tpu_fps = deployed_latency(&Tpu, &g).fps();
+        let ratio = vpu_fps / tpu_fps;
+        assert!((1.3..3.0).contains(&ratio), "VPU/TPU ratio {ratio}");
+    }
+
+    #[test]
+    fn fig2_inception_v4_parity_near_10fps() {
+        // Paper: "for Inception V4, both accelerators sustain ~10 FPS".
+        let g = models::inception_v4::build(1000);
+        let vpu_fps = deployed_latency(&Vpu, &g).fps();
+        let tpu_fps = deployed_latency(&Tpu, &g).fps();
+        assert!((5.0..16.0).contains(&vpu_fps), "VPU {vpu_fps} FPS");
+        assert!((5.0..16.0).contains(&tpu_fps), "TPU {tpu_fps} FPS");
+    }
+
+    #[test]
+    fn ursonet_full_near_paper_latency() {
+        // Table I: VPU inference 246 ms; model within ~2x (the substrate is
+        // calibrated jointly against Fig. 2 ratios and Table I — see
+        // EXPERIMENTS.md for the recorded deviation).
+        let lat = deployed_latency(&Vpu, &models::ursonet::build_full()).total_ms();
+        assert!((100.0..350.0).contains(&lat), "VPU UrsoNet {lat} ms");
+    }
+
+    #[test]
+    fn head_only_latency_small() {
+        // The MPAI head segment (FC layers on features) must cost only a
+        // few ms — the premise of the 79 ms MPAI row.
+        use crate::net::graph::Graph;
+        use crate::net::layers::{Act, Shape};
+        let mut g = Graph::new("head");
+        let x = g.input("features", Shape::vec(6 * 8 * 128));
+        let b = g.dense("fc_bneck", x, 128, Act::Relu);
+        g.dense("fc_loc", b, 3, Act::None);
+        g.dense("fc_ori", b, 4, Act::None);
+        let lat = deployed_latency(&Vpu, &g).total_ms();
+        assert!(lat < 15.0, "head latency {lat} ms");
+    }
+}

@@ -1,0 +1,68 @@
+//! PJRT-backed inference backend: executes the AOT artifacts for a Mode.
+//!
+//! Single-stage modes run one artifact; MPAI runs backbone then head —
+//! the same two executables the (simulated) DPU and VPU commit to, so the
+//! numerics of the partition boundary are exactly the deployed ones.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::Mode;
+use crate::coordinator::scheduler::Backend;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::executor::Engine;
+use crate::runtime::tensor::Tensor;
+
+/// Real backend over the PJRT engine.
+pub struct PjrtBackend {
+    engine: Engine,
+    mode: Mode,
+    stages: Vec<String>,
+}
+
+impl PjrtBackend {
+    /// Load (compile) every artifact the mode needs.
+    pub fn new(manifest: &Manifest, mode: Mode) -> Result<PjrtBackend> {
+        let mut engine = Engine::cpu()?;
+        let stages: Vec<String> = mode.artifacts().iter().map(|s| s.to_string()).collect();
+        for name in &stages {
+            let spec = manifest.artifact(name)?;
+            engine
+                .load(spec)
+                .with_context(|| format!("loading {name}"))?;
+        }
+        Ok(PjrtBackend {
+            engine,
+            mode,
+            stages,
+        })
+    }
+
+    /// Run one named stage on explicit inputs (used by the pipelined path).
+    pub fn run_stage(&self, stage: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.engine.get(stage)?.run(inputs)
+    }
+
+    pub fn stages(&self) -> &[String] {
+        &self.stages
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
+        let mut current: Vec<Tensor> = vec![images.clone()];
+        for stage in &self.stages {
+            current = self.engine.get(stage)?.run(&current)?;
+        }
+        match current.len() {
+            2 => {
+                let mut it = current.into_iter();
+                Ok((it.next().unwrap(), it.next().unwrap()))
+            }
+            n => anyhow::bail!("final stage returned {n} outputs, expected 2 (loc, quat)"),
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Frame batcher: accumulates camera frames into fixed-size artifact
+//! batches, padding partial batches at flush.
+//!
+//! The AOT artifacts are compiled for a fixed batch (manifest.batch = 4), so
+//! the batcher's contract is exact-size batches; the padding mask says which
+//! rows are real.  Invariants (property-tested): no frame lost, none
+//! duplicated, order preserved, every batch exactly `size` rows.
+
+use std::time::Duration;
+
+use crate::sensor::Frame;
+
+/// A dispatchable batch of frames.
+#[derive(Debug)]
+pub struct Batch {
+    /// Real frames (<= size).
+    pub frames: Vec<Frame>,
+    /// Artifact batch size (frames are padded to this at execution).
+    pub size: usize,
+    /// Simulated time at which the batch became ready (deadline or full).
+    pub t_ready: Duration,
+}
+
+impl Batch {
+    pub fn real_count(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_padded(&self) -> bool {
+        self.frames.len() < self.size
+    }
+}
+
+/// Accumulates frames; emits a batch when full or when the oldest frame has
+/// waited `timeout` (bounded batching delay, the standard serving policy).
+pub struct Batcher {
+    size: usize,
+    timeout: Duration,
+    pending: Vec<Frame>,
+}
+
+impl Batcher {
+    pub fn new(size: usize, timeout: Duration) -> Batcher {
+        assert!(size > 0);
+        Batcher {
+            size,
+            timeout,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Offer a frame; returns a batch if it became full.
+    pub fn push(&mut self, frame: Frame) -> Option<Batch> {
+        self.pending.push(frame);
+        if self.pending.len() >= self.size {
+            return self.take(None);
+        }
+        None
+    }
+
+    /// Check the timeout against the current simulated time.
+    pub fn poll(&mut self, now: Duration) -> Option<Batch> {
+        let oldest = self.pending.first()?.t_capture;
+        if now.saturating_sub(oldest) >= self.timeout {
+            return self.take(Some(now));
+        }
+        None
+    }
+
+    /// Flush whatever is pending (end of stream).
+    pub fn flush(&mut self, now: Duration) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.take(Some(now))
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn take(&mut self, now: Option<Duration>) -> Option<Batch> {
+        let frames: Vec<Frame> = self.pending.drain(..).collect();
+        let t_ready = now.unwrap_or_else(|| frames.last().unwrap().t_capture);
+        Some(Batch {
+            size: self.size,
+            t_ready,
+            frames,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pose::Pose;
+    use crate::testkit::{check, Config as PropConfig};
+
+    fn frame(id: u64, ms: u64) -> Frame {
+        Frame {
+            id,
+            t_capture: Duration::from_millis(ms),
+            pixels: vec![0; 12],
+            h: 2,
+            w: 2,
+            truth: Pose {
+                loc: [0.0; 3],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            },
+        }
+    }
+
+    #[test]
+    fn emits_full_batches() {
+        let mut b = Batcher::new(4, Duration::from_millis(100));
+        assert!(b.push(frame(0, 0)).is_none());
+        assert!(b.push(frame(1, 10)).is_none());
+        assert!(b.push(frame(2, 20)).is_none());
+        let batch = b.push(frame(3, 30)).expect("batch at size 4");
+        assert_eq!(batch.real_count(), 4);
+        assert!(!batch.is_padded());
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn timeout_dispatches_partial() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(frame(0, 0));
+        b.push(frame(1, 10));
+        assert!(b.poll(Duration::from_millis(40)).is_none());
+        let batch = b.poll(Duration::from_millis(55)).expect("timeout batch");
+        assert_eq!(batch.real_count(), 2);
+        assert!(batch.is_padded());
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(frame(0, 0));
+        let batch = b.flush(Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.real_count(), 1);
+        assert!(b.flush(Duration::from_millis(6)).is_none());
+    }
+
+    #[test]
+    fn property_no_frame_lost_or_duplicated() {
+        check("batcher_conservation", PropConfig::default(), |ctx| {
+            let size = 1 + ctx.rng.below(6);
+            let timeout = Duration::from_millis(ctx.rng.below(80) as u64);
+            let mut b = Batcher::new(size, timeout);
+            let n = ctx.rng.below(64);
+            let mut out_ids = Vec::new();
+            let mut t = 0u64;
+            for id in 0..n as u64 {
+                t += ctx.rng.below(30) as u64;
+                if let Some(batch) = b.push(frame(id, t)) {
+                    out_ids.extend(batch.frames.iter().map(|f| f.id));
+                }
+                if let Some(batch) = b.poll(Duration::from_millis(t)) {
+                    out_ids.extend(batch.frames.iter().map(|f| f.id));
+                }
+            }
+            if let Some(batch) = b.flush(Duration::from_millis(t + 1000)) {
+                out_ids.extend(batch.frames.iter().map(|f| f.id));
+            }
+            let expect: Vec<u64> = (0..n as u64).collect();
+            crate::prop_assert!(
+                out_ids == expect,
+                "conservation violated: got {out_ids:?} want 0..{n}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_batches_never_exceed_size() {
+        check("batcher_size_bound", PropConfig::default(), |ctx| {
+            let size = 1 + ctx.rng.below(5);
+            let mut b = Batcher::new(size, Duration::from_millis(10));
+            for id in 0..40u64 {
+                if let Some(batch) = b.push(frame(id, id * 7)) {
+                    crate::prop_assert!(
+                        batch.real_count() <= size,
+                        "batch of {} exceeds size {size}",
+                        batch.real_count()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

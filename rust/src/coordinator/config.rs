@@ -1,0 +1,132 @@
+//! Coordinator configuration: execution modes (the Table I rows) and
+//! runtime knobs.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// One deployable configuration = one Table I row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Mode {
+    /// Cortex-A53 FP32 software (DevBoard).
+    CpuFp32,
+    /// Cortex-A53 FP16 software (ZCU104).
+    CpuFp16,
+    /// MyriadX VPU, FP16 (NCS2).
+    VpuFp16,
+    /// Edge TPU, INT8 per-channel (DevBoard).
+    TpuInt8,
+    /// MPSoC DPU, INT8 pow2 (ZCU104).
+    DpuInt8,
+    /// MPAI: DPU backbone (INT8) + VPU heads (FP16), partition-aware QAT.
+    Mpai,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 6] = [
+        Mode::CpuFp32,
+        Mode::CpuFp16,
+        Mode::VpuFp16,
+        Mode::TpuInt8,
+        Mode::DpuInt8,
+        Mode::Mpai,
+    ];
+
+    /// Artifacts this mode executes, in pipeline order.
+    pub fn artifacts(self) -> Vec<&'static str> {
+        match self {
+            Mode::CpuFp32 => vec!["ursonet_fp32"],
+            Mode::CpuFp16 => vec!["ursonet_fp16"],
+            Mode::VpuFp16 => vec!["ursonet_fp16"],
+            Mode::TpuInt8 => vec!["ursonet_tpu_int8"],
+            Mode::DpuInt8 => vec!["ursonet_dpu_int8"],
+            Mode::Mpai => vec!["ursonet_mpai_backbone", "ursonet_mpai_head"],
+        }
+    }
+
+    /// Manifest key for the expected accuracy of this mode's numerics.
+    pub fn metrics_key(self) -> &'static str {
+        match self {
+            Mode::CpuFp32 => "fp32",
+            Mode::CpuFp16 | Mode::VpuFp16 => "fp16",
+            Mode::TpuInt8 => "tpu_int8",
+            Mode::DpuInt8 => "dpu_int8",
+            Mode::Mpai => "mpai",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::CpuFp32 => "cpu-fp32",
+            Mode::CpuFp16 => "cpu-fp16",
+            Mode::VpuFp16 => "vpu-fp16",
+            Mode::TpuInt8 => "tpu-int8",
+            Mode::DpuInt8 => "dpu-int8",
+            Mode::Mpai => "mpai",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Mode> {
+        Mode::ALL.into_iter().find(|m| m.label() == s)
+    }
+}
+
+/// Runtime configuration of the coordinator.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory holding manifest.json + artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Execution mode (None = let the policy choose per constraints).
+    pub mode: Option<Mode>,
+    /// Max time the batcher waits to fill a batch before dispatching a
+    /// padded partial batch.
+    pub batch_timeout: Duration,
+    /// Simulated camera frame rate.
+    pub camera_fps: f64,
+    /// Frames to process.
+    pub frames: u64,
+    /// Pipelined two-stage execution for MPAI (overlap backbone/head).
+    pub pipelined: bool,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            mode: Some(Mode::Mpai),
+            batch_timeout: Duration::from_millis(50),
+            camera_fps: 10.0,
+            frames: 64,
+            pipelined: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_modes_have_artifacts() {
+        for m in Mode::ALL {
+            assert!(!m.artifacts().is_empty());
+        }
+    }
+
+    #[test]
+    fn mpai_is_two_stage() {
+        assert_eq!(Mode::Mpai.artifacts().len(), 2);
+        for m in Mode::ALL {
+            if m != Mode::Mpai {
+                assert_eq!(m.artifacts().len(), 1, "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn label_roundtrip() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::from_label(m.label()), Some(m));
+        }
+        assert_eq!(Mode::from_label("gpu"), None);
+    }
+}

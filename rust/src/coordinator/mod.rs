@@ -1,0 +1,20 @@
+//! The MPAI coordinator — the paper's system contribution (DESIGN.md §4.5):
+//! frame ingestion, batching, partition-aware scheduling over heterogeneous
+//! accelerators, speed–accuracy–energy policy, telemetry.
+
+pub mod backend;
+pub mod batcher;
+pub mod config;
+pub mod pipeline;
+pub mod policy;
+pub mod scheduler;
+pub mod server;
+pub mod telemetry;
+
+pub use backend::PjrtBackend;
+pub use batcher::{Batch, Batcher};
+pub use config::{Config, Mode};
+pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective};
+pub use scheduler::{Backend, PoseEstimate, Scheduler};
+pub use server::{run, run_with_backend, RunOutput};
+pub use telemetry::{FrameRecord, Telemetry};

@@ -1,0 +1,129 @@
+//! Two-stage pipelined MPAI execution (backbone ∥ head across batches).
+//!
+//! In the real MPAI topology the DPU (backbone) and the VPU (heads) are
+//! separate devices, so frame i's head stage overlaps frame i+1's backbone
+//! stage; the coordinator reproduces that structure with one worker thread
+//! per stage, each owning its *own* PJRT engine (PJRT wrapper types are not
+//! Send, so each thread compiles its artifact independently).
+//!
+//! On this 1-core testbed wall-clock gains are nil — the point is the
+//! coordination structure and the modeled steady-state throughput, which
+//! the AB-B ablation quantifies with the analytic models.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::executor::Engine;
+use crate::runtime::tensor::Tensor;
+
+/// Input job: batched images with an id for re-association.
+pub struct Job {
+    pub id: u64,
+    pub images: Tensor,
+}
+
+/// Output: (job id, loc (B,3), quat (B,4)).
+pub type PipelineOut = (u64, Tensor, Tensor);
+
+/// Handle to the running two-stage pipeline.
+pub struct MpaiPipeline {
+    tx_in: Option<mpsc::Sender<Job>>,
+    rx_out: mpsc::Receiver<Result<PipelineOut>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl MpaiPipeline {
+    /// Spawn backbone + head workers (each compiles its artifact).
+    pub fn spawn(manifest: &Manifest) -> Result<MpaiPipeline> {
+        let backbone = manifest.artifact("ursonet_mpai_backbone")?.clone();
+        let head = manifest.artifact("ursonet_mpai_head")?.clone();
+
+        let (tx_in, rx_in) = mpsc::channel::<Job>();
+        let (tx_mid, rx_mid) = mpsc::channel::<(u64, Result<Vec<Tensor>>)>();
+        let (tx_out, rx_out) = mpsc::channel::<Result<PipelineOut>>();
+
+        let w1 = thread::spawn(move || {
+            let run = || -> Result<Engine> {
+                let mut e = Engine::cpu()?;
+                e.load(&backbone)?;
+                Ok(e)
+            };
+            match run() {
+                Ok(engine) => {
+                    for job in rx_in {
+                        let out = engine
+                            .get(&backbone.name)
+                            .and_then(|exe| exe.run(&[job.images]));
+                        if tx_mid.send((job.id, out)).is_err() {
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    let _ = tx_mid.send((u64::MAX, Err(e)));
+                }
+            }
+        });
+
+        let w2 = thread::spawn(move || {
+            let run = || -> Result<Engine> {
+                let mut e = Engine::cpu()?;
+                e.load(&head)?;
+                Ok(e)
+            };
+            match run() {
+                Ok(engine) => {
+                    for (id, features) in rx_mid {
+                        let result = features.and_then(|feats| {
+                            let outs = engine.get(&head.name)?.run(&feats)?;
+                            let mut it = outs.into_iter();
+                            let loc = it.next().context("missing loc output")?;
+                            let quat = it.next().context("missing quat output")?;
+                            Ok((id, loc, quat))
+                        });
+                        if tx_out.send(result).is_err() {
+                            break;
+                        }
+                    }
+                }
+                Err(e) => {
+                    let _ = tx_out.send(Err(e));
+                }
+            }
+        });
+
+        Ok(MpaiPipeline {
+            tx_in: Some(tx_in),
+            rx_out,
+            workers: vec![w1, w2],
+        })
+    }
+
+    /// Submit a batch (non-blocking; results come back in order).
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.tx_in
+            .as_ref()
+            .context("pipeline closed")?
+            .send(job)
+            .context("pipeline input channel closed")
+    }
+
+    /// Receive the next completed batch (blocking).
+    pub fn recv(&self) -> Result<PipelineOut> {
+        self.rx_out.recv().context("pipeline output channel closed")?
+    }
+
+    /// Close the input and join workers.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx_in.take(); // drop sender -> workers drain and exit
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+// Exercised by rust/tests/coordinator_e2e.rs (needs built artifacts).

@@ -1,0 +1,255 @@
+//! Accelerator-selection policy: the speed–accuracy–energy trade-off engine
+//! (paper abstract: MPAI "accommodates speed–accuracy–energy trade-offs by
+//! exploiting the diversity of accelerators in precision and computational
+//! power"; §IV lists "methodology and design guidelines for ... accelerator
+//! selection" as future work — this module is that methodology).
+//!
+//! For each execution mode the policy combines:
+//! * modeled end-to-end latency at paper scale (accel substrates on the
+//!   full-size UrsoNet descriptor + host preprocessing),
+//! * measured accuracy of the mode's numerics (manifest expected metrics),
+//! * modeled energy per frame,
+//!
+//! and picks the best mode under user constraints.
+
+use std::collections::BTreeMap;
+
+use crate::accel::calibration::PAPER_FRAME_BYTES;
+use crate::accel::interconnect::links;
+use crate::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
+use crate::coordinator::config::Mode;
+use crate::net::compiler::partition::Partition;
+use crate::net::models::ursonet;
+use crate::runtime::artifacts::Manifest;
+
+/// Modeled + measured characteristics of one mode.
+#[derive(Debug, Clone, Copy)]
+pub struct ModeProfile {
+    pub mode: Mode,
+    /// Modeled inference latency, paper scale (ms) — Table I "Inference".
+    pub inference_ms: f64,
+    /// Modeled total latency incl. preprocessing (ms) — Table I "Total".
+    pub total_ms: f64,
+    /// Measured accuracy of this mode's arithmetic (from the manifest).
+    pub loce_m: f64,
+    pub orie_deg: f64,
+    /// Modeled energy per frame (J).
+    pub energy_j: f64,
+}
+
+/// Selection constraints; `None` = unconstrained.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Constraints {
+    pub max_total_ms: Option<f64>,
+    pub max_loce_m: Option<f64>,
+    pub max_orie_deg: Option<f64>,
+    pub max_energy_j: Option<f64>,
+}
+
+/// What the policy optimizes once constraints are met.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    MinLatency,
+    MinEnergy,
+    MaxAccuracy,
+}
+
+/// Build the profile table for every mode.
+pub fn profile_modes(manifest: &Manifest) -> BTreeMap<Mode, ModeProfile> {
+    let full = ursonet::build_full();
+    let (dpu, tpu, vpu) = (Dpu, Tpu, Vpu);
+    let (cpu_dev, cpu_zcu) = (Cpu::devboard(), Cpu::zcu104());
+
+    let mut out = BTreeMap::new();
+    for mode in Mode::ALL {
+        let (inference_s, busy_s, power): (f64, f64, crate::accel::traits::PowerModel) =
+            match mode {
+                Mode::CpuFp32 => {
+                    let l = deployed_latency(&cpu_dev, &full);
+                    (l.total_s(), l.total_s(), cpu_dev.power())
+                }
+                Mode::CpuFp16 => {
+                    let l = deployed_latency(&cpu_zcu, &full);
+                    (l.total_s(), l.total_s(), cpu_zcu.power())
+                }
+                Mode::VpuFp16 => {
+                    let l = deployed_latency(&vpu, &full);
+                    (l.total_s(), l.total_s(), vpu.power())
+                }
+                Mode::TpuInt8 => {
+                    let l = deployed_latency(&tpu, &full);
+                    (l.total_s(), l.total_s(), tpu.power())
+                }
+                Mode::DpuInt8 => {
+                    let l = deployed_latency(&dpu, &full);
+                    (l.total_s(), l.total_s(), dpu.power())
+                }
+                Mode::Mpai => {
+                    let compiled = crate::net::compiler::compile(&full);
+                    let cut = compiled
+                        .layers
+                        .iter()
+                        .position(|l| l.name == "gap")
+                        .expect("gap layer");
+                    let p = Partition::two_way(&compiled, cut, "dpu", "vpu");
+                    let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
+                    accels.insert("dpu".into(), &dpu);
+                    accels.insert("vpu".into(), &vpu);
+                    let pl = partition_latency(&compiled, &p, &accels, &links::USB3);
+                    // Energy: both engines engaged; approximate with the DPU
+                    // power over its busy time + VPU power over its own.
+                    (pl.total_s(), pl.total_s(), dpu.power())
+                }
+            };
+
+        // Preprocessing runs on the hosting board's CPU.
+        let pre_s = match mode {
+            Mode::CpuFp32 | Mode::TpuInt8 => cpu_dev.preprocess_s(PAPER_FRAME_BYTES),
+            _ => cpu_zcu.preprocess_s(PAPER_FRAME_BYTES),
+        };
+
+        let metrics = manifest
+            .expected
+            .get(mode.metrics_key())
+            .copied()
+            .unwrap_or(crate::runtime::artifacts::ExpectedMetrics {
+                loce_m: f64::NAN,
+                orie_deg: f64::NAN,
+            });
+
+        out.insert(
+            mode,
+            ModeProfile {
+                mode,
+                inference_ms: inference_s * 1e3,
+                total_ms: (inference_s + pre_s) * 1e3,
+                loce_m: metrics.loce_m,
+                orie_deg: metrics.orie_deg,
+                energy_j: power.energy_j(busy_s, busy_s + pre_s),
+            },
+        );
+    }
+    out
+}
+
+/// Pick the best mode under `constraints`, optimizing `objective`.
+pub fn select(
+    profiles: &BTreeMap<Mode, ModeProfile>,
+    constraints: Constraints,
+    objective: Objective,
+) -> Option<ModeProfile> {
+    let feasible = profiles.values().filter(|p| {
+        constraints.max_total_ms.is_none_or(|m| p.total_ms <= m)
+            && constraints.max_loce_m.is_none_or(|m| p.loce_m <= m)
+            && constraints.max_orie_deg.is_none_or(|m| p.orie_deg <= m)
+            && constraints.max_energy_j.is_none_or(|m| p.energy_j <= m)
+    });
+    match objective {
+        Objective::MinLatency => {
+            feasible.min_by(|a, b| a.total_ms.partial_cmp(&b.total_ms).unwrap())
+        }
+        Objective::MinEnergy => {
+            feasible.min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).unwrap())
+        }
+        Objective::MaxAccuracy => {
+            feasible.min_by(|a, b| a.loce_m.partial_cmp(&b.loce_m).unwrap())
+        }
+    }
+    .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{ExpectedMetrics, Manifest};
+    use std::path::Path;
+
+    /// Manifest stub with Table-I-shaped expected metrics.
+    fn manifest() -> Manifest {
+        let text = r#"{
+          "version": 1, "batch": 4,
+          "net_input": [96, 128, 3], "camera": [240, 320, 3],
+          "artifacts": {},
+          "eval": {"file": "eval_set.mpt", "count": 64},
+          "expected_metrics": {
+            "fp32":     {"loce_m": 0.68, "orie_deg": 7.28},
+            "fp16":     {"loce_m": 0.69, "orie_deg": 8.71},
+            "tpu_int8": {"loce_m": 0.66, "orie_deg": 7.60},
+            "dpu_int8": {"loce_m": 0.96, "orie_deg": 9.29},
+            "mpai":     {"loce_m": 0.68, "orie_deg": 7.32}
+          },
+          "layers": {"backbone": [], "head": []},
+          "param_count": 0
+        }"#;
+        Manifest::parse(text, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn profiles_cover_all_modes() {
+        let p = profile_modes(&manifest());
+        assert_eq!(p.len(), Mode::ALL.len());
+        let _ = ExpectedMetrics {
+            loce_m: 0.0,
+            orie_deg: 0.0,
+        };
+    }
+
+    #[test]
+    fn latency_ordering_matches_table1() {
+        // CPU32 > CPU16 > VPU > TPU > MPAI > DPU on total latency.
+        let p = profile_modes(&manifest());
+        let t = |m: Mode| p[&m].total_ms;
+        assert!(t(Mode::CpuFp32) > t(Mode::CpuFp16));
+        assert!(t(Mode::CpuFp16) > t(Mode::VpuFp16));
+        assert!(t(Mode::VpuFp16) > t(Mode::TpuInt8));
+        assert!(t(Mode::TpuInt8) > t(Mode::Mpai));
+        assert!(t(Mode::Mpai) > t(Mode::DpuInt8));
+    }
+
+    #[test]
+    fn unconstrained_min_latency_is_dpu() {
+        let p = profile_modes(&manifest());
+        let sel = select(&p, Constraints::default(), Objective::MinLatency).unwrap();
+        assert_eq!(sel.mode, Mode::DpuInt8);
+    }
+
+    #[test]
+    fn accuracy_constraint_forces_mpai() {
+        // The paper's headline: wanting near-baseline accuracy AND low
+        // latency rules out DPU (inaccurate) and VPU/TPU (slow) -> MPAI.
+        let p = profile_modes(&manifest());
+        let sel = select(
+            &p,
+            Constraints {
+                max_loce_m: Some(0.70),
+                max_total_ms: Some(120.0),
+                ..Default::default()
+            },
+            Objective::MinLatency,
+        )
+        .unwrap();
+        assert_eq!(sel.mode, Mode::Mpai);
+    }
+
+    #[test]
+    fn infeasible_constraints_yield_none() {
+        let p = profile_modes(&manifest());
+        let sel = select(
+            &p,
+            Constraints {
+                max_total_ms: Some(0.001),
+                ..Default::default()
+            },
+            Objective::MinLatency,
+        );
+        assert!(sel.is_none());
+    }
+
+    #[test]
+    fn max_accuracy_prefers_tpu_numerics() {
+        // TPU INT8 per-channel has the lowest LOCE in Table I (0.66).
+        let p = profile_modes(&manifest());
+        let sel = select(&p, Constraints::default(), Objective::MaxAccuracy).unwrap();
+        assert_eq!(sel.mode, Mode::TpuInt8);
+    }
+}

@@ -1,0 +1,283 @@
+//! Batch scheduler: preprocess -> (pad) -> backend inference -> pose decode.
+//!
+//! The backend is a trait so the scheduling/accounting logic is testable
+//! with a mock (and so failure injection is possible); the real backend
+//! (`PjrtBackend`) executes the AOT artifacts.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::config::Mode;
+use crate::coordinator::telemetry::{FrameRecord, Telemetry};
+use crate::pose::metrics::{loce_one, orie_one};
+use crate::pose::Pose;
+use crate::runtime::tensor::Tensor;
+use crate::sensor::preprocess;
+
+/// Inference backend: batched images -> (locations, quaternions).
+pub trait Backend {
+    fn mode(&self) -> Mode;
+    /// `images`: (B, H, W, 3) f32. Returns ((B,3), (B,4)).
+    fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)>;
+}
+
+/// One pose estimate out of the system.
+#[derive(Debug, Clone)]
+pub struct PoseEstimate {
+    pub frame_id: u64,
+    pub loc: [f32; 3],
+    pub quat: [f32; 4],
+    pub truth: Pose,
+}
+
+/// Scheduler state.
+pub struct Scheduler<B: Backend> {
+    backend: B,
+    batch: usize,
+    net_h: usize,
+    net_w: usize,
+    pub telemetry: Telemetry,
+}
+
+impl<B: Backend> Scheduler<B> {
+    pub fn new(backend: B, batch: usize, net_h: usize, net_w: usize) -> Scheduler<B> {
+        Scheduler {
+            backend,
+            batch,
+            net_h,
+            net_w,
+            telemetry: Telemetry::new(),
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.backend.mode()
+    }
+
+    /// Process one batch; returns estimates for the *real* frames only.
+    pub fn process(&mut self, batch: &Batch) -> Result<Vec<PoseEstimate>> {
+        if batch.frames.is_empty() {
+            bail!("empty batch");
+        }
+        if batch.frames.len() > self.batch {
+            bail!(
+                "batch of {} exceeds artifact batch {}",
+                batch.frames.len(),
+                self.batch
+            );
+        }
+
+        // Preprocess (timed per frame).
+        let mut inputs = Vec::with_capacity(self.batch);
+        let mut pre_times = Vec::with_capacity(batch.frames.len());
+        for f in &batch.frames {
+            let t0 = Instant::now();
+            inputs.push(preprocess(&f.pixels, f.h, f.w, self.net_h, self.net_w));
+            pre_times.push(t0.elapsed());
+        }
+        // Pad to the artifact batch by repeating the last frame.
+        while inputs.len() < self.batch {
+            inputs.push(inputs.last().unwrap().clone());
+        }
+        let images = Tensor::stack(&inputs)?;
+
+        // Inference (host wall-clock).
+        let t0 = Instant::now();
+        let (loc, quat) = self.backend.infer(&images)?;
+        let infer_time = t0.elapsed();
+        if loc.shape != vec![self.batch, 3] || quat.shape != vec![self.batch, 4] {
+            bail!(
+                "backend returned shapes {:?} / {:?}",
+                loc.shape,
+                quat.shape
+            );
+        }
+
+        // Decode + account.  Inference time is attributed per-frame as the
+        // batch time divided by real occupancy (the batch executes once).
+        let per_frame_infer = infer_time / batch.frames.len() as u32;
+        let mode = self.backend.mode().label();
+        let mut out = Vec::with_capacity(batch.frames.len());
+        for (i, f) in batch.frames.iter().enumerate() {
+            let l = loc.row(i);
+            let q = quat.row(i);
+            let est = PoseEstimate {
+                frame_id: f.id,
+                loc: [l[0], l[1], l[2]],
+                quat: [q[0], q[1], q[2], q[3]],
+                truth: f.truth,
+            };
+            self.telemetry.record(FrameRecord {
+                frame_id: f.id,
+                mode,
+                preprocess: pre_times[i],
+                queue: batch.t_ready.saturating_sub(f.t_capture),
+                inference: per_frame_infer,
+                loce_m: loce_one(est.loc, f.truth.loc),
+                orie_deg: orie_one(est.quat, f.truth.quat),
+            });
+            out.push(est);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+pub mod mock {
+    use super::*;
+
+    /// Mock backend: returns the ground truth with a fixed bias, or errors
+    /// every `fail_every`-th call (failure injection).
+    pub struct MockBackend {
+        pub mode: Mode,
+        pub bias: f32,
+        pub calls: usize,
+        pub fail_every: Option<usize>,
+        /// Truth rows fed back (set per batch by the test).
+        pub truths: Vec<Pose>,
+    }
+
+    impl Backend for MockBackend {
+        fn mode(&self) -> Mode {
+            self.mode
+        }
+
+        fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
+            self.calls += 1;
+            if let Some(n) = self.fail_every {
+                if self.calls % n == 0 {
+                    bail!("injected backend fault");
+                }
+            }
+            let b = images.shape[0];
+            let mut loc = Vec::new();
+            let mut quat = Vec::new();
+            for i in 0..b {
+                let t = self.truths.get(i).copied().unwrap_or(Pose {
+                    loc: [0.0; 3],
+                    quat: [1.0, 0.0, 0.0, 0.0],
+                });
+                loc.extend_from_slice(&[t.loc[0] + self.bias, t.loc[1], t.loc[2]]);
+                quat.extend_from_slice(&t.quat);
+            }
+            Ok((
+                Tensor::new(vec![b, 3], loc)?,
+                Tensor::new(vec![b, 4], quat)?,
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::mock::MockBackend;
+    use super::*;
+    use crate::sensor::Frame;
+    use std::time::Duration;
+
+    fn frame(id: u64, z: f32) -> Frame {
+        Frame {
+            id,
+            t_capture: Duration::from_millis(id * 10),
+            pixels: vec![100; 8 * 12 * 3],
+            h: 8,
+            w: 12,
+            truth: Pose {
+                loc: [0.0, 0.0, z],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            },
+        }
+    }
+
+    fn batch(frames: Vec<Frame>, size: usize) -> Batch {
+        let t_ready = frames.last().unwrap().t_capture;
+        Batch {
+            frames,
+            size,
+            t_ready,
+        }
+    }
+
+    fn sched(bias: f32, fail_every: Option<usize>) -> Scheduler<MockBackend> {
+        let backend = MockBackend {
+            mode: Mode::DpuInt8,
+            bias,
+            calls: 0,
+            fail_every,
+            truths: vec![
+                Pose {
+                    loc: [0.0, 0.0, 5.0],
+                    quat: [1.0, 0.0, 0.0, 0.0],
+                };
+                4
+            ],
+        };
+        Scheduler::new(backend, 4, 6, 8)
+    }
+
+    #[test]
+    fn processes_full_batch() {
+        let mut s = sched(0.0, None);
+        let b = batch(vec![frame(0, 5.0), frame(1, 5.0), frame(2, 5.0), frame(3, 5.0)], 4);
+        let est = s.process(&b).unwrap();
+        assert_eq!(est.len(), 4);
+        assert_eq!(s.telemetry.len(), 4);
+        let (loce, _) = s.telemetry.accuracy();
+        assert!(loce < 1e-6);
+    }
+
+    #[test]
+    fn padded_batch_reports_only_real_frames() {
+        let mut s = sched(0.0, None);
+        let b = batch(vec![frame(0, 5.0), frame(1, 5.0)], 4);
+        let est = s.process(&b).unwrap();
+        assert_eq!(est.len(), 2);
+        assert_eq!(s.telemetry.len(), 2);
+    }
+
+    #[test]
+    fn bias_shows_up_as_loce() {
+        let mut s = sched(0.5, None);
+        let b = batch(vec![frame(0, 5.0)], 4);
+        s.process(&b).unwrap();
+        let (loce, orie) = s.telemetry.accuracy();
+        assert!((loce - 0.5).abs() < 1e-6, "loce {loce}");
+        assert!(orie < 1e-6);
+    }
+
+    #[test]
+    fn oversized_batch_rejected() {
+        let mut s = sched(0.0, None);
+        let frames: Vec<Frame> = (0..5).map(|i| frame(i, 5.0)).collect();
+        let b = batch(frames, 4);
+        assert!(s.process(&b).is_err());
+    }
+
+    #[test]
+    fn injected_fault_propagates() {
+        let mut s = sched(0.0, Some(1));
+        let b = batch(vec![frame(0, 5.0)], 4);
+        assert!(s.process(&b).is_err());
+        // Telemetry untouched on failure.
+        assert_eq!(s.telemetry.len(), 0);
+    }
+
+    #[test]
+    fn queue_time_is_ready_minus_capture() {
+        let mut s = sched(0.0, None);
+        let mut f0 = frame(0, 5.0);
+        f0.t_capture = Duration::from_millis(0);
+        let mut f1 = frame(1, 5.0);
+        f1.t_capture = Duration::from_millis(30);
+        let b = Batch {
+            frames: vec![f0, f1],
+            size: 4,
+            t_ready: Duration::from_millis(50),
+        };
+        s.process(&b).unwrap();
+        assert_eq!(s.telemetry.records[0].queue, Duration::from_millis(50));
+        assert_eq!(s.telemetry.records[1].queue, Duration::from_millis(20));
+    }
+}

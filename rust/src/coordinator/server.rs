@@ -1,0 +1,204 @@
+//! The MPAI run loop: camera -> preprocess -> batcher -> scheduler.
+//!
+//! This is the composition root for the end-to-end path (the
+//! `pose_estimation_e2e` example and the `mpai serve` CLI command).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::backend::PjrtBackend;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::config::{Config, Mode};
+use crate::coordinator::scheduler::{Backend, PoseEstimate, Scheduler};
+use crate::coordinator::telemetry::Telemetry;
+use crate::pose::EvalSet;
+use crate::runtime::artifacts::Manifest;
+use crate::sensor::Camera;
+
+/// Result of a serve run.
+pub struct RunOutput {
+    pub mode: Mode,
+    pub estimates: Vec<PoseEstimate>,
+    pub telemetry: Telemetry,
+}
+
+/// Run the full loop with the PJRT backend.
+pub fn run(config: &Config) -> Result<RunOutput> {
+    let manifest = Manifest::load(&config.artifacts_dir)?;
+    let eval = Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?);
+    let mode = config.mode.context("config.mode must be set for serve")?;
+    let backend = PjrtBackend::new(&manifest, mode)?;
+    run_with_backend(config, &manifest, eval, backend)
+}
+
+/// Run with any backend (mock in tests, PJRT in production).
+pub fn run_with_backend<B: Backend>(
+    config: &Config,
+    manifest: &Manifest,
+    eval: Arc<EvalSet>,
+    backend: B,
+) -> Result<RunOutput> {
+    let (net_h, net_w, _) = manifest.net_input;
+    let mode = backend.mode();
+    let mut scheduler = Scheduler::new(backend, manifest.batch, net_h, net_w);
+    let mut batcher = Batcher::new(manifest.batch, config.batch_timeout);
+    let camera = Camera::new(eval, config.camera_fps, config.frames);
+
+    let mut estimates = Vec::new();
+    let mut last_t = std::time::Duration::ZERO;
+    for frame in camera {
+        last_t = frame.t_capture;
+        if let Some(batch) = batcher.push(frame) {
+            estimates.extend(scheduler.process(&batch)?);
+        }
+        if let Some(batch) = batcher.poll(last_t) {
+            estimates.extend(scheduler.process(&batch)?);
+        }
+    }
+    if let Some(batch) = batcher.flush(last_t + config.batch_timeout) {
+        estimates.extend(scheduler.process(&batch)?);
+    }
+
+    Ok(RunOutput {
+        mode,
+        estimates,
+        telemetry: scheduler.telemetry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::mock::MockBackend;
+    use crate::pose::Pose;
+    use crate::util::mpt::{write_mpt, Tensor as MptTensor};
+    use std::path::Path;
+    use std::time::Duration;
+
+    fn tiny_eval(dir: &Path, n: usize) -> Arc<EvalSet> {
+        let path = dir.join(format!("server_eval_{n}.mpt"));
+        let (h, w) = (6, 8);
+        write_mpt(
+            &path,
+            &[
+                (
+                    "frames".into(),
+                    vec![n, h, w, 3],
+                    MptTensor::U8(vec![90; n * h * w * 3]),
+                ),
+                (
+                    "loc".into(),
+                    vec![n, 3],
+                    MptTensor::F32((0..n).flat_map(|i| [0.0, 0.0, 5.0 + i as f32]).collect()),
+                ),
+                (
+                    "quat".into(),
+                    vec![n, 4],
+                    MptTensor::F32((0..n).flat_map(|_| [1.0, 0.0, 0.0, 0.0]).collect()),
+                ),
+                ("golden_pre0".into(), vec![2, 2, 3], MptTensor::F32(vec![0.0; 12])),
+            ],
+        )
+        .unwrap();
+        let es = EvalSet::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        Arc::new(es)
+    }
+
+    fn mini_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1, "batch": 4,
+              "net_input": [6, 8, 3], "camera": [6, 8, 3],
+              "artifacts": {},
+              "eval": {"file": "x.mpt", "count": 8},
+              "expected_metrics": {},
+              "layers": {"backbone": [], "head": []},
+              "param_count": 0
+            }"#,
+            Path::new("/tmp"),
+        )
+        .unwrap()
+    }
+
+    fn mock() -> MockBackend {
+        MockBackend {
+            mode: Mode::DpuInt8,
+            bias: 0.0,
+            calls: 0,
+            fail_every: None,
+            truths: vec![
+                Pose {
+                    loc: [0.0, 0.0, 0.0],
+                    quat: [1.0, 0.0, 0.0, 0.0],
+                };
+                4
+            ],
+        }
+    }
+
+    #[test]
+    fn every_frame_gets_an_estimate() {
+        let cfg = Config {
+            frames: 10,
+            camera_fps: 100.0,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let out =
+            run_with_backend(&cfg, &mini_manifest(), tiny_eval(&std::env::temp_dir(), 5), mock())
+                .unwrap();
+        assert_eq!(out.estimates.len(), 10);
+        assert_eq!(out.telemetry.len(), 10);
+        // Estimates preserve frame identity and order.
+        let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn partial_final_batch_flushed() {
+        let cfg = Config {
+            frames: 6, // 4 + 2 -> one full batch + one padded flush
+            camera_fps: 1000.0,
+            batch_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let out =
+            run_with_backend(&cfg, &mini_manifest(), tiny_eval(&std::env::temp_dir(), 3), mock())
+                .unwrap();
+        assert_eq!(out.estimates.len(), 6);
+    }
+
+    #[test]
+    fn backend_failure_surfaces() {
+        let cfg = Config {
+            frames: 4,
+            camera_fps: 1000.0,
+            ..Default::default()
+        };
+        let mut m = mock();
+        m.fail_every = Some(1);
+        let r = run_with_backend(&cfg, &mini_manifest(), tiny_eval(&std::env::temp_dir(), 4), m);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn slow_camera_triggers_timeout_batches() {
+        // 2 fps, 30 ms timeout: every frame dispatches alone via poll.
+        let cfg = Config {
+            frames: 3,
+            camera_fps: 2.0,
+            batch_timeout: Duration::from_millis(30),
+            ..Default::default()
+        };
+        let out =
+            run_with_backend(&cfg, &mini_manifest(), tiny_eval(&std::env::temp_dir(), 3), mock())
+                .unwrap();
+        assert_eq!(out.estimates.len(), 3);
+        // Queue time bounded by ~timeout + frame period, not the whole run.
+        for r in &out.telemetry.records {
+            assert!(r.queue <= Duration::from_millis(600), "queue {:?}", r.queue);
+        }
+    }
+}

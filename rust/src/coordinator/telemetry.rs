@@ -1,0 +1,179 @@
+//! Telemetry: per-stage latency/accuracy counters + CSV export.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::pose::metrics::PoseAccuracy;
+use crate::util::stats::Summary;
+
+/// One frame's record.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub frame_id: u64,
+    pub mode: &'static str,
+    /// Host wall-clock stage timings.
+    pub preprocess: Duration,
+    pub queue: Duration,
+    pub inference: Duration,
+    /// Errors vs ground truth.
+    pub loce_m: f64,
+    pub orie_deg: f64,
+}
+
+/// Aggregated run telemetry.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub records: Vec<FrameRecord>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    pub fn record(&mut self, r: FrameRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn accuracy(&self) -> (f64, f64) {
+        let mut acc = PoseAccuracy::new();
+        let _ = &mut acc; // aggregate manually: records carry the errors
+        let n = self.records.len().max(1) as f64;
+        let loce = self.records.iter().map(|r| r.loce_m).sum::<f64>() / n;
+        let orie = self.records.iter().map(|r| r.orie_deg).sum::<f64>() / n;
+        (loce, orie)
+    }
+
+    fn summary_of(&self, f: impl Fn(&FrameRecord) -> Duration) -> Summary {
+        Summary::from(
+            &self
+                .records
+                .iter()
+                .map(|r| f(r).as_secs_f64())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn preprocess_summary(&self) -> Summary {
+        self.summary_of(|r| r.preprocess)
+    }
+
+    pub fn queue_summary(&self) -> Summary {
+        self.summary_of(|r| r.queue)
+    }
+
+    pub fn inference_summary(&self) -> Summary {
+        self.summary_of(|r| r.inference)
+    }
+
+    /// End-to-end per-frame host latency.
+    pub fn e2e_summary(&self) -> Summary {
+        self.summary_of(|r| r.preprocess + r.queue + r.inference)
+    }
+
+    /// CSV export (one row per frame) for offline analysis.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "frame_id,mode,preprocess_ms,queue_ms,inference_ms,loce_m,orie_deg\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{},{:.3},{:.3},{:.3},{:.4},{:.3}",
+                r.frame_id,
+                r.mode,
+                r.preprocess.as_secs_f64() * 1e3,
+                r.queue.as_secs_f64() * 1e3,
+                r.inference.as_secs_f64() * 1e3,
+                r.loce_m,
+                r.orie_deg
+            );
+        }
+        s
+    }
+
+    /// Human report block.
+    pub fn report(&self) -> String {
+        let (loce, orie) = self.accuracy();
+        let e2e = self.e2e_summary();
+        let inf = self.inference_summary();
+        format!(
+            "frames: {}\n\
+             accuracy: LOCE {:.3} m, ORIE {:.2} deg\n\
+             host inference/frame: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms\n\
+             host e2e/frame:       mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms",
+            self.records.len(),
+            loce,
+            orie,
+            inf.mean() * 1e3,
+            inf.p50() * 1e3,
+            inf.p99() * 1e3,
+            e2e.mean() * 1e3,
+            e2e.p50() * 1e3,
+            e2e.p99() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, inf_ms: u64, loce: f64) -> FrameRecord {
+        FrameRecord {
+            frame_id: id,
+            mode: "test",
+            preprocess: Duration::from_millis(2),
+            queue: Duration::from_millis(1),
+            inference: Duration::from_millis(inf_ms),
+            loce_m: loce,
+            orie_deg: 5.0,
+        }
+    }
+
+    #[test]
+    fn accuracy_averages() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        t.record(rec(1, 20, 3.0));
+        let (loce, orie) = t.accuracy();
+        assert_eq!(loce, 2.0);
+        assert_eq!(orie, 5.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("frame_id,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("test"));
+    }
+
+    #[test]
+    fn summaries_reflect_stages() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        t.record(rec(1, 30, 1.0));
+        assert!((t.inference_summary().mean() - 0.020).abs() < 1e-9);
+        assert!((t.e2e_summary().mean() - 0.023).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_mentions_key_numbers() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.5));
+        let r = t.report();
+        assert!(r.contains("frames: 1"));
+        assert!(r.contains("LOCE 1.500 m"));
+    }
+}

@@ -1,0 +1,28 @@
+//! # MPAI — MPSoC + AI-accelerator co-processing for vision in space
+//!
+//! Full-system reproduction of *"MPAI: A Co-Processing Architecture with
+//! MPSoC & AI Accelerators for Vision Applications in Space"* (Leon,
+//! Minaidis, Soudris, Lentaris — IEEE ICECS 2024).
+//!
+//! The crate is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L1/L2 (build-time python)**: Pallas kernels + JAX UrsoNet-lite are
+//!   AOT-lowered to HLO-text artifacts (`make artifacts`); python never
+//!   runs at request time.
+//! * **L3 (this crate)**: the MPAI coordinator — sensor ingest, partition-
+//!   aware scheduling across accelerator substrates, PJRT execution of the
+//!   quantized artifacts, telemetry — plus every substrate the paper's
+//!   testbed provides in hardware (accelerator timing/power models, DNN
+//!   graph IR + zoo + compiler, pose toolkit).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod accel;
+pub mod coordinator;
+pub mod net;
+pub mod pose;
+pub mod runtime;
+pub mod sensor;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,359 @@
+//! `mpai` — CLI for the MPAI co-processing reproduction.
+//!
+//! Subcommands:
+//!   fig2      reproduce Fig. 2 (accelerator throughput survey)
+//!   table1    reproduce Table I (pose-estimation accuracy + latency)
+//!   serve     run the end-to-end coordinator on the synthetic camera
+//!   policy    speed–accuracy–energy accelerator selection
+//!   inspect   model-zoo graph summaries
+//!   cuts      enumerate MPAI partition cut-points for a model
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use mpai::accel::interconnect::links;
+use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
+use mpai::coordinator::{self, Config, Constraints, Mode, Objective};
+use mpai::net::compiler::{compile, enumerate_cuts, Partition};
+use mpai::net::models;
+use mpai::pose::EvalSet;
+use mpai::runtime::Manifest;
+use mpai::util::cli::Spec;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "fig2" => cmd_fig2(),
+        "table1" => cmd_table1(rest),
+        "serve" => cmd_serve(rest),
+        "policy" => cmd_policy(rest),
+        "inspect" => cmd_inspect(rest),
+        "cuts" => cmd_cuts(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `mpai help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mpai — MPSoC + AI-accelerator co-processing (ICECS'24 reproduction)\n\n\
+         commands:\n  \
+         fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
+         table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
+         serve  [--mode M] [...]      run the end-to-end coordinator\n  \
+         policy [--max-ms X] [...]    accelerator selection under constraints\n  \
+         inspect [--model NAME]       model-zoo graph summaries\n  \
+         cuts   [--model NAME]        enumerate MPAI partition cut-points"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// fig2
+// ---------------------------------------------------------------------------
+
+fn cmd_fig2() -> Result<()> {
+    println!("Fig. 2 — inference throughput of AI accelerators (modeled)\n");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>14}",
+        "network", "TPU FPS", "VPU FPS", "DPU FPS", "TPU/VPU ratio"
+    );
+    for g in models::fig2_models() {
+        let tpu = deployed_latency(&Tpu, &g).fps();
+        let vpu = deployed_latency(&Vpu, &g).fps();
+        let dpu = deployed_latency(&Dpu, &g).fps();
+        println!(
+            "{:<14} {:>12.1} {:>12.1} {:>12.1} {:>13.2}x",
+            g.name, tpu, vpu, dpu, tpu / vpu
+        );
+    }
+    println!(
+        "\npaper shape: MobileNetV2 TPU ~8x VPU; ResNet-50 VPU ~2x TPU; \
+         Inception-V4 both ~10 FPS"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// table1
+// ---------------------------------------------------------------------------
+
+fn cmd_table1(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai table1",
+        about: "reproduce Table I",
+        options: vec![
+            ("artifacts", "DIR", "artifacts directory (default artifacts)"),
+            ("frames", "N", "eval frames to run (default: whole eval set)"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+    let dir = PathBuf::from(a.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    let eval = Arc::new(EvalSet::load(&manifest.eval_file)?);
+    let frames = a.get_usize("frames", eval.len())?;
+
+    println!("Table I — satellite pose estimation ({} eval frames)\n", frames);
+    println!(
+        "{:<10} {:>9} {:>9} | {:>10} {:>10} | {:>12} {:>10} {:>12}",
+        "mode", "LOCE m", "ORIE deg", "inf ms*", "total ms*", "host inf ms", "energy J*", "device"
+    );
+
+    let profiles = coordinator::profile_modes(&manifest);
+    for mode in Mode::ALL {
+        let (loce, orie, host_ms) = measure_mode(&manifest, eval.clone(), mode, frames)?;
+        let p = profiles[&mode];
+        let device = match mode {
+            Mode::CpuFp32 => "DevBoard",
+            Mode::CpuFp16 | Mode::DpuInt8 => "ZCU104",
+            Mode::VpuFp16 => "NCS2",
+            Mode::TpuInt8 => "DevBoard",
+            Mode::Mpai => "ZCU104+NCS2",
+        };
+        println!(
+            "{:<10} {:>9.3} {:>9.2} | {:>10.1} {:>10.1} | {:>12.2} {:>10.2} {:>12}",
+            mode.label(), loce, orie, p.inference_ms, p.total_ms, host_ms, p.energy_j, device
+        );
+    }
+    println!(
+        "\n* modeled at paper scale (full-size UrsoNet on the accelerator \
+         substrates); accuracy is measured by executing the quantized \
+         artifacts via PJRT on this testbed's UrsoNet-lite"
+    );
+    Ok(())
+}
+
+/// Run `frames` eval frames through a mode's artifacts; return
+/// (LOCE, ORIE, mean host inference ms/frame).
+fn measure_mode(
+    manifest: &Manifest,
+    eval: Arc<EvalSet>,
+    mode: Mode,
+    frames: usize,
+) -> Result<(f64, f64, f64)> {
+    let cfg = Config {
+        artifacts_dir: manifest.dir.clone(),
+        mode: Some(mode),
+        batch_timeout: Duration::from_millis(1),
+        camera_fps: 1000.0,
+        frames: frames as u64,
+        pipelined: false,
+    };
+    let backend = coordinator::PjrtBackend::new(manifest, mode)
+        .with_context(|| format!("building backend for {}", mode.label()))?;
+    let out = coordinator::run_with_backend(&cfg, manifest, eval, backend)?;
+    let (loce, orie) = out.telemetry.accuracy();
+    let host_ms = out.telemetry.inference_summary().mean() * 1e3;
+    Ok((loce, orie, host_ms))
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai serve",
+        about: "run the end-to-end coordinator",
+        options: vec![
+            ("artifacts", "DIR", "artifacts directory (default artifacts)"),
+            ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
+            ("fps", "HZ", "camera frame rate (default 10)"),
+            ("frames", "N", "frames to process (default 64)"),
+            ("timeout-ms", "MS", "batcher timeout (default 50)"),
+            ("csv", "PATH", "write per-frame telemetry CSV"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+    let mode = Mode::from_label(a.get_or("mode", "mpai"))
+        .context("bad --mode (see `mpai help`)")?;
+    let cfg = Config {
+        artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
+        mode: Some(mode),
+        batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
+        camera_fps: a.get_f64("fps", 10.0)?,
+        frames: a.get_usize("frames", 64)? as u64,
+        pipelined: false,
+    };
+    println!(
+        "mpai serve — mode {} fps {} frames {}",
+        mode.label(),
+        cfg.camera_fps,
+        cfg.frames
+    );
+    let out = coordinator::run(&cfg)?;
+    println!("{}", out.telemetry.report());
+    if let Some(path) = a.get("csv") {
+        std::fs::write(path, out.telemetry.to_csv())?;
+        println!("telemetry csv -> {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// policy
+// ---------------------------------------------------------------------------
+
+fn cmd_policy(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai policy",
+        about: "speed–accuracy–energy accelerator selection",
+        options: vec![
+            ("artifacts", "DIR", "artifacts directory (default artifacts)"),
+            ("max-ms", "X", "max total latency"),
+            ("max-loce", "X", "max localization error (m)"),
+            ("max-orie", "X", "max orientation error (deg)"),
+            ("max-energy", "X", "max energy per frame (J)"),
+            ("objective", "O", "latency|energy|accuracy (default latency)"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+    let manifest = Manifest::load(&PathBuf::from(a.get_or("artifacts", "artifacts")))?;
+    let profiles = coordinator::profile_modes(&manifest);
+
+    println!("mode profiles (modeled latency/energy at paper scale, measured accuracy):\n");
+    println!(
+        "{:<10} {:>10} {:>10} {:>9} {:>9} {:>10}",
+        "mode", "inf ms", "total ms", "LOCE m", "ORIE deg", "energy J"
+    );
+    for p in profiles.values() {
+        println!(
+            "{:<10} {:>10.1} {:>10.1} {:>9.3} {:>9.2} {:>10.2}",
+            p.mode.label(), p.inference_ms, p.total_ms, p.loce_m, p.orie_deg, p.energy_j
+        );
+    }
+
+    let opt = |k: &str| -> Result<Option<f64>> {
+        Ok(match a.get(k) {
+            Some(_) => Some(a.get_f64(k, 0.0)?),
+            None => None,
+        })
+    };
+    let constraints = Constraints {
+        max_total_ms: opt("max-ms")?,
+        max_loce_m: opt("max-loce")?,
+        max_orie_deg: opt("max-orie")?,
+        max_energy_j: opt("max-energy")?,
+    };
+    let objective = match a.get_or("objective", "latency") {
+        "latency" => Objective::MinLatency,
+        "energy" => Objective::MinEnergy,
+        "accuracy" => Objective::MaxAccuracy,
+        o => bail!("bad objective {o:?}"),
+    };
+    match coordinator::select(&profiles, constraints, objective) {
+        Some(sel) => println!(
+            "\nselected: {} (total {:.1} ms, LOCE {:.3} m, {:.2} J)",
+            sel.mode.label(), sel.total_ms, sel.loce_m, sel.energy_j
+        ),
+        None => println!("\nno mode satisfies the constraints"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// inspect / cuts
+// ---------------------------------------------------------------------------
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai inspect",
+        about: "model-zoo graph summaries",
+        options: vec![("model", "NAME", "one model (default: all)")],
+    };
+    let a = spec.parse(argv)?;
+    let names = match a.get("model") {
+        Some(n) => vec![n.to_string()],
+        None => vec![
+            "mobilenet_v2".into(),
+            "resnet50".into(),
+            "inception_v4".into(),
+            "ursonet_full".into(),
+            "ursonet_lite".into(),
+        ],
+    };
+    for n in names {
+        let g = models::by_name(&n).with_context(|| format!("unknown model {n:?}"))?;
+        println!("{}", g.summary());
+        let c = compile(&g);
+        println!("  compiled: {} layers (BN folded, activations fused)", c.layers.len());
+    }
+    Ok(())
+}
+
+fn cmd_cuts(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai cuts",
+        about: "enumerate MPAI partition cut-points",
+        options: vec![
+            ("model", "NAME", "model (default ursonet_lite)"),
+            ("top", "N", "show N best cuts by modeled latency (default 10)"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+    let name = a.get_or("model", "ursonet_lite");
+    let g = models::by_name(name).with_context(|| format!("unknown model {name:?}"))?;
+    let compiled = compile(&g);
+    let top = a.get_usize("top", 10)?;
+
+    let (dpu, vpu) = (Dpu, Vpu);
+    let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
+    accels.insert("dpu".into(), &dpu);
+    accels.insert("vpu".into(), &vpu);
+
+    let mut rows: Vec<(f64, String, usize, u64, u64)> = enumerate_cuts(&compiled, 1)
+        .into_iter()
+        .map(|c| {
+            let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
+            let lat = partition_latency(&compiled, &p, &accels, &links::USB3);
+            (lat.total_ms(), c.layer_name, c.boundary_bytes, c.macs.0, c.macs.1)
+        })
+        .collect();
+    rows.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+
+    println!(
+        "{} DPU->VPU cut-points for {name} (modeled, sorted by latency):\n",
+        rows.len()
+    );
+    println!(
+        "{:<24} {:>12} {:>14} {:>12} {:>12}",
+        "cut after layer", "latency ms", "boundary B", "head MMACs", "tail MMACs"
+    );
+    for (ms, layer, bytes, h, t) in rows.into_iter().take(top) {
+        println!(
+            "{:<24} {:>12.2} {:>14} {:>12.1} {:>12.1}",
+            layer, ms, bytes, h as f64 / 1e6, t as f64 / 1e6
+        );
+    }
+
+    let cpu = Cpu::zcu104();
+    println!(
+        "\nreference: dpu-only {:.2} ms, vpu-only {:.2} ms, cpu-fp16 {:.2} ms",
+        deployed_latency(&Dpu, &g).total_ms(),
+        deployed_latency(&Vpu, &g).total_ms(),
+        deployed_latency(&cpu, &g).total_ms()
+    );
+    Ok(())
+}

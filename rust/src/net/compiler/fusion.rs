@@ -1,0 +1,191 @@
+//! Graph-optimizer passes — the "Vitis AI compiler" substrate (paper §II:
+//! "the Vitis AI compiler ... performs optimizations (e.g., layer fusion)
+//! in the network graph").
+//!
+//! * **BN folding**: BatchNorm following a Conv is absorbed into the conv's
+//!   weights/bias at deploy time; the pass removes the BN node and rewires.
+//! * **Activation fusion**: a standalone Activation whose producer is a
+//!   Conv/Dense/Add with `Act::None` is folded into the producer.
+//!
+//! Passes are pure graph->graph functions, so they compose and are
+//! property-tested (semantic accounting is preserved: MACs of removed nodes
+//! are the elementwise ones the fused hardware executes for free).
+
+use crate::net::graph::Graph;
+use crate::net::layers::{Act, Layer, Op};
+
+/// Fold BatchNorm nodes into their producing convolution.
+///
+/// BN nodes whose producer is not a conv (rare; none in the zoo) are kept.
+pub fn fold_batchnorm(g: &Graph) -> Graph {
+    let mut out = Graph::new(&g.name);
+    // old id -> new id
+    let mut remap: Vec<usize> = Vec::with_capacity(g.layers.len());
+
+    for (idx, layer) in g.layers.iter().enumerate() {
+        let is_foldable_bn = matches!(layer.op, Op::BatchNorm)
+            && matches!(
+                g.layers[layer.inputs[0]].op,
+                Op::Conv { .. } | Op::Dense { .. }
+            );
+        if is_foldable_bn {
+            // The BN output aliases its (already remapped) producer.
+            let producer_new = remap[layer.inputs[0]];
+            remap.push(producer_new);
+            continue;
+        }
+        let new_inputs: Vec<usize> = layer.inputs.iter().map(|&i| remap[i]).collect();
+        out.layers.push(Layer {
+            name: layer.name.clone(),
+            op: layer.op.clone(),
+            inputs: new_inputs,
+            out: layer.out,
+        });
+        remap.push(out.layers.len() - 1);
+        let _ = idx;
+    }
+    out
+}
+
+/// Fuse standalone Activation nodes into an eligible producer.
+pub fn fuse_activations(g: &Graph) -> Graph {
+    let mut out = Graph::new(&g.name);
+    let mut remap: Vec<usize> = Vec::with_capacity(g.layers.len());
+
+    // Count consumers so we only fuse single-consumer producers.
+    let mut consumers = vec![0usize; g.layers.len()];
+    for l in &g.layers {
+        for &i in &l.inputs {
+            consumers[i] += 1;
+        }
+    }
+
+    for layer in g.layers.iter() {
+        if let Op::Activation(act) = &layer.op {
+            let src = layer.inputs[0];
+            if consumers[src] == 1 {
+                let src_new = remap[src];
+                let fused = match &mut out.layers[src_new].op {
+                    Op::Conv { act: a, .. } | Op::Dense { act: a, .. } | Op::Add { act: a }
+                        if *a == Act::None =>
+                    {
+                        *a = *act;
+                        true
+                    }
+                    _ => false,
+                };
+                if fused {
+                    remap.push(src_new);
+                    continue;
+                }
+            }
+        }
+        let new_inputs: Vec<usize> = layer.inputs.iter().map(|&i| remap[i]).collect();
+        out.layers.push(Layer {
+            name: layer.name.clone(),
+            op: layer.op.clone(),
+            inputs: new_inputs,
+            out: layer.out,
+        });
+        remap.push(out.layers.len() - 1);
+    }
+    out
+}
+
+/// The full deploy-compiler pipeline.
+pub fn compile(g: &Graph) -> Graph {
+    let folded = fold_batchnorm(g);
+    fuse_activations(&folded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::layers::Shape;
+    use crate::net::models;
+
+    #[test]
+    fn folding_removes_all_zoo_bns() {
+        for g in models::fig2_models() {
+            let f = fold_batchnorm(&g);
+            f.validate().unwrap();
+            assert!(
+                !f.layers.iter().any(|l| matches!(l.op, Op::BatchNorm)),
+                "{} still has BN after folding",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn folding_preserves_conv_macs() {
+        let g = models::resnet50::build(1000);
+        let f = fold_batchnorm(&g);
+        let conv_macs = |gr: &Graph| -> u64 {
+            (0..gr.layers.len())
+                .filter(|&i| matches!(gr.layers[i].op, Op::Conv { .. } | Op::Dense { .. }))
+                .map(|i| gr.layers[i].macs(&gr.in_shapes(i)))
+                .sum()
+        };
+        assert_eq!(conv_macs(&g), conv_macs(&f));
+    }
+
+    #[test]
+    fn folding_preserves_outputs() {
+        let g = models::mobilenet_v2::build(1000);
+        let f = fold_batchnorm(&g);
+        let out_names = |gr: &Graph| -> Vec<String> {
+            gr.outputs()
+                .iter()
+                .map(|&i| gr.layers[i].name.clone())
+                .collect()
+        };
+        assert_eq!(out_names(&g), out_names(&f));
+    }
+
+    #[test]
+    fn activation_fusion_simple_chain() {
+        let mut g = Graph::new("t");
+        let x = g.input("in", Shape::new(8, 8, 3));
+        let c = g.conv("c", x, 8, 3, 1, Act::None);
+        g.add_act(c);
+        let fused = fuse_activations(&g);
+        fused.validate().unwrap();
+        assert_eq!(fused.layers.len(), 2);
+        match &fused.layers[1].op {
+            Op::Conv { act, .. } => assert_eq!(*act, Act::Relu),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn activation_not_fused_into_multi_consumer() {
+        let mut g = Graph::new("t");
+        let x = g.input("in", Shape::new(8, 8, 3));
+        let c = g.conv("c", x, 8, 3, 1, Act::None);
+        let a = g.add("act", Op::Activation(Act::Relu), vec![c]);
+        // Second consumer of the conv output.
+        let c2 = g.conv("c2", c, 8, 3, 1, Act::None);
+        let _ = g.addl("add", a, c2, Act::None);
+        let fused = fuse_activations(&g);
+        fused.validate().unwrap();
+        assert!(fused
+            .layers
+            .iter()
+            .any(|l| matches!(l.op, Op::Activation(_))));
+    }
+
+    #[test]
+    fn compile_pipeline_validates_zoo() {
+        for g in models::fig2_models() {
+            compile(&g).validate().unwrap();
+        }
+    }
+
+    // Test helper: append a standalone relu.
+    impl Graph {
+        fn add_act(&mut self, input: usize) -> usize {
+            self.add("relu", Op::Activation(Act::Relu), vec![input])
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Graph compiler: deploy-time optimization passes and model partitioning
+//! (the Vitis-AI / OpenVINO / TFLite toolflow substrate, DESIGN.md §4.2).
+
+pub mod fusion;
+pub mod partition;
+
+pub use fusion::compile;
+pub use partition::{enumerate_cuts, Cut, Partition};

@@ -1,0 +1,306 @@
+//! Model partitioning — the mechanism behind the paper's MPAI row and the
+//! "methodology and design guidelines for the model partitioning" the paper
+//! lists as future work (§IV); the cut-point sweep bench (AB-P) explores it.
+//!
+//! A [`Partition`] assigns every non-input layer to exactly one accelerator.
+//! The canonical MPAI partition is a *topological 2-way cut*: prefix on the
+//! fast INT8 engine, suffix on the FP16 engine; [`enumerate_cuts`] yields
+//! every feasible cut with its cross-boundary transfer size.
+
+use std::collections::BTreeMap;
+
+use crate::net::graph::Graph;
+use crate::net::layers::Op;
+
+/// Assignment of layers to named accelerators.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    /// accelerator name per layer id; inputs get "" (unassigned).
+    pub assign: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum PartitionError {
+    #[error("partition covers {got} layers but graph has {want}")]
+    WrongArity { got: usize, want: usize },
+    #[error("layer {0} (non-input) is unassigned")]
+    Unassigned(String),
+    #[error("input layer {0} must not be assigned")]
+    AssignedInput(String),
+}
+
+impl Partition {
+    /// Everything on one accelerator.
+    pub fn single(g: &Graph, accel: &str) -> Partition {
+        Partition {
+            assign: g
+                .layers
+                .iter()
+                .map(|l| {
+                    if matches!(l.op, Op::Input) {
+                        String::new()
+                    } else {
+                        accel.to_string()
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Topological 2-way cut: layers with id <= `cut` on `head_accel`
+    /// (excluding inputs), the rest on `tail_accel`.
+    pub fn two_way(g: &Graph, cut: usize, head_accel: &str, tail_accel: &str) -> Partition {
+        Partition {
+            assign: g
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    if matches!(l.op, Op::Input) {
+                        String::new()
+                    } else if i <= cut {
+                        head_accel.to_string()
+                    } else {
+                        tail_accel.to_string()
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Assign by layer name (the manifest's backbone/head lists).
+    pub fn by_names(g: &Graph, table: &BTreeMap<String, String>) -> Result<Partition, PartitionError> {
+        let mut assign = Vec::with_capacity(g.layers.len());
+        for l in &g.layers {
+            if matches!(l.op, Op::Input) {
+                assign.push(String::new());
+            } else {
+                match table.get(&l.name) {
+                    Some(a) => assign.push(a.clone()),
+                    None => return Err(PartitionError::Unassigned(l.name.clone())),
+                }
+            }
+        }
+        Ok(Partition { assign })
+    }
+
+    /// Validate the exactly-once covering invariant.
+    pub fn validate(&self, g: &Graph) -> Result<(), PartitionError> {
+        if self.assign.len() != g.layers.len() {
+            return Err(PartitionError::WrongArity {
+                got: self.assign.len(),
+                want: g.layers.len(),
+            });
+        }
+        for (l, a) in g.layers.iter().zip(&self.assign) {
+            match (&l.op, a.is_empty()) {
+                (Op::Input, false) => {
+                    return Err(PartitionError::AssignedInput(l.name.clone()))
+                }
+                (Op::Input, true) => {}
+                (_, true) => return Err(PartitionError::Unassigned(l.name.clone())),
+                (_, false) => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Distinct accelerators used, in first-appearance order.
+    pub fn accelerators(&self) -> Vec<&str> {
+        let mut seen = Vec::new();
+        for a in &self.assign {
+            if !a.is_empty() && !seen.contains(&a.as_str()) {
+                seen.push(a.as_str());
+            }
+        }
+        seen
+    }
+
+    /// Edges crossing accelerator boundaries: (producer id, consumer id,
+    /// bytes at the given element width).
+    pub fn cross_edges(&self, g: &Graph, elem_bytes: usize) -> Vec<(usize, usize, usize)> {
+        let mut out = Vec::new();
+        for (ci, l) in g.layers.iter().enumerate() {
+            for &pi in &l.inputs {
+                let pa = &self.assign[pi];
+                let ca = &self.assign[ci];
+                // Input-layer tensors come from the host, not an accel.
+                if pa.is_empty() || ca.is_empty() {
+                    continue;
+                }
+                if pa != ca {
+                    out.push((pi, ci, g.layers[pi].out.numel() * elem_bytes));
+                }
+            }
+        }
+        out
+    }
+
+    /// Total cross-boundary transfer bytes.
+    pub fn transfer_bytes(&self, g: &Graph, elem_bytes: usize) -> usize {
+        self.cross_edges(g, elem_bytes).iter().map(|e| e.2).sum()
+    }
+}
+
+/// A candidate 2-way cut with its boundary size.
+#[derive(Debug, Clone)]
+pub struct Cut {
+    /// Last layer id of the head segment.
+    pub at: usize,
+    pub layer_name: String,
+    /// Tensor bytes crossing the boundary (at `elem_bytes` width).
+    pub boundary_bytes: usize,
+    /// MAC split: (head, tail).
+    pub macs: (u64, u64),
+}
+
+/// Enumerate every topological 2-way cut (the MPAI design space).
+pub fn enumerate_cuts(g: &Graph, elem_bytes: usize) -> Vec<Cut> {
+    let total: u64 = g.total_macs();
+    let mut head_macs = 0u64;
+    let mut cuts = Vec::new();
+    for i in 0..g.layers.len().saturating_sub(1) {
+        head_macs += g.layers[i].macs(&g.in_shapes(i));
+        // Boundary tensors: outputs of layers <= i consumed by layers > i.
+        let mut bytes = 0usize;
+        for (ci, l) in g.layers.iter().enumerate().skip(i + 1) {
+            let _ = ci;
+            for &pi in &l.inputs {
+                if pi <= i && !matches!(g.layers[pi].op, Op::Input) {
+                    bytes += g.layers[pi].out.numel() * elem_bytes;
+                }
+            }
+        }
+        if matches!(g.layers[i].op, Op::Input) {
+            continue;
+        }
+        cuts.push(Cut {
+            at: i,
+            layer_name: g.layers[i].name.clone(),
+            boundary_bytes: bytes,
+            macs: (head_macs, total - head_macs),
+        });
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::models::ursonet;
+    use crate::testkit::{check, Config};
+
+    #[test]
+    fn single_partition_validates() {
+        let g = ursonet::build_lite();
+        let p = Partition::single(&g, "dpu");
+        p.validate(&g).unwrap();
+        assert_eq!(p.accelerators(), vec!["dpu"]);
+        assert!(p.cross_edges(&g, 1).is_empty());
+    }
+
+    #[test]
+    fn two_way_cut_validates_and_crosses() {
+        let g = ursonet::build_lite();
+        let cut = g.layers.len() - 4; // before fc_bneck
+        let p = Partition::two_way(&g, cut, "dpu", "vpu");
+        p.validate(&g).unwrap();
+        assert_eq!(p.accelerators(), vec!["dpu", "vpu"]);
+        assert!(!p.cross_edges(&g, 1).is_empty());
+    }
+
+    #[test]
+    fn mpai_cut_boundary_is_feature_map() {
+        let g = ursonet::build_lite();
+        // Cut after feat_pool (last backbone layer).
+        let at = g
+            .layers
+            .iter()
+            .position(|l| l.name == "feat_pool")
+            .unwrap();
+        let p = Partition::two_way(&g, at, "dpu", "vpu");
+        // Boundary = 3*4*128 elements at 1 byte (INT8 transfer).
+        assert_eq!(p.transfer_bytes(&g, 1), 3 * 4 * 128);
+    }
+
+    #[test]
+    fn by_names_covers_or_errors() {
+        let g = ursonet::build_lite();
+        let mut table = BTreeMap::new();
+        for n in ursonet::lite_backbone_layers() {
+            table.insert(n.to_string(), "dpu".to_string());
+        }
+        // Missing heads -> error.
+        assert!(Partition::by_names(&g, &table).is_err());
+        for n in ursonet::lite_head_layers() {
+            table.insert(n.to_string(), "vpu".to_string());
+        }
+        let p = Partition::by_names(&g, &table).unwrap();
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn enumerate_cuts_macs_sum_to_total() {
+        let g = ursonet::build_lite();
+        let total = g.total_macs();
+        for c in enumerate_cuts(&g, 1) {
+            assert_eq!(c.macs.0 + c.macs.1, total, "cut at {}", c.layer_name);
+        }
+    }
+
+    #[test]
+    fn property_every_cut_validates_exactly_once() {
+        // Coordinator invariant: any 2-way cut covers each non-input layer
+        // exactly once and never assigns inputs.
+        let g = ursonet::build_lite();
+        check("cut_covering", Config::default(), move |ctx| {
+            let cut = ctx.rng.below(g.layers.len());
+            let p = Partition::two_way(&g, cut, "a", "b");
+            p.validate(&g).map_err(|e| e.to_string())?;
+            let assigned = p.assign.iter().filter(|a| !a.is_empty()).count();
+            let non_input = g
+                .layers
+                .iter()
+                .filter(|l| !matches!(l.op, Op::Input))
+                .count();
+            crate::prop_assert!(
+                assigned == non_input,
+                "assigned {assigned} != non-input {non_input}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_transfer_bytes_monotone_in_elem_width() {
+        let g = ursonet::build_lite();
+        check("transfer_monotone", Config::default(), move |ctx| {
+            let cut = ctx.rng.below(g.layers.len());
+            let p = Partition::two_way(&g, cut, "a", "b");
+            let b1 = p.transfer_bytes(&g, 1);
+            let b2 = p.transfer_bytes(&g, 2);
+            crate::prop_assert!(b2 == 2 * b1, "elem width scaling broken: {b1} {b2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_name_tables_never_double_assign() {
+        let g = ursonet::build_lite();
+        check("by_names_exactly_once", Config::default(), move |ctx| {
+            let accels = ["dpu", "vpu", "tpu", "cpu"];
+            let mut table = BTreeMap::new();
+            for l in &g.layers {
+                if !matches!(l.op, Op::Input) {
+                    table.insert(
+                        l.name.clone(),
+                        (*ctx.rng.choose(&accels)).to_string(),
+                    );
+                }
+            }
+            let p = Partition::by_names(&g, &table).map_err(|e| e.to_string())?;
+            p.validate(&g).map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+}

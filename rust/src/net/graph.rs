@@ -1,0 +1,332 @@
+//! DNN graph: topologically-ordered layer list with a builder API, shape
+//! inference, validation, and whole-network accounting.
+
+use std::collections::BTreeMap;
+
+use crate::net::layers::{Act, Layer, Op, PoolKind, Shape};
+
+/// A DNN as a DAG of layers in topological order (inputs precede users).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GraphError {
+    #[error("graph {graph}: layer {layer}: {msg}")]
+    Invalid {
+        graph: String,
+        layer: String,
+        msg: String,
+    },
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph {
+            name: name.to_string(),
+            layers: Vec::new(),
+        }
+    }
+
+    fn err(&self, layer: &str, msg: String) -> GraphError {
+        GraphError::Invalid {
+            graph: self.name.clone(),
+            layer: layer.to_string(),
+            msg,
+        }
+    }
+
+    // -- builder -------------------------------------------------------------
+
+    pub fn input(&mut self, name: &str, shape: Shape) -> usize {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            op: Op::Input,
+            inputs: vec![],
+            out: shape,
+        });
+        self.layers.len() - 1
+    }
+
+    /// Push a layer, inferring its shape; panics on structural errors (the
+    /// model zoo is static code — a bad definition should fail loudly).
+    pub fn add(&mut self, name: &str, op: Op, inputs: Vec<usize>) -> usize {
+        for &i in &inputs {
+            assert!(
+                i < self.layers.len(),
+                "graph {}: layer {name}: input id {i} out of range",
+                self.name
+            );
+        }
+        let in_shapes: Vec<Shape> = inputs.iter().map(|&i| self.layers[i].out).collect();
+        let out = Layer::infer_shape(&op, &in_shapes)
+            .unwrap_or_else(|e| panic!("graph {}: layer {name}: {e}", self.name));
+        self.layers.push(Layer {
+            name: name.to_string(),
+            op,
+            inputs,
+            out,
+        });
+        self.layers.len() - 1
+    }
+
+    // Convenience builders used heavily by the model zoo.
+
+    pub fn conv(
+        &mut self,
+        name: &str,
+        input: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        act: Act,
+    ) -> usize {
+        self.add(
+            name,
+            Op::Conv {
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: k / 2,
+                pad_w: k / 2,
+                cout,
+                groups: 1,
+                act,
+            },
+            vec![input],
+        )
+    }
+
+    pub fn dwconv(&mut self, name: &str, input: usize, k: usize, stride: usize, act: Act) -> usize {
+        let c = self.layers[input].out.c;
+        self.add(
+            name,
+            Op::Conv {
+                kh: k,
+                kw: k,
+                stride,
+                pad_h: k / 2,
+                pad_w: k / 2,
+                cout: c,
+                groups: c,
+                act,
+            },
+            vec![input],
+        )
+    }
+
+    pub fn dense(&mut self, name: &str, input: usize, cout: usize, act: Act) -> usize {
+        self.add(name, Op::Dense { cout, act }, vec![input])
+    }
+
+    pub fn maxpool(&mut self, name: &str, input: usize, k: usize, stride: usize) -> usize {
+        self.add(
+            name,
+            Op::Pool {
+                kind: PoolKind::Max,
+                k,
+                stride,
+            },
+            vec![input],
+        )
+    }
+
+    pub fn avgpool(&mut self, name: &str, input: usize, k: usize, stride: usize) -> usize {
+        self.add(
+            name,
+            Op::Pool {
+                kind: PoolKind::Avg,
+                k,
+                stride,
+            },
+            vec![input],
+        )
+    }
+
+    pub fn gap(&mut self, name: &str, input: usize) -> usize {
+        self.add(name, Op::GlobalAvgPool, vec![input])
+    }
+
+    pub fn bn(&mut self, name: &str, input: usize) -> usize {
+        self.add(name, Op::BatchNorm, vec![input])
+    }
+
+    pub fn addl(&mut self, name: &str, a: usize, b: usize, act: Act) -> usize {
+        self.add(name, Op::Add { act }, vec![a, b])
+    }
+
+    pub fn concat(&mut self, name: &str, inputs: Vec<usize>) -> usize {
+        self.add(name, Op::Concat, inputs)
+    }
+
+    // -- accessors / accounting ----------------------------------------------
+
+    pub fn in_shapes(&self, idx: usize) -> Vec<Shape> {
+        self.layers[idx]
+            .inputs
+            .iter()
+            .map(|&i| self.layers[i].out)
+            .collect()
+    }
+
+    /// Total multiply-accumulates per sample.
+    pub fn total_macs(&self) -> u64 {
+        (0..self.layers.len())
+            .map(|i| self.layers[i].macs(&self.in_shapes(i)))
+            .sum()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        (0..self.layers.len())
+            .map(|i| self.layers[i].params(&self.in_shapes(i)))
+            .sum()
+    }
+
+    /// Largest single activation tensor in elements (on-chip buffer sizing).
+    pub fn peak_activation(&self) -> usize {
+        self.layers.iter().map(|l| l.out.numel()).max().unwrap_or(0)
+    }
+
+    /// Ids of layers nobody consumes (network outputs).
+    pub fn outputs(&self) -> Vec<usize> {
+        let mut consumed = vec![false; self.layers.len()];
+        for l in &self.layers {
+            for &i in &l.inputs {
+                consumed[i] = true;
+            }
+        }
+        (0..self.layers.len())
+            .filter(|&i| !consumed[i] && !matches!(self.layers[i].op, Op::Input))
+            .collect()
+    }
+
+    /// Validate structural invariants (tests + compiler entry).
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let mut names = BTreeMap::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            if let Some(prev) = names.insert(l.name.clone(), i) {
+                return Err(self.err(
+                    &l.name,
+                    format!("duplicate layer name (first at index {prev})"),
+                ));
+            }
+            for &inp in &l.inputs {
+                if inp >= i {
+                    return Err(self.err(&l.name, format!("input {inp} not before layer {i}")));
+                }
+            }
+            let in_shapes = self.in_shapes(i);
+            if !matches!(l.op, Op::Input) {
+                let expect = Layer::infer_shape(&l.op, &in_shapes)
+                    .map_err(|e| self.err(&l.name, e))?;
+                if expect != l.out {
+                    return Err(self.err(
+                        &l.name,
+                        format!("stored shape {:?} != inferred {:?}", l.out, expect),
+                    ));
+                }
+            }
+        }
+        if self.layers.is_empty() {
+            return Err(self.err("<graph>", "empty graph".into()));
+        }
+        Ok(())
+    }
+
+    /// One-line description used by the CLI `inspect` command.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} layers, {:.2} GMACs, {:.2} M params, outputs {:?}",
+            self.name,
+            self.layers.len(),
+            self.total_macs() as f64 / 1e9,
+            self.total_params() as f64 / 1e6,
+            self.outputs()
+                .iter()
+                .map(|&i| self.layers[i].name.as_str())
+                .collect::<Vec<_>>()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny");
+        let x = g.input("in", Shape::new(8, 8, 3));
+        let c1 = g.conv("c1", x, 16, 3, 2, Act::Relu);
+        let c2 = g.conv("c2", c1, 16, 3, 1, Act::None);
+        let c3 = g.conv("c3", c1, 16, 3, 1, Act::None);
+        let a = g.addl("add", c2, c3, Act::Relu);
+        let p = g.gap("gap", a);
+        g.dense("fc", p, 10, Act::None);
+        g
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = tiny();
+        g.validate().unwrap();
+        assert_eq!(g.layers.len(), 7);
+    }
+
+    #[test]
+    fn outputs_found() {
+        let g = tiny();
+        let outs = g.outputs();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(g.layers[outs[0]].name, "fc");
+    }
+
+    #[test]
+    fn accounting_positive_and_consistent() {
+        let g = tiny();
+        assert!(g.total_macs() > 0);
+        assert!(g.total_params() > 0);
+        assert_eq!(g.peak_activation(), 4 * 4 * 16); // 256 > input 8*8*3 = 192
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = Graph::new("dup");
+        let x = g.input("in", Shape::new(4, 4, 3));
+        g.conv("c", x, 8, 3, 1, Act::None);
+        let y = g.conv("c2", x, 8, 3, 1, Act::None);
+        g.layers[2].name = "c".into();
+        let _ = y;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new("bad");
+        let x = g.input("in", Shape::new(4, 4, 3));
+        g.add(
+            "c",
+            Op::Conv {
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad_h: 1,
+                pad_w: 1,
+                cout: 8,
+                groups: 1,
+                act: Act::None,
+            },
+            vec![x + 5],
+        );
+    }
+
+    #[test]
+    fn validate_catches_tampered_shape() {
+        let mut g = tiny();
+        g.layers[1].out = Shape::new(1, 1, 1);
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Layer vocabulary of the DNN graph IR.
+//!
+//! Shapes are per-sample (H, W, C); the analytic accelerator models multiply
+//! by batch where relevant.  `macs()`/`params()`/`output_bytes()` are the
+//! accounting primitives every timing model consumes.
+
+/// Spatial/feature shape of one tensor (batch excluded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(h: usize, w: usize, c: usize) -> Shape {
+        Shape { h, w, c }
+    }
+
+    /// Feature vector (1x1xC).
+    pub fn vec(c: usize) -> Shape {
+        Shape { h: 1, w: 1, c }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Activation functions (fused into the producing layer by the compiler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Relu6,
+    Softmax,
+    None,
+}
+
+/// Pooling flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Layer operator kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Network input placeholder.
+    Input,
+    /// 2-D convolution. `groups == cin` expresses depthwise.
+    Conv {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        /// Padding on top/bottom (rows).
+        pad_h: usize,
+        /// Padding on left/right (cols).
+        pad_w: usize,
+        cout: usize,
+        groups: usize,
+        act: Act,
+    },
+    /// Fully connected (flattens input).
+    Dense { cout: usize, act: Act },
+    /// Window pooling.
+    Pool {
+        kind: PoolKind,
+        k: usize,
+        stride: usize,
+    },
+    /// Global average pool -> 1x1xC.
+    GlobalAvgPool,
+    /// Batch normalization (folded into the preceding conv by the compiler).
+    BatchNorm,
+    /// Elementwise residual add of exactly two inputs.
+    Add { act: Act },
+    /// Channel concatenation of >= 2 inputs (Inception blocks).
+    Concat,
+    /// Standalone activation (when not fused).
+    Activation(Act),
+}
+
+/// A node of the graph: operator + input node ids + inferred output shape.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub out: Shape,
+}
+
+impl Layer {
+    /// Multiply-accumulate count per sample.
+    pub fn macs(&self, in_shapes: &[Shape]) -> u64 {
+        match &self.op {
+            Op::Conv {
+                kh,
+                kw,
+                cout,
+                groups,
+                ..
+            } => {
+                let cin = in_shapes[0].c;
+                let per_out = kh * kw * cin / groups;
+                (self.out.h * self.out.w * cout * per_out) as u64
+            }
+            Op::Dense { cout, .. } => (in_shapes[0].numel() * cout) as u64,
+            // Pool/add/bn/act are measured as "effective MACs" ~ elementwise
+            // ops / 2 so vector-unit time is charged consistently.
+            Op::Pool { k, .. } => (self.out.numel() * k * k / 2) as u64,
+            Op::GlobalAvgPool => (in_shapes[0].numel() / 2) as u64,
+            Op::BatchNorm => in_shapes[0].numel() as u64,
+            Op::Add { .. } => (self.out.numel() / 2) as u64,
+            Op::Activation(_) => (self.out.numel() / 2) as u64,
+            Op::Concat | Op::Input => 0,
+        }
+    }
+
+    /// Parameter count (weights + bias).
+    pub fn params(&self, in_shapes: &[Shape]) -> u64 {
+        match &self.op {
+            Op::Conv {
+                kh,
+                kw,
+                cout,
+                groups,
+                ..
+            } => {
+                let cin = in_shapes[0].c;
+                (kh * kw * (cin / groups) * cout + cout) as u64
+            }
+            Op::Dense { cout, .. } => (in_shapes[0].numel() * cout + cout) as u64,
+            Op::BatchNorm => (2 * in_shapes[0].c) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Whether this is a depthwise conv (groups == cin) — the op class with
+    /// collapsed MAC-array utilization on every modeled accelerator.
+    pub fn is_depthwise(&self, in_shapes: &[Shape]) -> bool {
+        matches!(&self.op, Op::Conv { groups, .. } if *groups == in_shapes[0].c && *groups > 1)
+    }
+
+    /// Infer output shape from input shapes (panics on arity mismatch —
+    /// graph construction validates arity before calling).
+    pub fn infer_shape(op: &Op, in_shapes: &[Shape]) -> Result<Shape, String> {
+        match op {
+            Op::Input => Err("input shape must be given explicitly".into()),
+            Op::Conv {
+                kh,
+                kw,
+                stride,
+                pad_h,
+                pad_w,
+                cout,
+                groups,
+                ..
+            } => {
+                let s = in_shapes[0];
+                if s.c % groups != 0 {
+                    return Err(format!("conv groups {groups} does not divide cin {}", s.c));
+                }
+                if cout % groups != 0 {
+                    return Err(format!("conv groups {groups} does not divide cout {cout}"));
+                }
+                if s.h + 2 * pad_h < *kh || s.w + 2 * pad_w < *kw {
+                    return Err(format!("conv kernel {kh}x{kw} larger than padded input"));
+                }
+                Ok(Shape::new(
+                    (s.h + 2 * pad_h - kh) / stride + 1,
+                    (s.w + 2 * pad_w - kw) / stride + 1,
+                    *cout,
+                ))
+            }
+            Op::Dense { cout, .. } => Ok(Shape::vec(*cout)),
+            Op::Pool { k, stride, .. } => {
+                let s = in_shapes[0];
+                if s.h < *k || s.w < *k {
+                    return Err(format!("pool window {k} larger than input {}x{}", s.h, s.w));
+                }
+                Ok(Shape::new((s.h - k) / stride + 1, (s.w - k) / stride + 1, s.c))
+            }
+            Op::GlobalAvgPool => Ok(Shape::vec(in_shapes[0].c)),
+            Op::BatchNorm | Op::Activation(_) => Ok(in_shapes[0]),
+            Op::Add { .. } => {
+                if in_shapes.len() != 2 {
+                    return Err("add needs exactly 2 inputs".into());
+                }
+                if in_shapes[0] != in_shapes[1] {
+                    return Err(format!(
+                        "add shape mismatch {:?} vs {:?}",
+                        in_shapes[0], in_shapes[1]
+                    ));
+                }
+                Ok(in_shapes[0])
+            }
+            Op::Concat => {
+                if in_shapes.len() < 2 {
+                    return Err("concat needs >= 2 inputs".into());
+                }
+                let (h, w) = (in_shapes[0].h, in_shapes[0].w);
+                let mut c = 0;
+                for s in in_shapes {
+                    if s.h != h || s.w != w {
+                        return Err(format!("concat spatial mismatch {s:?}"));
+                    }
+                    c += s.c;
+                }
+                Ok(Shape::new(h, w, c))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(k: usize, stride: usize, pad: usize, cout: usize, groups: usize) -> Op {
+        Op::Conv {
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+            cout,
+            groups,
+            act: Act::Relu,
+        }
+    }
+
+    #[test]
+    fn conv_shape_same_padding() {
+        let s = Layer::infer_shape(&conv(3, 1, 1, 64, 1), &[Shape::new(56, 56, 32)]).unwrap();
+        assert_eq!(s, Shape::new(56, 56, 64));
+    }
+
+    #[test]
+    fn conv_shape_stride2() {
+        let s = Layer::infer_shape(&conv(3, 2, 1, 64, 1), &[Shape::new(224, 224, 3)]).unwrap();
+        assert_eq!(s, Shape::new(112, 112, 64));
+    }
+
+    #[test]
+    fn conv_rejects_bad_groups() {
+        assert!(Layer::infer_shape(&conv(3, 1, 1, 64, 5), &[Shape::new(8, 8, 32)]).is_err());
+    }
+
+    #[test]
+    fn conv_macs_known() {
+        // 3x3x16->32 at 8x8 output: 8*8*32*3*3*16 = 294912.
+        let l = Layer {
+            name: "c".into(),
+            op: conv(3, 1, 1, 32, 1),
+            inputs: vec![0],
+            out: Shape::new(8, 8, 32),
+        };
+        assert_eq!(l.macs(&[Shape::new(8, 8, 16)]), 294_912);
+    }
+
+    #[test]
+    fn depthwise_macs_divide_by_groups() {
+        let l = Layer {
+            name: "dw".into(),
+            op: conv(3, 1, 1, 32, 32),
+            inputs: vec![0],
+            out: Shape::new(8, 8, 32),
+        };
+        // 8*8*32*3*3*1 = 18432.
+        assert_eq!(l.macs(&[Shape::new(8, 8, 32)]), 18_432);
+        assert!(l.is_depthwise(&[Shape::new(8, 8, 32)]));
+    }
+
+    #[test]
+    fn dense_params_include_bias() {
+        let l = Layer {
+            name: "fc".into(),
+            op: Op::Dense {
+                cout: 10,
+                act: Act::None,
+            },
+            inputs: vec![0],
+            out: Shape::vec(10),
+        };
+        assert_eq!(l.params(&[Shape::vec(128)]), 128 * 10 + 10);
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let a = Shape::new(8, 8, 16);
+        let b = Shape::new(8, 8, 32);
+        assert!(Layer::infer_shape(&Op::Add { act: Act::None }, &[a, b]).is_err());
+        assert_eq!(
+            Layer::infer_shape(&Op::Add { act: Act::None }, &[a, a]).unwrap(),
+            a
+        );
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let s = Layer::infer_shape(
+            &Op::Concat,
+            &[Shape::new(8, 8, 16), Shape::new(8, 8, 32), Shape::new(8, 8, 8)],
+        )
+        .unwrap();
+        assert_eq!(s, Shape::new(8, 8, 56));
+    }
+
+    #[test]
+    fn global_pool_to_vector() {
+        let s = Layer::infer_shape(&Op::GlobalAvgPool, &[Shape::new(7, 7, 2048)]).unwrap();
+        assert_eq!(s, Shape::vec(2048));
+    }
+}

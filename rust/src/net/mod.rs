@@ -1,0 +1,9 @@
+//! DNN graph IR, model zoo, and graph compiler (DESIGN.md §4.1–4.2).
+
+pub mod compiler;
+pub mod graph;
+pub mod layers;
+pub mod models;
+
+pub use graph::Graph;
+pub use layers::{Act, Layer, Op, PoolKind, Shape};

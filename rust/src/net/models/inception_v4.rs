@@ -1,0 +1,245 @@
+//! Inception-V4 (Szegedy et al., AAAI'17) at 299x299x3 — Fig. 2 "largest" net.
+//!
+//! Full stem + 4x Inception-A + Reduction-A + 7x Inception-B + Reduction-B +
+//! 3x Inception-C + GAP + FC-1000, with the published branch widths.
+//! Published accounting: ~12.3 GMACs (24.6 GFLOPs), ~42.7 M params.
+//!
+//! Asymmetric convolutions (1x7/7x1, 1x3/3x1) carry their exact kernel
+//! footprints via the IR's per-axis padding.
+
+use crate::net::graph::Graph;
+use crate::net::layers::{Act, Op, PoolKind, Shape};
+
+/// conv + bn with explicit (kh, kw) and padding.
+fn cb(
+    g: &mut Graph,
+    name: &str,
+    x: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> usize {
+    let c = g.add(
+        &format!("{name}_conv"),
+        Op::Conv {
+            kh: k,
+            kw: k,
+            stride,
+            pad_h: pad,
+            pad_w: pad,
+            cout,
+            groups: 1,
+            act: Act::Relu,
+        },
+        vec![x],
+    );
+    g.bn(&format!("{name}_bn"), c)
+}
+
+/// Square conv + bn, SAME padding.
+fn cbs(g: &mut Graph, name: &str, x: usize, cout: usize, k: usize, stride: usize) -> usize {
+    cb(g, name, x, cout, k, stride, k / 2)
+}
+
+/// "Valid" conv + bn (no padding).
+fn cbv(g: &mut Graph, name: &str, x: usize, cout: usize, k: usize, stride: usize) -> usize {
+    cb(g, name, x, cout, k, stride, 0)
+}
+
+/// Asymmetric conv + bn: exact (kh, kw) footprint with per-axis SAME pads.
+fn cba(
+    g: &mut Graph,
+    name: &str,
+    x: usize,
+    cout: usize,
+    kh: usize,
+    kw: usize,
+) -> usize {
+    let c = g.add(
+        &format!("{name}_conv"),
+        Op::Conv {
+            kh,
+            kw,
+            stride: 1,
+            pad_h: kh / 2,
+            pad_w: kw / 2,
+            cout,
+            groups: 1,
+            act: Act::Relu,
+        },
+        vec![x],
+    );
+    g.bn(&format!("{name}_bn"), c)
+}
+
+/// Asymmetric pair: 1x1 reduce to `w1`, then 1xk -> kx1 (exact footprints,
+/// as in the published Inception-B/C branches).
+fn asym_pair(g: &mut Graph, name: &str, x: usize, w1: usize, w2: usize, k: usize) -> usize {
+    let r = cbs(g, &format!("{name}_reduce"), x, w1, 1, 1);
+    let mid = (w1 + w2) / 2;
+    let a = cba(g, &format!("{name}_1x{k}"), r, mid, 1, k);
+    cba(g, &format!("{name}_{k}x1"), a, w2, k, 1)
+}
+
+fn inception_a(g: &mut Graph, name: &str, x: usize) -> usize {
+    let b0 = cbs(g, &format!("{name}_b0"), x, 96, 1, 1);
+    let b1a = cbs(g, &format!("{name}_b1a"), x, 64, 1, 1);
+    let b1b = cbs(g, &format!("{name}_b1b"), b1a, 96, 3, 1);
+    let b2a = cbs(g, &format!("{name}_b2a"), x, 64, 1, 1);
+    let b2b = cbs(g, &format!("{name}_b2b"), b2a, 96, 3, 1);
+    let b2c = cbs(g, &format!("{name}_b2c"), b2b, 96, 3, 1);
+    // 3x3/1 SAME avg-pool is shape-preserving in the real net; the IR pools
+    // without padding, so use the k=1 shape-preserving stand-in (pooling
+    // MACs are negligible at this granularity).
+    let b3a = g.add(
+        &format!("{name}_poolp"),
+        Op::Pool {
+            kind: PoolKind::Avg,
+            k: 1,
+            stride: 1,
+        },
+        vec![x],
+    );
+    let b3b = cbs(g, &format!("{name}_b3b"), b3a, 96, 1, 1);
+    g.concat(&format!("{name}_cat"), vec![b0, b1b, b2c, b3b])
+}
+
+fn reduction_a(g: &mut Graph, name: &str, x: usize) -> usize {
+    let b0 = cbv(g, &format!("{name}_b0"), x, 384, 3, 2);
+    let b1a = cbs(g, &format!("{name}_b1a"), x, 192, 1, 1);
+    let b1b = cbs(g, &format!("{name}_b1b"), b1a, 224, 3, 1);
+    let b1c = cbv(g, &format!("{name}_b1c"), b1b, 256, 3, 2);
+    let b2 = g.maxpool(&format!("{name}_pool"), x, 3, 2);
+    g.concat(&format!("{name}_cat"), vec![b0, b1c, b2])
+}
+
+fn inception_b(g: &mut Graph, name: &str, x: usize) -> usize {
+    let b0 = cbs(g, &format!("{name}_b0"), x, 384, 1, 1);
+    let b1 = asym_pair(g, &format!("{name}_b1"), x, 192, 256, 7);
+    let b2a = asym_pair(g, &format!("{name}_b2a"), x, 192, 224, 7);
+    let b2b = cba(g, &format!("{name}_b2c"), b2a, 224, 7, 1);
+    let b2 = cba(g, &format!("{name}_b2d"), b2b, 256, 1, 7);
+    let b3a = g.add(
+        &format!("{name}_poolp"),
+        Op::Pool {
+            kind: PoolKind::Avg,
+            k: 1,
+            stride: 1,
+        },
+        vec![x],
+    );
+    let b3 = cbs(g, &format!("{name}_b3"), b3a, 128, 1, 1);
+    g.concat(&format!("{name}_cat"), vec![b0, b1, b2, b3])
+}
+
+fn reduction_b(g: &mut Graph, name: &str, x: usize) -> usize {
+    let b0a = cbs(g, &format!("{name}_b0a"), x, 192, 1, 1);
+    let b0b = cbv(g, &format!("{name}_b0b"), b0a, 192, 3, 2);
+    let b1a = asym_pair(g, &format!("{name}_b1a"), x, 256, 320, 7);
+    let b1b = cbv(g, &format!("{name}_b1b"), b1a, 320, 3, 2);
+    let b2 = g.maxpool(&format!("{name}_pool"), x, 3, 2);
+    g.concat(&format!("{name}_cat"), vec![b0b, b1b, b2])
+}
+
+fn inception_c(g: &mut Graph, name: &str, x: usize) -> usize {
+    let b0 = cbs(g, &format!("{name}_b0"), x, 256, 1, 1);
+    let b1 = asym_pair(g, &format!("{name}_b1"), x, 384, 512, 3);
+    let b2a = asym_pair(g, &format!("{name}_b2a"), x, 384, 448, 3);
+    let b2b = cba(g, &format!("{name}_b2c"), b2a, 512, 3, 1);
+    let b2 = cba(g, &format!("{name}_b2d"), b2b, 512, 1, 3);
+    let b3a = g.add(
+        &format!("{name}_poolp"),
+        Op::Pool {
+            kind: PoolKind::Avg,
+            k: 1,
+            stride: 1,
+        },
+        vec![x],
+    );
+    let b3 = cbs(g, &format!("{name}_b3"), b3a, 256, 1, 1);
+    g.concat(&format!("{name}_cat"), vec![b0, b1, b2, b3])
+}
+
+/// Build Inception-V4 for `classes` outputs.
+pub fn build(classes: usize) -> Graph {
+    let mut g = Graph::new("inception_v4");
+    let x = g.input("input", Shape::new(299, 299, 3));
+
+    // Stem.
+    let mut h = cbv(&mut g, "stem1", x, 32, 3, 2); // 149x149x32
+    h = cbv(&mut g, "stem2", h, 32, 3, 1); // 147x147x32
+    h = cbs(&mut g, "stem3", h, 64, 3, 1); // 147x147x64
+    let p1 = g.maxpool("stem_pool1", h, 3, 2); // 73x73x64
+    let c1 = cbv(&mut g, "stem4", h, 96, 3, 2); // 73x73x96
+    h = g.concat("stem_cat1", vec![p1, c1]); // 73x73x160
+    let a1 = cbs(&mut g, "stem5a", h, 64, 1, 1);
+    let a2 = cbv(&mut g, "stem5b", a1, 96, 3, 1); // 71x71x96
+    let b1 = cbs(&mut g, "stem6a", h, 64, 1, 1);
+    let b2a = cba(&mut g, "stem6b1", b1, 64, 1, 7);
+    let b2 = cba(&mut g, "stem6b2", b2a, 64, 7, 1);
+    let b3 = cbv(&mut g, "stem6c", b2, 96, 3, 1); // 71x71x96
+    h = g.concat("stem_cat2", vec![a2, b3]); // 71x71x192
+    let p2 = g.maxpool("stem_pool2", h, 3, 2); // 35x35x192
+    let c2 = cbv(&mut g, "stem7", h, 192, 3, 2); // 35x35x192
+    h = g.concat("stem_cat3", vec![p2, c2]); // 35x35x384
+
+    for i in 0..4 {
+        h = inception_a(&mut g, &format!("a{i}"), h);
+    }
+    h = reduction_a(&mut g, "ra", h); // 17x17x1024
+    for i in 0..7 {
+        h = inception_b(&mut g, &format!("b{i}"), h);
+    }
+    h = reduction_b(&mut g, "rb", h); // 8x8x1536
+    for i in 0..3 {
+        h = inception_c(&mut g, &format!("c{i}"), h);
+    }
+    let p = g.gap("gap", h);
+    g.dense("fc", p, classes, Act::Softmax);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        build(1000).validate().unwrap();
+    }
+
+    #[test]
+    fn macs_in_published_ballpark() {
+        // Published ~12.3 GMACs (24.6 GFLOPs).
+        let gmacs = build(1000).total_macs() as f64 / 1e9;
+        assert!((10.5..14.0).contains(&gmacs), "GMACs {gmacs}");
+    }
+
+    #[test]
+    fn params_in_published_ballpark() {
+        // Published ~42.7 M.
+        let m = build(1000).total_params() as f64 / 1e6;
+        assert!((35.0..50.0).contains(&m), "Mparams {m}");
+    }
+
+    #[test]
+    fn feature_grid_sizes() {
+        let g = build(1000);
+        let cat3 = g.layers.iter().find(|l| l.name == "stem_cat3").unwrap();
+        assert_eq!(cat3.out, Shape::new(35, 35, 384));
+        let ra = g.layers.iter().find(|l| l.name == "ra_cat").unwrap();
+        assert_eq!(ra.out.h, 17);
+        let rb = g.layers.iter().find(|l| l.name == "rb_cat").unwrap();
+        assert_eq!(rb.out.h, 8);
+    }
+
+    #[test]
+    fn much_bigger_than_resnet50() {
+        use crate::net::models::resnet50;
+        let iv4 = build(1000);
+        let r50 = resnet50::build(1000);
+        assert!(iv4.total_macs() > r50.total_macs());
+        assert!(iv4.total_params() > r50.total_params());
+    }
+}

@@ -1,0 +1,107 @@
+//! MobileNetV2 (Sandler et al., CVPR'18) at 224x224x3 — Fig. 2 "small" net.
+//!
+//! Exact inverted-residual dimensioning: (expansion t, channels c, repeats n,
+//! stride s) = (1,16,1,1) (6,24,2,2) (6,32,3,2) (6,64,4,2) (6,96,3,1)
+//! (6,160,3,2) (6,320,1,1), 1x1 head to 1280, GAP, FC-1000.
+//! BatchNorm follows every conv (folded by the graph compiler).
+//!
+//! Accounting cross-check (tests below): ~0.32 GMACs, ~3.5 M params — the
+//! published figures (300 MMACs / 3.4 M) within rounding of the BN params.
+
+use crate::net::graph::Graph;
+use crate::net::layers::{Act, Shape};
+
+fn conv_bn(g: &mut Graph, name: &str, x: usize, cout: usize, k: usize, s: usize, act: Act) -> usize {
+    let c = g.conv(&format!("{name}_conv"), x, cout, k, s, act);
+    g.bn(&format!("{name}_bn"), c)
+}
+
+fn dw_bn(g: &mut Graph, name: &str, x: usize, k: usize, s: usize, act: Act) -> usize {
+    let c = g.dwconv(&format!("{name}_dw"), x, k, s, act);
+    g.bn(&format!("{name}_bn"), c)
+}
+
+/// One inverted residual block.
+fn inverted_residual(g: &mut Graph, name: &str, x: usize, t: usize, cout: usize, s: usize) -> usize {
+    let cin = g.layers[x].out.c;
+    let mut h = x;
+    if t != 1 {
+        h = conv_bn(g, &format!("{name}_expand"), h, cin * t, 1, 1, Act::Relu6);
+    }
+    h = dw_bn(g, &format!("{name}_dwise"), h, 3, s, Act::Relu6);
+    h = conv_bn(g, &format!("{name}_project"), h, cout, 1, 1, Act::None);
+    if s == 1 && cin == cout {
+        h = g.addl(&format!("{name}_add"), x, h, Act::None);
+    }
+    h
+}
+
+/// Build MobileNetV2-1.0 for `classes` outputs.
+pub fn build(classes: usize) -> Graph {
+    let mut g = Graph::new("mobilenet_v2");
+    let x = g.input("input", Shape::new(224, 224, 3));
+    let mut h = conv_bn(&mut g, "stem", x, 32, 3, 2, Act::Relu6);
+
+    let spec: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (bi, &(t, c, n, s)) in spec.iter().enumerate() {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            h = inverted_residual(&mut g, &format!("block{bi}_{i}"), h, t, c, stride);
+        }
+    }
+    h = conv_bn(&mut g, "head", h, 1280, 1, 1, Act::Relu6);
+    let p = g.gap("gap", h);
+    g.dense("fc", p, classes, Act::Softmax);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        build(1000).validate().unwrap();
+    }
+
+    #[test]
+    fn published_macs() {
+        let g = build(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((0.28..0.40).contains(&gmacs), "GMACs {gmacs}");
+    }
+
+    #[test]
+    fn published_params() {
+        let g = build(1000);
+        let m = g.total_params() as f64 / 1e6;
+        assert!((3.2..3.8).contains(&m), "Mparams {m}");
+    }
+
+    #[test]
+    fn final_spatial_is_7x7() {
+        let g = build(1000);
+        // Find the last conv before gap: head_bn output must be 7x7x1280.
+        let head = g.layers.iter().find(|l| l.name == "head_bn").unwrap();
+        assert_eq!(head.out, Shape::new(7, 7, 1280));
+    }
+
+    #[test]
+    fn is_depthwise_heavy() {
+        // >30% of layers are depthwise — the property that tanks VPU
+        // utilization in Fig. 2 (DESIGN.md §1).
+        let g = build(1000);
+        let dw = (0..g.layers.len())
+            .filter(|&i| g.layers[i].is_depthwise(&g.in_shapes(i)))
+            .count();
+        assert!(dw >= 17, "depthwise count {dw}");
+    }
+}

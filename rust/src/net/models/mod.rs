@@ -1,0 +1,64 @@
+//! Model zoo: exact layer dimensioning for the paper's evaluated networks.
+
+pub mod inception_v4;
+pub mod mobilenet_v2;
+pub mod resnet50;
+pub mod ursonet;
+
+use crate::net::graph::Graph;
+
+/// All Fig. 2 networks (ordered small -> large, as plotted).
+pub fn fig2_models() -> Vec<Graph> {
+    vec![
+        mobilenet_v2::build(1000),
+        resnet50::build(1000),
+        inception_v4::build(1000),
+    ]
+}
+
+/// Look a model up by CLI name.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "mobilenet_v2" => Some(mobilenet_v2::build(1000)),
+        "resnet50" => Some(resnet50::build(1000)),
+        "inception_v4" => Some(inception_v4::build(1000)),
+        "ursonet_full" => Some(ursonet::build_full()),
+        "ursonet_lite" => Some(ursonet::build_lite()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_all_validate() {
+        for g in fig2_models() {
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn by_name_round_trip() {
+        for name in [
+            "mobilenet_v2",
+            "resnet50",
+            "inception_v4",
+            "ursonet_full",
+            "ursonet_lite",
+        ] {
+            let g = by_name(name).unwrap();
+            assert_eq!(g.name, name);
+        }
+        assert!(by_name("vgg16").is_none());
+    }
+
+    #[test]
+    fn size_ordering_matches_fig2() {
+        // Fig. 2 orders by complexity: MobileNetV2 < ResNet-50 < InceptionV4.
+        let ms = fig2_models();
+        assert!(ms[0].total_macs() < ms[1].total_macs());
+        assert!(ms[1].total_macs() < ms[2].total_macs());
+    }
+}

@@ -1,0 +1,95 @@
+//! ResNet-50 (He et al., CVPR'16) at 224x224x3 — Fig. 2 "large" net, and the
+//! backbone of full-size UrsoNet (Table I).
+//!
+//! Bottleneck stages [3, 4, 6, 3] with base widths 64/128/256/512 (x4
+//! expansion).  Published accounting: 4.1 GMACs, 25.6 M params — asserted
+//! within tolerance below.
+
+use crate::net::graph::Graph;
+use crate::net::layers::{Act, Shape};
+
+fn conv_bn(g: &mut Graph, name: &str, x: usize, cout: usize, k: usize, s: usize, act: Act) -> usize {
+    let c = g.conv(&format!("{name}_conv"), x, cout, k, s, act);
+    g.bn(&format!("{name}_bn"), c)
+}
+
+/// Bottleneck residual block: 1x1 -> 3x3 -> 1x1(x4) with projection shortcut
+/// on the first block of each stage.
+fn bottleneck(g: &mut Graph, name: &str, x: usize, width: usize, stride: usize, project: bool) -> usize {
+    let cout = width * 4;
+    let a = conv_bn(g, &format!("{name}_a"), x, width, 1, stride, Act::Relu);
+    let b = conv_bn(g, &format!("{name}_b"), a, width, 3, 1, Act::Relu);
+    let c = conv_bn(g, &format!("{name}_c"), b, cout, 1, 1, Act::None);
+    let short = if project {
+        conv_bn(g, &format!("{name}_proj"), x, cout, 1, stride, Act::None)
+    } else {
+        x
+    };
+    g.addl(&format!("{name}_add"), short, c, Act::Relu)
+}
+
+/// Append the ResNet-50 backbone (stem through final 7x7(x2048) stage) to an
+/// existing graph; returns the last feature node.  Shared by the classifier
+/// build and the UrsoNet-full descriptor.
+pub fn backbone(g: &mut Graph, x: usize) -> usize {
+    let mut h = conv_bn(g, "stem", x, 64, 7, 2, Act::Relu);
+    h = g.maxpool("stem_pool", h, 3, 2);
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    for (si, &(width, blocks, stride)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let s = if b == 0 { stride } else { 1 };
+            h = bottleneck(g, &format!("s{si}_b{b}"), h, width, s, b == 0);
+        }
+    }
+    h
+}
+
+/// Build the ImageNet classifier.
+pub fn build(classes: usize) -> Graph {
+    let mut g = Graph::new("resnet50");
+    let x = g.input("input", Shape::new(224, 224, 3));
+    let h = backbone(&mut g, x);
+    let p = g.gap("gap", h);
+    g.dense("fc", p, classes, Act::Softmax);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates() {
+        build(1000).validate().unwrap();
+    }
+
+    #[test]
+    fn published_macs() {
+        let gmacs = build(1000).total_macs() as f64 / 1e9;
+        assert!((3.8..4.4).contains(&gmacs), "GMACs {gmacs}");
+    }
+
+    #[test]
+    fn published_params() {
+        let m = build(1000).total_params() as f64 / 1e6;
+        assert!((25.0..26.5).contains(&m), "Mparams {m}");
+    }
+
+    #[test]
+    fn final_feature_shape() {
+        let g = build(1000);
+        let gap_in = g.layers.iter().find(|l| l.name == "gap").unwrap();
+        let src = gap_in.inputs[0];
+        assert_eq!(g.layers[src].out, Shape::new(7, 7, 2048));
+    }
+
+    #[test]
+    fn no_depthwise() {
+        let g = build(1000);
+        let dw = (0..g.layers.len())
+            .filter(|&i| g.layers[i].is_depthwise(&g.in_shapes(i)))
+            .count();
+        assert_eq!(dw, 0);
+    }
+}

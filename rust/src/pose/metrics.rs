@@ -1,0 +1,150 @@
+//! Table I accuracy metrics: LOCE (metres) and ORIE (degrees).
+
+use crate::pose::quaternion::Quat;
+use crate::pose::Pose;
+
+/// Localization error for one prediction: euclidean distance in metres.
+pub fn loce_one(pred: [f32; 3], truth: [f32; 3]) -> f64 {
+    let d0 = (pred[0] - truth[0]) as f64;
+    let d1 = (pred[1] - truth[1]) as f64;
+    let d2 = (pred[2] - truth[2]) as f64;
+    (d0 * d0 + d1 * d1 + d2 * d2).sqrt()
+}
+
+/// Orientation error for one prediction: 2·acos(|q̂·q|) in degrees.
+pub fn orie_one(pred: [f32; 4], truth: [f32; 4]) -> f64 {
+    Quat::from_f32(pred).angle_to_deg(&Quat::from_f32(truth))
+}
+
+/// Aggregated pose accuracy over an eval run.
+#[derive(Debug, Clone, Default)]
+pub struct PoseAccuracy {
+    loce_sum: f64,
+    orie_sum: f64,
+    n: usize,
+}
+
+impl PoseAccuracy {
+    pub fn new() -> PoseAccuracy {
+        PoseAccuracy::default()
+    }
+
+    pub fn add(&mut self, pred_loc: [f32; 3], pred_quat: [f32; 4], truth: &Pose) {
+        self.loce_sum += loce_one(pred_loc, truth.loc);
+        self.orie_sum += orie_one(pred_quat, truth.quat);
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Mean localization error (metres) — Table I "LOCE".
+    pub fn loce_m(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.loce_sum / self.n as f64
+        }
+    }
+
+    /// Mean orientation error (degrees) — Table I "ORIE".
+    pub fn orie_deg(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.orie_sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Config};
+
+    #[test]
+    fn loce_exact_zero() {
+        assert_eq!(loce_one([1.0, 2.0, 3.0], [1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn loce_known() {
+        assert!((loce_one([3.0, 4.0, 0.0], [0.0, 0.0, 0.0]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn orie_identical_zero() {
+        assert!(orie_one([0.8, 0.6, 0.0, 0.0], [0.8, 0.6, 0.0, 0.0]) < 1e-6);
+    }
+
+    #[test]
+    fn orie_sign_flip_zero() {
+        assert!(orie_one([0.8, 0.6, 0.0, 0.0], [-0.8, -0.6, 0.0, 0.0]) < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_averages() {
+        let mut acc = PoseAccuracy::new();
+        let truth = Pose {
+            loc: [0.0, 0.0, 5.0],
+            quat: [1.0, 0.0, 0.0, 0.0],
+        };
+        acc.add([1.0, 0.0, 5.0], [1.0, 0.0, 0.0, 0.0], &truth);
+        acc.add([0.0, 3.0, 5.0], [1.0, 0.0, 0.0, 0.0], &truth);
+        assert_eq!(acc.count(), 2);
+        assert!((acc.loce_m() - 2.0).abs() < 1e-9);
+        assert!(acc.orie_deg() < 1e-9);
+    }
+
+    #[test]
+    fn empty_accuracy_is_nan() {
+        let acc = PoseAccuracy::new();
+        assert!(acc.loce_m().is_nan());
+        assert!(acc.orie_deg().is_nan());
+    }
+
+    #[test]
+    fn loce_symmetry_property() {
+        check("loce_symmetric", Config::default(), |ctx| {
+            let a = [
+                ctx.rng.normal() as f32,
+                ctx.rng.normal() as f32,
+                ctx.rng.normal() as f32,
+            ];
+            let b = [
+                ctx.rng.normal() as f32,
+                ctx.rng.normal() as f32,
+                ctx.rng.normal() as f32,
+            ];
+            let d1 = loce_one(a, b);
+            let d2 = loce_one(b, a);
+            crate::prop_assert!((d1 - d2).abs() < 1e-12, "asymmetric: {d1} vs {d2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn orie_bounded_property() {
+        check("orie_bounded", Config::default(), |ctx| {
+            let mut q = || {
+                let v = [
+                    ctx_normal(&mut ctx.rng),
+                    ctx_normal(&mut ctx.rng),
+                    ctx_normal(&mut ctx.rng),
+                    ctx_normal(&mut ctx.rng),
+                ];
+                let n = (v.iter().map(|x| x * x).sum::<f32>()).sqrt();
+                [v[0] / n, v[1] / n, v[2] / n, v[3] / n]
+            };
+            let (a, b) = (q(), q());
+            let o = orie_one(a, b);
+            crate::prop_assert!((0.0..=180.0 + 1e-9).contains(&o), "orie {o}");
+            Ok(())
+        });
+    }
+
+    fn ctx_normal(r: &mut crate::util::prng::Prng) -> f32 {
+        r.normal() as f32
+    }
+}

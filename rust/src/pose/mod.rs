@@ -1,0 +1,187 @@
+//! Pose toolkit: quaternions, Table-I error metrics, and the eval-set loader.
+
+pub mod metrics;
+pub mod quaternion;
+
+use std::path::Path;
+
+use crate::util::mpt::{self, MptError};
+
+/// Ground-truth pose of one eval frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pose {
+    /// Location in the camera frame, metres.
+    pub loc: [f32; 3],
+    /// Unit quaternion (w, x, y, z), w >= 0.
+    pub quat: [f32; 4],
+}
+
+/// The evaluation dataset produced by `make artifacts` (eval_set.mpt).
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    /// Camera frames, (N, H, W, 3) u8, row-major.
+    pub frames: Vec<u8>,
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub poses: Vec<Pose>,
+    /// Golden preprocessed frame 0 (H_net, W_net, 3) f32 — preprocess parity.
+    pub golden_pre0: Vec<f32>,
+    pub golden_shape: Vec<usize>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EvalSetError {
+    #[error(transparent)]
+    Mpt(#[from] MptError),
+    #[error("eval set format error: {0}")]
+    Format(String),
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> Result<EvalSet, EvalSetError> {
+        let tensors = mpt::read_mpt(path)?;
+        let get = |name: &str| {
+            tensors
+                .get(name)
+                .ok_or_else(|| EvalSetError::Format(format!("missing tensor {name:?}")))
+        };
+
+        let frames_e = get("frames")?;
+        if frames_e.shape.len() != 4 || frames_e.shape[3] != 3 {
+            return Err(EvalSetError::Format(format!(
+                "frames shape {:?} (want N,H,W,3)",
+                frames_e.shape
+            )));
+        }
+        let n = frames_e.shape[0];
+        let frame_h = frames_e.shape[1];
+        let frame_w = frames_e.shape[2];
+
+        let loc_e = get("loc")?;
+        let quat_e = get("quat")?;
+        if loc_e.shape != vec![n, 3] || quat_e.shape != vec![n, 4] {
+            return Err(EvalSetError::Format(format!(
+                "pose shapes loc {:?} quat {:?} (want [{n},3], [{n},4])",
+                loc_e.shape, quat_e.shape
+            )));
+        }
+        let locs = loc_e
+            .data
+            .as_f32()
+            .ok_or_else(|| EvalSetError::Format("loc must be f32".into()))?;
+        let quats = quat_e
+            .data
+            .as_f32()
+            .ok_or_else(|| EvalSetError::Format("quat must be f32".into()))?;
+        let poses = (0..n)
+            .map(|i| Pose {
+                loc: [locs[3 * i], locs[3 * i + 1], locs[3 * i + 2]],
+                quat: [
+                    quats[4 * i],
+                    quats[4 * i + 1],
+                    quats[4 * i + 2],
+                    quats[4 * i + 3],
+                ],
+            })
+            .collect();
+
+        let golden = get("golden_pre0")?;
+        Ok(EvalSet {
+            frames: frames_e
+                .data
+                .as_u8()
+                .ok_or_else(|| EvalSetError::Format("frames must be u8".into()))?
+                .to_vec(),
+            frame_h,
+            frame_w,
+            poses,
+            golden_pre0: golden
+                .data
+                .as_f32()
+                .ok_or_else(|| EvalSetError::Format("golden_pre0 must be f32".into()))?
+                .to_vec(),
+            golden_shape: golden.shape.clone(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.poses.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.poses.is_empty()
+    }
+
+    /// Borrow frame `i` as raw (H, W, 3) u8 bytes.
+    pub fn frame(&self, i: usize) -> &[u8] {
+        let sz = self.frame_h * self.frame_w * 3;
+        &self.frames[i * sz..(i + 1) * sz]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mpt::{write_mpt, Tensor};
+
+    fn tiny_eval_set(dir: &Path) -> std::path::PathBuf {
+        let path = dir.join("tiny_eval.mpt");
+        let n = 2;
+        let (h, w) = (4, 6);
+        write_mpt(
+            &path,
+            &[
+                (
+                    "frames".into(),
+                    vec![n, h, w, 3],
+                    Tensor::U8((0..n * h * w * 3).map(|i| i as u8).collect()),
+                ),
+                (
+                    "loc".into(),
+                    vec![n, 3],
+                    Tensor::F32(vec![0.0, 1.0, 5.0, -1.0, 0.5, 7.0]),
+                ),
+                (
+                    "quat".into(),
+                    vec![n, 4],
+                    Tensor::F32(vec![1.0, 0.0, 0.0, 0.0, 0.8, 0.6, 0.0, 0.0]),
+                ),
+                (
+                    "golden_pre0".into(),
+                    vec![2, 3, 3],
+                    Tensor::F32(vec![0.5; 18]),
+                ),
+            ],
+        )
+        .unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_tiny_eval_set() {
+        let dir = std::env::temp_dir();
+        let path = tiny_eval_set(&dir);
+        let es = EvalSet::load(&path).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es.frame_h, 4);
+        assert_eq!(es.frame_w, 6);
+        assert_eq!(es.poses[0].loc, [0.0, 1.0, 5.0]);
+        assert_eq!(es.poses[1].quat, [0.8, 0.6, 0.0, 0.0]);
+        assert_eq!(es.frame(1).len(), 4 * 6 * 3);
+        assert_eq!(es.frame(1)[0], (4 * 6 * 3) as u8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_missing_tensor() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("bad_eval.mpt");
+        write_mpt(
+            &path,
+            &[("frames".into(), vec![1, 2, 2, 3], Tensor::U8(vec![0; 12]))],
+        )
+        .unwrap();
+        assert!(EvalSet::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,190 @@
+//! Quaternion math for pose handling (w, x, y, z convention, f64 internals).
+
+/// Unit quaternion (w, x, y, z).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quat {
+    pub w: f64,
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat {
+        w: 1.0,
+        x: 0.0,
+        y: 0.0,
+        z: 0.0,
+    };
+
+    pub fn new(w: f64, x: f64, y: f64, z: f64) -> Quat {
+        Quat { w, x, y, z }
+    }
+
+    pub fn from_f32(q: [f32; 4]) -> Quat {
+        Quat::new(q[0] as f64, q[1] as f64, q[2] as f64, q[3] as f64)
+    }
+
+    /// Axis-angle constructor (axis normalized internally, angle radians).
+    pub fn from_axis_angle(axis: [f64; 3], angle: f64) -> Quat {
+        let n = (axis[0] * axis[0] + axis[1] * axis[1] + axis[2] * axis[2]).sqrt();
+        let (s, c) = ((angle / 2.0).sin(), (angle / 2.0).cos());
+        Quat::new(c, s * axis[0] / n, s * axis[1] / n, s * axis[2] / n)
+    }
+
+    pub fn norm(&self) -> f64 {
+        (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt()
+    }
+
+    pub fn normalized(&self) -> Quat {
+        let n = self.norm();
+        Quat::new(self.w / n, self.x / n, self.y / n, self.z / n)
+    }
+
+    /// Canonical double cover: flip sign so w >= 0.
+    pub fn canonical(&self) -> Quat {
+        if self.w < 0.0 {
+            Quat::new(-self.w, -self.x, -self.y, -self.z)
+        } else {
+            *self
+        }
+    }
+
+    pub fn dot(&self, o: &Quat) -> f64 {
+        self.w * o.w + self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    /// Hamilton product (composition of rotations: self then o... i.e.
+    /// (self * o) rotates by o first, then self — matching R(a)R(b)).
+    pub fn mul(&self, o: &Quat) -> Quat {
+        Quat::new(
+            self.w * o.w - self.x * o.x - self.y * o.y - self.z * o.z,
+            self.w * o.x + self.x * o.w + self.y * o.z - self.z * o.y,
+            self.w * o.y - self.x * o.z + self.y * o.w + self.z * o.x,
+            self.w * o.z + self.x * o.y - self.y * o.x + self.z * o.w,
+        )
+    }
+
+    pub fn conjugate(&self) -> Quat {
+        Quat::new(self.w, -self.x, -self.y, -self.z)
+    }
+
+    /// Rotate a 3-vector.
+    pub fn rotate(&self, v: [f64; 3]) -> [f64; 3] {
+        let qv = Quat::new(0.0, v[0], v[1], v[2]);
+        let r = self.mul(&qv).mul(&self.conjugate());
+        [r.x, r.y, r.z]
+    }
+
+    /// Angular distance to another rotation in degrees — the ORIE metric
+    /// definition of Table I: 2·acos(|q1·q2|), double-cover safe.
+    pub fn angle_to_deg(&self, o: &Quat) -> f64 {
+        let d = self.normalized().dot(&o.normalized()).abs().clamp(0.0, 1.0);
+        (2.0 * d.acos()).to_degrees()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Config};
+    use crate::util::prng::Prng;
+
+    fn random_quat(r: &mut Prng) -> Quat {
+        Quat::new(r.normal(), r.normal(), r.normal(), r.normal()).normalized()
+    }
+
+    #[test]
+    fn identity_rotates_nothing() {
+        let v = [1.0, -2.0, 3.0];
+        let r = Quat::IDENTITY.rotate(v);
+        for i in 0..3 {
+            assert!((r[i] - v[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ninety_about_z() {
+        let q = Quat::from_axis_angle([0.0, 0.0, 1.0], std::f64::consts::FRAC_PI_2);
+        let r = q.rotate([1.0, 0.0, 0.0]);
+        assert!((r[0]).abs() < 1e-12 && (r[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn angle_to_deg_known() {
+        let q = Quat::from_axis_angle([0.0, 0.0, 1.0], std::f64::consts::FRAC_PI_2);
+        assert!((q.angle_to_deg(&Quat::IDENTITY) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn angle_double_cover() {
+        check("angle_double_cover", Config::default(), |ctx| {
+            let q = random_quat(&mut ctx.rng);
+            let neg = Quat::new(-q.w, -q.x, -q.y, -q.z);
+            crate::prop_assert!(
+                q.angle_to_deg(&neg) < 1e-6,
+                "angle(q, -q) = {} != 0",
+                q.angle_to_deg(&neg)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotation_preserves_length() {
+        check("rotation_isometry", Config::default(), |ctx| {
+            let q = random_quat(&mut ctx.rng);
+            let v = [ctx.rng.normal(), ctx.rng.normal(), ctx.rng.normal()];
+            let r = q.rotate(v);
+            let lv = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            let lr = (r[0] * r[0] + r[1] * r[1] + r[2] * r[2]).sqrt();
+            crate::prop_assert!((lv - lr).abs() < 1e-9, "length {lv} -> {lr}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mul_associative() {
+        check("quat_mul_associative", Config::default(), |ctx| {
+            let (a, b, c) = (
+                random_quat(&mut ctx.rng),
+                random_quat(&mut ctx.rng),
+                random_quat(&mut ctx.rng),
+            );
+            let ab_c = a.mul(&b).mul(&c);
+            let a_bc = a.mul(&b.mul(&c));
+            crate::prop_assert!(
+                ab_c.dot(&a_bc) > 1.0 - 1e-9,
+                "associativity violated: dot {}",
+                ab_c.dot(&a_bc)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn canonical_nonneg_w() {
+        check("canonical_w", Config::default(), |ctx| {
+            let q = random_quat(&mut ctx.rng).canonical();
+            crate::prop_assert!(q.w >= 0.0, "canonical left w={}", q.w);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn angle_triangle_inequality() {
+        check("angle_triangle", Config::default(), |ctx| {
+            let (a, b, c) = (
+                random_quat(&mut ctx.rng),
+                random_quat(&mut ctx.rng),
+                random_quat(&mut ctx.rng),
+            );
+            let (ab, bc, ac) = (a.angle_to_deg(&b), b.angle_to_deg(&c), a.angle_to_deg(&c));
+            crate::prop_assert!(
+                ac <= ab + bc + 1e-6,
+                "triangle violated: {ac} > {ab} + {bc}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! Artifact manifest: the contract between `make artifacts` (python) and
+//! the Rust coordinator.  Parses `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// I/O slot of an artifact (name + shape + dtype).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One deployable HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub sha256: String,
+}
+
+/// Accuracy the python side measured for a variant (cross-check target).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpectedMetrics {
+    pub loce_m: f64,
+    pub orie_deg: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    /// Network input (H, W, C).
+    pub net_input: (usize, usize, usize),
+    /// Stored camera frames (H, W, C).
+    pub camera: (usize, usize, usize),
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub eval_file: PathBuf,
+    pub eval_count: usize,
+    pub expected: BTreeMap<String, ExpectedMetrics>,
+    pub backbone_layers: Vec<String>,
+    pub head_layers: Vec<String>,
+    pub param_count: usize,
+}
+
+fn io_specs(v: &Json) -> Result<Vec<IoSpec>> {
+    let arr = v.as_arr().context("io spec must be an array")?;
+    arr.iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e
+                    .req("name")?
+                    .as_str()
+                    .context("io name must be a string")?
+                    .to_string(),
+                shape: e
+                    .req("shape")?
+                    .as_usize_vec()
+                    .context("io shape must be usize array")?,
+                dtype: e
+                    .req("dtype")?
+                    .as_str()
+                    .context("io dtype must be a string")?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn triple(v: &Json) -> Result<(usize, usize, usize)> {
+    let d = v.as_usize_vec().context("expected [h, w, c]")?;
+    if d.len() != 3 {
+        bail!("expected 3 dims, got {d:?}");
+    }
+    Ok((d[0], d[1], d[2]))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        if v.req("version")?.as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let batch = v.req("batch")?.as_usize().context("batch")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_obj().context("artifacts")? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.req("file")?.as_str().context("file")?),
+                    inputs: io_specs(a.req("inputs")?)?,
+                    outputs: io_specs(a.req("outputs")?)?,
+                    sha256: a.req("sha256")?.as_str().context("sha256")?.to_string(),
+                },
+            );
+        }
+
+        let mut expected = BTreeMap::new();
+        for (name, m) in v.req("expected_metrics")?.as_obj().context("expected")? {
+            expected.insert(
+                name.clone(),
+                ExpectedMetrics {
+                    loce_m: m.req("loce_m")?.as_f64().context("loce_m")?,
+                    orie_deg: m.req("orie_deg")?.as_f64().context("orie_deg")?,
+                },
+            );
+        }
+
+        let layers = v.req("layers")?;
+        let strings = |key: &str| -> Result<Vec<String>> {
+            Ok(layers
+                .req(key)?
+                .as_arr()
+                .context("layer list")?
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect())
+        };
+
+        let eval = v.req("eval")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch,
+            net_input: triple(v.req("net_input")?)?,
+            camera: triple(v.req("camera")?)?,
+            artifacts,
+            eval_file: dir.join(eval.req("file")?.as_str().context("eval file")?),
+            eval_count: eval.req("count")?.as_usize().context("eval count")?,
+            expected,
+            backbone_layers: strings("backbone")?,
+            head_layers: strings("head")?,
+            param_count: v.req("param_count")?.as_usize().context("param_count")?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "batch": 4,
+      "net_input": [96, 128, 3], "camera": [240, 320, 3],
+      "artifacts": {
+        "ursonet_fp32": {
+          "file": "ursonet_fp32.hlo.txt", "sha256": "abc",
+          "inputs":  [{"name": "image", "shape": [4, 96, 128, 3], "dtype": "f32"}],
+          "outputs": [{"name": "loc", "shape": [4, 3], "dtype": "f32"},
+                      {"name": "quat", "shape": [4, 4], "dtype": "f32"}]
+        }
+      },
+      "eval": {"file": "eval_set.mpt", "count": 64},
+      "expected_metrics": {"fp32": {"loce_m": 0.5, "orie_deg": 6.5}},
+      "layers": {"backbone": ["stem"], "head": ["fc_loc"]},
+      "param_count": 123456
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI, Path::new("/tmp/art")).unwrap();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.net_input, (96, 128, 3));
+        let a = m.artifact("ursonet_fp32").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4, 96, 128, 3]);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(m.expected["fp32"].loce_m, 0.5);
+        assert_eq!(m.backbone_layers, vec!["stem"]);
+        assert_eq!(m.param_count, 123456);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(MINI, Path::new("/tmp/art")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = MINI.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT executor: loads HLO-text artifacts and runs them on the CPU client.
+//!
+//! This is the only place at runtime where numerics happen.  The pattern
+//! (HLO text -> HloModuleProto -> XlaComputation -> compile -> execute)
+//! follows /opt/xla-example/load_hlo; text is the interchange format because
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifacts::ArtifactSpec;
+use crate::runtime::tensor::Tensor;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time: Duration,
+}
+
+impl Executable {
+    /// Execute with positional f32 inputs; returns the tuple outputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "artifact {} input {} shape {:?} != expected {:?}",
+                    self.spec.name,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // AOT lowers with return_tuple=True: decompose.
+        let parts = result.decompose_tuple().context("decomposing tuple")?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec.shape.clone()))
+            .collect()
+    }
+
+    /// Timed run (host wall-clock; the *modeled* device time comes from
+    /// `accel::*`, see coordinator::telemetry).
+    pub fn run_timed(&self, inputs: &[Tensor]) -> Result<(Vec<Tensor>, Duration)> {
+        let t0 = Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed()))
+    }
+}
+
+/// PJRT engine: one CPU client + a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: BTreeMap<String, Executable>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            cache: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (no-op if already cached); returns compile time.
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<Duration> {
+        if let Some(e) = self.cache.get(&spec.name) {
+            return Ok(e.compile_time);
+        }
+        let t0 = Instant::now();
+        let path: &Path = &spec.file;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        let compile_time = t0.elapsed();
+        self.cache.insert(
+            spec.name.clone(),
+            Executable {
+                spec: spec.clone(),
+                exe,
+                compile_time,
+            },
+        );
+        Ok(compile_time)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.cache
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not loaded"))
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(String::as_str).collect()
+    }
+}
+
+// NOTE: integration tests live in rust/tests/runtime_integration.rs (they
+// need built artifacts); unit-level behaviour (shape validation, manifest
+// plumbing) is covered there against a generated micro-HLO.

@@ -1,0 +1,9 @@
+//! PJRT runtime: artifact manifest, tensor bridge, executor (DESIGN.md §4.4).
+
+pub mod artifacts;
+pub mod executor;
+pub mod tensor;
+
+pub use artifacts::{ArtifactSpec, ExpectedMetrics, IoSpec, Manifest};
+pub use executor::{Engine, Executable};
+pub use tensor::Tensor;

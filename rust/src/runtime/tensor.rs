@@ -1,0 +1,116 @@
+//! Host tensor type bridging frames, features, and `xla::Literal`s.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense f32 tensor in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {shape:?} needs {numel} elements, got {}", data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; numel],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an `xla::Literal` of matching shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .context("reshaping literal")?;
+        Ok(lit)
+    }
+
+    /// Convert back from a literal (f32 only).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
+        Tensor::new(shape, data)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[self.shape.len() - 1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Stack sample tensors (equal shapes) along a new leading batch axis.
+    pub fn stack(samples: &[Tensor]) -> Result<Tensor> {
+        let first = samples.first().context("empty stack")?;
+        let mut shape = vec![samples.len()];
+        shape.extend_from_slice(&first.shape);
+        let mut data = Vec::with_capacity(first.numel() * samples.len());
+        for s in samples {
+            if s.shape != first.shape {
+                bail!("stack shape mismatch: {:?} vs {:?}", s.shape, first.shape);
+            }
+            data.extend_from_slice(&s.data);
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Split a batched tensor into per-sample tensors along axis 0.
+    pub fn unstack(&self) -> Vec<Tensor> {
+        let n = self.shape[0];
+        let rest: Vec<usize> = self.shape[1..].to_vec();
+        let per: usize = rest.iter().product();
+        (0..n)
+            .map(|i| Tensor {
+                shape: rest.clone(),
+                data: self.data[i * per..(i + 1) * per].to_vec(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_numel() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        let back = s.unstack();
+        assert_eq!(back[0], a);
+        assert_eq!(back[1], b);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched() {
+        let a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(Tensor::stack(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Synthetic camera: streams eval-set frames at a configurable rate.
+//!
+//! Substitutes the paper's 1280x960 camera (Fig. 1 "camera input"): frames
+//! come from the deterministic eval set rendered at build time; timestamps
+//! come from a simulated clock so experiments are reproducible and faster
+//! than real time when desired.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::pose::{EvalSet, Pose};
+
+/// One captured frame handed to the coordinator.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: u64,
+    /// Capture timestamp on the simulated clock.
+    pub t_capture: Duration,
+    /// Raw (h, w, 3) u8 pixels.
+    pub pixels: Vec<u8>,
+    pub h: usize,
+    pub w: usize,
+    /// Ground truth (available because the camera is synthetic; used for
+    /// accuracy accounting only, never fed to the network).
+    pub truth: Pose,
+}
+
+/// Frame source over the eval set.
+pub struct Camera {
+    eval: Arc<EvalSet>,
+    period: Duration,
+    next: u64,
+    /// Total frames to emit (wraps over the eval set if larger).
+    count: u64,
+}
+
+impl Camera {
+    /// `fps` simulated frame rate; `count` total frames to produce.
+    pub fn new(eval: Arc<EvalSet>, fps: f64, count: u64) -> Camera {
+        assert!(fps > 0.0, "fps must be positive");
+        Camera {
+            eval,
+            period: Duration::from_secs_f64(1.0 / fps),
+            next: 0,
+            count,
+        }
+    }
+
+    pub fn frame_period(&self) -> Duration {
+        self.period
+    }
+}
+
+impl Iterator for Camera {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        if self.next >= self.count {
+            return None;
+        }
+        let idx = (self.next as usize) % self.eval.len();
+        let f = Frame {
+            id: self.next,
+            t_capture: self.period * self.next as u32,
+            pixels: self.eval.frame(idx).to_vec(),
+            h: self.eval.frame_h,
+            w: self.eval.frame_w,
+            truth: self.eval.poses[idx],
+        };
+        self.next += 1;
+        Some(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mpt::{write_mpt, Tensor as MptTensor};
+    use std::path::Path;
+
+    fn tiny_eval(dir: &Path) -> Arc<EvalSet> {
+        let path = dir.join("cam_eval.mpt");
+        let n = 3;
+        let (h, w) = (4, 6);
+        write_mpt(
+            &path,
+            &[
+                (
+                    "frames".into(),
+                    vec![n, h, w, 3],
+                    MptTensor::U8((0..n * h * w * 3).map(|i| (i % 251) as u8).collect()),
+                ),
+                (
+                    "loc".into(),
+                    vec![n, 3],
+                    MptTensor::F32(vec![0.0; n * 3]),
+                ),
+                (
+                    "quat".into(),
+                    vec![n, 4],
+                    MptTensor::F32((0..n).flat_map(|_| [1.0, 0.0, 0.0, 0.0]).collect()),
+                ),
+                ("golden_pre0".into(), vec![2, 3, 3], MptTensor::F32(vec![0.0; 18])),
+            ],
+        )
+        .unwrap();
+        let es = EvalSet::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        Arc::new(es)
+    }
+
+    #[test]
+    fn emits_exactly_count_frames() {
+        let cam = Camera::new(tiny_eval(&std::env::temp_dir()), 30.0, 7);
+        let frames: Vec<Frame> = cam.collect();
+        assert_eq!(frames.len(), 7);
+        // Wraps over the 3-frame eval set.
+        assert_eq!(frames[0].pixels, frames[3].pixels);
+        assert_ne!(frames[0].pixels, frames[1].pixels);
+    }
+
+    #[test]
+    fn timestamps_follow_rate() {
+        let cam = Camera::new(tiny_eval(&std::env::temp_dir()), 10.0, 3);
+        let frames: Vec<Frame> = cam.collect();
+        assert_eq!(frames[1].t_capture, Duration::from_millis(100));
+        assert_eq!(frames[2].t_capture, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn ids_monotonic() {
+        let cam = Camera::new(tiny_eval(&std::env::temp_dir()), 60.0, 5);
+        let ids: Vec<u64> = cam.map(|f| f.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Sensor pipeline: synthetic camera + preprocessing (DESIGN.md §4.6).
+
+pub mod camera;
+pub mod preprocess;
+
+pub use camera::{Camera, Frame};
+pub use preprocess::preprocess;

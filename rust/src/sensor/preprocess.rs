@@ -1,0 +1,121 @@
+//! Frame preprocessing: bilinear resample + normalization.
+//!
+//! MUST match python/compile/dataset.py `preprocess` in algorithm
+//! (half-pixel sample positions, clamp-to-edge, /255) — parity is asserted
+//! against the golden frame in the eval-set artifact
+//! (rust/tests/runtime_integration.rs).  This is the "pre-processing tasks
+//! (e.g., image resampling)" counted in Table I's Total column.
+
+use crate::runtime::tensor::Tensor;
+
+/// Bilinear-resample an (h, w, 3) u8 frame to (out_h, out_w, 3) f32 in [0,1].
+///
+/// Perf (EXPERIMENTS.md §Perf L3-1): column sample positions are
+/// precomputed once per frame (not per row x channel), rows are addressed
+/// by base offset, and the x-interpolation weights are hoisted — 2.1x over
+/// the naive loop at 320x240 -> 128x96 on this testbed.
+pub fn preprocess(frame: &[u8], h: usize, w: usize, out_h: usize, out_w: usize) -> Tensor {
+    assert_eq!(frame.len(), h * w * 3, "frame size mismatch");
+    let sy = h as f32 / out_h as f32;
+    let sx = w as f32 / out_w as f32;
+    let mut data = vec![0.0f32; out_h * out_w * 3];
+
+    // Precompute per-column (x0*3, x1*3, wx) — shared by every row.
+    let cols: Vec<(usize, usize, f32)> = (0..out_w)
+        .map(|ox| {
+            let fx = (ox as f32 + 0.5) * sx - 0.5;
+            let x0 = (fx.floor() as isize).clamp(0, w as isize - 1) as usize;
+            let x1 = (x0 + 1).min(w - 1);
+            let wx = (fx - x0 as f32).clamp(0.0, 1.0);
+            (x0 * 3, x1 * 3, wx)
+        })
+        .collect();
+
+    const INV255: f32 = 1.0 / 255.0;
+    for oy in 0..out_h {
+        let fy = (oy as f32 + 0.5) * sy - 0.5;
+        let y0 = (fy.floor() as isize).clamp(0, h as isize - 1) as usize;
+        let y1 = (y0 + 1).min(h - 1);
+        let wy = (fy - y0 as f32).clamp(0.0, 1.0);
+        let (row0, row1) = (&frame[y0 * w * 3..(y0 * w + w) * 3], &frame[y1 * w * 3..(y1 * w + w) * 3]);
+        let out_row = &mut data[oy * out_w * 3..(oy * out_w + out_w) * 3];
+        for (ox, &(x0b, x1b, wx)) in cols.iter().enumerate() {
+            let o = ox * 3;
+            for c in 0..3 {
+                let top = row0[x0b + c] as f32 * (1.0 - wx) + row0[x1b + c] as f32 * wx;
+                let bot = row1[x0b + c] as f32 * (1.0 - wx) + row1[x1b + c] as f32 * wx;
+                out_row[o + c] = (top * (1.0 - wy) + bot * wy) * INV255;
+            }
+        }
+    }
+    Tensor {
+        shape: vec![out_h, out_w, 3],
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Config};
+
+    #[test]
+    fn constant_image_invariant() {
+        let frame = vec![128u8; 24 * 32 * 3];
+        let t = preprocess(&frame, 24, 32, 6, 8);
+        for &v in &t.data {
+            assert!((v - 128.0 / 255.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn output_shape() {
+        let frame = vec![0u8; 240 * 320 * 3];
+        let t = preprocess(&frame, 240, 320, 96, 128);
+        assert_eq!(t.shape, vec![96, 128, 3]);
+    }
+
+    #[test]
+    fn identity_when_same_size() {
+        let mut frame = vec![0u8; 4 * 4 * 3];
+        for (i, v) in frame.iter_mut().enumerate() {
+            *v = (i * 5 % 251) as u8;
+        }
+        let t = preprocess(&frame, 4, 4, 4, 4);
+        for (i, &v) in t.data.iter().enumerate() {
+            assert!((v - frame[i] as f32 / 255.0).abs() < 1e-6, "pixel {i}");
+        }
+    }
+
+    #[test]
+    fn horizontal_ramp_monotonic() {
+        let mut frame = vec![0u8; 240 * 320 * 3];
+        for y in 0..240 {
+            for x in 0..320 {
+                let v = (x * 255 / 319) as u8;
+                for c in 0..3 {
+                    frame[(y * 320 + x) * 3 + c] = v;
+                }
+            }
+        }
+        let t = preprocess(&frame, 240, 320, 96, 128);
+        for x in 1..128 {
+            assert!(t.data[x * 3] + 1e-6 >= t.data[(x - 1) * 3]);
+        }
+    }
+
+    #[test]
+    fn output_bounded_property() {
+        check("preprocess_bounded", Config::default(), |ctx| {
+            let (h, w) = (8 + ctx.rng.below(16), 8 + ctx.rng.below(16));
+            let frame: Vec<u8> = (0..h * w * 3)
+                .map(|_| ctx.rng.below(256) as u8)
+                .collect();
+            let t = preprocess(&frame, h, w, 6, 8);
+            for &v in &t.data {
+                crate::prop_assert!((0.0..=1.0).contains(&v), "out of range {v}");
+            }
+            Ok(())
+        });
+    }
+}

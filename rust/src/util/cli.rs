@@ -1,0 +1,210 @@
+//! Tiny CLI argument parser (clap substitute for the offline build).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.  Only what the `mpai`
+//! binary and examples need — deliberately no derive magic.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options, flags, and positionals after the subcommand.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({hint})")]
+    BadValue {
+        key: String,
+        value: String,
+        hint: String,
+    },
+}
+
+/// Declarative spec used for parsing + usage text.
+pub struct Spec {
+    pub name: &'static str,
+    pub about: &'static str,
+    /// (key, value placeholder or "" for flags, help)
+    pub options: Vec<(&'static str, &'static str, &'static str)>,
+}
+
+impl Spec {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for (k, v, help) in &self.options {
+            let left = if v.is_empty() {
+                format!("--{k}")
+            } else {
+                format!("--{k} <{v}>")
+            };
+            s.push_str(&format!("  {left:<28} {help}\n"));
+        }
+        s
+    }
+
+    /// Parse argv (without the program name / subcommand prefix).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let known_flags: Vec<&str> = self
+            .options
+            .iter()
+            .filter(|(_, v, _)| v.is_empty())
+            .map(|(k, _, _)| *k)
+            .collect();
+        let known_opts: Vec<&str> = self
+            .options
+            .iter()
+            .filter(|(_, v, _)| !v.is_empty())
+            .map(|(k, _, _)| *k)
+            .collect();
+
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if known_flags.contains(&key.as_str()) {
+                    out.flags.push(key);
+                } else if known_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    return Err(CliError::UnknownOption(key));
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                hint: "expected unsigned integer".into(),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                value: v.into(),
+                hint: "expected number".into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            name: "test",
+            about: "test tool",
+            options: vec![
+                ("count", "N", "how many"),
+                ("rate", "HZ", "frame rate"),
+                ("verbose", "", "chatty"),
+                ("out", "PATH", "output"),
+            ],
+        }
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = spec().parse(&sv(&["--count", "5", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.get("count"), Some("5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = spec().parse(&sv(&["--rate=30.5"])).unwrap();
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 30.5);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            spec().parse(&sv(&["--bogus"])),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(matches!(
+            spec().parse(&sv(&["--count"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize("count", 7).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_numeric_value_errors() {
+        let a = spec().parse(&sv(&["--count", "x"])).unwrap();
+        assert!(a.get_usize("count", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all_options() {
+        let u = spec().usage();
+        for k in ["count", "rate", "verbose", "out"] {
+            assert!(u.contains(k));
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Infrastructure substrates built in-repo (the offline environment carries
+//! no serde/clap/criterion/proptest — DESIGN.md §4.11).
+
+pub mod cli;
+pub mod json;
+pub mod mpt;
+pub mod prng;
+pub mod stats;
+
+/// Format a byte count human-readably (telemetry, artifact inspection).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds as an adaptive duration string (ns/µs/ms/s).
+pub fn human_seconds(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn human_seconds_units() {
+        assert_eq!(human_seconds(2e-9), "2.0 ns");
+        assert_eq!(human_seconds(5e-6), "5.00 µs");
+        assert_eq!(human_seconds(0.0042), "4.20 ms");
+        assert_eq!(human_seconds(2.5), "2.500 s");
+    }
+}

@@ -1,0 +1,317 @@
+//! MPT tensor-container reader (rust half of python/compile/mpt.py).
+//!
+//! Format (pinned by python/tests/test_mpt.py and the tests below):
+//!
+//! ```text
+//! magic   4 bytes  b"MPT1"
+//! hdr_len u32 LE
+//! header  JSON     {"tensors": [{"name","dtype","shape","offset","nbytes"}]}
+//! data    raw LE tensor bytes; offsets relative to end-of-header, 64-aligned
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Tensor dtype tags shared with the python writer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    U8,
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype, MptError> {
+        match s {
+            "u8" => Ok(Dtype::U8),
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(MptError::Format(format!("unknown dtype {other:?}"))),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::F32 | Dtype::I32 => 4,
+        }
+    }
+}
+
+/// One decoded tensor.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    U8(Vec<u8>),
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::U8(v) => v.len(),
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_u8(&self) -> Option<&[u8]> {
+        match self {
+            Tensor::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A named tensor with shape.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub shape: Vec<usize>,
+    pub data: Tensor,
+}
+
+impl Entry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum MptError {
+    #[error("mpt io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("mpt format error: {0}")]
+    Format(String),
+    #[error("mpt header json error: {0}")]
+    Header(#[from] json::JsonError),
+}
+
+/// Read a full MPT file into a name->Entry map (order-preserving keys are
+/// not needed by consumers; lookups are by name).
+pub fn read_mpt(path: &Path) -> Result<BTreeMap<String, Entry>, MptError> {
+    let bytes = fs::read(path)?;
+    read_mpt_bytes(&bytes)
+}
+
+pub fn read_mpt_bytes(bytes: &[u8]) -> Result<BTreeMap<String, Entry>, MptError> {
+    if bytes.len() < 8 || &bytes[..4] != b"MPT1" {
+        return Err(MptError::Format("bad magic (want MPT1)".into()));
+    }
+    let hdr_len = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    let hdr_end = 8 + hdr_len;
+    if bytes.len() < hdr_end {
+        return Err(MptError::Format("truncated header".into()));
+    }
+    let header = std::str::from_utf8(&bytes[8..hdr_end])
+        .map_err(|e| MptError::Format(format!("header not utf-8: {e}")))?;
+    let parsed = json::parse(header)?;
+    let tensors = parsed
+        .req("tensors")?
+        .as_arr()
+        .ok_or_else(|| MptError::Format("tensors must be an array".into()))?;
+
+    let mut out = BTreeMap::new();
+    for t in tensors {
+        let name = t
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| MptError::Format("name must be a string".into()))?
+            .to_string();
+        let dtype = Dtype::parse(
+            t.req("dtype")?
+                .as_str()
+                .ok_or_else(|| MptError::Format("dtype must be a string".into()))?,
+        )?;
+        let shape = t
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| MptError::Format("shape must be a usize array".into()))?;
+        let offset = t
+            .req("offset")?
+            .as_usize()
+            .ok_or_else(|| MptError::Format("offset must be a usize".into()))?;
+        let nbytes = t
+            .req("nbytes")?
+            .as_usize()
+            .ok_or_else(|| MptError::Format("nbytes must be a usize".into()))?;
+
+        let numel: usize = shape.iter().product();
+        if numel * dtype.size() != nbytes {
+            return Err(MptError::Format(format!(
+                "tensor {name}: shape {shape:?} x {} != nbytes {nbytes}",
+                dtype.size()
+            )));
+        }
+        let start = hdr_end + offset;
+        let end = start + nbytes;
+        if bytes.len() < end {
+            return Err(MptError::Format(format!("tensor {name}: data out of range")));
+        }
+        let raw = &bytes[start..end];
+        let data = match dtype {
+            Dtype::U8 => Tensor::U8(raw.to_vec()),
+            Dtype::F32 => Tensor::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            Dtype::I32 => Tensor::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        };
+        out.insert(name, Entry { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write an MPT file (rust writer — used by telemetry export and tests).
+pub fn write_mpt(path: &Path, tensors: &[(String, Vec<usize>, Tensor)]) -> Result<(), MptError> {
+    const ALIGN: usize = 64;
+    let mut entries = Vec::new();
+    let mut blobs: Vec<(usize, Vec<u8>)> = Vec::new();
+    let mut offset = 0usize;
+    for (name, shape, data) in tensors {
+        let (dtype, raw): (&str, Vec<u8>) = match data {
+            Tensor::U8(v) => ("u8", v.clone()),
+            Tensor::F32(v) => ("f32", v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            Tensor::I32(v) => ("i32", v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+        };
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(MptError::Format(format!(
+                "tensor {name}: shape {shape:?} != len {}",
+                data.len()
+            )));
+        }
+        let pad = (ALIGN - offset % ALIGN) % ALIGN;
+        offset += pad;
+        let mut e = Json::obj();
+        e.set("name", Json::from(name.as_str()));
+        e.set("dtype", Json::from(dtype));
+        e.set("shape", Json::Arr(shape.iter().map(|&d| Json::from(d)).collect()));
+        e.set("offset", Json::from(offset));
+        e.set("nbytes", Json::from(raw.len()));
+        entries.push(e);
+        offset += raw.len();
+        blobs.push((pad, raw));
+    }
+    let mut header = Json::obj();
+    header.set("tensors", Json::Arr(entries));
+    let header_bytes = header.to_string().into_bytes();
+
+    let mut out = Vec::with_capacity(8 + header_bytes.len() + offset);
+    out.extend_from_slice(b"MPT1");
+    out.extend_from_slice(&(header_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&header_bytes);
+    for (pad, raw) in blobs {
+        out.extend(std::iter::repeat(0u8).take(pad));
+        out.extend_from_slice(&raw);
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(tensors: Vec<(String, Vec<usize>, Tensor)>) -> BTreeMap<String, Entry> {
+        let dir = std::env::temp_dir().join(format!("mpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.mpt", tensors.len()));
+        write_mpt(&path, &tensors).unwrap();
+        let back = read_mpt(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        back
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let back = roundtrip(vec![
+            ("a".into(), vec![2, 3], Tensor::U8(vec![1, 2, 3, 4, 5, 6])),
+            ("b".into(), vec![4], Tensor::F32(vec![1.5, -2.5, 0.0, 3.25])),
+            ("c".into(), vec![2, 1], Tensor::I32(vec![-7, 9])),
+        ]);
+        assert_eq!(back["a"].shape, vec![2, 3]);
+        assert_eq!(back["a"].data.as_u8().unwrap(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(back["b"].data.as_f32().unwrap(), &[1.5, -2.5, 0.0, 3.25]);
+        assert_eq!(back["c"].data.as_i32().unwrap(), &[-7, 9]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_mpt_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("trunc.mpt");
+        write_mpt(
+            &path,
+            &[("x".into(), vec![4], Tensor::F32(vec![1.0, 2.0, 3.0, 4.0]))],
+        )
+        .unwrap();
+        let bytes = fs::read(&path).unwrap();
+        let cut = &bytes[..bytes.len() - 4];
+        assert!(read_mpt_bytes(cut).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_shape_nbytes_mismatch() {
+        // Hand-craft a header with inconsistent nbytes.
+        let hdr = r#"{"tensors":[{"name":"x","dtype":"f32","shape":[2],"offset":0,"nbytes":4}]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MPT1");
+        bytes.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(hdr.as_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert!(read_mpt_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn offsets_aligned() {
+        // 5-byte tensor followed by another: second offset must be 64.
+        let back = roundtrip(vec![
+            ("a".into(), vec![5], Tensor::U8(vec![0; 5])),
+            ("b".into(), vec![2], Tensor::F32(vec![1.0, 2.0])),
+        ]);
+        assert_eq!(back["b"].data.as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn f32_le_byte_order_pinned() {
+        // 1.0f32 LE = 00 00 80 3F — byte-level pin mirrored in test_mpt.py.
+        let dir = std::env::temp_dir();
+        let path = dir.join("pin.mpt");
+        write_mpt(&path, &[("x".into(), vec![1], Tensor::F32(vec![1.0]))]).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        let tail = &bytes[bytes.len() - 4..];
+        assert_eq!(tail, &[0x00, 0x00, 0x80, 0x3F]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,171 @@
+//! Runtime integration tests: manifest + eval set + PJRT execution of the
+//! real AOT artifacts.  Skipped (cleanly) when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use mpai::pose::EvalSet;
+use mpai::runtime::{Engine, Manifest, Tensor};
+use mpai::sensor::preprocess;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_complete() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.batch, 4);
+    assert_eq!(m.net_input, (96, 128, 3));
+    for name in [
+        "ursonet_fp32",
+        "ursonet_fp16",
+        "ursonet_dpu_int8",
+        "ursonet_tpu_int8",
+        "ursonet_mpai_backbone",
+        "ursonet_mpai_head",
+    ] {
+        let a = m.artifact(name).unwrap();
+        assert!(a.file.exists(), "{name} file missing");
+    }
+    assert!(!m.backbone_layers.is_empty());
+    assert_eq!(m.head_layers, vec!["fc_bneck", "fc_loc", "fc_ori"]);
+}
+
+#[test]
+fn eval_set_loads_and_matches_manifest() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let es = EvalSet::load(&m.eval_file).unwrap();
+    assert_eq!(es.len(), m.eval_count);
+    assert_eq!((es.frame_h, es.frame_w), (m.camera.0, m.camera.1));
+    for p in &es.poses {
+        let n: f32 = p.quat.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-3, "quat not normalized");
+        assert!(p.quat[0] >= 0.0, "quat not canonical");
+    }
+}
+
+#[test]
+fn preprocess_matches_python_golden() {
+    // The cross-language parity pin: rust preprocess(frame 0) must equal
+    // the golden tensor python wrote at build time.
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let es = EvalSet::load(&m.eval_file).unwrap();
+    let (net_h, net_w, _) = m.net_input;
+    let got = preprocess(es.frame(0), es.frame_h, es.frame_w, net_h, net_w);
+    assert_eq!(got.shape, es.golden_shape);
+    let mut max_err = 0.0f32;
+    for (a, b) in got.data.iter().zip(&es.golden_pre0) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-5, "preprocess parity max err {max_err}");
+}
+
+#[test]
+fn fp32_artifact_executes_with_correct_shapes() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let spec = m.artifact("ursonet_fp32").unwrap();
+    engine.load(spec).unwrap();
+    let exe = engine.get("ursonet_fp32").unwrap();
+
+    let input = Tensor::zeros(vec![4, 96, 128, 3]);
+    let out = exe.run(&[input]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].shape, vec![4, 3]);
+    assert_eq!(out[1].shape, vec![4, 4]);
+    // Quaternion rows are normalized by the graph.
+    for i in 0..4 {
+        let q = out[1].row(i);
+        let n: f32 = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-3, "row {i} norm {n}");
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_shape() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let spec = m.artifact("ursonet_fp32").unwrap();
+    engine.load(spec).unwrap();
+    let exe = engine.get("ursonet_fp32").unwrap();
+    let bad = Tensor::zeros(vec![4, 96, 128, 1]);
+    assert!(exe.run(&[bad]).is_err());
+    assert!(exe.run(&[]).is_err());
+}
+
+#[test]
+fn mpai_split_composes_to_pose() {
+    // backbone ∘ head must produce the same shaped outputs as the fused
+    // variants, on real eval pixels.
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let es = Arc::new(EvalSet::load(&m.eval_file).unwrap());
+    let (net_h, net_w, _) = m.net_input;
+
+    let mut engine = Engine::cpu().unwrap();
+    engine.load(m.artifact("ursonet_mpai_backbone").unwrap()).unwrap();
+    engine.load(m.artifact("ursonet_mpai_head").unwrap()).unwrap();
+
+    let frames: Vec<Tensor> = (0..4)
+        .map(|i| preprocess(es.frame(i), es.frame_h, es.frame_w, net_h, net_w))
+        .collect();
+    let images = Tensor::stack(&frames).unwrap();
+
+    let feats = engine
+        .get("ursonet_mpai_backbone")
+        .unwrap()
+        .run(&[images])
+        .unwrap();
+    assert_eq!(feats.len(), 1);
+    let out = engine
+        .get("ursonet_mpai_head")
+        .unwrap()
+        .run(&[feats[0].clone()])
+        .unwrap();
+    assert_eq!(out[0].shape, vec![4, 3]);
+    assert_eq!(out[1].shape, vec![4, 4]);
+    // Locations should be in the sampled regime, not garbage.
+    for i in 0..4 {
+        let z = out[0].row(i)[2];
+        assert!((0.0..20.0).contains(&z), "z estimate {z} out of regime");
+    }
+}
+
+#[test]
+fn corrupted_artifact_fails_loudly() {
+    // Failure injection: a truncated HLO file must produce an error, not UB.
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    let src = &m.artifact("ursonet_mpai_head").unwrap().file;
+    let text = std::fs::read_to_string(src).unwrap();
+    let tmp = std::env::temp_dir().join("corrupt.hlo.txt");
+    std::fs::write(&tmp, &text[..text.len() / 3]).unwrap();
+
+    let mut spec = m.artifact("ursonet_mpai_head").unwrap().clone();
+    spec.file = tmp.clone();
+    spec.name = "corrupt".into();
+    let mut engine = Engine::cpu().unwrap();
+    assert!(engine.load(&spec).is_err());
+    std::fs::remove_file(&tmp).ok();
+}
