@@ -43,6 +43,7 @@ fn main() -> Result<()> {
             camera_fps: 1000.0, // drive as fast as the host allows
             frames: eval.len() as u64,
             pipelined: false,
+            ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode)?;
         let t0 = Instant::now();

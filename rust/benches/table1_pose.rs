@@ -53,6 +53,7 @@ fn main() {
             camera_fps: 1000.0,
             frames: eval.len() as u64,
             pipelined: false,
+            ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode).expect("backend");
         let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)

@@ -58,6 +58,14 @@ impl Batcher {
         None
     }
 
+    /// Simulated time at which the pending batch times out (oldest frame's
+    /// capture + timeout); `None` when nothing is pending.  The serve loop
+    /// polls at this instant so a timed-out partial batch dispatches at its
+    /// deadline instead of waiting for the next frame to arrive.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.pending.first().map(|f| f.t_capture + self.timeout)
+    }
+
     /// Check the timeout against the current simulated time.
     pub fn poll(&mut self, now: Duration) -> Option<Batch> {
         let oldest = self.pending.first()?.t_capture;
@@ -132,6 +140,18 @@ mod tests {
         let batch = b.poll(Duration::from_millis(55)).expect("timeout batch");
         assert_eq!(batch.real_count(), 2);
         assert!(batch.is_padded());
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_pending() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        assert_eq!(b.deadline(), None);
+        b.push(frame(0, 20));
+        b.push(frame(1, 30));
+        assert_eq!(b.deadline(), Some(Duration::from_millis(70)));
+        let batch = b.poll(Duration::from_millis(70)).expect("deadline batch");
+        assert_eq!(batch.real_count(), 2);
+        assert_eq!(b.deadline(), None);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
+use crate::coordinator::policy::Constraints;
+
 /// One deployable configuration = one Table I row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Mode {
@@ -86,6 +88,16 @@ pub struct Config {
     pub frames: u64,
     /// Pipelined two-stage execution for MPAI (overlap backbone/head).
     pub pipelined: bool,
+    /// Backend pool for multi-accelerator dispatch; empty = single-backend
+    /// serve using `mode`.
+    pub pool: Vec<Mode>,
+    /// Use simulated backends (no artifacts / PJRT binding needed).
+    pub sim: bool,
+    /// Inject a fault every Nth infer on the pool's first backend (sim
+    /// backends only — failover demonstration).
+    pub fail_every: Option<usize>,
+    /// Constraints gating which pool backends may serve a batch.
+    pub constraints: Constraints,
 }
 
 impl Default for Config {
@@ -97,6 +109,10 @@ impl Default for Config {
             camera_fps: 10.0,
             frames: 64,
             pipelined: true,
+            pool: Vec::new(),
+            sim: false,
+            fail_every: None,
+            constraints: Constraints::default(),
         }
     }
 }

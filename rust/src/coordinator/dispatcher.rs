@@ -1,0 +1,477 @@
+//! Multi-backend dispatcher — the co-processing heart of the coordinator.
+//!
+//! The paper's architecture exists to exploit *several* accelerators at
+//! once (DPU + VPU + TPU with different speed/accuracy/energy points); this
+//! module turns the serial serve loop into a pool:
+//!
+//! * a [`Dispatcher`] owns one [`Backend`] per engaged mode,
+//! * each ready batch is routed by **least estimated completion time**:
+//!   `max(backend busy-until, batch ready) + modeled service time` from the
+//!   mode's [`ModeProfile`], restricted to profiles admitted by the run's
+//!   [`Constraints`],
+//! * on an `infer` error the batch **fails over** to the next-best feasible
+//!   backend instead of aborting the run (no frame is lost unless every
+//!   feasible backend rejects the batch),
+//! * per-backend utilization, failure counts, and queue depth are recorded
+//!   in [`Telemetry`].
+//!
+//! Time is the coordinator's simulated clock (frame capture timestamps), so
+//! routing decisions are reproducible; host wall-clock is still measured
+//! and reported per frame, exactly as in the single-backend path.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::config::Mode;
+use crate::coordinator::policy::{Constraints, ModeProfile};
+use crate::coordinator::scheduler::{decode_batch, prepare_batch, Backend, PoseEstimate};
+use crate::coordinator::telemetry::{BackendRecord, Telemetry};
+use crate::pose::Pose;
+
+/// One pool member: a backend plus its routing state.
+struct PoolEntry {
+    backend: Box<dyn Backend>,
+    /// Modeled profile used for routing estimates + constraint admission;
+    /// `None` (uncharacterized backend) is always admitted and estimated
+    /// from observed host inference times.  Note the hybrid clock that
+    /// implies: profile-less backends are charged host wall-clock service
+    /// on the simulated timeline.  `busy_until` accumulates every charged
+    /// service, so the run window always covers `busy` and utilization
+    /// stays <= 1 on either basis.
+    profile: Option<ModeProfile>,
+    /// Simulated time at which the backend finishes its current backlog.
+    busy_until: Duration,
+    /// Completion times of in-flight batches (for queue-depth accounting).
+    inflight: VecDeque<Duration>,
+    /// Observed host inference time (fallback service estimator).
+    observed_s: f64,
+    observed_n: usize,
+    // -- accounting ---------------------------------------------------------
+    batches: usize,
+    frames: usize,
+    failures: usize,
+    busy: Duration,
+    max_queue_depth: usize,
+}
+
+impl PoolEntry {
+    /// Expected service time for one padded batch on this backend.
+    fn service_estimate(&self, artifact_batch: usize) -> Duration {
+        match &self.profile {
+            // The modeled profile is per-frame at paper scale; the device
+            // executes the padded artifact batch end-to-end.
+            Some(p) => Duration::from_secs_f64(p.total_ms / 1e3 * artifact_batch as f64),
+            None if self.observed_n > 0 => {
+                Duration::from_secs_f64(self.observed_s / self.observed_n as f64)
+            }
+            None => Duration::ZERO,
+        }
+    }
+
+    fn estimated_completion(&self, t_ready: Duration, artifact_batch: usize) -> Duration {
+        self.busy_until.max(t_ready) + self.service_estimate(artifact_batch)
+    }
+}
+
+/// Policy-routed pool of inference backends.
+pub struct Dispatcher {
+    entries: Vec<PoolEntry>,
+    batch: usize,
+    net_h: usize,
+    net_w: usize,
+    constraints: Constraints,
+    /// Latest batch-ready instant seen (simulated run clock).
+    clock: Duration,
+    pub telemetry: Telemetry,
+}
+
+impl Dispatcher {
+    pub fn new(batch: usize, net_h: usize, net_w: usize, constraints: Constraints) -> Dispatcher {
+        Dispatcher {
+            entries: Vec::new(),
+            batch,
+            net_h,
+            net_w,
+            constraints,
+            clock: Duration::ZERO,
+            telemetry: Telemetry::new(),
+        }
+    }
+
+    /// Add a backend to the pool.  `profile` drives routing and constraint
+    /// admission; pass `None` for backends without a modeled profile (they
+    /// are always admitted and estimated from observed host latency).
+    pub fn add_backend(&mut self, backend: Box<dyn Backend>, profile: Option<ModeProfile>) {
+        self.entries.push(PoolEntry {
+            backend,
+            profile,
+            busy_until: Duration::ZERO,
+            inflight: VecDeque::new(),
+            observed_s: 0.0,
+            observed_n: 0,
+            batches: 0,
+            frames: 0,
+            failures: 0,
+            busy: Duration::ZERO,
+            max_queue_depth: 0,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Mode of the pool's first backend (the run's primary mode).
+    pub fn primary_mode(&self) -> Option<Mode> {
+        self.entries.first().map(|e| e.backend.mode())
+    }
+
+    /// The artifact batch size every backend executes.
+    pub fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Route one batch: preprocess once, then try feasible backends in
+    /// least-estimated-completion order, failing over on infer errors.
+    pub fn process(&mut self, batch: &Batch) -> Result<Vec<PoseEstimate>> {
+        let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
+        let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
+        let t_ready = batch.t_ready;
+        self.clock = self.clock.max(t_ready);
+
+        let mut order: Vec<usize> = (0..self.entries.len())
+            .filter(|&i| match &self.entries[i].profile {
+                Some(p) => self.constraints.admits(p),
+                None => true,
+            })
+            .collect();
+        if order.is_empty() {
+            bail!(
+                "no backend in the pool of {} satisfies the constraints",
+                self.entries.len()
+            );
+        }
+        order.sort_by(|&a, &b| {
+            let ca = self.entries[a].estimated_completion(t_ready, self.batch);
+            let cb = self.entries[b].estimated_completion(t_ready, self.batch);
+            ca.cmp(&cb)
+        });
+
+        let mut last_err = None;
+        for idx in order {
+            let service = self.entries[idx].service_estimate(self.batch);
+            let entry = &mut self.entries[idx];
+            entry.backend.observe_truths(&truths);
+            let t0 = Instant::now();
+            match entry.backend.infer(&prepared.images) {
+                Ok((loc, quat)) => {
+                    let infer_time = t0.elapsed();
+                    entry.observed_s += infer_time.as_secs_f64();
+                    entry.observed_n += 1;
+                    // Uncharacterized backends are charged their measured
+                    // host time; modeled ones their profile service time.
+                    let service = if entry.profile.is_some() {
+                        service
+                    } else {
+                        infer_time
+                    };
+                    while entry.inflight.front().is_some_and(|&c| c <= t_ready) {
+                        entry.inflight.pop_front();
+                    }
+                    entry.max_queue_depth = entry.max_queue_depth.max(entry.inflight.len());
+                    let completion = entry.busy_until.max(t_ready) + service;
+                    entry.inflight.push_back(completion);
+                    entry.busy_until = completion;
+                    entry.busy += service;
+                    entry.batches += 1;
+                    entry.frames += batch.frames.len();
+                    let mode = entry.backend.mode().label();
+                    return decode_batch(
+                        batch,
+                        mode,
+                        &prepared,
+                        &loc,
+                        &quat,
+                        infer_time,
+                        &mut self.telemetry,
+                    );
+                }
+                Err(e) => {
+                    entry.failures += 1;
+                    last_err = Some(e.context(format!(
+                        "backend {} failed (failing over)",
+                        entry.backend.mode().label()
+                    )));
+                }
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("pool dispatch failed"))
+            .context("every feasible backend rejected the batch"))
+    }
+
+    /// Close accounting: compute utilization over the run window and move
+    /// per-backend records into the telemetry.  Call once, after the last
+    /// batch.
+    pub fn finish(&mut self) {
+        let window = self
+            .entries
+            .iter()
+            .map(|e| e.busy_until)
+            .fold(self.clock, Duration::max);
+        for e in &self.entries {
+            let utilization = if window > Duration::ZERO {
+                e.busy.as_secs_f64() / window.as_secs_f64()
+            } else {
+                0.0
+            };
+            self.telemetry.record_backend(BackendRecord {
+                mode: e.backend.mode().label(),
+                batches: e.batches,
+                frames: e.frames,
+                failures: e.failures,
+                busy: e.busy,
+                utilization,
+                max_queue_depth: e.max_queue_depth,
+            });
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Batcher;
+    use crate::coordinator::scheduler::mock::MockBackend;
+    use crate::sensor::Frame;
+    use crate::testkit::{check, Config as PropConfig};
+
+    fn frame(id: u64, ms: u64) -> Frame {
+        Frame {
+            id,
+            t_capture: Duration::from_millis(ms),
+            pixels: vec![100; 8 * 12 * 3],
+            h: 8,
+            w: 12,
+            truth: Pose {
+                loc: [0.0, 0.0, 5.0],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            },
+        }
+    }
+
+    fn batch(ids: &[u64], t_ready_ms: u64) -> Batch {
+        Batch {
+            frames: ids.iter().map(|&i| frame(i, i * 10)).collect(),
+            size: 4,
+            t_ready: Duration::from_millis(t_ready_ms),
+        }
+    }
+
+    fn mock(mode: Mode, fail_every: Option<usize>) -> Box<dyn Backend> {
+        Box::new(MockBackend {
+            mode,
+            bias: 0.0,
+            calls: 0,
+            fail_every,
+            truths: vec![
+                Pose {
+                    loc: [0.0, 0.0, 5.0],
+                    quat: [1.0, 0.0, 0.0, 0.0],
+                };
+                4
+            ],
+        })
+    }
+
+    fn profile(mode: Mode, total_ms: f64, loce_m: f64) -> ModeProfile {
+        ModeProfile {
+            mode,
+            inference_ms: total_ms,
+            total_ms,
+            loce_m,
+            orie_deg: 8.0,
+            energy_j: 1.0,
+        }
+    }
+
+    fn pool(entries: Vec<(Box<dyn Backend>, Option<ModeProfile>)>) -> Dispatcher {
+        let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+        for (b, p) in entries {
+            d.add_backend(b, p);
+        }
+        d
+    }
+
+    #[test]
+    fn routes_to_least_completion_time() {
+        let mut d = pool(vec![
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+        ]);
+        let est = d.process(&batch(&[0, 1, 2, 3], 40)).unwrap();
+        assert_eq!(est.len(), 4);
+        // The idle DPU has the smaller modeled completion: it serves first.
+        assert_eq!(d.telemetry.records[0].mode, "dpu-int8");
+        // A burst saturates the DPU; the VPU picks up the spillover.
+        let mut served_vpu = false;
+        for k in 1..8u64 {
+            let est = d.process(&batch(&[4 * k, 4 * k + 1, 4 * k + 2, 4 * k + 3], 40)).unwrap();
+            served_vpu |= est.len() == 4
+                && d.telemetry.records.last().unwrap().mode == "vpu-fp16";
+        }
+        assert!(served_vpu, "burst never spilled onto the second backend");
+        d.finish();
+        assert_eq!(d.telemetry.backends.len(), 2);
+        assert!(d.telemetry.backends.iter().all(|b| b.batches > 0));
+    }
+
+    #[test]
+    fn failover_recovers_without_losing_frames() {
+        let mut d = pool(vec![
+            // Always fails — but is always tried first (faster profile).
+            (mock(Mode::DpuInt8, Some(1)), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+        ]);
+        let est = d.process(&batch(&[0, 1], 20)).unwrap();
+        assert_eq!(est.len(), 2);
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+        d.finish();
+        let dpu = &d.telemetry.backends[0];
+        assert_eq!((dpu.mode, dpu.failures, dpu.batches), ("dpu-int8", 1, 0));
+        let vpu = &d.telemetry.backends[1];
+        assert_eq!((vpu.failures, vpu.batches, vpu.frames), (0, 1, 2));
+    }
+
+    #[test]
+    fn constraints_exclude_inaccurate_backend() {
+        let mut d = Dispatcher::new(
+            4,
+            6,
+            8,
+            Constraints {
+                max_loce_m: Some(0.70),
+                ..Default::default()
+            },
+        );
+        d.add_backend(mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96)));
+        d.add_backend(mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69)));
+        let est = d.process(&batch(&[0], 10)).unwrap();
+        assert_eq!(est.len(), 1);
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+    }
+
+    #[test]
+    fn infeasible_constraints_reject_batch() {
+        let mut d = Dispatcher::new(
+            4,
+            6,
+            8,
+            Constraints {
+                max_total_ms: Some(0.001),
+                ..Default::default()
+            },
+        );
+        d.add_backend(mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96)));
+        assert!(d.process(&batch(&[0], 10)).is_err());
+    }
+
+    #[test]
+    fn all_backends_failing_surfaces_error() {
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, Some(1)), None),
+            (mock(Mode::VpuFp16, Some(1)), None),
+        ]);
+        let r = d.process(&batch(&[0], 10));
+        assert!(r.is_err());
+        d.finish();
+        assert!(d.telemetry.backends.iter().all(|b| b.failures == 1));
+    }
+
+    #[test]
+    fn uncharacterized_backend_admitted_and_measured() {
+        let mut d = pool(vec![(mock(Mode::DpuInt8, None), None)]);
+        d.process(&batch(&[0, 1], 10)).unwrap();
+        d.process(&batch(&[2, 3], 20)).unwrap();
+        d.finish();
+        let b = &d.telemetry.backends[0];
+        assert_eq!((b.batches, b.frames, b.failures), (2, 4, 0));
+    }
+
+    #[test]
+    fn property_no_frame_lost_or_duplicated_under_faults() {
+        // The ISSUE invariant: random backend faults + random arrivals,
+        // pool dispatch loses nothing, duplicates nothing, and every
+        // estimate's frame_id is unique — as long as one reliable backend
+        // remains (all-fail batches abort the run and are covered above).
+        check("dispatcher_conservation", PropConfig::default(), |ctx| {
+            let n = ctx.rng.below(48) as u64;
+            let timeout = Duration::from_millis(1 + ctx.rng.below(60) as u64);
+            let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+            // One reliable backend plus 0..3 faulty ones.
+            d.add_backend(
+                mock(Mode::DpuInt8, None),
+                Some(profile(Mode::DpuInt8, 60.0, 0.96)),
+            );
+            for _ in 0..ctx.rng.below(4) {
+                let fail_every = Some(1 + ctx.rng.below(3));
+                d.add_backend(
+                    mock(Mode::VpuFp16, fail_every),
+                    Some(profile(Mode::VpuFp16, 250.0, 0.69)),
+                );
+            }
+
+            // Batcher size capped at the artifact batch (4) — larger real
+            // batches are rejected by prepare_batch by contract.
+            let mut b = Batcher::new(1 + ctx.rng.below(4), timeout);
+            let mut ids = Vec::new();
+            let mut t = 0u64;
+            for id in 0..n {
+                t += ctx.rng.below(40) as u64;
+                if let Some(batch) = b.push(frame(id, t)) {
+                    ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                        .iter()
+                        .map(|e| e.frame_id));
+                }
+                if let Some(batch) = b.poll(Duration::from_millis(t)) {
+                    ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                        .iter()
+                        .map(|e| e.frame_id));
+                }
+            }
+            if let Some(batch) = b.flush(Duration::from_millis(t + 1000)) {
+                ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|e| e.frame_id));
+            }
+
+            let expect: Vec<u64> = (0..n).collect();
+            crate::prop_assert!(
+                ids == expect,
+                "conservation violated: got {ids:?} want 0..{n}"
+            );
+            let mut seen = std::collections::BTreeSet::new();
+            for r in &d.telemetry.records {
+                crate::prop_assert!(
+                    seen.insert(r.frame_id),
+                    "duplicate telemetry for frame {}",
+                    r.frame_id
+                );
+            }
+            crate::prop_assert!(
+                d.telemetry.records.len() as u64 == n,
+                "telemetry rows {} != frames {n}",
+                d.telemetry.records.len()
+            );
+            Ok(())
+        });
+    }
+}

@@ -5,16 +5,20 @@
 pub mod backend;
 pub mod batcher;
 pub mod config;
+pub mod dispatcher;
 pub mod pipeline;
 pub mod policy;
 pub mod scheduler;
 pub mod server;
+pub mod sim;
 pub mod telemetry;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
 pub use config::{Config, Mode};
+pub use dispatcher::Dispatcher;
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective};
 pub use scheduler::{Backend, PoseEstimate, Scheduler};
-pub use server::{run, run_with_backend, RunOutput};
-pub use telemetry::{FrameRecord, Telemetry};
+pub use server::{run, run_with_backend, run_with_pool, RunOutput};
+pub use sim::SimBackend;
+pub use telemetry::{BackendRecord, FrameRecord, Telemetry};

@@ -46,6 +46,24 @@ pub struct Constraints {
     pub max_energy_j: Option<f64>,
 }
 
+impl Constraints {
+    /// Whether a profile satisfies every set constraint.  A NaN metric
+    /// (mode missing from the manifest) fails any bound set on it, so an
+    /// uncharacterized mode is never selected under constraints.
+    pub fn admits(&self, p: &ModeProfile) -> bool {
+        fn within(limit: Option<f64>, value: f64) -> bool {
+            match limit {
+                None => true,
+                Some(max) => value <= max,
+            }
+        }
+        within(self.max_total_ms, p.total_ms)
+            && within(self.max_loce_m, p.loce_m)
+            && within(self.max_orie_deg, p.orie_deg)
+            && within(self.max_energy_j, p.energy_j)
+    }
+}
+
 /// What the policy optimizes once constraints are met.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
@@ -138,12 +156,7 @@ pub fn select(
     constraints: Constraints,
     objective: Objective,
 ) -> Option<ModeProfile> {
-    let feasible = profiles.values().filter(|p| {
-        constraints.max_total_ms.is_none_or(|m| p.total_ms <= m)
-            && constraints.max_loce_m.is_none_or(|m| p.loce_m <= m)
-            && constraints.max_orie_deg.is_none_or(|m| p.orie_deg <= m)
-            && constraints.max_energy_j.is_none_or(|m| p.energy_j <= m)
-    });
+    let feasible = profiles.values().filter(|p| constraints.admits(p));
     match objective {
         Objective::MinLatency => {
             feasible.min_by(|a, b| a.total_ms.partial_cmp(&b.total_ms).unwrap())
@@ -243,6 +256,29 @@ mod tests {
             Objective::MinLatency,
         );
         assert!(sel.is_none());
+    }
+
+    #[test]
+    fn admits_bounds_each_axis() {
+        let p = profile_modes(&manifest());
+        let dpu = p[&Mode::DpuInt8];
+        assert!(Constraints::default().admits(&dpu));
+        assert!(!Constraints {
+            max_loce_m: Some(dpu.loce_m / 2.0),
+            ..Default::default()
+        }
+        .admits(&dpu));
+        let nan = ModeProfile {
+            loce_m: f64::NAN,
+            ..dpu
+        };
+        // NaN accuracy fails a set bound but passes when unconstrained.
+        assert!(Constraints::default().admits(&nan));
+        assert!(!Constraints {
+            max_loce_m: Some(10.0),
+            ..Default::default()
+        }
+        .admits(&nan));
     }
 
     #[test]

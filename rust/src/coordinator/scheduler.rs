@@ -4,7 +4,7 @@
 //! with a mock (and so failure injection is possible); the real backend
 //! (`PjrtBackend`) executes the AOT artifacts.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -21,6 +21,27 @@ pub trait Backend {
     fn mode(&self) -> Mode;
     /// `images`: (B, H, W, 3) f32. Returns ((B,3), (B,4)).
     fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)>;
+    /// Ground truth of the batch's real frames, in row order, announced
+    /// before `infer`.  The synthetic camera knows the truth, so simulated
+    /// backends use it to reproduce their mode's measured error statistics
+    /// (`SimBackend`); real backends ignore it (default no-op) — it never
+    /// reaches the network input.
+    fn observe_truths(&mut self, _truths: &[Pose]) {}
+}
+
+/// Boxed backends dispatch through — what the multi-backend pool stores.
+impl Backend for Box<dyn Backend> {
+    fn mode(&self) -> Mode {
+        (**self).mode()
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
+        (**self).infer(images)
+    }
+
+    fn observe_truths(&mut self, truths: &[Pose]) {
+        (**self).observe_truths(truths)
+    }
 }
 
 /// One pose estimate out of the system.
@@ -58,70 +79,113 @@ impl<B: Backend> Scheduler<B> {
 
     /// Process one batch; returns estimates for the *real* frames only.
     pub fn process(&mut self, batch: &Batch) -> Result<Vec<PoseEstimate>> {
-        if batch.frames.is_empty() {
-            bail!("empty batch");
-        }
-        if batch.frames.len() > self.batch {
-            bail!(
-                "batch of {} exceeds artifact batch {}",
-                batch.frames.len(),
-                self.batch
-            );
-        }
-
-        // Preprocess (timed per frame).
-        let mut inputs = Vec::with_capacity(self.batch);
-        let mut pre_times = Vec::with_capacity(batch.frames.len());
-        for f in &batch.frames {
-            let t0 = Instant::now();
-            inputs.push(preprocess(&f.pixels, f.h, f.w, self.net_h, self.net_w));
-            pre_times.push(t0.elapsed());
-        }
-        // Pad to the artifact batch by repeating the last frame.
-        while inputs.len() < self.batch {
-            inputs.push(inputs.last().unwrap().clone());
-        }
-        let images = Tensor::stack(&inputs)?;
+        let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
+        let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
+        self.backend.observe_truths(&truths);
 
         // Inference (host wall-clock).
         let t0 = Instant::now();
-        let (loc, quat) = self.backend.infer(&images)?;
+        let (loc, quat) = self.backend.infer(&prepared.images)?;
         let infer_time = t0.elapsed();
-        if loc.shape != vec![self.batch, 3] || quat.shape != vec![self.batch, 4] {
-            bail!(
-                "backend returned shapes {:?} / {:?}",
-                loc.shape,
-                quat.shape
-            );
-        }
 
-        // Decode + account.  Inference time is attributed per-frame as the
-        // batch time divided by real occupancy (the batch executes once).
-        let per_frame_infer = infer_time / batch.frames.len() as u32;
-        let mode = self.backend.mode().label();
-        let mut out = Vec::with_capacity(batch.frames.len());
-        for (i, f) in batch.frames.iter().enumerate() {
-            let l = loc.row(i);
-            let q = quat.row(i);
-            let est = PoseEstimate {
-                frame_id: f.id,
-                loc: [l[0], l[1], l[2]],
-                quat: [q[0], q[1], q[2], q[3]],
-                truth: f.truth,
-            };
-            self.telemetry.record(FrameRecord {
-                frame_id: f.id,
-                mode,
-                preprocess: pre_times[i],
-                queue: batch.t_ready.saturating_sub(f.t_capture),
-                inference: per_frame_infer,
-                loce_m: loce_one(est.loc, f.truth.loc),
-                orie_deg: orie_one(est.quat, f.truth.quat),
-            });
-            out.push(est);
-        }
-        Ok(out)
+        decode_batch(
+            batch,
+            self.backend.mode().label(),
+            &prepared,
+            &loc,
+            &quat,
+            infer_time,
+            &mut self.telemetry,
+        )
     }
+}
+
+/// A preprocessed, padded batch ready for inference.
+pub struct PreparedBatch {
+    /// (artifact_batch, H, W, 3) f32, padded by repeating the last frame.
+    pub images: Tensor,
+    /// Per-real-frame preprocessing time.
+    pub pre_times: Vec<Duration>,
+}
+
+/// Preprocess + pad a batch to the artifact shape (shared by the single
+/// scheduler and the pool dispatcher, which preprocesses once and may then
+/// try several backends).
+pub fn prepare_batch(
+    batch: &Batch,
+    artifact_batch: usize,
+    net_h: usize,
+    net_w: usize,
+) -> Result<PreparedBatch> {
+    if batch.frames.is_empty() {
+        bail!("empty batch");
+    }
+    if batch.frames.len() > artifact_batch {
+        bail!(
+            "batch of {} exceeds artifact batch {}",
+            batch.frames.len(),
+            artifact_batch
+        );
+    }
+
+    // Preprocess (timed per frame).
+    let mut inputs = Vec::with_capacity(artifact_batch);
+    let mut pre_times = Vec::with_capacity(batch.frames.len());
+    for f in &batch.frames {
+        let t0 = Instant::now();
+        inputs.push(preprocess(&f.pixels, f.h, f.w, net_h, net_w));
+        pre_times.push(t0.elapsed());
+    }
+    // Pad to the artifact batch by repeating the last frame.
+    while inputs.len() < artifact_batch {
+        inputs.push(inputs.last().unwrap().clone());
+    }
+    Ok(PreparedBatch {
+        images: Tensor::stack(&inputs)?,
+        pre_times,
+    })
+}
+
+/// Validate backend outputs, decode the real rows into estimates, and
+/// record per-frame telemetry.  Inference time is attributed per-frame as
+/// the batch time divided by real occupancy (the batch executes once).
+pub fn decode_batch(
+    batch: &Batch,
+    mode: &'static str,
+    prepared: &PreparedBatch,
+    loc: &Tensor,
+    quat: &Tensor,
+    infer_time: Duration,
+    telemetry: &mut Telemetry,
+) -> Result<Vec<PoseEstimate>> {
+    let artifact_batch = prepared.images.shape[0];
+    if loc.shape != vec![artifact_batch, 3] || quat.shape != vec![artifact_batch, 4] {
+        bail!("backend returned shapes {:?} / {:?}", loc.shape, quat.shape);
+    }
+
+    let per_frame_infer = infer_time / batch.frames.len() as u32;
+    let mut out = Vec::with_capacity(batch.frames.len());
+    for (i, f) in batch.frames.iter().enumerate() {
+        let l = loc.row(i);
+        let q = quat.row(i);
+        let est = PoseEstimate {
+            frame_id: f.id,
+            loc: [l[0], l[1], l[2]],
+            quat: [q[0], q[1], q[2], q[3]],
+            truth: f.truth,
+        };
+        telemetry.record(FrameRecord {
+            frame_id: f.id,
+            mode,
+            preprocess: prepared.pre_times[i],
+            queue: batch.t_ready.saturating_sub(f.t_capture),
+            inference: per_frame_infer,
+            loce_m: loce_one(est.loc, f.truth.loc),
+            orie_deg: orie_one(est.quat, f.truth.quat),
+        });
+        out.push(est);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

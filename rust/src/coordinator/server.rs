@@ -1,16 +1,21 @@
-//! The MPAI run loop: camera -> preprocess -> batcher -> scheduler.
+//! The MPAI run loop: camera -> preprocess -> batcher -> dispatcher pool.
 //!
 //! This is the composition root for the end-to-end path (the
-//! `pose_estimation_e2e` example and the `mpai serve` CLI command).
+//! `pose_estimation_e2e` / `pool_dispatch` examples and the `mpai serve`
+//! CLI command).  Every run goes through the multi-backend [`Dispatcher`];
+//! a single-backend run is simply a pool of one.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::PjrtBackend;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::config::{Config, Mode};
-use crate::coordinator::scheduler::{Backend, PoseEstimate, Scheduler};
+use crate::coordinator::dispatcher::Dispatcher;
+use crate::coordinator::policy::profile_modes;
+use crate::coordinator::scheduler::{Backend, PoseEstimate};
+use crate::coordinator::sim::SimBackend;
 use crate::coordinator::telemetry::Telemetry;
 use crate::pose::EvalSet;
 use crate::runtime::artifacts::Manifest;
@@ -18,52 +23,124 @@ use crate::sensor::Camera;
 
 /// Result of a serve run.
 pub struct RunOutput {
+    /// Primary mode (the pool's first backend).
     pub mode: Mode,
     pub estimates: Vec<PoseEstimate>,
     pub telemetry: Telemetry,
 }
 
-/// Run the full loop with the PJRT backend.
-pub fn run(config: &Config) -> Result<RunOutput> {
-    let manifest = Manifest::load(&config.artifacts_dir)?;
-    let eval = Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?);
-    let mode = config.mode.context("config.mode must be set for serve")?;
-    let backend = PjrtBackend::new(&manifest, mode)?;
-    run_with_backend(config, &manifest, eval, backend)
+/// Modes a run engages: the configured pool, else the single `mode`.
+fn engaged_modes(config: &Config) -> Result<Vec<Mode>> {
+    if config.pool.is_empty() {
+        Ok(vec![config
+            .mode
+            .context("config.mode must be set for serve")?])
+    } else {
+        Ok(config.pool.clone())
+    }
 }
 
-/// Run with any backend (mock in tests, PJRT in production).
-pub fn run_with_backend<B: Backend>(
+/// Run the full loop: PJRT backends over the AOT artifacts, or simulated
+/// backends (`config.sim`) that need no artifacts.
+pub fn run(config: &Config) -> Result<RunOutput> {
+    let modes = engaged_modes(config)?;
+    let (manifest, eval) = if config.sim {
+        let manifest = Manifest::synthetic();
+        let eval = Arc::new(EvalSet::synthetic(
+            manifest.eval_count,
+            manifest.camera.0,
+            manifest.camera.1,
+            42,
+        ));
+        (manifest, eval)
+    } else {
+        let manifest = Manifest::load(&config.artifacts_dir)?;
+        let eval = Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?);
+        (manifest, eval)
+    };
+
+    let profiles = profile_modes(&manifest);
+    let (net_h, net_w, _) = manifest.net_input;
+    let mut pool = Dispatcher::new(manifest.batch, net_h, net_w, config.constraints);
+    for (i, &mode) in modes.iter().enumerate() {
+        let profile = profiles.get(&mode).copied();
+        let backend: Box<dyn Backend> = if config.sim {
+            let p = profile.with_context(|| format!("no profile for {}", mode.label()))?;
+            let mut sim = SimBackend::new(mode, &p, 0xC0FF_EE00 + i as u64);
+            if i == 0 {
+                if let Some(n) = config.fail_every {
+                    sim = sim.with_fail_every(n);
+                }
+            }
+            Box::new(sim)
+        } else {
+            Box::new(PjrtBackend::new(&manifest, mode)?)
+        };
+        pool.add_backend(backend, profile);
+    }
+    run_with_pool(config, eval, pool)
+}
+
+/// Run with any single backend (mock in tests, PJRT in production) — a
+/// pool of one, kept for callers that build their own backend.
+pub fn run_with_backend<B: Backend + 'static>(
     config: &Config,
     manifest: &Manifest,
     eval: Arc<EvalSet>,
     backend: B,
 ) -> Result<RunOutput> {
     let (net_h, net_w, _) = manifest.net_input;
-    let mode = backend.mode();
-    let mut scheduler = Scheduler::new(backend, manifest.batch, net_h, net_w);
-    let mut batcher = Batcher::new(manifest.batch, config.batch_timeout);
+    let mut pool = Dispatcher::new(manifest.batch, net_h, net_w, config.constraints);
+    pool.add_backend(Box::new(backend), None);
+    run_with_pool(config, eval, pool)
+}
+
+/// Drive the camera through the batcher into a backend pool.
+pub fn run_with_pool(
+    config: &Config,
+    eval: Arc<EvalSet>,
+    mut pool: Dispatcher,
+) -> Result<RunOutput> {
+    if pool.is_empty() {
+        bail!("backend pool is empty");
+    }
+    let mode = pool.primary_mode().expect("non-empty pool");
+    let mut batcher = Batcher::new(pool.artifact_batch(), config.batch_timeout);
     let camera = Camera::new(eval, config.camera_fps, config.frames);
 
     let mut estimates = Vec::new();
-    let mut last_t = std::time::Duration::ZERO;
     for frame in camera {
-        last_t = frame.t_capture;
+        // Dispatch any batch whose timeout elapsed before this frame
+        // arrived — polled *at the deadline*, not at the arrival instant,
+        // so a timed-out partial batch's queue time is bounded by the
+        // timeout even when the camera is slow.
+        while let Some(deadline) = batcher.deadline() {
+            if frame.t_capture < deadline {
+                break;
+            }
+            match batcher.poll(deadline) {
+                Some(batch) => estimates.extend(pool.process(&batch)?),
+                None => break,
+            }
+        }
         if let Some(batch) = batcher.push(frame) {
-            estimates.extend(scheduler.process(&batch)?);
-        }
-        if let Some(batch) = batcher.poll(last_t) {
-            estimates.extend(scheduler.process(&batch)?);
+            estimates.extend(pool.process(&batch)?);
         }
     }
-    if let Some(batch) = batcher.flush(last_t + config.batch_timeout) {
-        estimates.extend(scheduler.process(&batch)?);
+    // End of stream: the remaining partial batch flushes at its own
+    // deadline (which is always past the last arrival — earlier deadlines
+    // were drained in the loop above).
+    if let Some(deadline) = batcher.deadline() {
+        if let Some(batch) = batcher.flush(deadline) {
+            estimates.extend(pool.process(&batch)?);
+        }
     }
+    pool.finish();
 
     Ok(RunOutput {
         mode,
         estimates,
-        telemetry: scheduler.telemetry,
+        telemetry: pool.telemetry,
     })
 }
 
@@ -199,6 +276,93 @@ mod tests {
         // Queue time bounded by ~timeout + frame period, not the whole run.
         for r in &out.telemetry.records {
             assert!(r.queue <= Duration::from_millis(600), "queue {:?}", r.queue);
+        }
+    }
+
+    #[test]
+    fn timed_out_batches_dispatch_at_the_deadline() {
+        // Regression for the serial loop bug: with a slow camera, a
+        // timed-out partial batch used to wait for the *next* frame before
+        // dispatching, so queue time grew to a whole frame period.  Polling
+        // at `oldest + timeout` bounds every frame's queue time by the
+        // timeout itself (full batches fill even sooner).
+        let timeout = Duration::from_millis(30);
+        let cfg = Config {
+            frames: 5,
+            camera_fps: 2.0, // 500 ms period >> 30 ms timeout
+            batch_timeout: timeout,
+            ..Default::default()
+        };
+        let out =
+            run_with_backend(&cfg, &mini_manifest(), tiny_eval(&std::env::temp_dir(), 5), mock())
+                .unwrap();
+        assert_eq!(out.estimates.len(), 5);
+        for r in &out.telemetry.records {
+            assert!(
+                r.queue <= timeout,
+                "frame {} queued {:?} > timeout {:?}",
+                r.frame_id,
+                r.queue,
+                timeout
+            );
+        }
+    }
+
+    #[test]
+    fn sim_pool_survives_injected_faults_without_dropping_frames() {
+        // The acceptance path for `mpai serve --pool --sim --fail-every`:
+        // two simulated backends, the faster one failing every 2nd infer;
+        // every frame is still estimated and both backends serve batches.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            fail_every: Some(2),
+            frames: 16,
+            camera_fps: 100.0,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.estimates.len(), 16);
+        let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+        assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+
+        assert_eq!(out.telemetry.backends.len(), 2);
+        let failures: usize = out.telemetry.backends.iter().map(|b| b.failures).sum();
+        assert!(failures > 0, "fault injection never fired");
+        for b in &out.telemetry.backends {
+            assert!(b.batches > 0, "backend {} never served", b.mode);
+        }
+        let served: usize = out.telemetry.backends.iter().map(|b| b.frames).sum();
+        assert_eq!(served, 16, "pool accounting lost frames");
+    }
+
+    #[test]
+    fn sim_pool_accuracy_tracks_serving_mode() {
+        // Frames served by the DPU sim backend must show DPU-grade error,
+        // frames served by the VPU sim backend VPU-grade error.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            fail_every: Some(2),
+            frames: 24,
+            camera_fps: 100.0,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        for r in &out.telemetry.records {
+            let expect = match r.mode {
+                "dpu-int8" => 0.96,
+                "vpu-fp16" => 0.69,
+                other => panic!("unexpected serving mode {other}"),
+            };
+            assert!(
+                (r.loce_m - expect).abs() < 1e-2,
+                "{}: LOCE {} != {expect}",
+                r.mode,
+                r.loce_m
+            );
         }
     }
 }

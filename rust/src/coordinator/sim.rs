@@ -1,0 +1,195 @@
+//! Simulated inference backend: a stand-in device for runs without AOT
+//! artifacts (and for hosts without the PJRT binding).
+//!
+//! The synthetic camera knows each frame's ground truth, so a simulated
+//! accelerator can reproduce its mode's *measured* error statistics from
+//! Table I instead of executing numerics: predictions are the truth
+//! displaced by exactly `loce_m` metres along a random direction and
+//! rotated by exactly `orie_deg` about a random axis (deterministic PRNG).
+//! That keeps the whole serve path — batching, dispatch, failover,
+//! telemetry, accuracy accounting — exercisable end-to-end with realistic
+//! per-mode accuracy spreads.  Fault injection (`fail_every`) mirrors the
+//! test mock so failover is demonstrable from the CLI.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::config::Mode;
+use crate::coordinator::policy::ModeProfile;
+use crate::coordinator::scheduler::Backend;
+use crate::pose::quaternion::Quat;
+use crate::pose::Pose;
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Error magnitudes used when the profile carries no measured metrics.
+const DEFAULT_LOCE_M: f64 = 0.8;
+const DEFAULT_ORIE_DEG: f64 = 8.0;
+
+/// Simulated device for one execution mode.
+pub struct SimBackend {
+    mode: Mode,
+    loce_m: f64,
+    orie_deg: f64,
+    rng: Prng,
+    truths: Vec<Pose>,
+    calls: usize,
+    /// Fail every Nth infer call (fault injection).
+    pub fail_every: Option<usize>,
+}
+
+impl SimBackend {
+    /// Build a simulated device with the profile's measured accuracy.
+    pub fn new(mode: Mode, profile: &ModeProfile, seed: u64) -> SimBackend {
+        SimBackend {
+            mode,
+            loce_m: if profile.loce_m.is_finite() {
+                profile.loce_m
+            } else {
+                DEFAULT_LOCE_M
+            },
+            orie_deg: if profile.orie_deg.is_finite() {
+                profile.orie_deg
+            } else {
+                DEFAULT_ORIE_DEG
+            },
+            rng: Prng::new(seed ^ 0x5349_4D42), // "SIMB"
+            truths: Vec::new(),
+            calls: 0,
+            fail_every: None,
+        }
+    }
+
+    /// Builder: inject a fault every `n`th infer call.
+    pub fn with_fail_every(mut self, n: usize) -> SimBackend {
+        self.fail_every = Some(n);
+        self
+    }
+
+    /// Random unit 3-vector.
+    fn unit3(rng: &mut Prng) -> [f64; 3] {
+        loop {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if n > 1e-6 {
+                return [v[0] / n, v[1] / n, v[2] / n];
+            }
+        }
+    }
+}
+
+impl Backend for SimBackend {
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    fn observe_truths(&mut self, truths: &[Pose]) {
+        self.truths = truths.to_vec();
+    }
+
+    fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.calls += 1;
+        if let Some(n) = self.fail_every {
+            if n > 0 && self.calls % n == 0 {
+                bail!("injected fault on {} sim backend", self.mode.label());
+            }
+        }
+        let b = images.shape[0];
+        let mut loc = Vec::with_capacity(b * 3);
+        let mut quat = Vec::with_capacity(b * 4);
+        for i in 0..b {
+            // Padded rows reuse the default pose; their outputs are
+            // discarded by the decoder.
+            let t = self.truths.get(i).copied().unwrap_or(Pose {
+                loc: [0.0, 0.0, 5.0],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            });
+            let dir = Self::unit3(&mut self.rng);
+            loc.extend_from_slice(&[
+                t.loc[0] + (self.loce_m * dir[0]) as f32,
+                t.loc[1] + (self.loce_m * dir[1]) as f32,
+                t.loc[2] + (self.loce_m * dir[2]) as f32,
+            ]);
+            let axis = Self::unit3(&mut self.rng);
+            let dq = Quat::from_axis_angle(axis, self.orie_deg.to_radians());
+            let q = dq.mul(&Quat::from_f32(t.quat)).canonical();
+            quat.extend_from_slice(&[q.w as f32, q.x as f32, q.y as f32, q.z as f32]);
+        }
+        Ok((
+            Tensor::new(vec![b, 3], loc)?,
+            Tensor::new(vec![b, 4], quat)?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pose::metrics::{loce_one, orie_one};
+
+    fn profile(loce_m: f64, orie_deg: f64) -> ModeProfile {
+        ModeProfile {
+            mode: Mode::DpuInt8,
+            inference_ms: 53.0,
+            total_ms: 66.0,
+            loce_m,
+            orie_deg,
+            energy_j: 0.5,
+        }
+    }
+
+    fn truths(n: usize) -> Vec<Pose> {
+        (0..n)
+            .map(|i| Pose {
+                loc: [0.1 * i as f32, -0.2, 5.0 + i as f32],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reproduces_configured_error_statistics() {
+        let mut b = SimBackend::new(Mode::DpuInt8, &profile(0.96, 9.29), 11);
+        let ts = truths(4);
+        b.observe_truths(&ts);
+        let images = Tensor::zeros(vec![4, 6, 8, 3]);
+        let (loc, quat) = b.infer(&images).unwrap();
+        for i in 0..4 {
+            let l = loc.row(i);
+            let q = quat.row(i);
+            let le = loce_one([l[0], l[1], l[2]], ts[i].loc);
+            let oe = orie_one([q[0], q[1], q[2], q[3]], ts[i].quat);
+            assert!((le - 0.96).abs() < 1e-3, "LOCE {le}");
+            assert!((oe - 9.29).abs() < 0.1, "ORIE {oe}");
+        }
+    }
+
+    #[test]
+    fn nan_profile_falls_back_to_defaults() {
+        let b = SimBackend::new(Mode::Mpai, &profile(f64::NAN, f64::NAN), 1);
+        assert_eq!(b.loce_m, DEFAULT_LOCE_M);
+        assert_eq!(b.orie_deg, DEFAULT_ORIE_DEG);
+    }
+
+    #[test]
+    fn fault_injection_fails_every_nth() {
+        let mut b =
+            SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3).with_fail_every(2);
+        b.observe_truths(&truths(1));
+        let images = Tensor::zeros(vec![1, 6, 8, 3]);
+        assert!(b.infer(&images).is_ok());
+        assert!(b.infer(&images).is_err());
+        assert!(b.infer(&images).is_ok());
+        assert!(b.infer(&images).is_err());
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let run = || {
+            let mut b = SimBackend::new(Mode::VpuFp16, &profile(0.69, 8.71), 42);
+            b.observe_truths(&truths(2));
+            let (loc, _) = b.infer(&Tensor::zeros(vec![2, 6, 8, 3])).unwrap();
+            loc.data
+        };
+        assert_eq!(run(), run());
+    }
+}

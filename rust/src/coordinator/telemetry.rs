@@ -3,7 +3,6 @@
 use std::fmt::Write as _;
 use std::time::Duration;
 
-use crate::pose::metrics::PoseAccuracy;
 use crate::util::stats::Summary;
 
 /// One frame's record.
@@ -20,10 +19,32 @@ pub struct FrameRecord {
     pub orie_deg: f64,
 }
 
+/// Per-backend dispatch accounting (filled by the coordinator dispatcher).
+#[derive(Debug, Clone)]
+pub struct BackendRecord {
+    pub mode: &'static str,
+    /// Batches successfully served.
+    pub batches: usize,
+    /// Real frames successfully served.
+    pub frames: usize,
+    /// Infer attempts that failed (and were failed over).
+    pub failures: usize,
+    /// Simulated device busy time.
+    pub busy: Duration,
+    /// busy / run window (0 when the run window is empty).
+    pub utilization: f64,
+    /// Deepest backlog of in-flight batches observed at dispatch time.
+    pub max_queue_depth: usize,
+}
+
 /// Aggregated run telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
     pub records: Vec<FrameRecord>,
+    /// Per-backend utilization — one entry per pool member, filled by
+    /// `Dispatcher::finish` (every serve run goes through the dispatcher;
+    /// a raw `Scheduler` leaves this empty).
+    pub backends: Vec<BackendRecord>,
 }
 
 impl Telemetry {
@@ -43,9 +64,11 @@ impl Telemetry {
         self.records.is_empty()
     }
 
+    pub fn record_backend(&mut self, r: BackendRecord) {
+        self.backends.push(r);
+    }
+
     pub fn accuracy(&self) -> (f64, f64) {
-        let mut acc = PoseAccuracy::new();
-        let _ = &mut acc; // aggregate manually: records carry the errors
         let n = self.records.len().max(1) as f64;
         let loce = self.records.iter().map(|r| r.loce_m).sum::<f64>() / n;
         let orie = self.records.iter().map(|r| r.orie_deg).sum::<f64>() / n;
@@ -105,7 +128,7 @@ impl Telemetry {
         let (loce, orie) = self.accuracy();
         let e2e = self.e2e_summary();
         let inf = self.inference_summary();
-        format!(
+        let mut s = format!(
             "frames: {}\n\
              accuracy: LOCE {:.3} m, ORIE {:.2} deg\n\
              host inference/frame: mean {:.2} ms, p50 {:.2} ms, p99 {:.2} ms\n\
@@ -119,7 +142,22 @@ impl Telemetry {
             e2e.mean() * 1e3,
             e2e.p50() * 1e3,
             e2e.p99() * 1e3,
-        )
+        );
+        for b in &self.backends {
+            let _ = write!(
+                s,
+                "\nbackend {:<9} batches {:>4}  frames {:>5}  failures {:>3}  \
+                 busy {:>8.2} ms  util {:>5.1}%  max-depth {}",
+                b.mode,
+                b.batches,
+                b.frames,
+                b.failures,
+                b.busy.as_secs_f64() * 1e3,
+                b.utilization * 100.0,
+                b.max_queue_depth,
+            );
+        }
+        s
     }
 }
 
@@ -175,5 +213,24 @@ mod tests {
         let r = t.report();
         assert!(r.contains("frames: 1"));
         assert!(r.contains("LOCE 1.500 m"));
+    }
+
+    #[test]
+    fn report_lists_backend_utilization() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        t.record_backend(BackendRecord {
+            mode: "dpu-int8",
+            batches: 3,
+            frames: 12,
+            failures: 1,
+            busy: Duration::from_millis(250),
+            utilization: 0.5,
+            max_queue_depth: 2,
+        });
+        let r = t.report();
+        assert!(r.contains("backend dpu-int8"), "{r}");
+        assert!(r.contains("failures   1"), "{r}");
+        assert!(r.contains("50.0%"), "{r}");
     }
 }

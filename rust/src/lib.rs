@@ -9,14 +9,15 @@
 //! * **L1/L2 (build-time python)**: Pallas kernels + JAX UrsoNet-lite are
 //!   AOT-lowered to HLO-text artifacts (`make artifacts`); python never
 //!   runs at request time.
-//! * **L3 (this crate)**: the MPAI coordinator — sensor ingest, partition-
-//!   aware scheduling across accelerator substrates, PJRT execution of the
-//!   quantized artifacts, telemetry — plus every substrate the paper's
-//!   testbed provides in hardware (accelerator timing/power models, DNN
-//!   graph IR + zoo + compiler, pose toolkit).
+//! * **L3 (this crate)**: the MPAI coordinator — sensor ingest, deadline-
+//!   bounded batching, policy-routed multi-backend dispatch with failover
+//!   across accelerator substrates, PJRT execution of the quantized
+//!   artifacts, telemetry — plus every substrate the paper's testbed
+//!   provides in hardware (accelerator timing/power models, DNN graph IR +
+//!   zoo + compiler, pose toolkit).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See DESIGN.md (repo root) for the system inventory and EXPERIMENTS.md
+//! for the paper-vs-measured record.
 
 pub mod accel;
 pub mod coordinator;

@@ -22,7 +22,7 @@ use mpai::net::compiler::{compile, enumerate_cuts, Partition};
 use mpai::net::models;
 use mpai::pose::EvalSet;
 use mpai::runtime::Manifest;
-use mpai::util::cli::Spec;
+use mpai::util::cli::{Args, Spec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -63,11 +63,27 @@ fn print_usage() {
          commands:\n  \
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
-         serve  [--mode M] [...]      run the end-to-end coordinator\n  \
+         serve  [--mode M|--pool M,..] [--sim] run the end-to-end coordinator\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points"
     );
+}
+
+/// Parse the `--max-*` constraint options shared by `serve` and `policy`.
+fn parse_constraints(a: &Args) -> Result<Constraints> {
+    let opt = |k: &str| -> Result<Option<f64>> {
+        Ok(match a.get(k) {
+            Some(_) => Some(a.get_f64(k, 0.0)?),
+            None => None,
+        })
+    };
+    Ok(Constraints {
+        max_total_ms: opt("max-ms")?,
+        max_loce_m: opt("max-loce")?,
+        max_orie_deg: opt("max-orie")?,
+        max_energy_j: opt("max-energy")?,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -160,6 +176,7 @@ fn measure_mode(
         camera_fps: 1000.0,
         frames: frames as u64,
         pipelined: false,
+        ..Default::default()
     };
     let backend = coordinator::PjrtBackend::new(manifest, mode)
         .with_context(|| format!("building backend for {}", mode.label()))?;
@@ -180,6 +197,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         options: vec![
             ("artifacts", "DIR", "artifacts directory (default artifacts)"),
             ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
+            ("pool", "MODES", "comma-separated modes: policy-routed multi-backend dispatch"),
+            ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
+            ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
+            ("max-ms", "X", "constraint: max modeled total latency (ms)"),
+            ("max-loce", "X", "constraint: max localization error (m)"),
+            ("max-orie", "X", "constraint: max orientation error (deg)"),
+            ("max-energy", "X", "constraint: max energy per frame (J)"),
             ("fps", "HZ", "camera frame rate (default 10)"),
             ("frames", "N", "frames to process (default 64)"),
             ("timeout-ms", "MS", "batcher timeout (default 50)"),
@@ -189,6 +213,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = spec.parse(argv)?;
     let mode = Mode::from_label(a.get_or("mode", "mpai"))
         .context("bad --mode (see `mpai help`)")?;
+    let pool = match a.get("pool") {
+        None => Vec::new(),
+        Some(list) => list
+            .split(',')
+            .map(|m| {
+                Mode::from_label(m.trim())
+                    .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
+            })
+            .collect::<Result<Vec<Mode>>>()?,
+    };
+    let fail_every = match a.get("fail-every") {
+        Some(_) => Some(a.get_usize("fail-every", 0)?),
+        None => None,
+    };
     let cfg = Config {
         artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
         mode: Some(mode),
@@ -196,12 +234,24 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         camera_fps: a.get_f64("fps", 10.0)?,
         frames: a.get_usize("frames", 64)? as u64,
         pipelined: false,
+        pool: pool.clone(),
+        sim: a.flag("sim"),
+        fail_every,
+        constraints: parse_constraints(&a)?,
+    };
+    let engaged = if pool.is_empty() {
+        format!("mode {}", mode.label())
+    } else {
+        format!(
+            "pool [{}]",
+            pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", ")
+        )
     };
     println!(
-        "mpai serve — mode {} fps {} frames {}",
-        mode.label(),
+        "mpai serve — {engaged} fps {} frames {}{}",
         cfg.camera_fps,
-        cfg.frames
+        cfg.frames,
+        if cfg.sim { " (simulated backends)" } else { "" }
     );
     let out = coordinator::run(&cfg)?;
     println!("{}", out.telemetry.report());
@@ -245,18 +295,7 @@ fn cmd_policy(argv: &[String]) -> Result<()> {
         );
     }
 
-    let opt = |k: &str| -> Result<Option<f64>> {
-        Ok(match a.get(k) {
-            Some(_) => Some(a.get_f64(k, 0.0)?),
-            None => None,
-        })
-    };
-    let constraints = Constraints {
-        max_total_ms: opt("max-ms")?,
-        max_loce_m: opt("max-loce")?,
-        max_orie_deg: opt("max-orie")?,
-        max_energy_j: opt("max-energy")?,
-    };
+    let constraints = parse_constraints(&a)?;
     let objective = match a.get_or("objective", "latency") {
         "latency" => Objective::MinLatency,
         "energy" => Objective::MinEnergy,

@@ -19,15 +19,28 @@ pub struct Partition {
     pub assign: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PartitionError {
-    #[error("partition covers {got} layers but graph has {want}")]
     WrongArity { got: usize, want: usize },
-    #[error("layer {0} (non-input) is unassigned")]
     Unassigned(String),
-    #[error("input layer {0} must not be assigned")]
     AssignedInput(String),
 }
+
+impl std::fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionError::WrongArity { got, want } => {
+                write!(f, "partition covers {got} layers but graph has {want}")
+            }
+            PartitionError::Unassigned(l) => write!(f, "layer {l} (non-input) is unassigned"),
+            PartitionError::AssignedInput(l) => {
+                write!(f, "input layer {l} must not be assigned")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
 
 impl Partition {
     /// Everything on one accelerator.

@@ -12,15 +12,23 @@ pub struct Graph {
     pub layers: Vec<Layer>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GraphError {
-    #[error("graph {graph}: layer {layer}: {msg}")]
     Invalid {
         graph: String,
         layer: String,
         msg: String,
     },
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let GraphError::Invalid { graph, layer, msg } = self;
+        write!(f, "graph {graph}: layer {layer}: {msg}")
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 impl Graph {
     pub fn new(name: &str) -> Graph {

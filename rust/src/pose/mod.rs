@@ -29,12 +29,37 @@ pub struct EvalSet {
     pub golden_shape: Vec<usize>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EvalSetError {
-    #[error(transparent)]
-    Mpt(#[from] MptError),
-    #[error("eval set format error: {0}")]
+    Mpt(MptError),
     Format(String),
+}
+
+impl std::fmt::Display for EvalSetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalSetError::Mpt(e) => write!(f, "{e}"),
+            EvalSetError::Format(m) => write!(f, "eval set format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalSetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            // Transparent wrapper: Display already shows the MptError, so
+            // the chain continues at *its* source (avoids printing the
+            // same message twice in anyhow chains).
+            EvalSetError::Mpt(e) => std::error::Error::source(e),
+            EvalSetError::Format(_) => None,
+        }
+    }
+}
+
+impl From<MptError> for EvalSetError {
+    fn from(e: MptError) -> EvalSetError {
+        EvalSetError::Mpt(e)
+    }
 }
 
 impl EvalSet {
@@ -104,6 +129,69 @@ impl EvalSet {
         })
     }
 
+    /// Deterministic synthetic eval set — lets the serve path (and the
+    /// dispatch benches) run with no built artifacts: speckled star-field
+    /// frames plus well-conditioned poses (target a few metres ahead,
+    /// random attitude).  Golden-preprocess parity does not apply to
+    /// synthetic data; the golden tensor is a placeholder.
+    pub fn synthetic(n: usize, h: usize, w: usize, seed: u64) -> EvalSet {
+        let mut rng = crate::util::prng::Prng::new(seed);
+        let mut frames = vec![12u8; n * h * w * 3];
+        for f in 0..n {
+            // ~2% of pixels lit, a bright target blob near the centre.
+            let base = f * h * w * 3;
+            for _ in 0..(h * w / 50).max(1) {
+                let p = base + rng.below(h * w) * 3;
+                let v = 128 + rng.below(128) as u8;
+                frames[p] = v;
+                frames[p + 1] = v;
+                frames[p + 2] = v;
+            }
+            let (cy, cx) = (h / 2, w / 2);
+            for dy in 0..(h / 8).max(1) {
+                for dx in 0..(w / 8).max(1) {
+                    let p = base + ((cy + dy) * w + cx + dx) * 3;
+                    frames[p] = 220;
+                    frames[p + 1] = 210;
+                    frames[p + 2] = 190;
+                }
+            }
+        }
+        let poses = (0..n)
+            .map(|_| {
+                let v = [
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                    rng.normal() as f32,
+                ];
+                let qn = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                let sign = if v[0] < 0.0 { -1.0 } else { 1.0 };
+                Pose {
+                    loc: [
+                        rng.range(-1.0, 1.0) as f32,
+                        rng.range(-1.0, 1.0) as f32,
+                        rng.range(4.0, 10.0) as f32,
+                    ],
+                    quat: [
+                        sign * v[0] / qn,
+                        sign * v[1] / qn,
+                        sign * v[2] / qn,
+                        sign * v[3] / qn,
+                    ],
+                }
+            })
+            .collect();
+        EvalSet {
+            frames,
+            frame_h: h,
+            frame_w: w,
+            poses,
+            golden_pre0: vec![0.0; 3],
+            golden_shape: vec![1, 1, 3],
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.poses.len()
     }
@@ -170,6 +258,22 @@ mod tests {
         assert_eq!(es.frame(1).len(), 4 * 6 * 3);
         assert_eq!(es.frame(1)[0], (4 * 6 * 3) as u8);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn synthetic_eval_set_well_formed() {
+        let es = EvalSet::synthetic(6, 24, 32, 7);
+        assert_eq!(es.len(), 6);
+        assert_eq!(es.frame(5).len(), 24 * 32 * 3);
+        for p in &es.poses {
+            let n: f32 = p.quat.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "quat norm {n}");
+            assert!(p.quat[0] >= 0.0, "quat not canonical");
+            assert!((4.0..10.0).contains(&p.loc[2]), "z {}", p.loc[2]);
+        }
+        // Deterministic.
+        assert_eq!(EvalSet::synthetic(6, 24, 32, 7).frames, es.frames);
+        assert_ne!(EvalSet::synthetic(6, 24, 32, 8).frames, es.frames);
     }
 
     #[test]

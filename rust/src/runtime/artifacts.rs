@@ -155,6 +155,28 @@ impl Manifest {
             .get(name)
             .with_context(|| format!("artifact {name:?} not in manifest"))
     }
+
+    /// Manifest stand-in for artifact-less runs (`mpai serve --sim`, the
+    /// dispatch ablation bench): the deployed batch/shape contract plus the
+    /// paper's Table I accuracy per mode, and no artifact files.
+    pub fn synthetic() -> Manifest {
+        const SYNTH: &str = r#"{
+          "version": 1, "batch": 4,
+          "net_input": [96, 128, 3], "camera": [240, 320, 3],
+          "artifacts": {},
+          "eval": {"file": "eval_set.mpt", "count": 32},
+          "expected_metrics": {
+            "fp32":     {"loce_m": 0.68, "orie_deg": 7.28},
+            "fp16":     {"loce_m": 0.69, "orie_deg": 8.71},
+            "tpu_int8": {"loce_m": 0.66, "orie_deg": 7.60},
+            "dpu_int8": {"loce_m": 0.96, "orie_deg": 9.29},
+            "mpai":     {"loce_m": 0.68, "orie_deg": 7.32}
+          },
+          "layers": {"backbone": [], "head": []},
+          "param_count": 0
+        }"#;
+        Manifest::parse(SYNTH, Path::new("artifacts-sim")).expect("synthetic manifest")
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +211,16 @@ mod tests {
         assert_eq!(m.expected["fp32"].loce_m, 0.5);
         assert_eq!(m.backbone_layers, vec!["stem"]);
         assert_eq!(m.param_count, 123456);
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_every_mode_key() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.net_input, (96, 128, 3));
+        for key in ["fp32", "fp16", "tpu_int8", "dpu_int8", "mpai"] {
+            assert!(m.expected[key].loce_m.is_finite(), "{key}");
+        }
     }
 
     #[test]

@@ -1,9 +1,18 @@
 //! PJRT executor: loads HLO-text artifacts and runs them on the CPU client.
 //!
-//! This is the only place at runtime where numerics happen.  The pattern
-//! (HLO text -> HloModuleProto -> XlaComputation -> compile -> execute)
-//! follows /opt/xla-example/load_hlo; text is the interchange format because
-//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids).
+//! This is the only place at runtime where artifact numerics happen.  The
+//! pattern (HLO text -> HloModuleProto -> XlaComputation -> compile ->
+//! execute) follows /opt/xla-example/load_hlo; text is the interchange
+//! format because xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit ids).
+//!
+//! The PJRT binding (`xla` crate + vendored xla_extension shared library)
+//! is only present on testbeds that built it, so the whole path is gated
+//! behind the custom `mpai_pjrt` cfg: build with
+//! `RUSTFLAGS="--cfg mpai_pjrt"` (and add the `xla` dependency) to execute
+//! real artifacts.  Without the cfg, [`Engine::cpu`] returns a descriptive
+//! error and the coordinator falls back to the simulated backends
+//! (`coordinator::SimBackend`, `mpai serve --sim`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -17,6 +26,7 @@ use crate::runtime::tensor::Tensor;
 /// A compiled artifact ready to execute.
 pub struct Executable {
     pub spec: ArtifactSpec,
+    #[cfg(mpai_pjrt)]
     exe: xla::PjRtLoadedExecutable,
     pub compile_time: Duration,
 }
@@ -43,6 +53,11 @@ impl Executable {
                 );
             }
         }
+        self.execute(inputs)
+    }
+
+    #[cfg(mpai_pjrt)]
+    fn execute(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(Tensor::to_literal)
@@ -67,6 +82,11 @@ impl Executable {
             .collect()
     }
 
+    #[cfg(not(mpai_pjrt))]
+    fn execute(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!(NO_PJRT)
+    }
+
     /// Timed run (host wall-clock; the *modeled* device time comes from
     /// `accel::*`, see coordinator::telemetry).
     pub fn run_timed(&self, inputs: &[Tensor]) -> Result<(Vec<Tensor>, Duration)> {
@@ -76,13 +96,21 @@ impl Executable {
     }
 }
 
+#[cfg(not(mpai_pjrt))]
+const NO_PJRT: &str = "mpai was built without the PJRT binding (cfg mpai_pjrt); \
+                       rebuild with RUSTFLAGS=\"--cfg mpai_pjrt\" and the xla \
+                       dependency to execute AOT artifacts, or run the \
+                       coordinator with simulated backends (`mpai serve --sim`)";
+
 /// PJRT engine: one CPU client + a compiled-executable cache.
 pub struct Engine {
+    #[cfg(mpai_pjrt)]
     client: xla::PjRtClient,
     cache: BTreeMap<String, Executable>,
 }
 
 impl Engine {
+    #[cfg(mpai_pjrt)]
     pub fn cpu() -> Result<Engine> {
         Ok(Engine {
             client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
@@ -90,11 +118,24 @@ impl Engine {
         })
     }
 
+    #[cfg(not(mpai_pjrt))]
+    pub fn cpu() -> Result<Engine> {
+        bail!(NO_PJRT)
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(mpai_pjrt)]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(mpai_pjrt))]
+        {
+            "unavailable".to_string()
+        }
     }
 
     /// Compile an artifact (no-op if already cached); returns compile time.
+    #[cfg(mpai_pjrt)]
     pub fn load(&mut self, spec: &ArtifactSpec) -> Result<Duration> {
         if let Some(e) = self.cache.get(&spec.name) {
             return Ok(e.compile_time);
@@ -120,6 +161,13 @@ impl Engine {
             },
         );
         Ok(compile_time)
+    }
+
+    /// Compile an artifact — unavailable without the PJRT binding.
+    #[cfg(not(mpai_pjrt))]
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<Duration> {
+        let _ = Path::new(&spec.file); // spec stays the documented contract
+        bail!(NO_PJRT)
     }
 
     pub fn get(&self, name: &str) -> Result<&Executable> {

@@ -30,7 +30,8 @@ impl Tensor {
         self.data.len()
     }
 
-    /// Convert to an `xla::Literal` of matching shape.
+    /// Convert to an `xla::Literal` of matching shape (PJRT builds only).
+    #[cfg(mpai_pjrt)]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = xla::Literal::vec1(&self.data)
@@ -39,7 +40,8 @@ impl Tensor {
         Ok(lit)
     }
 
-    /// Convert back from a literal (f32 only).
+    /// Convert back from a literal (f32 only; PJRT builds only).
+    #[cfg(mpai_pjrt)]
     pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
         let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
         Tensor::new(shape, data)

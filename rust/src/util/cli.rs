@@ -15,19 +15,30 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({hint})")]
     BadValue {
         key: String,
         value: String,
         hint: String,
     },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} requires a value"),
+            CliError::BadValue { key, value, hint } => {
+                write!(f, "invalid value for --{key}: {value:?} ({hint})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Declarative spec used for parsing + usage text.
 pub struct Spec {

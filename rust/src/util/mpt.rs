@@ -97,14 +97,43 @@ impl Entry {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MptError {
-    #[error("mpt io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("mpt format error: {0}")]
+    Io(std::io::Error),
     Format(String),
-    #[error("mpt header json error: {0}")]
-    Header(#[from] json::JsonError),
+    Header(json::JsonError),
+}
+
+impl std::fmt::Display for MptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MptError::Io(e) => write!(f, "mpt io error: {e}"),
+            MptError::Format(m) => write!(f, "mpt format error: {m}"),
+            MptError::Header(e) => write!(f, "mpt header json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for MptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MptError::Io(e) => Some(e),
+            MptError::Header(e) => Some(e),
+            MptError::Format(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MptError {
+    fn from(e: std::io::Error) -> MptError {
+        MptError::Io(e)
+    }
+}
+
+impl From<json::JsonError> for MptError {
+    fn from(e: json::JsonError) -> MptError {
+        MptError::Header(e)
+    }
 }
 
 /// Read a full MPT file into a name->Entry map (order-preserving keys are

@@ -41,6 +41,7 @@ fn run_mode(dir: &Path, mode: Mode, frames: u64) -> coordinator::RunOutput {
         camera_fps: 1000.0,
         frames,
         pipelined: false,
+        ..Default::default()
     };
     let backend = coordinator::PjrtBackend::new(&manifest, mode).unwrap();
     coordinator::run_with_backend(&cfg, &manifest, eval, backend).unwrap()
@@ -146,6 +147,57 @@ fn threaded_mpai_pipeline_matches_sequential() {
     }
     for (a, b) in loc1.data.iter().zip(&loc0.data) {
         assert!((a - b).abs() < 1e-6, "same input must give same output");
+    }
+}
+
+// ---- Pool dispatch over simulated backends (run with or without
+// artifacts: the sim path needs neither the AOT outputs nor PJRT) ---------
+
+#[test]
+fn sim_pool_serves_and_fails_over_without_artifacts() {
+    let cfg = Config {
+        sim: true,
+        pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+        fail_every: Some(2),
+        frames: 20,
+        camera_fps: 100.0,
+        batch_timeout: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let out = coordinator::run(&cfg).unwrap();
+    assert_eq!(out.estimates.len(), 20);
+    let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+    assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+
+    // Both pool members served, the injected fault fired, nothing dropped.
+    assert_eq!(out.telemetry.backends.len(), 2);
+    let failures: usize = out.telemetry.backends.iter().map(|b| b.failures).sum();
+    assert!(failures > 0, "fault injection never fired");
+    for b in &out.telemetry.backends {
+        assert!(b.batches > 0, "backend {} never served", b.mode);
+        assert!(b.utilization > 0.0, "backend {} shows zero utilization", b.mode);
+    }
+}
+
+#[test]
+fn sim_pool_constraints_route_around_inaccurate_backend() {
+    let cfg = Config {
+        sim: true,
+        pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+        frames: 12,
+        camera_fps: 100.0,
+        batch_timeout: Duration::from_millis(20),
+        constraints: mpai::coordinator::Constraints {
+            max_loce_m: Some(0.70),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let out = coordinator::run(&cfg).unwrap();
+    assert_eq!(out.estimates.len(), 12);
+    // DPU INT8 (LOCE 0.96 in the synthetic manifest) is inadmissible.
+    for r in &out.telemetry.records {
+        assert_eq!(r.mode, "vpu-fp16", "constrained batch served by {}", r.mode);
     }
 }
 
