@@ -36,7 +36,8 @@ fn main() -> Result<()> {
         .iter()
         .map(|c| {
             let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
-            let lat = partition_latency(&compiled, &p, &accels, &links::USB3);
+            let lat = partition_latency(&compiled, &p, &accels, &links::USB3)
+                .expect("dpu/vpu registered");
             (lat.total_ms(), c.layer_name.clone(), c.boundary_bytes)
         })
         .collect();

@@ -42,7 +42,6 @@ fn main() -> Result<()> {
             batch_timeout: Duration::from_millis(20),
             camera_fps: 1000.0, // drive as fast as the host allows
             frames: eval.len() as u64,
-            pipelined: false,
             ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode)?;

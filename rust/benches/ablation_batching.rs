@@ -43,7 +43,7 @@ fn main() {
     accels.insert("vpu".into(), &vpu);
     let cut = g.layers.iter().position(|l| l.name == "gap").unwrap();
     let p = Partition::two_way(&g, cut, "dpu", "vpu");
-    let lat = partition_latency(&g, &p, &accels, &links::USB3);
+    let lat = partition_latency(&g, &p, &accels, &links::USB3).expect("dpu/vpu registered");
 
     let seq_fps = 1.0 / lat.total_s();
     let pipe_fps = lat.pipelined_fps();

@@ -30,7 +30,8 @@ fn sweep(name: &str) {
         .iter()
         .map(|c| {
             let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
-            let lat = partition_latency(&compiled, &p, &accels, &links::USB3);
+            let lat = partition_latency(&compiled, &p, &accels, &links::USB3)
+                .expect("dpu/vpu registered");
             (
                 lat.total_ms(),
                 lat.pipelined_fps(),

@@ -52,7 +52,6 @@ fn main() {
             batch_timeout: Duration::from_millis(1),
             camera_fps: 1000.0,
             frames: eval.len() as u64,
-            pipelined: false,
             ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode).expect("backend");

@@ -5,9 +5,98 @@ use std::collections::BTreeMap;
 
 use crate::accel::interconnect::Link;
 use crate::accel::traits::{network_latency, Accelerator, NetworkLatency};
-use crate::net::compiler::partition::Partition;
+use crate::net::compiler::partition::{Partition, PartitionError};
 use crate::net::graph::Graph;
 use crate::net::layers::Op;
+
+/// Estimation failure: the partition references something the model set
+/// does not cover.  A `Result` (not a panic) so a bad `--partition` flag
+/// surfaces as a CLI error instead of aborting the serve loop.
+#[derive(Debug)]
+pub enum EstimateError {
+    /// A stage names an accelerator absent from the model map.
+    UnknownAccelerator { name: String, layer: String },
+    /// The partition itself is malformed (non-contiguous, bad covering).
+    BadPartition(PartitionError),
+}
+
+impl std::fmt::Display for EstimateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EstimateError::UnknownAccelerator { name, layer } => {
+                write!(f, "partition assigns layer {layer} to unknown accelerator {name:?}")
+            }
+            EstimateError::BadPartition(e) => write!(f, "bad partition: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EstimateError {}
+
+impl From<PartitionError> for EstimateError {
+    fn from(e: PartitionError) -> EstimateError {
+        EstimateError::BadPartition(e)
+    }
+}
+
+/// Per-stage latency of a contiguous pipeline partition.
+#[derive(Debug, Clone)]
+pub struct StageLatency {
+    /// Accelerator executing the stage.
+    pub accel: String,
+    /// Layer ids of the stage (topological order).
+    pub layers: Vec<usize>,
+    /// Device busy seconds (sum of the stage's layer costs).
+    pub busy_s: f64,
+    /// Boundary transfer seconds for every edge leaving the stage
+    /// (0 for the last stage).
+    pub transfer_out_s: f64,
+}
+
+/// Analytic per-stage breakdown of a partitioned execution: busy time per
+/// contiguous stage plus the boundary transfers each stage emits (INT8
+/// features on `boundary_link` — the MPAI boundary quantizes before the
+/// hop, paper §III).  This is what the pipelined dispatcher charges on
+/// its simulated clock.
+pub fn stage_latencies(
+    graph: &Graph,
+    partition: &Partition,
+    accels: &BTreeMap<String, &dyn Accelerator>,
+    boundary_link: &Link,
+) -> Result<Vec<StageLatency>, EstimateError> {
+    let stages = partition.contiguous_stages(graph)?;
+    let cross = partition.cross_edges(graph, 1);
+    let mut out = Vec::with_capacity(stages.len());
+    for (k, s) in stages.iter().enumerate() {
+        let accel = accels
+            .get(&s.accel)
+            .ok_or_else(|| EstimateError::UnknownAccelerator {
+                name: s.accel.clone(),
+                layer: graph.layers[s.layers[0]].name.clone(),
+            })?;
+        let busy_s = s
+            .layers
+            .iter()
+            .map(|&i| accel.layer_cost(&graph.layers[i], &graph.in_shapes(i)).total_s())
+            .sum();
+        let transfer_out_s = if k + 1 == stages.len() {
+            0.0
+        } else {
+            cross
+                .iter()
+                .filter(|&&(pi, _, _)| s.layers.contains(&pi))
+                .map(|&(_, _, bytes)| boundary_link.transfer_s(bytes))
+                .sum()
+        };
+        out.push(StageLatency {
+            accel: s.accel.clone(),
+            layers: s.layers.clone(),
+            busy_s,
+            transfer_out_s,
+        });
+    }
+    Ok(out)
+}
 
 /// Latency breakdown of a partitioned inference.
 #[derive(Debug, Clone)]
@@ -52,75 +141,71 @@ impl PartitionLatency {
 ///
 /// `accels` maps partition names to models; `boundary_link` carries
 /// cross-segment tensors (INT8 width — the MPAI boundary quantizes features
-/// before the hop, paper §III).
+/// before the hop, paper §III).  Errors (instead of panicking) when the
+/// partition references an accelerator absent from the map or has no
+/// linear stage order — a malformed `--partition` flag must not abort the
+/// serve loop.
 pub fn partition_latency(
     graph: &Graph,
     partition: &Partition,
     accels: &BTreeMap<String, &dyn Accelerator>,
     boundary_link: &Link,
-) -> PartitionLatency {
-    // Per-layer busy time per accelerator, in segment order of first use.
-    let mut seg_order: Vec<String> = Vec::new();
-    let mut seg_busy: BTreeMap<String, f64> = BTreeMap::new();
-    for (i, layer) in graph.layers.iter().enumerate() {
-        if matches!(layer.op, Op::Input) {
-            continue;
-        }
-        let a = &partition.assign[i];
-        let accel = accels
-            .get(a)
-            .unwrap_or_else(|| panic!("partition references unknown accelerator {a:?}"));
-        let c = accel.layer_cost(layer, &graph.in_shapes(i));
-        if !seg_order.contains(a) {
-            seg_order.push(a.clone());
-        }
-        *seg_busy.entry(a.clone()).or_insert(0.0) += c.total_s();
-    }
+) -> Result<PartitionLatency, EstimateError> {
+    let stages = stage_latencies(graph, partition, accels, boundary_link)?;
+    latency_from_stages(graph, &stages, accels)
+}
 
-    // Cross-boundary transfers at INT8 width (1 byte/elem).
-    let transfers_s: f64 = partition
-        .cross_edges(graph, 1)
-        .iter()
-        .map(|&(_, _, bytes)| boundary_link.transfer_s(bytes))
-        .sum();
+/// Assemble a [`PartitionLatency`] from already-computed stage latencies
+/// (the pipeline planner computes stages once and derives both the plan
+/// and the latency from them — no second per-layer cost walk).
+pub fn latency_from_stages(
+    graph: &Graph,
+    stages: &[StageLatency],
+    accels: &BTreeMap<String, &dyn Accelerator>,
+) -> Result<PartitionLatency, EstimateError> {
+    let transfers_s: f64 = stages.iter().map(|s| s.transfer_out_s).sum();
 
-    // Host IO: input to the first segment's accelerator, output from the
-    // owners of the graph outputs.
-    let first = seg_order.first().cloned().unwrap_or_default();
+    // Host IO: input delivery to the first stage's accelerator, output
+    // readback from every later stage's engine, per-invocation costs of
+    // every engaged engine.
     let mut host_io_s = 0.0;
     let mut invoke_s = 0.0;
-    if let Some(accel) = accels.get(&first) {
-        let eb = accel.precision().bytes();
-        let in_bytes: usize = graph
-            .layers
-            .iter()
-            .filter(|l| matches!(l.op, Op::Input))
-            .map(|l| l.out.numel() * eb)
-            .sum();
-        let mc = accel.model_cost(graph, in_bytes, 0);
+    for (k, s) in stages.iter().enumerate() {
+        let accel = accels
+            .get(&s.accel)
+            .ok_or_else(|| EstimateError::UnknownAccelerator {
+                name: s.accel.clone(),
+                layer: graph
+                    .layers
+                    .get(s.layers.first().copied().unwrap_or_default())
+                    .map(|l| l.name.clone())
+                    .unwrap_or_default(),
+            })?;
+        let mc = if k == 0 {
+            let eb = accel.precision().bytes();
+            let in_bytes: usize = graph
+                .layers
+                .iter()
+                .filter(|l| matches!(l.op, Op::Input))
+                .map(|l| l.out.numel() * eb)
+                .sum();
+            accel.model_cost(graph, in_bytes, 0)
+        } else {
+            accel.model_cost(graph, 0, 64) // output readback only
+        };
         host_io_s += mc.host_io_s;
         invoke_s += mc.invoke_s + mc.param_stream_s;
     }
-    for name in seg_order.iter().skip(1) {
-        if let Some(accel) = accels.get(name) {
-            let mc = accel.model_cost(graph, 0, 64); // output readback only
-            host_io_s += mc.host_io_s;
-            invoke_s += mc.invoke_s + mc.param_stream_s;
-        }
-    }
 
-    PartitionLatency {
-        segments: seg_order
-            .into_iter()
-            .map(|n| {
-                let b = seg_busy[&n];
-                (n, b)
-            })
+    Ok(PartitionLatency {
+        segments: stages
+            .iter()
+            .map(|s| (s.accel.clone(), s.busy_s))
             .collect(),
         transfers_s,
         host_io_s,
         invoke_s,
-    }
+    })
 }
 
 /// Energy estimate (joules/frame) for a single-accelerator run.
@@ -159,7 +244,7 @@ mod tests {
 
         let cut = g.layers.iter().position(|l| l.name == "gap").unwrap();
         let p = Partition::two_way(&g, cut, "dpu", "vpu");
-        let mpai = partition_latency(&g, &p, &accels, &links::USB3).total_s();
+        let mpai = partition_latency(&g, &p, &accels, &links::USB3).unwrap().total_s();
 
         let dpu_only = crate::accel::traits::network_latency(&Dpu, &g).total_s();
         let vpu_only = crate::accel::traits::network_latency(&Vpu, &g).total_s();
@@ -179,7 +264,7 @@ mod tests {
         let accels = accel_map(&dpu, &vpu);
         let cut = g.layers.iter().position(|l| l.name == "gap").unwrap();
         let p = Partition::two_way(&g, cut, "dpu", "vpu");
-        let mpai = partition_latency(&g, &p, &accels, &links::USB3).total_s();
+        let mpai = partition_latency(&g, &p, &accels, &links::USB3).unwrap().total_s();
         let dpu_only = crate::accel::traits::network_latency(&Dpu, &g).total_s();
         let ratio = mpai / dpu_only;
         assert!((1.05..2.2).contains(&ratio), "MPAI/DPU ratio {ratio}");
@@ -191,7 +276,7 @@ mod tests {
         let (dpu, vpu) = (Dpu, Vpu);
         let accels = accel_map(&dpu, &vpu);
         let p = Partition::single(&g, "dpu");
-        let pl = partition_latency(&g, &p, &accels, &links::USB3);
+        let pl = partition_latency(&g, &p, &accels, &links::USB3).unwrap();
         let nl = crate::accel::traits::network_latency(&Dpu, &g);
         assert!((pl.segments[0].1 - nl.layers_s).abs() < 1e-12);
         assert_eq!(pl.transfers_s, 0.0);
@@ -204,7 +289,46 @@ mod tests {
         let accels = accel_map(&dpu, &vpu);
         let cut = g.layers.iter().position(|l| l.name == "gap").unwrap();
         let p = Partition::two_way(&g, cut, "dpu", "vpu");
-        let pl = partition_latency(&g, &p, &accels, &links::USB3);
+        let pl = partition_latency(&g, &p, &accels, &links::USB3).unwrap();
         assert!(pl.pipelined_fps() >= 1.0 / pl.total_s() - 1e-9);
+    }
+
+    #[test]
+    fn unknown_accelerator_is_an_error_not_a_panic() {
+        // ISSUE satellite: a partition naming an engine outside the model
+        // map must surface a typed error (a bad --partition flag must not
+        // abort the serve loop).
+        let g = ursonet::build_lite();
+        let (dpu, vpu) = (Dpu, Vpu);
+        let accels = accel_map(&dpu, &vpu);
+        let p = Partition::single(&g, "npu");
+        let err = partition_latency(&g, &p, &accels, &links::USB3).unwrap_err();
+        assert!(
+            matches!(err, EstimateError::UnknownAccelerator { .. }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("npu"), "{err}");
+    }
+
+    #[test]
+    fn stage_latencies_sum_to_partition_latency() {
+        let g = ursonet::build_full();
+        let (dpu, vpu) = (Dpu, Vpu);
+        let accels = accel_map(&dpu, &vpu);
+        let cut = g.layers.iter().position(|l| l.name == "gap").unwrap();
+        let p = Partition::two_way(&g, cut, "dpu", "vpu");
+        let stages = stage_latencies(&g, &p, &accels, &links::USB3).unwrap();
+        let pl = partition_latency(&g, &p, &accels, &links::USB3).unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].accel, "dpu");
+        assert_eq!(stages[1].accel, "vpu");
+        let busy: f64 = stages.iter().map(|s| s.busy_s).sum();
+        let seg: f64 = pl.segments.iter().map(|s| s.1).sum();
+        assert!((busy - seg).abs() < 1e-12);
+        let xfer: f64 = stages.iter().map(|s| s.transfer_out_s).sum();
+        assert!((xfer - pl.transfers_s).abs() < 1e-12);
+        // Only the non-final stage emits boundary traffic on a chain cut.
+        assert!(stages[0].transfer_out_s > 0.0);
+        assert_eq!(stages[1].transfer_out_s, 0.0);
     }
 }

@@ -46,6 +46,18 @@ pub mod links {
     pub const PCIE_X1: Link = Link::new("pcie-x1", 350e6, 0.3e-3);
     /// Camera CSI-2 ingest into the MPSoC.
     pub const CSI2: Link = Link::new("csi2", 1.2e9, 100e-6);
+
+    /// Link by name (the CLI `--link` vocabulary).
+    pub fn by_name(name: &str) -> Option<Link> {
+        match name {
+            "axi-hp" => Some(AXI_HP),
+            "usb3" => Some(USB3),
+            "usb2" => Some(USB2),
+            "pcie-x1" => Some(PCIE_X1),
+            "csi2" => Some(CSI2),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -80,6 +92,14 @@ mod tests {
         assert!(AXI_HP.latency_s < USB3.latency_s);
         // USB3 ≫ USB2.
         assert!(USB3.bandwidth_bps / USB2.bandwidth_bps > 5.0);
+    }
+
+    #[test]
+    fn link_lookup_round_trips() {
+        for l in [links::AXI_HP, links::USB3, links::USB2, links::PCIE_X1, links::CSI2] {
+            assert_eq!(links::by_name(l.name), Some(l));
+        }
+        assert_eq!(links::by_name("carrier-pigeon"), None);
     }
 
     #[test]

@@ -12,8 +12,23 @@ pub mod vpu;
 
 pub use cpu::Cpu;
 pub use dpu::Dpu;
-pub use estimate::{device_report, partition_latency, PartitionLatency};
+pub use estimate::{
+    device_report, latency_from_stages, partition_latency, stage_latencies, EstimateError,
+    PartitionLatency, StageLatency,
+};
 pub use interconnect::{links, Link};
 pub use tpu::Tpu;
 pub use vpu::Vpu;
 pub use traits::{deployed_latency, network_latency, Accelerator, LayerCost, NetworkLatency, Precision};
+
+/// Accelerator model by its partition-vocabulary name ("dpu", "vpu",
+/// "tpu", "cpu" — the ZCU104-hosted A53 for the software fallback).
+pub fn by_name(name: &str) -> Option<Box<dyn Accelerator>> {
+    match name {
+        "dpu" => Some(Box::new(Dpu)),
+        "vpu" => Some(Box::new(Vpu)),
+        "tpu" => Some(Box::new(Tpu)),
+        "cpu" => Some(Box::new(Cpu::zcu104())),
+        _ => None,
+    }
+}

@@ -1,9 +1,10 @@
-//! Coordinator configuration: execution modes (the Table I rows) and
-//! runtime knobs.
+//! Coordinator configuration: execution modes (the Table I rows), the
+//! partition spec for pipelined serving, and runtime knobs.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
+use crate::accel::interconnect::{links, Link};
 use crate::coordinator::policy::Constraints;
 
 /// One deployable configuration = one Table I row.
@@ -70,6 +71,92 @@ impl Mode {
     pub fn from_label(s: &str) -> Option<Mode> {
         Mode::ALL.into_iter().find(|m| m.label() == s)
     }
+
+    /// Accelerator substrate this mode's engine runs on, in the partition
+    /// vocabulary ("cpu", "vpu", "tpu", "dpu").  `Mpai` is a composite
+    /// (DPU + VPU) with no single substrate.
+    pub fn accel_name(self) -> Option<&'static str> {
+        match self {
+            Mode::CpuFp32 | Mode::CpuFp16 => Some("cpu"),
+            Mode::VpuFp16 => Some("vpu"),
+            Mode::TpuInt8 => Some("tpu"),
+            Mode::DpuInt8 => Some("dpu"),
+            Mode::Mpai => None,
+        }
+    }
+
+    /// The execution mode serving a pipeline stage on a substrate (the
+    /// inverse of [`Mode::accel_name`]; "cpu" binds the ZCU104 FP16 row).
+    pub fn for_accel(name: &str) -> Option<Mode> {
+        match name {
+            "cpu" => Some(Mode::CpuFp16),
+            "vpu" => Some(Mode::VpuFp16),
+            "tpu" => Some(Mode::TpuInt8),
+            "dpu" => Some(Mode::DpuInt8),
+            _ => None,
+        }
+    }
+}
+
+/// One stage of a manual `--partition` spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManualStage {
+    /// Accelerator substrate name ("dpu", "vpu", "tpu", "cpu").
+    pub accel: String,
+    /// Name of the stage's last layer; `None` only on the final stage
+    /// (which runs to the end of the graph).
+    pub end_layer: Option<String>,
+}
+
+/// How `serve` splits the network across the pool's substrates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PartitionSpec {
+    /// Sweep every cut under the analytic model and pick the
+    /// steady-state-throughput optimum (`--partition auto`).
+    Auto,
+    /// Explicit stages: `dpu@gap,vpu` = DPU through layer `gap`, VPU to
+    /// the end.
+    Manual(Vec<ManualStage>),
+}
+
+impl PartitionSpec {
+    /// Parse `auto` or `accel@layer,...,accel`.  Every stage but the last
+    /// needs an `@layer` boundary; the last must not have one.
+    pub fn parse(s: &str) -> Result<PartitionSpec, String> {
+        if s == "auto" {
+            return Ok(PartitionSpec::Auto);
+        }
+        let parts: Vec<&str> = s.split(',').collect();
+        let mut stages = Vec::with_capacity(parts.len());
+        for (k, part) in parts.iter().enumerate() {
+            let last = k + 1 == parts.len();
+            let (accel, end_layer) = match part.split_once('@') {
+                Some((a, l)) if !last => (a, Some(l.to_string())),
+                Some((_, l)) => {
+                    return Err(format!(
+                        "final stage runs to the end of the graph (drop @{l})"
+                    ))
+                }
+                None if last => (*part, None),
+                None => {
+                    return Err(format!(
+                        "stage {k} ({part:?}) needs an @layer boundary"
+                    ))
+                }
+            };
+            if accel.is_empty() || end_layer.as_deref() == Some("") {
+                return Err(format!("empty accelerator or layer in stage {k}"));
+            }
+            stages.push(ManualStage {
+                accel: accel.to_string(),
+                end_layer,
+            });
+        }
+        if stages.is_empty() {
+            return Err("empty partition spec".into());
+        }
+        Ok(PartitionSpec::Manual(stages))
+    }
 }
 
 /// Runtime configuration of the coordinator.
@@ -86,8 +173,6 @@ pub struct Config {
     pub camera_fps: f64,
     /// Frames to process.
     pub frames: u64,
-    /// Pipelined two-stage execution for MPAI (overlap backbone/head).
-    pub pipelined: bool,
     /// Backend pool for multi-accelerator dispatch; empty = single-backend
     /// serve using `mode`.
     pub pool: Vec<Mode>,
@@ -98,6 +183,11 @@ pub struct Config {
     pub fail_every: Option<usize>,
     /// Constraints gating which pool backends may serve a batch.
     pub constraints: Constraints,
+    /// Partition-aware pipelined serving: split the network across the
+    /// pool's substrates per this spec (None = whole-frame dispatch).
+    pub partition: Option<PartitionSpec>,
+    /// Link carrying cross-stage boundary tensors.
+    pub boundary_link: Link,
 }
 
 impl Default for Config {
@@ -108,11 +198,12 @@ impl Default for Config {
             batch_timeout: Duration::from_millis(50),
             camera_fps: 10.0,
             frames: 64,
-            pipelined: true,
             pool: Vec::new(),
             sim: false,
             fail_every: None,
             constraints: Constraints::default(),
+            partition: None,
+            boundary_link: links::USB3,
         }
     }
 }
@@ -144,5 +235,52 @@ mod tests {
             assert_eq!(Mode::from_label(m.label()), Some(m));
         }
         assert_eq!(Mode::from_label("gpu"), None);
+    }
+
+    #[test]
+    fn accel_name_roundtrip() {
+        for m in Mode::ALL {
+            if let Some(n) = m.accel_name() {
+                let back = Mode::for_accel(n).unwrap();
+                assert_eq!(back.accel_name(), Some(n), "{m:?}");
+            } else {
+                assert_eq!(m, Mode::Mpai);
+            }
+        }
+        assert_eq!(Mode::for_accel("npu"), None);
+    }
+
+    #[test]
+    fn partition_spec_parses_auto_and_manual() {
+        assert_eq!(PartitionSpec::parse("auto"), Ok(PartitionSpec::Auto));
+        let p = PartitionSpec::parse("dpu@gap,vpu").unwrap();
+        assert_eq!(
+            p,
+            PartitionSpec::Manual(vec![
+                ManualStage {
+                    accel: "dpu".into(),
+                    end_layer: Some("gap".into())
+                },
+                ManualStage {
+                    accel: "vpu".into(),
+                    end_layer: None
+                },
+            ])
+        );
+        // Three stages.
+        let p3 = PartitionSpec::parse("dpu@s2_add,tpu@feat_pool,vpu").unwrap();
+        assert!(matches!(p3, PartitionSpec::Manual(s) if s.len() == 3));
+    }
+
+    #[test]
+    fn partition_spec_rejects_malformed_stage_lists() {
+        // Non-final stage without a boundary.
+        assert!(PartitionSpec::parse("dpu,vpu").is_err());
+        // Final stage with a boundary.
+        assert!(PartitionSpec::parse("dpu@gap,vpu@fc_loc").is_err());
+        // Empty names.
+        assert!(PartitionSpec::parse("@gap,vpu").is_err());
+        assert!(PartitionSpec::parse("dpu@,vpu").is_err());
+        assert!(PartitionSpec::parse("").is_err());
     }
 }

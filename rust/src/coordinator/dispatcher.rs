@@ -243,7 +243,6 @@ impl Dispatcher {
             });
         }
     }
-
 }
 
 #[cfg(test)]

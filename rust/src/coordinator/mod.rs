@@ -15,10 +15,11 @@ pub mod telemetry;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
-pub use config::{Config, Mode};
+pub use config::{Config, ManualStage, Mode, PartitionSpec};
 pub use dispatcher::Dispatcher;
+pub use pipeline::{build_plans, PipelinePlan, PipelinedDispatcher, StagePlan};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective};
-pub use scheduler::{Backend, PoseEstimate, Scheduler};
-pub use server::{run, run_with_backend, run_with_pool, RunOutput};
+pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
+pub use server::{run, run_with_backend, run_with_pipeline, run_with_pool, RunOutput};
 pub use sim::SimBackend;
-pub use telemetry::{BackendRecord, FrameRecord, Telemetry};
+pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry};

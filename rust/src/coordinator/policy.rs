@@ -113,7 +113,8 @@ pub fn profile_modes(manifest: &Manifest) -> BTreeMap<Mode, ModeProfile> {
                     let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
                     accels.insert("dpu".into(), &dpu);
                     accels.insert("vpu".into(), &vpu);
-                    let pl = partition_latency(&compiled, &p, &accels, &links::USB3);
+                    let pl = partition_latency(&compiled, &p, &accels, &links::USB3)
+                        .expect("dpu/vpu registered in the model map");
                     // Energy: both engines engaged; approximate with the DPU
                     // power over its busy time + VPU power over its own.
                     (pl.total_s(), pl.total_s(), dpu.power())

@@ -16,6 +16,15 @@ use crate::pose::Pose;
 use crate::runtime::tensor::Tensor;
 use crate::sensor::preprocess;
 
+/// Output of one pipeline stage (see [`Backend::infer_stage`]).
+#[derive(Debug, Clone)]
+pub enum StageOutput {
+    /// Intermediate features forwarded to the next stage.
+    Features(Tensor),
+    /// Final stage: ((B,3) locations, (B,4) quaternions).
+    Poses(Tensor, Tensor),
+}
+
 /// Inference backend: batched images -> (locations, quaternions).
 pub trait Backend {
     fn mode(&self) -> Mode;
@@ -27,6 +36,24 @@ pub trait Backend {
     /// (`SimBackend`); real backends ignore it (default no-op) — it never
     /// reaches the network input.
     fn observe_truths(&mut self, _truths: &[Pose]) {}
+    /// Execute stage `stage` of an `n_stages` pipeline on this backend.
+    /// The default maps the final stage onto whole-network [`Backend::infer`]
+    /// and passes features through unchanged on earlier stages — correct
+    /// for backends that only model accuracy (stage *timing* lives in the
+    /// pipeline plan, charged on the coordinator's simulated clock).
+    fn infer_stage(
+        &mut self,
+        stage: usize,
+        n_stages: usize,
+        features: &Tensor,
+    ) -> Result<StageOutput> {
+        if stage + 1 == n_stages {
+            let (loc, quat) = self.infer(features)?;
+            Ok(StageOutput::Poses(loc, quat))
+        } else {
+            Ok(StageOutput::Features(features.clone()))
+        }
+    }
 }
 
 /// Boxed backends dispatch through — what the multi-backend pool stores.
@@ -41,6 +68,15 @@ impl Backend for Box<dyn Backend> {
 
     fn observe_truths(&mut self, truths: &[Pose]) {
         (**self).observe_truths(truths)
+    }
+
+    fn infer_stage(
+        &mut self,
+        stage: usize,
+        n_stages: usize,
+        features: &Tensor,
+    ) -> Result<StageOutput> {
+        (**self).infer_stage(stage, n_stages, features)
     }
 }
 

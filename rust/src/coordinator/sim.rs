@@ -15,7 +15,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::config::Mode;
 use crate::coordinator::policy::ModeProfile;
-use crate::coordinator::scheduler::Backend;
+use crate::coordinator::scheduler::{Backend, StageOutput};
 use crate::pose::quaternion::Quat;
 use crate::pose::Pose;
 use crate::runtime::tensor::Tensor;
@@ -30,6 +30,10 @@ pub struct SimBackend {
     mode: Mode,
     loce_m: f64,
     orie_deg: f64,
+    /// Accuracy of multi-stage (composite) execution — the partition-aware
+    /// QAT numerics of the MPAI row.  Used by the *final* stage of an
+    /// N-stage plan; single-stage plans keep this engine's own row.
+    composite: Option<(f64, f64)>,
     rng: Prng,
     truths: Vec<Pose>,
     calls: usize,
@@ -52,6 +56,7 @@ impl SimBackend {
             } else {
                 DEFAULT_ORIE_DEG
             },
+            composite: None,
             rng: Prng::new(seed ^ 0x5349_4D42), // "SIMB"
             truths: Vec::new(),
             calls: 0,
@@ -65,6 +70,16 @@ impl SimBackend {
         self
     }
 
+    /// Builder: measured accuracy of the composite (multi-stage) numerics,
+    /// reproduced when this engine serves the final stage of an N-stage
+    /// plan (the partition-aware QAT of the paper's MPAI row).
+    pub fn with_composite_accuracy(mut self, loce_m: f64, orie_deg: f64) -> SimBackend {
+        if loce_m.is_finite() && orie_deg.is_finite() {
+            self.composite = Some((loce_m, orie_deg));
+        }
+        self
+    }
+
     /// Random unit 3-vector.
     fn unit3(rng: &mut Prng) -> [f64; 3] {
         loop {
@@ -74,6 +89,48 @@ impl SimBackend {
                 return [v[0] / n, v[1] / n, v[2] / n];
             }
         }
+    }
+
+    /// Advance the call counter and inject the periodic fault.  Whole-network
+    /// `infer` and per-stage `infer_stage` share the counter, so fault
+    /// injection fires at engine-invocation granularity either way.
+    fn tick(&mut self) -> Result<()> {
+        self.calls += 1;
+        if let Some(n) = self.fail_every {
+            if n > 0 && self.calls % n == 0 {
+                bail!("injected fault on {} sim backend", self.mode.label());
+            }
+        }
+        Ok(())
+    }
+
+    /// Pose rows displaced from the observed truths by exactly the given
+    /// error statistics.
+    fn poses(&mut self, b: usize, loce_m: f64, orie_deg: f64) -> Result<(Tensor, Tensor)> {
+        let mut loc = Vec::with_capacity(b * 3);
+        let mut quat = Vec::with_capacity(b * 4);
+        for i in 0..b {
+            // Padded rows reuse the default pose; their outputs are
+            // discarded by the decoder.
+            let t = self.truths.get(i).copied().unwrap_or(Pose {
+                loc: [0.0, 0.0, 5.0],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            });
+            let dir = Self::unit3(&mut self.rng);
+            loc.extend_from_slice(&[
+                t.loc[0] + (loce_m * dir[0]) as f32,
+                t.loc[1] + (loce_m * dir[1]) as f32,
+                t.loc[2] + (loce_m * dir[2]) as f32,
+            ]);
+            let axis = Self::unit3(&mut self.rng);
+            let dq = Quat::from_axis_angle(axis, orie_deg.to_radians());
+            let q = dq.mul(&Quat::from_f32(t.quat)).canonical();
+            quat.extend_from_slice(&[q.w as f32, q.x as f32, q.y as f32, q.z as f32]);
+        }
+        Ok((
+            Tensor::new(vec![b, 3], loc)?,
+            Tensor::new(vec![b, 4], quat)?,
+        ))
     }
 }
 
@@ -87,37 +144,35 @@ impl Backend for SimBackend {
     }
 
     fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
-        self.calls += 1;
-        if let Some(n) = self.fail_every {
-            if n > 0 && self.calls % n == 0 {
-                bail!("injected fault on {} sim backend", self.mode.label());
-            }
+        self.tick()?;
+        self.poses(images.shape[0], self.loce_m, self.orie_deg)
+    }
+
+    /// Stage-granular execution for the partitioned pipeline: every stage
+    /// invocation ticks the engine (so injected faults can hit any stage);
+    /// non-final stages emit the feature tensor for the next hop, the final
+    /// stage decodes poses.  In a true multi-stage plan the numerics are
+    /// the *composite* partition-aware QAT (the MPAI row) when configured,
+    /// not this engine's whole-network row; single-stage plans keep the
+    /// engine's own statistics.  Per-stage *latency* is charged by the
+    /// pipelined dispatcher from the plan's analytic stage split.
+    fn infer_stage(
+        &mut self,
+        stage: usize,
+        n_stages: usize,
+        features: &Tensor,
+    ) -> Result<StageOutput> {
+        self.tick()?;
+        if stage + 1 == n_stages {
+            let (loce, orie) = match self.composite {
+                Some(c) if n_stages > 1 => c,
+                _ => (self.loce_m, self.orie_deg),
+            };
+            let (loc, quat) = self.poses(features.shape[0], loce, orie)?;
+            Ok(StageOutput::Poses(loc, quat))
+        } else {
+            Ok(StageOutput::Features(features.clone()))
         }
-        let b = images.shape[0];
-        let mut loc = Vec::with_capacity(b * 3);
-        let mut quat = Vec::with_capacity(b * 4);
-        for i in 0..b {
-            // Padded rows reuse the default pose; their outputs are
-            // discarded by the decoder.
-            let t = self.truths.get(i).copied().unwrap_or(Pose {
-                loc: [0.0, 0.0, 5.0],
-                quat: [1.0, 0.0, 0.0, 0.0],
-            });
-            let dir = Self::unit3(&mut self.rng);
-            loc.extend_from_slice(&[
-                t.loc[0] + (self.loce_m * dir[0]) as f32,
-                t.loc[1] + (self.loce_m * dir[1]) as f32,
-                t.loc[2] + (self.loce_m * dir[2]) as f32,
-            ]);
-            let axis = Self::unit3(&mut self.rng);
-            let dq = Quat::from_axis_angle(axis, self.orie_deg.to_radians());
-            let q = dq.mul(&Quat::from_f32(t.quat)).canonical();
-            quat.extend_from_slice(&[q.w as f32, q.x as f32, q.y as f32, q.z as f32]);
-        }
-        Ok((
-            Tensor::new(vec![b, 3], loc)?,
-            Tensor::new(vec![b, 4], quat)?,
-        ))
     }
 }
 
@@ -180,6 +235,71 @@ mod tests {
         assert!(b.infer(&images).is_err());
         assert!(b.infer(&images).is_ok());
         assert!(b.infer(&images).is_err());
+    }
+
+    #[test]
+    fn stage_execution_passes_features_then_decodes_poses() {
+        let mut b = SimBackend::new(Mode::DpuInt8, &profile(0.96, 9.29), 11);
+        let ts = truths(2);
+        b.observe_truths(&ts);
+        let images = Tensor::zeros(vec![2, 6, 8, 3]);
+        // Stage 0 of 3: features pass through for the next engine.
+        match b.infer_stage(0, 3, &images).unwrap() {
+            StageOutput::Features(f) => assert_eq!(f.shape, images.shape),
+            StageOutput::Poses(..) => panic!("non-final stage must emit features"),
+        }
+        // Final stage: poses carry the mode's error statistics.
+        match b.infer_stage(2, 3, &images).unwrap() {
+            StageOutput::Poses(loc, _) => {
+                let le = crate::pose::metrics::loce_one(
+                    [loc.row(0)[0], loc.row(0)[1], loc.row(0)[2]],
+                    ts[0].loc,
+                );
+                assert!((le - 0.96).abs() < 1e-3, "LOCE {le}");
+            }
+            StageOutput::Features(_) => panic!("final stage must emit poses"),
+        }
+    }
+
+    #[test]
+    fn composite_accuracy_applies_only_to_multi_stage_finals() {
+        let mut b = SimBackend::new(Mode::VpuFp16, &profile(0.69, 8.71), 5)
+            .with_composite_accuracy(0.68, 7.32);
+        let ts = truths(1);
+        b.observe_truths(&ts);
+        let images = Tensor::zeros(vec![1, 6, 8, 3]);
+        let loce_of = |out: StageOutput, truth: Pose| match out {
+            StageOutput::Poses(loc, _) => crate::pose::metrics::loce_one(
+                [loc.row(0)[0], loc.row(0)[1], loc.row(0)[2]],
+                truth.loc,
+            ),
+            StageOutput::Features(_) => panic!("expected poses"),
+        };
+        // Final stage of a 2-stage plan: composite (MPAI-row) numerics.
+        let le = loce_of(b.infer_stage(1, 2, &images).unwrap(), ts[0]);
+        assert!((le - 0.68).abs() < 1e-3, "composite LOCE {le}");
+        // Single-stage plan: the engine's own row.
+        let le = loce_of(b.infer_stage(0, 1, &images).unwrap(), ts[0]);
+        assert!((le - 0.69).abs() < 1e-3, "own-row LOCE {le}");
+        // Whole-network infer: also the engine's own row.
+        let (loc, _) = b.infer(&images).unwrap();
+        let le = crate::pose::metrics::loce_one(
+            [loc.row(0)[0], loc.row(0)[1], loc.row(0)[2]],
+            ts[0].loc,
+        );
+        assert!((le - 0.69).abs() < 1e-3, "infer LOCE {le}");
+    }
+
+    #[test]
+    fn stage_faults_share_the_injection_counter() {
+        let mut b =
+            SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3).with_fail_every(2);
+        b.observe_truths(&truths(1));
+        let images = Tensor::zeros(vec![1, 6, 8, 3]);
+        assert!(b.infer_stage(0, 2, &images).is_ok());
+        assert!(b.infer_stage(1, 2, &images).is_err()); // 2nd engine invocation
+        assert!(b.infer(&images).is_ok());
+        assert!(b.infer_stage(0, 2, &images).is_err()); // 4th
     }
 
     #[test]

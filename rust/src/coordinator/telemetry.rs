@@ -37,6 +37,29 @@ pub struct BackendRecord {
     pub max_queue_depth: usize,
 }
 
+/// Per-pipeline-stage accounting (filled by the partition-aware
+/// `PipelinedDispatcher::finish` — one entry per engaged substrate).
+#[derive(Debug, Clone)]
+pub struct StageRecord {
+    /// Accelerator substrate executing the stage ("dpu", "vpu", ...).
+    pub accel: String,
+    /// Mode of the backend bound to the stage.
+    pub mode: &'static str,
+    pub batches: usize,
+    pub frames: usize,
+    /// Stage infer attempts that failed (and were failed over).
+    pub failures: usize,
+    /// Simulated stage busy time.
+    pub busy: Duration,
+    /// Outgoing boundary transfer time charged to this stage.
+    pub transfer: Duration,
+    /// Time batches waited for this stage while it drained earlier batches
+    /// (pipeline backpressure; the bottleneck stage stalls its upstream).
+    pub stall: Duration,
+    /// busy / run window (0 when the run window is empty).
+    pub occupancy: f64,
+}
+
 /// Aggregated run telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -45,6 +68,10 @@ pub struct Telemetry {
     /// `Dispatcher::finish` (every serve run goes through the dispatcher;
     /// a raw `Scheduler` leaves this empty).
     pub backends: Vec<BackendRecord>,
+    /// Per-stage occupancy/stall/transfer — one entry per substrate,
+    /// filled by `PipelinedDispatcher::finish` (empty for whole-frame
+    /// dispatch runs).
+    pub stages: Vec<StageRecord>,
 }
 
 impl Telemetry {
@@ -66,6 +93,10 @@ impl Telemetry {
 
     pub fn record_backend(&mut self, r: BackendRecord) {
         self.backends.push(r);
+    }
+
+    pub fn record_stage(&mut self, r: StageRecord) {
+        self.stages.push(r);
     }
 
     pub fn accuracy(&self) -> (f64, f64) {
@@ -100,6 +131,34 @@ impl Telemetry {
     /// End-to-end per-frame host latency.
     pub fn e2e_summary(&self) -> Summary {
         self.summary_of(|r| r.preprocess + r.queue + r.inference)
+    }
+
+    /// Occupancy across pipeline stages (pipelined runs only; empty
+    /// summary — NaN percentiles — for whole-frame dispatch).
+    pub fn stage_occupancy_summary(&self) -> Summary {
+        Summary::from(&self.stages.iter().map(|s| s.occupancy).collect::<Vec<_>>())
+    }
+
+    /// Per-stage stall time in seconds (pipeline backpressure).
+    pub fn stage_stall_summary(&self) -> Summary {
+        Summary::from(
+            &self
+                .stages
+                .iter()
+                .map(|s| s.stall.as_secs_f64())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Per-stage boundary transfer time in seconds.
+    pub fn stage_transfer_summary(&self) -> Summary {
+        Summary::from(
+            &self
+                .stages
+                .iter()
+                .map(|s| s.transfer.as_secs_f64())
+                .collect::<Vec<_>>(),
+        )
     }
 
     /// CSV export (one row per frame) for offline analysis.
@@ -155,6 +214,22 @@ impl Telemetry {
                 b.busy.as_secs_f64() * 1e3,
                 b.utilization * 100.0,
                 b.max_queue_depth,
+            );
+        }
+        for st in &self.stages {
+            let _ = write!(
+                s,
+                "\nstage {:<4} ({:<9}) batches {:>4}  frames {:>5}  failures {:>3}  \
+                 busy {:>8.2} ms  xfer {:>7.2} ms  stall {:>7.2} ms  occ {:>5.1}%",
+                st.accel,
+                st.mode,
+                st.batches,
+                st.frames,
+                st.failures,
+                st.busy.as_secs_f64() * 1e3,
+                st.transfer.as_secs_f64() * 1e3,
+                st.stall.as_secs_f64() * 1e3,
+                st.occupancy * 100.0,
             );
         }
         s
@@ -213,6 +288,51 @@ mod tests {
         let r = t.report();
         assert!(r.contains("frames: 1"));
         assert!(r.contains("LOCE 1.500 m"));
+    }
+
+    fn stage(accel: &str, busy_ms: u64, stall_ms: u64, occ: f64) -> StageRecord {
+        StageRecord {
+            accel: accel.to_string(),
+            mode: "dpu-int8",
+            batches: 4,
+            frames: 16,
+            failures: 0,
+            busy: Duration::from_millis(busy_ms),
+            transfer: Duration::from_millis(2),
+            stall: Duration::from_millis(stall_ms),
+            occupancy: occ,
+        }
+    }
+
+    #[test]
+    fn stage_summaries_cover_occupancy_stall_transfer() {
+        let mut t = Telemetry::new();
+        t.record_stage(stage("dpu", 100, 0, 0.8));
+        t.record_stage(stage("vpu", 40, 60, 0.3));
+        let occ = t.stage_occupancy_summary();
+        assert_eq!(occ.len(), 2);
+        assert!((occ.mean() - 0.55).abs() < 1e-12);
+        assert!((occ.percentile(100.0) - 0.8).abs() < 1e-12);
+        assert!((t.stage_stall_summary().max() - 0.060).abs() < 1e-9);
+        assert!((t.stage_transfer_summary().mean() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stage_summaries_empty_without_pipeline() {
+        let t = Telemetry::new();
+        assert!(t.stage_occupancy_summary().is_empty());
+        assert!(t.stage_occupancy_summary().mean().is_nan());
+        assert!(t.stage_stall_summary().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn report_lists_pipeline_stages() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        t.record_stage(stage("dpu", 100, 5, 0.8));
+        let r = t.report();
+        assert!(r.contains("stage dpu"), "{r}");
+        assert!(r.contains("80.0%"), "{r}");
     }
 
     #[test]

@@ -13,12 +13,12 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use mpai::accel::interconnect::links;
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
-use mpai::coordinator::{self, Config, Constraints, Mode, Objective};
-use mpai::net::compiler::{compile, enumerate_cuts, Partition};
+use mpai::coordinator::{self, Config, Constraints, Mode, Objective, PartitionSpec};
+use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
 use mpai::pose::EvalSet;
 use mpai::runtime::Manifest;
@@ -63,7 +63,7 @@ fn print_usage() {
          commands:\n  \
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
-         serve  [--mode M|--pool M,..] [--sim] run the end-to-end coordinator\n  \
+         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] run the coordinator\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points"
@@ -175,7 +175,6 @@ fn measure_mode(
         batch_timeout: Duration::from_millis(1),
         camera_fps: 1000.0,
         frames: frames as u64,
-        pipelined: false,
         ..Default::default()
     };
     let backend = coordinator::PjrtBackend::new(manifest, mode)
@@ -197,7 +196,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         options: vec![
             ("artifacts", "DIR", "artifacts directory (default artifacts)"),
             ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
-            ("pool", "MODES", "comma-separated modes: policy-routed multi-backend dispatch"),
+            ("pool", "[MODES]", "multi-backend pool; bare flag = dpu-int8,vpu-fp16"),
+            ("partition", "SPEC", "auto | accel@layer,..,accel — N-stage pipelined split (sim)"),
+            ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
             ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
             ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
             ("max-ms", "X", "constraint: max modeled total latency (ms)"),
@@ -213,15 +214,29 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let a = spec.parse(argv)?;
     let mode = Mode::from_label(a.get_or("mode", "mpai"))
         .context("bad --mode (see `mpai help`)")?;
-    let pool = match a.get("pool") {
-        None => Vec::new(),
-        Some(list) => list
-            .split(',')
-            .map(|m| {
-                Mode::from_label(m.trim())
-                    .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
-            })
-            .collect::<Result<Vec<Mode>>>()?,
+    let pool = if a.flag("pool") {
+        // Bare `--pool`: the canonical MPAI pair.
+        vec![Mode::DpuInt8, Mode::VpuFp16]
+    } else {
+        match a.get("pool") {
+            None => Vec::new(),
+            Some(list) => list
+                .split(',')
+                .map(|m| {
+                    Mode::from_label(m.trim())
+                        .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
+                })
+                .collect::<Result<Vec<Mode>>>()?,
+        }
+    };
+    let partition = match a.get("partition") {
+        None => None,
+        Some(s) => Some(PartitionSpec::parse(s).map_err(|e| anyhow!("bad --partition: {e}"))?),
+    };
+    let boundary_link = match a.get("link") {
+        None => links::USB3,
+        Some(n) => links::by_name(n)
+            .with_context(|| format!("bad --link {n:?} (usb3|usb2|axi-hp|pcie-x1|csi2)"))?,
     };
     let fail_every = match a.get("fail-every") {
         Some(_) => Some(a.get_usize("fail-every", 0)?),
@@ -233,11 +248,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
         camera_fps: a.get_f64("fps", 10.0)?,
         frames: a.get_usize("frames", 64)? as u64,
-        pipelined: false,
         pool: pool.clone(),
         sim: a.flag("sim"),
         fail_every,
         constraints: parse_constraints(&a)?,
+        partition,
+        boundary_link,
     };
     let engaged = if pool.is_empty() {
         format!("mode {}", mode.label())
@@ -247,8 +263,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", ")
         )
     };
+    let split = match &cfg.partition {
+        Some(PartitionSpec::Auto) => " partition auto".to_string(),
+        Some(PartitionSpec::Manual(stages)) => format!(
+            " partition {}",
+            stages
+                .iter()
+                .map(|s| s.accel.as_str())
+                .collect::<Vec<_>>()
+                .join("|")
+        ),
+        None => String::new(),
+    };
     println!(
-        "mpai serve — {engaged} fps {} frames {}{}",
+        "mpai serve — {engaged}{split} fps {} frames {}{}",
         cfg.camera_fps,
         cfg.frames,
         if cfg.sim { " (simulated backends)" } else { "" }
@@ -366,7 +394,8 @@ fn cmd_cuts(argv: &[String]) -> Result<()> {
         .into_iter()
         .map(|c| {
             let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
-            let lat = partition_latency(&compiled, &p, &accels, &links::USB3);
+            let lat = partition_latency(&compiled, &p, &accels, &links::USB3)
+                .expect("dpu/vpu registered");
             (lat.total_ms(), c.layer_name, c.boundary_bytes, c.macs.0, c.macs.1)
         })
         .collect();
@@ -384,6 +413,20 @@ fn cmd_cuts(argv: &[String]) -> Result<()> {
         println!(
             "{:<24} {:>12.2} {:>14} {:>12.1} {:>12.1}",
             layer, ms, bytes, h as f64 / 1e6, t as f64 / 1e6
+        );
+    }
+
+    // The automatic selection (`serve --partition auto` uses the same
+    // sweep): throughput-optimal, not latency-optimal — pipelining ranks
+    // by the bottleneck stage.
+    if let Some(sel) = select_cut(&compiled, &dpu, &vpu, &links::USB3, &Constraints::default()) {
+        println!(
+            "\nauto-selected cut (steady-state throughput argmax): after {} — \
+             {:.1} FPS pipelined, {:.2} ms sequential, {:.2} J/frame",
+            sel.cut.layer_name,
+            sel.steady_fps,
+            sel.latency.total_ms(),
+            sel.energy_j
         );
     }
 

@@ -5,4 +5,7 @@ pub mod fusion;
 pub mod partition;
 
 pub use fusion::compile;
-pub use partition::{enumerate_cuts, Cut, Partition};
+pub use partition::{
+    enumerate_cuts, evaluate_cut, evaluate_partition, select_cut, Cut, Partition, SelectedCut,
+    Stage,
+};

@@ -5,10 +5,18 @@
 //! A [`Partition`] assigns every non-input layer to exactly one accelerator.
 //! The canonical MPAI partition is a *topological 2-way cut*: prefix on the
 //! fast INT8 engine, suffix on the FP16 engine; [`enumerate_cuts`] yields
-//! every feasible cut with its cross-boundary transfer size.
+//! every feasible cut with its cross-boundary transfer size,
+//! [`Partition::n_way`] generalizes to N contiguous stages, and
+//! [`select_cut`] sweeps the cut space under the analytic estimate model to
+//! pick the steady-state-throughput-optimal feasible cut — the automatic
+//! partitioning methodology §IV asks for.
 
 use std::collections::BTreeMap;
 
+use crate::accel::estimate::{partition_latency, PartitionLatency};
+use crate::accel::interconnect::Link;
+use crate::accel::traits::Accelerator;
+use crate::coordinator::policy::Constraints;
 use crate::net::graph::Graph;
 use crate::net::layers::Op;
 
@@ -24,6 +32,8 @@ pub enum PartitionError {
     WrongArity { got: usize, want: usize },
     Unassigned(String),
     AssignedInput(String),
+    BadCuts(String),
+    NonContiguous(String),
 }
 
 impl std::fmt::Display for PartitionError {
@@ -36,6 +46,11 @@ impl std::fmt::Display for PartitionError {
             PartitionError::AssignedInput(l) => {
                 write!(f, "input layer {l} must not be assigned")
             }
+            PartitionError::BadCuts(msg) => write!(f, "bad cut list: {msg}"),
+            PartitionError::NonContiguous(a) => write!(
+                f,
+                "accelerator {a} owns non-contiguous layer ranges (no linear pipeline order)"
+            ),
         }
     }
 }
@@ -79,6 +94,59 @@ impl Partition {
                 })
                 .collect(),
         }
+    }
+
+    /// N-way topological partition: `cuts[k]` is the last layer id of
+    /// stage `k`; the final stage (`accels.len() - 1 == cuts.len()`) runs
+    /// to the end of the graph.  Every stage must own at least one
+    /// non-input layer.
+    pub fn n_way(g: &Graph, cuts: &[usize], accels: &[&str]) -> Result<Partition, PartitionError> {
+        if accels.len() != cuts.len() + 1 {
+            return Err(PartitionError::BadCuts(format!(
+                "{} stages need {} cuts, got {}",
+                accels.len(),
+                accels.len().saturating_sub(1),
+                cuts.len()
+            )));
+        }
+        if cuts.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(PartitionError::BadCuts(
+                "cut ids must be strictly ascending".into(),
+            ));
+        }
+        if let Some(&last) = cuts.last() {
+            if last + 1 >= g.layers.len() {
+                return Err(PartitionError::BadCuts(format!(
+                    "cut at {last} leaves the final stage empty"
+                )));
+            }
+        }
+        let mut assign = Vec::with_capacity(g.layers.len());
+        for (i, l) in g.layers.iter().enumerate() {
+            if matches!(l.op, Op::Input) {
+                assign.push(String::new());
+            } else {
+                let k = cuts.iter().position(|&c| i <= c).unwrap_or(cuts.len());
+                assign.push(accels[k].to_string());
+            }
+        }
+        let p = Partition { assign };
+        p.validate(g)?;
+        for (k, a) in accels.iter().enumerate() {
+            let lo = if k == 0 { 0 } else { cuts[k - 1] + 1 };
+            let hi = if k == cuts.len() {
+                g.layers.len() - 1
+            } else {
+                cuts[k]
+            };
+            let any = (lo..=hi).any(|i| !matches!(g.layers[i].op, Op::Input));
+            if !any {
+                return Err(PartitionError::BadCuts(format!(
+                    "stage {k} ({a}) owns no non-input layer"
+                )));
+            }
+        }
+        Ok(p)
     }
 
     /// Assign by layer name (the manifest's backbone/head lists).
@@ -153,6 +221,41 @@ impl Partition {
     pub fn transfer_bytes(&self, g: &Graph, elem_bytes: usize) -> usize {
         self.cross_edges(g, elem_bytes).iter().map(|e| e.2).sum()
     }
+
+    /// Decompose into contiguous pipeline stages: maximal runs of
+    /// consecutive layers on one accelerator, in topological order.
+    /// Errors if an accelerator reappears after a different one — such a
+    /// partition has no linear pipeline order.
+    pub fn contiguous_stages(&self, g: &Graph) -> Result<Vec<Stage>, PartitionError> {
+        self.validate(g)?;
+        let mut stages: Vec<Stage> = Vec::new();
+        for (i, a) in self.assign.iter().enumerate() {
+            if a.is_empty() {
+                continue;
+            }
+            match stages.last_mut() {
+                Some(s) if &s.accel == a => s.layers.push(i),
+                _ => {
+                    if stages.iter().any(|s| &s.accel == a) {
+                        return Err(PartitionError::NonContiguous(a.clone()));
+                    }
+                    stages.push(Stage {
+                        accel: a.clone(),
+                        layers: vec![i],
+                    });
+                }
+            }
+        }
+        Ok(stages)
+    }
+}
+
+/// One contiguous pipeline stage of a partition: an accelerator plus the
+/// topological run of non-input layer ids it owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub accel: String,
+    pub layers: Vec<usize>,
 }
 
 /// A candidate 2-way cut with its boundary size.
@@ -197,11 +300,126 @@ pub fn enumerate_cuts(g: &Graph, elem_bytes: usize) -> Vec<Cut> {
     cuts
 }
 
+/// A cut chosen by [`select_cut`], with everything the pipeline builder
+/// needs: the partition itself, its analytic latency breakdown, the
+/// steady-state throughput that ranked it, and the two-engine energy.
+#[derive(Debug, Clone)]
+pub struct SelectedCut {
+    pub cut: Cut,
+    pub partition: Partition,
+    pub latency: PartitionLatency,
+    /// Steady-state pipelined throughput (the selection objective).
+    pub steady_fps: f64,
+    /// Modeled energy per frame summed over both engines (J).
+    pub energy_j: f64,
+}
+
+/// Shared feasibility + scoring for any contiguous partition (used by
+/// [`evaluate_cut`] and the pipeline planner's single-substrate
+/// fallbacks): every assigned layer must be supported by its device, and
+/// the analytic sequential latency / two-engine energy must satisfy
+/// `Constraints::{max_total_ms, max_energy_j}`.  Accuracy bounds are
+/// partition-invariant (they depend on the numerics pairing) and are
+/// checked by the mode policy, not here.  Returns the analytic latency
+/// and energy when feasible.
+pub fn evaluate_partition(
+    g: &Graph,
+    partition: &Partition,
+    accels: &BTreeMap<String, &dyn Accelerator>,
+    link: &Link,
+    constraints: &Constraints,
+) -> Option<(PartitionLatency, f64)> {
+    let supported = g.layers.iter().enumerate().all(|(i, l)| {
+        matches!(l.op, Op::Input)
+            || accels
+                .get(&partition.assign[i])
+                .is_some_and(|a| a.supports(l, &g.in_shapes(i)))
+    });
+    if !supported {
+        return None;
+    }
+    let latency = partition_latency(g, partition, accels, link).ok()?;
+    let total_s = latency.total_s();
+    let energy_j: f64 = latency
+        .segments
+        .iter()
+        .map(|(name, busy)| accels[name].power().energy_j(*busy, total_s))
+        .sum();
+    let over_ms = constraints
+        .max_total_ms
+        .is_some_and(|max| total_s * 1e3 > max);
+    let over_j = constraints.max_energy_j.is_some_and(|max| energy_j > max);
+    if over_ms || over_j {
+        return None;
+    }
+    Some((latency, energy_j))
+}
+
+/// Evaluate one candidate cut under the analytic estimate model.
+/// Returns `None` when the cut is infeasible (see [`evaluate_partition`]).
+pub fn evaluate_cut(
+    g: &Graph,
+    cut: Cut,
+    head: &dyn Accelerator,
+    tail: &dyn Accelerator,
+    link: &Link,
+    constraints: &Constraints,
+) -> Option<SelectedCut> {
+    let mut accels: BTreeMap<String, &dyn Accelerator> = BTreeMap::new();
+    accels.insert(head.name().to_string(), head);
+    accels.insert(tail.name().to_string(), tail);
+
+    let partition = Partition::two_way(g, cut.at, head.name(), tail.name());
+    let (latency, energy_j) = evaluate_partition(g, &partition, &accels, link, constraints)?;
+    let steady_fps = latency.pipelined_fps();
+    Some(SelectedCut {
+        cut,
+        partition,
+        latency,
+        steady_fps,
+        energy_j,
+    })
+}
+
+/// Sweep every topological 2-way cut (head segment on `head`, tail on
+/// `tail`, boundary carried by `link`) and return the feasible cut with
+/// the highest steady-state pipelined throughput.  Ties break toward the
+/// lower sequential latency, then the earlier cut, so selection is
+/// deterministic.  Returns `None` when no cut is feasible (or the two
+/// devices are the same engine — there is nothing to split).
+pub fn select_cut(
+    g: &Graph,
+    head: &dyn Accelerator,
+    tail: &dyn Accelerator,
+    link: &Link,
+    constraints: &Constraints,
+) -> Option<SelectedCut> {
+    if head.name() == tail.name() {
+        return None;
+    }
+    enumerate_cuts(g, 1)
+        .into_iter()
+        .filter_map(|c| evaluate_cut(g, c, head, tail, link, constraints))
+        .fold(None, |best, cand| match best {
+            None => Some(cand),
+            Some(b) => {
+                let better = cand.steady_fps > b.steady_fps
+                    || (cand.steady_fps == b.steady_fps
+                        && cand.latency.total_s() < b.latency.total_s());
+                Some(if better { cand } else { b })
+            }
+        })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::interconnect::links;
+    use crate::accel::{Cpu, Dpu, Tpu, Vpu};
+    use crate::net::layers::{Act, Shape};
     use crate::net::models::ursonet;
     use crate::testkit::{check, Config};
+    use crate::util::prng::Prng;
 
     #[test]
     fn single_partition_validates() {
@@ -295,6 +513,202 @@ mod tests {
             crate::prop_assert!(b2 == 2 * b1, "elem width scaling broken: {b1} {b2}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn n_way_three_stages_cover_exactly_once() {
+        let g = ursonet::build_lite();
+        let c1 = g.layers.iter().position(|l| l.name == "s2_add").unwrap();
+        let c2 = g.layers.iter().position(|l| l.name == "feat_pool").unwrap();
+        let p = Partition::n_way(&g, &[c1, c2], &["dpu", "tpu", "vpu"]).unwrap();
+        let stages = p.contiguous_stages(&g).unwrap();
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[0].accel, "dpu");
+        assert_eq!(stages[1].accel, "tpu");
+        assert_eq!(stages[2].accel, "vpu");
+        let covered: usize = stages.iter().map(|s| s.layers.len()).sum();
+        let non_input = g
+            .layers
+            .iter()
+            .filter(|l| !matches!(l.op, Op::Input))
+            .count();
+        assert_eq!(covered, non_input);
+        // 3-way has two boundaries, both with traffic.
+        assert!(p.cross_edges(&g, 1).len() >= 2);
+    }
+
+    #[test]
+    fn n_way_rejects_bad_cut_lists() {
+        let g = ursonet::build_lite();
+        // Not ascending.
+        assert!(Partition::n_way(&g, &[5, 3], &["a", "b", "c"]).is_err());
+        // Arity mismatch.
+        assert!(Partition::n_way(&g, &[3], &["a"]).is_err());
+        // Final stage empty.
+        assert!(Partition::n_way(&g, &[g.layers.len() - 1], &["a", "b"]).is_err());
+        // First stage owns only the input layer.
+        assert!(Partition::n_way(&g, &[0], &["a", "b"]).is_err());
+    }
+
+    #[test]
+    fn non_contiguous_assignment_has_no_stages() {
+        let g = ursonet::build_lite();
+        let mut p = Partition::two_way(&g, 5, "a", "b");
+        let last = g.layers.len() - 1;
+        p.assign[last] = "a".into(); // a .. b .. a: no linear order
+        assert!(matches!(
+            p.contiguous_stages(&g),
+            Err(PartitionError::NonContiguous(_))
+        ));
+    }
+
+    #[test]
+    fn two_way_stages_match_cut() {
+        let g = ursonet::build_lite();
+        let at = g.layers.iter().position(|l| l.name == "feat_pool").unwrap();
+        let p = Partition::two_way(&g, at, "dpu", "vpu");
+        let stages = p.contiguous_stages(&g).unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(*stages[0].layers.last().unwrap(), at);
+        assert_eq!(stages[1].layers.first().copied(), Some(at + 1));
+    }
+
+    #[test]
+    fn select_cut_deterministic_and_feasible() {
+        let g = ursonet::build_lite();
+        let (dpu, vpu) = (Dpu, Vpu);
+        let c = Constraints::default();
+        let a = select_cut(&g, &dpu, &vpu, &links::USB3, &c).unwrap();
+        let b = select_cut(&g, &dpu, &vpu, &links::USB3, &c).unwrap();
+        assert_eq!(a.cut.at, b.cut.at, "selection must be deterministic");
+        assert!(a.steady_fps > 0.0 && a.energy_j > 0.0);
+        // Impossible latency bound: nothing feasible.
+        let tight = Constraints {
+            max_total_ms: Some(1e-4),
+            ..Default::default()
+        };
+        assert!(select_cut(&g, &dpu, &vpu, &links::USB3, &tight).is_none());
+        // Same engine on both sides: nothing to split.
+        assert!(select_cut(&g, &dpu, &dpu, &links::USB3, &c).is_none());
+    }
+
+    /// Random single-chain CNN: shapes stay valid under the builder's
+    /// shape inference for any k/stride draw below.
+    fn random_chain(rng: &mut Prng) -> Graph {
+        let mut g = Graph::new("rand_chain");
+        let x = g.input("in", Shape::new(32, 32, 3));
+        let mut h = g.conv("c0", x, 8, 3, 1, Act::Relu);
+        let n = 2 + rng.below(6);
+        for i in 0..n {
+            let c = 8 << rng.below(3);
+            let stride = 1 + rng.below(2);
+            let k = if rng.bool(0.5) { 1 } else { 3 };
+            h = g.conv(&format!("c{}", i + 1), h, c, k, stride, Act::Relu);
+        }
+        let p = g.gap("gap", h);
+        g.dense("fc", p, 10, Act::None);
+        g
+    }
+
+    #[test]
+    fn property_select_cut_is_throughput_argmax_and_feasible() {
+        // ISSUE satellite: select_cut returns exactly the steady-throughput
+        // argmax of enumerate_cuts under the analytic model, for random
+        // graphs / device pairs / links / constraints, and never returns
+        // an infeasible cut.
+        check(
+            "select_cut_argmax",
+            Config {
+                cases: 32,
+                ..Config::default()
+            },
+            |ctx| {
+                let g = random_chain(&mut ctx.rng);
+                g.validate().map_err(|e| e.to_string())?;
+                let devices: [Box<dyn Accelerator>; 4] = [
+                    Box::new(Dpu),
+                    Box::new(Vpu),
+                    Box::new(Tpu),
+                    Box::new(Cpu::zcu104()),
+                ];
+                let hi = ctx.rng.below(4);
+                let ti = (hi + 1 + ctx.rng.below(3)) % 4;
+                let head = devices[hi].as_ref();
+                let tail = devices[ti].as_ref();
+                let link = *ctx
+                    .rng
+                    .choose(&[links::USB3, links::USB2, links::AXI_HP, links::PCIE_X1]);
+
+                // Sample a latency bound inside the unconstrained spread so
+                // runs mix all-feasible, some-feasible, and none-feasible.
+                let unconstrained: Vec<SelectedCut> = enumerate_cuts(&g, 1)
+                    .into_iter()
+                    .filter_map(|c| {
+                        evaluate_cut(&g, c, head, tail, &link, &Constraints::default())
+                    })
+                    .collect();
+                crate::prop_assert!(!unconstrained.is_empty(), "no cuts evaluated at all");
+                let constraints = if ctx.rng.bool(0.4) {
+                    Constraints::default()
+                } else {
+                    let lo = unconstrained
+                        .iter()
+                        .map(|s| s.latency.total_ms())
+                        .fold(f64::INFINITY, f64::min);
+                    let hi_ms = unconstrained
+                        .iter()
+                        .map(|s| s.latency.total_ms())
+                        .fold(0.0, f64::max);
+                    Constraints {
+                        max_total_ms: Some(ctx.rng.range(lo * 0.5, hi_ms * 1.1)),
+                        ..Default::default()
+                    }
+                };
+
+                let feasible: Vec<SelectedCut> = enumerate_cuts(&g, 1)
+                    .into_iter()
+                    .filter_map(|c| evaluate_cut(&g, c, head, tail, &link, &constraints))
+                    .collect();
+                let sel = select_cut(&g, head, tail, &link, &constraints);
+                match (feasible.is_empty(), sel) {
+                    (true, None) => {}
+                    (true, Some(s)) => {
+                        return Err(format!(
+                            "selected cut at {} but nothing is feasible",
+                            s.cut.at
+                        ))
+                    }
+                    (false, None) => {
+                        return Err(format!(
+                            "nothing selected but {} cuts are feasible",
+                            feasible.len()
+                        ))
+                    }
+                    (false, Some(s)) => {
+                        let best_fps =
+                            feasible.iter().map(|f| f.steady_fps).fold(0.0, f64::max);
+                        crate::prop_assert!(
+                            s.steady_fps >= best_fps,
+                            "selected {} FPS < argmax {} FPS",
+                            s.steady_fps,
+                            best_fps
+                        );
+                        crate::prop_assert!(
+                            feasible.iter().any(|f| f.cut.at == s.cut.at),
+                            "selected cut {} is not in the feasible set",
+                            s.cut.at
+                        );
+                        if let Some(max) = constraints.max_total_ms {
+                            crate::prop_assert!(
+                                s.latency.total_ms() <= max,
+                                "selected cut violates max_total_ms"
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Tiny CLI argument parser (clap substitute for the offline build).
 //!
-//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
-//! positional arguments, with generated usage text.  Only what the `mpai`
-//! binary and examples need — deliberately no derive magic.
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! optional-value options (`[PLACEHOLDER]` spec: value may be omitted, in
+//! which case the key parses as a flag — `--pool` vs `--pool dpu-int8`),
+//! and positional arguments, with generated usage text.  Only what the
+//! `mpai` binary and examples need — deliberately no derive magic.
 
 use std::collections::BTreeMap;
 
@@ -54,6 +56,8 @@ impl Spec {
         for (k, v, help) in &self.options {
             let left = if v.is_empty() {
                 format!("--{k}")
+            } else if v.starts_with('[') {
+                format!("--{k} {v}")
             } else {
                 format!("--{k} <{v}>")
             };
@@ -70,10 +74,16 @@ impl Spec {
             .filter(|(_, v, _)| v.is_empty())
             .map(|(k, _, _)| *k)
             .collect();
+        let known_optional: Vec<&str> = self
+            .options
+            .iter()
+            .filter(|(_, v, _)| v.starts_with('['))
+            .map(|(k, _, _)| *k)
+            .collect();
         let known_opts: Vec<&str> = self
             .options
             .iter()
-            .filter(|(_, v, _)| !v.is_empty())
+            .filter(|(_, v, _)| !v.is_empty() && !v.starts_with('['))
             .map(|(k, _, _)| *k)
             .collect();
 
@@ -88,6 +98,22 @@ impl Spec {
                 };
                 if known_flags.contains(&key.as_str()) {
                     out.flags.push(key);
+                } else if known_optional.contains(&key.as_str()) {
+                    // Value may be omitted: `--pool --partition auto` reads
+                    // the key as a bare flag; `--pool dpu-int8,mpai` (or the
+                    // `=` form) as a valued option.
+                    match inline_val {
+                        Some(v) => {
+                            out.opts.insert(key, v);
+                        }
+                        None => match argv.get(i + 1) {
+                            Some(next) if !next.starts_with("--") => {
+                                i += 1;
+                                out.opts.insert(key, next.clone());
+                            }
+                            _ => out.flags.push(key),
+                        },
+                    }
                 } else if known_opts.contains(&key.as_str()) {
                     let val = match inline_val {
                         Some(v) => v,
@@ -160,6 +186,7 @@ mod tests {
                 ("rate", "HZ", "frame rate"),
                 ("verbose", "", "chatty"),
                 ("out", "PATH", "output"),
+                ("pool", "[MODES]", "optional-value"),
             ],
         }
     }
@@ -214,8 +241,29 @@ mod tests {
     #[test]
     fn usage_mentions_all_options() {
         let u = spec().usage();
-        for k in ["count", "rate", "verbose", "out"] {
+        for k in ["count", "rate", "verbose", "out", "pool"] {
             assert!(u.contains(k));
         }
+    }
+
+    #[test]
+    fn optional_value_takes_a_value_when_present() {
+        let a = spec().parse(&sv(&["--pool", "dpu-int8,mpai"])).unwrap();
+        assert_eq!(a.get("pool"), Some("dpu-int8,mpai"));
+        assert!(!a.flag("pool"));
+        let a = spec().parse(&sv(&["--pool=mpai"])).unwrap();
+        assert_eq!(a.get("pool"), Some("mpai"));
+    }
+
+    #[test]
+    fn optional_value_degrades_to_flag() {
+        // Followed by another option: the value is omitted.
+        let a = spec().parse(&sv(&["--pool", "--count", "3"])).unwrap();
+        assert!(a.flag("pool"));
+        assert_eq!(a.get("pool"), None);
+        assert_eq!(a.get_usize("count", 0).unwrap(), 3);
+        // At the end of argv.
+        let a = spec().parse(&sv(&["--verbose", "--pool"])).unwrap();
+        assert!(a.flag("pool") && a.flag("verbose"));
     }
 }

@@ -191,6 +191,53 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+        assert!(s.p50().is_nan() && s.p99().is_nan());
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn empty_extrema_and_spread() {
+        // Documented sentinel behavior of the fold-based extrema: an empty
+        // sample set yields the fold identities, and std is defined as 0
+        // below two samples.
+        let s = Summary::new();
+        assert_eq!(s.min(), f64::INFINITY);
+        assert_eq!(s.max(), f64::NEG_INFINITY);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_every_percentile_is_that_sample() {
+        let s = Summary::from(&[42.5]);
+        for p in [0.0, 1.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 42.5, "p{p}");
+        }
+        assert_eq!(s.mean(), 42.5);
+        assert_eq!((s.min(), s.max()), (42.5, 42.5));
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn tied_samples_collapse_percentiles() {
+        let s = Summary::from(&[5.0, 5.0, 5.0, 5.0]);
+        for p in [0.0, 33.3, 50.0, 66.6, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 5.0, "p{p}");
+        }
+        assert_eq!(s.std(), 0.0);
+        // Partial ties interpolate only across the distinct tail.
+        let s = Summary::from(&[1.0, 1.0, 1.0, 3.0]);
+        assert_eq!(s.p50(), 1.0);
+        assert_eq!(s.percentile(100.0), 3.0);
+        assert!((s.percentile(75.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_input_percentiles_sort_first() {
+        let s = Summary::from(&[9.0, 1.0, 5.0]);
+        assert_eq!(s.p50(), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 9.0);
     }
 
     #[test]

@@ -40,7 +40,6 @@ fn run_mode(dir: &Path, mode: Mode, frames: u64) -> coordinator::RunOutput {
         batch_timeout: Duration::from_millis(1),
         camera_fps: 1000.0,
         frames,
-        pipelined: false,
         ..Default::default()
     };
     let backend = coordinator::PjrtBackend::new(&manifest, mode).unwrap();
