@@ -38,11 +38,7 @@ fn main() -> Result<()> {
     // 4. One batch of frames through the full path.
     let frames: Vec<_> = camera.by_ref().collect();
     let t_ready = frames.last().unwrap().t_capture;
-    let batch = Batch {
-        size: manifest.batch,
-        t_ready,
-        frames,
-    };
+    let batch = Batch::new(frames, manifest.batch, t_ready);
     let estimates = scheduler.process(&batch)?;
 
     for est in &estimates {

@@ -1,0 +1,209 @@
+//! Bench AB-MT: multi-tenant QoS ablation — one shared substrate pool
+//! under admission control vs the best static substrate split, on the
+//! Table I profiles (simulated DPU+VPU, paper-scale service times).
+//!
+//! Three gates (the ISSUE acceptance criteria), all deterministic:
+//!
+//! * **shared ≥ split** — serving a 3-tenant mix (realtime + standard +
+//!   sheddable background) on the shared pool sustains at least the
+//!   throughput of the best static assignment of tenants to substrates
+//!   (every split strands idle capacity the shared pool scavenges);
+//! * **realtime isolation** — sweeping the background arrival rate from
+//!   zero to flood leaves the realtime class's deadline-miss count
+//!   unchanged (strict class priority + bounded background backlog);
+//! * **failover** — with periodic faults injected on the fastest backend,
+//!   every realtime frame is still served (failover; nothing shed).
+//!
+//! `MPAI_BENCH_SMOKE=1` shortens the runs (CI smoke mode).
+
+use mpai::coordinator::{self, Config, Mode, RunOutput, Workload};
+use std::time::Duration;
+
+/// All tenants serve the calibrated network (cost 1.0), so the ablation
+/// isolates scheduling — not per-network service-time ratios.
+fn mix(bg_rate: Option<f64>, scale: u64) -> Vec<Workload> {
+    let mut ws = vec![
+        Workload::parse(&format!(
+            "rt:net=ursonet,qos=realtime,deadline_ms=8000,rate=8,frames={}",
+            32 * scale
+        ))
+        .expect("rt spec"),
+        Workload::parse(&format!(
+            "std:net=ursonet,qos=standard,deadline_ms=12000,rate=4,frames={}",
+            16 * scale
+        ))
+        .expect("std spec"),
+    ];
+    if let Some(rate) = bg_rate {
+        ws.push(
+            Workload::parse(&format!(
+                "bg:net=ursonet,qos=background,deadline_ms=1000,rate={rate},frames={}",
+                96 * scale
+            ))
+            .expect("bg spec"),
+        );
+    }
+    ws
+}
+
+fn run_mix(pool: Vec<Mode>, workloads: Vec<Workload>, fail_every: Option<usize>) -> RunOutput {
+    let cfg = Config {
+        sim: true,
+        pool,
+        workloads,
+        fail_every,
+        batch_timeout: Duration::from_millis(400),
+        ..Default::default()
+    };
+    coordinator::run(&cfg).expect("multi-tenant sim run")
+}
+
+/// Simulated run window (s), recovered from busy/utilization accounting.
+fn sim_window_s(out: &RunOutput) -> f64 {
+    out.telemetry
+        .backends
+        .iter()
+        .filter(|b| b.utilization > 0.0)
+        .map(|b| b.busy.as_secs_f64() / b.utilization)
+        .fold(0.0, f64::max)
+}
+
+fn completed(out: &RunOutput) -> u64 {
+    out.telemetry.tenants.iter().map(|t| t.completed).sum()
+}
+
+fn report(label: &str, out: &RunOutput) {
+    println!("--- {label} ---");
+    for t in &out.telemetry.tenants {
+        let lat = t.latency_summary();
+        println!(
+            "  {:<4} ({:<10}) admitted {:>4}  completed {:>4}  shed {:>4}  \
+             misses {:>3}  lat p50 {:>7.0} ms  p99 {:>7.0} ms",
+            t.name,
+            t.qos,
+            t.admitted,
+            t.completed,
+            t.shed,
+            t.deadline_misses,
+            lat.p50() * 1e3,
+            lat.p99() * 1e3,
+        );
+    }
+}
+
+fn main() {
+    println!("=== AB-MT: multi-tenant QoS ablation (Table I profiles) ===\n");
+    let smoke = std::env::var("MPAI_BENCH_SMOKE").is_ok();
+    let scale: u64 = if smoke { 1 } else { 3 };
+    let bg_rate = 24.0;
+    let pool = vec![Mode::DpuInt8, Mode::VpuFp16];
+
+    // ---- Gate 1: shared pool vs best static substrate split --------------
+    let shared = run_mix(pool.clone(), mix(Some(bg_rate), scale), None);
+    let shared_window = sim_window_s(&shared);
+    let shared_fps = completed(&shared) as f64 / shared_window;
+    report(
+        &format!("shared pool: {shared_fps:.1} FPS over {shared_window:.2} sim s"),
+        &shared,
+    );
+
+    // Every static assignment of the 3 tenants to the 2 substrates: each
+    // tenant is pinned to one substrate, substrates run independently.
+    let all = mix(Some(bg_rate), scale);
+    let mut best_split_fps = 0.0_f64;
+    let mut best_split = String::new();
+    for assign in 0..(1u32 << all.len()) {
+        let (mut dpu_ws, mut vpu_ws) = (Vec::new(), Vec::new());
+        for (i, w) in all.iter().enumerate() {
+            if assign & (1 << i) == 0 {
+                dpu_ws.push(w.clone());
+            } else {
+                vpu_ws.push(w.clone());
+            }
+        }
+        let mut done = 0u64;
+        let mut window = 0.0_f64;
+        for (mode, ws) in [(Mode::DpuInt8, dpu_ws), (Mode::VpuFp16, vpu_ws)] {
+            if ws.is_empty() {
+                continue;
+            }
+            let out = run_mix(vec![mode], ws, None);
+            done += completed(&out);
+            window = window.max(sim_window_s(&out));
+        }
+        let fps = if window > 0.0 { done as f64 / window } else { 0.0 };
+        let label: Vec<String> = all
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let sub = if assign & (1 << i) == 0 { "dpu" } else { "vpu" };
+                format!("{}→{sub}", w.name)
+            })
+            .collect();
+        println!("split [{}]: {fps:.1} FPS", label.join(", "));
+        if fps > best_split_fps {
+            best_split_fps = fps;
+            best_split = label.join(", ");
+        }
+    }
+    println!("\nbest static split [{best_split}]: {best_split_fps:.1} FPS");
+
+    // ---- Gate 2: realtime deadline misses vs background-load sweep -------
+    let mut rt_misses = Vec::new();
+    for rate in [None, Some(bg_rate), Some(4.0 * bg_rate)] {
+        let out = run_mix(pool.clone(), mix(rate, scale), None);
+        let rt = &out.telemetry.tenants[0];
+        println!(
+            "bg rate {:>5}: rt misses {} (p99 {:.0} ms), bg shed {}",
+            rate.map(|r| r.to_string()).unwrap_or_else(|| "off".into()),
+            rt.deadline_misses,
+            rt.latency_summary().p99() * 1e3,
+            out.telemetry.shed_total(),
+        );
+        rt_misses.push(rt.deadline_misses);
+    }
+
+    // ---- Gate 3: failover under injected faults --------------------------
+    let faulty = run_mix(pool.clone(), mix(Some(bg_rate), scale), Some(3));
+    report("with a fault every 3rd infer on the first backend", &faulty);
+    let faults: usize = faulty.telemetry.backends.iter().map(|b| b.failures).sum();
+
+    // ---- Gates -----------------------------------------------------------
+    assert!(
+        shared_fps >= best_split_fps * 0.999,
+        "shared pool {shared_fps:.2} FPS must sustain at least the best \
+         static split {best_split_fps:.2} FPS [{best_split}]"
+    );
+    let rt_shared = &shared.telemetry.tenants[0];
+    assert_eq!(
+        (rt_shared.admitted, rt_shared.shed),
+        (32 * scale, 0),
+        "realtime class must never shed"
+    );
+    assert!(
+        rt_misses.iter().all(|&m| m == rt_misses[0]),
+        "realtime deadline misses moved under background sweep: {rt_misses:?}"
+    );
+    assert_eq!(rt_misses[0], 0, "realtime misses in the unloaded baseline");
+    let bg_shared = &shared.telemetry.tenants[2];
+    assert!(bg_shared.shed > 0, "background flood never shed (load too low)");
+    assert_eq!(
+        bg_shared.admitted + bg_shared.shed,
+        96 * scale,
+        "background frames lost outside the recorded shed count"
+    );
+    let rt_faulty = &faulty.telemetry.tenants[0];
+    assert_eq!(
+        (rt_faulty.admitted, rt_faulty.completed, rt_faulty.shed),
+        (32 * scale, 32 * scale, 0),
+        "failover lost realtime frames"
+    );
+    assert!(faults > 0, "fault injection never fired");
+
+    println!(
+        "\nablation gates held: shared {shared_fps:.1} FPS ≥ best split \
+         {best_split_fps:.1} FPS ({:.2}x), realtime misses flat {rt_misses:?}, \
+         failover preserved all realtime frames ({faults} faults).",
+        shared_fps / best_split_fps
+    );
+}

@@ -8,6 +8,7 @@
 
 use std::time::Duration;
 
+use crate::coordinator::policy::Constraints;
 use crate::sensor::Frame;
 
 /// A dispatchable batch of frames.
@@ -19,9 +20,32 @@ pub struct Batch {
     pub size: usize,
     /// Simulated time at which the batch became ready (deadline or full).
     pub t_ready: Duration,
+    /// Modeled service-cost multiplier of this batch's network relative to
+    /// the calibrated profile network (1.0 = the profile's own network);
+    /// multi-tenant serving scales each tenant's modeled service time by
+    /// its network's complexity through this.
+    pub cost: f64,
+    /// Index of the submitting tenant (0 for single-workload runs).
+    pub tenant: usize,
+    /// Per-batch constraints (the submitting tenant's), combined with the
+    /// engine-level constraints at admission.
+    pub constraints: Constraints,
 }
 
 impl Batch {
+    /// A plain batch with default scheduling metadata (cost 1.0, tenant 0,
+    /// unconstrained) — what single-workload callers construct.
+    pub fn new(frames: Vec<Frame>, size: usize, t_ready: Duration) -> Batch {
+        Batch {
+            frames,
+            size,
+            t_ready,
+            cost: 1.0,
+            tenant: 0,
+            constraints: Constraints::default(),
+        }
+    }
+
     pub fn real_count(&self) -> usize {
         self.frames.len()
     }
@@ -37,6 +61,9 @@ pub struct Batcher {
     size: usize,
     timeout: Duration,
     pending: Vec<Frame>,
+    cost: f64,
+    tenant: usize,
+    constraints: Constraints,
 }
 
 impl Batcher {
@@ -46,7 +73,28 @@ impl Batcher {
             size,
             timeout,
             pending: Vec::new(),
+            cost: 1.0,
+            tenant: 0,
+            constraints: Constraints::default(),
         }
+    }
+
+    /// Builder: service-cost multiplier stamped on every emitted batch.
+    pub fn with_cost(mut self, cost: f64) -> Batcher {
+        self.cost = cost;
+        self
+    }
+
+    /// Builder: tenant index stamped on every emitted batch.
+    pub fn with_tenant(mut self, tenant: usize) -> Batcher {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Builder: per-batch constraints stamped on every emitted batch.
+    pub fn with_constraints(mut self, constraints: Constraints) -> Batcher {
+        self.constraints = constraints;
+        self
     }
 
     /// Offer a frame; returns a batch if it became full.
@@ -68,24 +116,35 @@ impl Batcher {
 
     /// Check the timeout against the current simulated time.
     pub fn poll(&mut self, now: Duration) -> Option<Batch> {
-        let oldest = self.pending.first()?.t_capture;
-        if now.saturating_sub(oldest) >= self.timeout {
-            return self.take(Some(now));
-        }
-        None
+        self.drain(now, false)
     }
 
     /// Flush whatever is pending (end of stream).
     pub fn flush(&mut self, now: Duration) -> Option<Batch> {
-        if self.pending.is_empty() {
-            None
-        } else {
-            self.take(Some(now))
-        }
+        self.drain(now, true)
+    }
+
+    /// Drop every pending frame without forming a batch (admission
+    /// backpressure).  Returns the shed frames so callers can count them —
+    /// shedding is never silent.
+    pub fn shed(&mut self) -> Vec<Frame> {
+        self.pending.drain(..).collect()
     }
 
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Shared drain behind `poll`/`flush`: emit the pending frames when
+    /// `force` (end of stream) or when the oldest has aged past the
+    /// timeout; `None` when nothing is pending or the timeout hasn't hit.
+    fn drain(&mut self, now: Duration, force: bool) -> Option<Batch> {
+        let oldest = self.pending.first()?.t_capture;
+        if force || now.saturating_sub(oldest) >= self.timeout {
+            self.take(Some(now))
+        } else {
+            None
+        }
     }
 
     fn take(&mut self, now: Option<Duration>) -> Option<Batch> {
@@ -95,6 +154,9 @@ impl Batcher {
             size: self.size,
             t_ready,
             frames,
+            cost: self.cost,
+            tenant: self.tenant,
+            constraints: self.constraints,
         })
     }
 }
@@ -161,6 +223,59 @@ mod tests {
         let batch = b.flush(Duration::from_millis(5)).unwrap();
         assert_eq!(batch.real_count(), 1);
         assert!(b.flush(Duration::from_millis(6)).is_none());
+    }
+
+    #[test]
+    fn shed_drops_pending_and_reports_them() {
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(frame(0, 0));
+        b.push(frame(1, 10));
+        let dropped = b.shed();
+        assert_eq!(dropped.iter().map(|f| f.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.deadline(), None);
+        assert!(b.shed().is_empty());
+    }
+
+    #[test]
+    fn padded_flush_after_shed_reports_real_count() {
+        // ISSUE satellite regression: shedding must not pollute the next
+        // batch — a padded flush afterwards carries only the fresh frames.
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        b.push(frame(0, 0));
+        b.push(frame(1, 5));
+        b.push(frame(2, 10));
+        assert_eq!(b.shed().len(), 3);
+        b.push(frame(3, 20));
+        b.push(frame(4, 25));
+        let batch = b.flush(Duration::from_millis(30)).expect("pending flush");
+        assert_eq!(batch.real_count(), 2);
+        assert!(batch.is_padded());
+        assert_eq!(
+            batch.frames.iter().map(|f| f.id).collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+    }
+
+    #[test]
+    fn batch_metadata_stamped_by_builders() {
+        use crate::coordinator::policy::Constraints;
+        let mut b = Batcher::new(2, Duration::from_millis(50))
+            .with_cost(1.5)
+            .with_tenant(3)
+            .with_constraints(Constraints {
+                max_loce_m: Some(0.7),
+                ..Default::default()
+            });
+        b.push(frame(0, 0));
+        let batch = b.push(frame(1, 5)).expect("full batch");
+        assert_eq!(batch.cost, 1.5);
+        assert_eq!(batch.tenant, 3);
+        assert_eq!(batch.constraints.max_loce_m, Some(0.7));
+        // The plain constructor defaults the metadata.
+        let plain = Batch::new(vec![frame(2, 10)], 4, Duration::from_millis(10));
+        assert_eq!((plain.cost, plain.tenant), (1.0, 0));
+        assert_eq!(plain.constraints.max_loce_m, None);
     }
 
     #[test]

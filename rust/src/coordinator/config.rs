@@ -1,11 +1,13 @@
 //! Coordinator configuration: execution modes (the Table I rows), the
-//! partition spec for pipelined serving, and runtime knobs.
+//! partition spec for pipelined serving, multi-tenant workload specs, and
+//! runtime knobs.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::accel::interconnect::{links, Link};
-use crate::coordinator::policy::Constraints;
+use crate::coordinator::policy::{Constraints, QosClass};
+use crate::util::json::{self, Json};
 
 /// One deployable configuration = one Table I row.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -159,6 +161,167 @@ impl PartitionSpec {
     }
 }
 
+/// One tenant of a multi-tenant serve run: a named workload with its own
+/// network, QoS class, per-frame deadline, arrival rate, and constraints.
+/// All tenants share the run's substrate pool through the engine's
+/// admission layer (`coordinator::engine`).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    /// Model-zoo network this tenant serves (`net::models::by_name`).
+    pub net: String,
+    pub qos: QosClass,
+    /// Per-frame completion deadline, measured from capture.
+    pub deadline: Duration,
+    /// Arrival rate of this tenant's camera (frames/s).
+    pub rate_fps: f64,
+    /// Total frames the tenant emits.
+    pub frames: u64,
+    /// Constraints gating which substrates may serve this tenant.
+    pub constraints: Constraints,
+}
+
+impl Workload {
+    fn with_name(name: &str) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos: QosClass::Standard,
+            deadline: Duration::from_millis(1000),
+            rate_fps: 10.0,
+            frames: 64,
+            constraints: Constraints::default(),
+        }
+    }
+
+    fn validate(self) -> Result<Workload, String> {
+        if self.name.is_empty() {
+            return Err("workload name must be non-empty".into());
+        }
+        if crate::net::models::by_name(&self.net).is_none() {
+            return Err(format!(
+                "workload {:?}: unknown network {:?} (see `mpai inspect`)",
+                self.name, self.net
+            ));
+        }
+        // Bounded range (not just finite/positive): the camera converts
+        // 1/rate to a Duration, which panics outside representable range.
+        if !self.rate_fps.is_finite() || !(1e-3..=1e9).contains(&self.rate_fps) {
+            return Err(format!(
+                "workload {:?}: rate must be in [0.001, 1e9] frames/s",
+                self.name
+            ));
+        }
+        if self.deadline.is_zero() {
+            return Err(format!("workload {:?}: deadline must be > 0", self.name));
+        }
+        Ok(self)
+    }
+
+    fn apply_kv(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let name = self.name.clone();
+        let bad = move |hint: &str| format!("workload {name:?}: bad {key}={val:?} ({hint})");
+        let f64_of = |v: &str, hint: &str| v.parse::<f64>().map_err(|_| bad(hint));
+        match key {
+            "net" => self.net = val.to_string(),
+            "qos" => {
+                self.qos = QosClass::parse(val)
+                    .ok_or_else(|| bad("realtime|standard|background"))?;
+            }
+            "deadline_ms" => {
+                let ms = f64_of(val, "milliseconds")?;
+                // Bounded (not just finite): Duration::from_secs_f64
+                // panics on values outside its representable range.
+                if !ms.is_finite() || !(0.0..=1e12).contains(&ms) {
+                    return Err(bad("milliseconds in [0, 1e12]"));
+                }
+                self.deadline = Duration::from_secs_f64(ms / 1e3);
+            }
+            "rate" => self.rate_fps = f64_of(val, "frames/s")?,
+            "frames" => {
+                self.frames = val.parse::<u64>().map_err(|_| bad("frame count"))?;
+            }
+            "max-ms" | "max_ms" => self.constraints.max_total_ms = Some(f64_of(val, "ms")?),
+            "max-loce" | "max_loce" => {
+                self.constraints.max_loce_m = Some(f64_of(val, "metres")?);
+            }
+            "max-orie" | "max_orie" => {
+                self.constraints.max_orie_deg = Some(f64_of(val, "degrees")?);
+            }
+            "max-energy" | "max_energy" => {
+                self.constraints.max_energy_j = Some(f64_of(val, "joules")?);
+            }
+            _ => {
+                return Err(format!(
+                    "workload {:?}: unknown key {key:?} (net, qos, deadline_ms, rate, \
+                     frames, max-ms, max-loce, max-orie, max-energy)",
+                    self.name
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a CLI workload spec:
+    /// `NAME:net=NET,qos=CLASS,deadline_ms=N,rate=HZ[,frames=N][,max-loce=X,..]`.
+    /// A bare `NAME` takes every default (standard class, ursonet_full).
+    pub fn parse(spec: &str) -> Result<Workload, String> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let mut w = Workload::with_name(name);
+        if let Some(rest) = rest {
+            for part in rest.split(',') {
+                let (k, v) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("workload {name:?}: {part:?} is not key=value"))?;
+                w.apply_kv(k.trim(), v.trim())?;
+            }
+        }
+        w.validate()
+    }
+
+    /// Build a workload from a `--tenants` JSON object:
+    /// `{"name": "...", "net": "...", "qos": "...", "deadline_ms": N,
+    ///   "rate": HZ, "frames": N, "max_loce": X, ...}`.
+    pub fn from_json(v: &Json) -> Result<Workload, String> {
+        let obj = v.as_obj().ok_or("workload entry must be a JSON object")?;
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("workload entry needs a string \"name\"")?;
+        let mut w = Workload::with_name(name);
+        for (key, val) in obj {
+            if key == "name" {
+                continue;
+            }
+            // Re-use the CLI key grammar: numbers/strings stringify cleanly.
+            let text = match val {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            w.apply_kv(key, &text)?;
+        }
+        w.validate()
+    }
+}
+
+/// Parse a `--tenants FILE` document: either a bare JSON array of workload
+/// objects or `{"workloads": [...]}`.
+pub fn parse_tenant_file(text: &str) -> Result<Vec<Workload>, String> {
+    let doc = json::parse(text).map_err(|e| e.to_string())?;
+    let arr = match doc.get("workloads") {
+        Some(v) => v.as_arr(),
+        None => doc.as_arr(),
+    }
+    .ok_or("tenants file must be a JSON array or {\"workloads\": [...]}")?;
+    if arr.is_empty() {
+        return Err("tenants file lists no workloads".into());
+    }
+    arr.iter().map(Workload::from_json).collect()
+}
+
 /// Runtime configuration of the coordinator.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -188,6 +351,9 @@ pub struct Config {
     pub partition: Option<PartitionSpec>,
     /// Link carrying cross-stage boundary tensors.
     pub boundary_link: Link,
+    /// Multi-tenant serving: N workloads sharing the substrate pool under
+    /// QoS-aware admission (empty = classic single-workload serve).
+    pub workloads: Vec<Workload>,
 }
 
 impl Default for Config {
@@ -204,6 +370,7 @@ impl Default for Config {
             constraints: Constraints::default(),
             partition: None,
             boundary_link: links::USB3,
+            workloads: Vec::new(),
         }
     }
 }
@@ -270,6 +437,68 @@ mod tests {
         // Three stages.
         let p3 = PartitionSpec::parse("dpu@s2_add,tpu@feat_pool,vpu").unwrap();
         assert!(matches!(p3, PartitionSpec::Manual(s) if s.len() == 3));
+    }
+
+    #[test]
+    fn workload_spec_parses_full_and_bare_forms() {
+        let w = Workload::parse(
+            "rt:net=ursonet,qos=realtime,deadline_ms=500,rate=8,frames=24,max-loce=0.7",
+        )
+        .unwrap();
+        assert_eq!(w.name, "rt");
+        assert_eq!(w.net, "ursonet");
+        assert_eq!(w.qos, QosClass::Realtime);
+        assert_eq!(w.deadline, Duration::from_millis(500));
+        assert_eq!(w.rate_fps, 8.0);
+        assert_eq!(w.frames, 24);
+        assert_eq!(w.constraints.max_loce_m, Some(0.7));
+
+        // Bare name: every default.
+        let w = Workload::parse("plain").unwrap();
+        assert_eq!(w.name, "plain");
+        assert_eq!(w.qos, QosClass::Standard);
+        assert_eq!(w.net, "ursonet_full");
+    }
+
+    #[test]
+    fn workload_spec_rejects_bad_fields() {
+        assert!(Workload::parse("").is_err());
+        assert!(Workload::parse("t:net=vgg16").is_err());
+        assert!(Workload::parse("t:qos=bulk").is_err());
+        assert!(Workload::parse("t:rate=0").is_err());
+        assert!(Workload::parse("t:deadline_ms=0").is_err());
+        assert!(Workload::parse("t:bogus=1").is_err());
+        assert!(Workload::parse("t:rate").is_err());
+        // Extreme finite values are rejected, not passed into Duration
+        // conversions that panic.
+        assert!(Workload::parse("t:deadline_ms=1e23").is_err());
+        assert!(Workload::parse("t:deadline_ms=-5").is_err());
+        assert!(Workload::parse("t:deadline_ms=nan").is_err());
+        assert!(Workload::parse("t:rate=1e-300").is_err());
+        assert!(Workload::parse("t:rate=1e300").is_err());
+    }
+
+    #[test]
+    fn tenant_file_parses_both_json_shapes() {
+        let arr = r#"[
+          {"name": "rt", "net": "ursonet_full", "qos": "realtime",
+           "deadline_ms": 500, "rate": 8, "frames": 24},
+          {"name": "bg", "qos": "background", "max_loce": 0.7}
+        ]"#;
+        let ws = parse_tenant_file(arr).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].qos, QosClass::Realtime);
+        assert_eq!(ws[0].deadline, Duration::from_millis(500));
+        assert_eq!(ws[1].name, "bg");
+        assert_eq!(ws[1].constraints.max_loce_m, Some(0.7));
+
+        let wrapped = format!("{{\"workloads\": {arr}}}");
+        assert_eq!(parse_tenant_file(&wrapped).unwrap().len(), 2);
+
+        assert!(parse_tenant_file("{}").is_err());
+        assert!(parse_tenant_file("[]").is_err());
+        assert!(parse_tenant_file("[{\"net\": \"ursonet_full\"}]").is_err());
+        assert!(parse_tenant_file("not json").is_err());
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * per-backend utilization, failure counts, and queue depth are recorded
 //!   in [`Telemetry`].
 //!
+//! Execution is reachable only through the unified [`Engine`] trait
+//! (submit/poll/drain/fault) — the same surface the partition-aware
+//! pipeline serves, so the serve loops drive either interchangeably.
+//!
 //! Time is the coordinator's simulated clock (frame capture timestamps), so
 //! routing decisions are reproducible; host wall-clock is still measured
 //! and reported per frame, exactly as in the single-backend path.
@@ -22,10 +26,11 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::config::Mode;
+use crate::coordinator::engine::{Completion, Engine};
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{decode_batch, prepare_batch, Backend, PoseEstimate};
 use crate::coordinator::telemetry::{BackendRecord, Telemetry};
@@ -58,12 +63,15 @@ struct PoolEntry {
 }
 
 impl PoolEntry {
-    /// Expected service time for one padded batch on this backend.
-    fn service_estimate(&self, artifact_batch: usize) -> Duration {
+    /// Expected service time for one padded batch on this backend.  `cost`
+    /// scales the *modeled* estimate for batches serving a network other
+    /// than the profile's calibrated one (multi-tenant); the observed-host
+    /// fallback is a direct measurement and is not scaled.
+    fn service_estimate(&self, artifact_batch: usize, cost: f64) -> Duration {
         match &self.profile {
             // The modeled profile is per-frame at paper scale; the device
             // executes the padded artifact batch end-to-end.
-            Some(p) => Duration::from_secs_f64(p.total_ms / 1e3 * artifact_batch as f64),
+            Some(p) => Duration::from_secs_f64(p.total_ms / 1e3 * artifact_batch as f64 * cost),
             None if self.observed_n > 0 => {
                 Duration::from_secs_f64(self.observed_s / self.observed_n as f64)
             }
@@ -71,8 +79,8 @@ impl PoolEntry {
         }
     }
 
-    fn estimated_completion(&self, t_ready: Duration, artifact_batch: usize) -> Duration {
-        self.busy_until.max(t_ready) + self.service_estimate(artifact_batch)
+    fn estimated_completion(&self, t_ready: Duration, artifact_batch: usize, cost: f64) -> Duration {
+        self.busy_until.max(t_ready) + self.service_estimate(artifact_batch, cost)
     }
 }
 
@@ -85,6 +93,8 @@ pub struct Dispatcher {
     constraints: Constraints,
     /// Latest batch-ready instant seen (simulated run clock).
     clock: Duration,
+    /// Executed batches awaiting [`Engine::poll`].
+    completed: Vec<Completion>,
     pub telemetry: Telemetry,
 }
 
@@ -97,6 +107,7 @@ impl Dispatcher {
             net_w,
             constraints,
             clock: Duration::ZERO,
+            completed: Vec::new(),
             telemetry: Telemetry::new(),
         }
     }
@@ -128,19 +139,12 @@ impl Dispatcher {
         self.entries.is_empty()
     }
 
-    /// Mode of the pool's first backend (the run's primary mode).
-    pub fn primary_mode(&self) -> Option<Mode> {
-        self.entries.first().map(|e| e.backend.mode())
-    }
-
-    /// The artifact batch size every backend executes.
-    pub fn artifact_batch(&self) -> usize {
-        self.batch
-    }
-
     /// Route one batch: preprocess once, then try feasible backends in
     /// least-estimated-completion order, failing over on infer errors.
-    pub fn process(&mut self, batch: &Batch) -> Result<Vec<PoseEstimate>> {
+    /// Feasibility merges the pool-level constraints with the batch's own
+    /// (the submitting tenant's).  Returns the estimates and the batch's
+    /// simulated completion instant.
+    fn execute(&mut self, batch: &Batch) -> Result<(Vec<PoseEstimate>, Duration)> {
         let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
         let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
         let t_ready = batch.t_ready;
@@ -148,7 +152,7 @@ impl Dispatcher {
 
         let mut order: Vec<usize> = (0..self.entries.len())
             .filter(|&i| match &self.entries[i].profile {
-                Some(p) => self.constraints.admits(p),
+                Some(p) => self.constraints.admits(p) && batch.constraints.admits(p),
                 None => true,
             })
             .collect();
@@ -159,14 +163,14 @@ impl Dispatcher {
             );
         }
         order.sort_by(|&a, &b| {
-            let ca = self.entries[a].estimated_completion(t_ready, self.batch);
-            let cb = self.entries[b].estimated_completion(t_ready, self.batch);
+            let ca = self.entries[a].estimated_completion(t_ready, self.batch, batch.cost);
+            let cb = self.entries[b].estimated_completion(t_ready, self.batch, batch.cost);
             ca.cmp(&cb)
         });
 
         let mut last_err = None;
         for idx in order {
-            let service = self.entries[idx].service_estimate(self.batch);
+            let service = self.entries[idx].service_estimate(self.batch, batch.cost);
             let entry = &mut self.entries[idx];
             entry.backend.observe_truths(&truths);
             let t0 = Instant::now();
@@ -193,7 +197,7 @@ impl Dispatcher {
                     entry.batches += 1;
                     entry.frames += batch.frames.len();
                     let mode = entry.backend.mode().label();
-                    return decode_batch(
+                    let estimates = decode_batch(
                         batch,
                         mode,
                         &prepared,
@@ -201,7 +205,8 @@ impl Dispatcher {
                         &quat,
                         infer_time,
                         &mut self.telemetry,
-                    );
+                    )?;
+                    return Ok((estimates, completion));
                 }
                 Err(e) => {
                     entry.failures += 1;
@@ -219,8 +224,8 @@ impl Dispatcher {
 
     /// Close accounting: compute utilization over the run window and move
     /// per-backend records into the telemetry.  Call once, after the last
-    /// batch.
-    pub fn finish(&mut self) {
+    /// batch (the public path is [`Engine::drain`]).
+    fn finish(&mut self) {
         let window = self
             .entries
             .iter()
@@ -242,6 +247,55 @@ impl Dispatcher {
                 max_queue_depth: e.max_queue_depth,
             });
         }
+    }
+}
+
+impl Engine for Dispatcher {
+    fn primary_mode(&self) -> Result<Mode> {
+        self.entries
+            .first()
+            .map(|e| e.backend.mode())
+            .context("backend pool is empty")
+    }
+
+    fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn submit(&mut self, batch: &Batch) -> Result<()> {
+        let (estimates, t_done) = self.execute(batch)?;
+        self.completed.push(Completion {
+            tenant: batch.tenant,
+            t_captures: batch.frames.iter().map(|f| f.t_capture).collect(),
+            estimates,
+            t_done,
+        });
+        Ok(())
+    }
+
+    fn poll(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completed)
+    }
+
+    fn ready_at(&self) -> Duration {
+        self.entries
+            .iter()
+            .map(|e| e.busy_until)
+            .min()
+            .unwrap_or(Duration::ZERO)
+    }
+
+    fn fault_count(&self) -> usize {
+        self.entries.iter().map(|e| e.failures).sum()
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.finish();
+        Ok(())
+    }
+
+    fn take_telemetry(&mut self) -> Telemetry {
+        std::mem::take(&mut self.telemetry)
     }
 }
 
@@ -268,11 +322,11 @@ mod tests {
     }
 
     fn batch(ids: &[u64], t_ready_ms: u64) -> Batch {
-        Batch {
-            frames: ids.iter().map(|&i| frame(i, i * 10)).collect(),
-            size: 4,
-            t_ready: Duration::from_millis(t_ready_ms),
-        }
+        Batch::new(
+            ids.iter().map(|&i| frame(i, i * 10)).collect(),
+            4,
+            Duration::from_millis(t_ready_ms),
+        )
     }
 
     fn mock(mode: Mode, fail_every: Option<usize>) -> Box<dyn Backend> {
@@ -316,14 +370,17 @@ mod tests {
             (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
             (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
         ]);
-        let est = d.process(&batch(&[0, 1, 2, 3], 40)).unwrap();
+        let (est, t_done) = d.execute(&batch(&[0, 1, 2, 3], 40)).unwrap();
         assert_eq!(est.len(), 4);
-        // The idle DPU has the smaller modeled completion: it serves first.
+        // The idle DPU has the smaller modeled completion: it serves first,
+        // completing at t_ready (40 ms) + 4 x 60 ms modeled service.
         assert_eq!(d.telemetry.records[0].mode, "dpu-int8");
+        assert_eq!(t_done, Duration::from_millis(40 + 240));
         // A burst saturates the DPU; the VPU picks up the spillover.
         let mut served_vpu = false;
         for k in 1..8u64 {
-            let est = d.process(&batch(&[4 * k, 4 * k + 1, 4 * k + 2, 4 * k + 3], 40)).unwrap();
+            let (est, _) =
+                d.execute(&batch(&[4 * k, 4 * k + 1, 4 * k + 2, 4 * k + 3], 40)).unwrap();
             served_vpu |= est.len() == 4
                 && d.telemetry.records.last().unwrap().mode == "vpu-fp16";
         }
@@ -340,7 +397,7 @@ mod tests {
             (mock(Mode::DpuInt8, Some(1)), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
             (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
         ]);
-        let est = d.process(&batch(&[0, 1], 20)).unwrap();
+        let (est, _) = d.execute(&batch(&[0, 1], 20)).unwrap();
         assert_eq!(est.len(), 2);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
         d.finish();
@@ -363,9 +420,39 @@ mod tests {
         );
         d.add_backend(mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96)));
         d.add_backend(mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69)));
-        let est = d.process(&batch(&[0], 10)).unwrap();
+        let (est, _) = d.execute(&batch(&[0], 10)).unwrap();
         assert_eq!(est.len(), 1);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+    }
+
+    #[test]
+    fn per_batch_constraints_exclude_inaccurate_backend() {
+        // Pool-level constraints unconstrained; the batch (a strict
+        // tenant's) carries its own accuracy bound.
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+        ]);
+        let mut b = batch(&[0], 10);
+        b.constraints.max_loce_m = Some(0.70);
+        let (est, _) = d.execute(&b).unwrap();
+        assert_eq!(est.len(), 1);
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+        // An unconstrained batch on the same pool takes the fast DPU.
+        let (_, _) = d.execute(&batch(&[1], 10)).unwrap();
+        assert_eq!(d.telemetry.records.last().unwrap().mode, "dpu-int8");
+    }
+
+    #[test]
+    fn batch_cost_scales_modeled_service() {
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+        ]);
+        let mut b = batch(&[0, 1, 2, 3], 0);
+        b.cost = 2.0;
+        let (_, t_done) = d.execute(&b).unwrap();
+        // 4 x 60 ms modeled service, doubled by the batch's network cost.
+        assert_eq!(t_done, Duration::from_millis(480));
     }
 
     #[test]
@@ -380,7 +467,7 @@ mod tests {
             },
         );
         d.add_backend(mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96)));
-        assert!(d.process(&batch(&[0], 10)).is_err());
+        assert!(d.execute(&batch(&[0], 10)).is_err());
     }
 
     #[test]
@@ -389,7 +476,7 @@ mod tests {
             (mock(Mode::DpuInt8, Some(1)), None),
             (mock(Mode::VpuFp16, Some(1)), None),
         ]);
-        let r = d.process(&batch(&[0], 10));
+        let r = d.execute(&batch(&[0], 10));
         assert!(r.is_err());
         d.finish();
         assert!(d.telemetry.backends.iter().all(|b| b.failures == 1));
@@ -398,11 +485,43 @@ mod tests {
     #[test]
     fn uncharacterized_backend_admitted_and_measured() {
         let mut d = pool(vec![(mock(Mode::DpuInt8, None), None)]);
-        d.process(&batch(&[0, 1], 10)).unwrap();
-        d.process(&batch(&[2, 3], 20)).unwrap();
+        d.execute(&batch(&[0, 1], 10)).unwrap();
+        d.execute(&batch(&[2, 3], 20)).unwrap();
         d.finish();
         let b = &d.telemetry.backends[0];
         assert_eq!((b.batches, b.frames, b.failures), (2, 4, 0));
+    }
+
+    #[test]
+    fn engine_surface_submit_poll_drain() {
+        // The unified Engine contract over the pool dispatcher: submit
+        // queues a completion carrying tenant + capture instants, poll
+        // drains in order, ready_at tracks the least-backlogged backend.
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+        ]);
+        assert_eq!(Engine::primary_mode(&d).unwrap(), Mode::DpuInt8);
+        assert_eq!(d.artifact_batch(), 4);
+        assert_eq!(d.ready_at(), Duration::ZERO);
+        let mut b = batch(&[0, 1], 0);
+        b.tenant = 7;
+        d.submit(&b).unwrap();
+        assert_eq!(d.ready_at(), Duration::from_millis(240));
+        let cs = d.poll();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].tenant, 7);
+        assert_eq!(cs[0].estimates.len(), 2);
+        assert_eq!(cs[0].t_captures.len(), 2);
+        assert_eq!(cs[0].t_done, Duration::from_millis(240));
+        assert!(d.poll().is_empty(), "poll must drain");
+        assert_eq!(d.fault_count(), 0);
+        d.drain().unwrap();
+        let t = d.take_telemetry();
+        assert_eq!(t.backends.len(), 1);
+
+        // An empty pool errors (no panic) through the trait surface.
+        let empty = Dispatcher::new(4, 6, 8, Constraints::default());
+        assert!(Engine::primary_mode(&empty).is_err());
     }
 
     #[test]
@@ -436,18 +555,21 @@ mod tests {
             for id in 0..n {
                 t += ctx.rng.below(40) as u64;
                 if let Some(batch) = b.push(frame(id, t)) {
-                    ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                    ids.extend(d.execute(&batch).map_err(|e| e.to_string())?
+                        .0
                         .iter()
                         .map(|e| e.frame_id));
                 }
                 if let Some(batch) = b.poll(Duration::from_millis(t)) {
-                    ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                    ids.extend(d.execute(&batch).map_err(|e| e.to_string())?
+                        .0
                         .iter()
                         .map(|e| e.frame_id));
                 }
             }
             if let Some(batch) = b.flush(Duration::from_millis(t + 1000)) {
-                ids.extend(d.process(&batch).map_err(|e| e.to_string())?
+                ids.extend(d.execute(&batch).map_err(|e| e.to_string())?
+                    .0
                     .iter()
                     .map(|e| e.frame_id));
             }

@@ -1,0 +1,572 @@
+//! The unified execution engine: one submit/poll/drain/fault surface over
+//! every dispatch strategy, plus the multi-tenant admission layer.
+//!
+//! Two layers live here:
+//!
+//! * the [`Engine`] trait — the single abstraction both the whole-frame
+//!   pool ([`Dispatcher`](crate::coordinator::dispatcher::Dispatcher)) and
+//!   the partition-aware pipeline
+//!   ([`PipelinedDispatcher`](crate::coordinator::pipeline::PipelinedDispatcher))
+//!   implement.  The serve loops drive `dyn Engine` only, so the two
+//!   dispatch code paths share one contract: submit a ready [`Batch`],
+//!   poll [`Completion`]s, read the backpressure horizon
+//!   ([`Engine::ready_at`]) and the fault surface
+//!   ([`Engine::fault_count`]), drain accounting at the end;
+//! * [`run_workloads`] — the multi-tenant serve loop: N [`Workload`]s
+//!   (each with its own network, QoS class, frame deadline, arrival rate,
+//!   and constraints) share one engine's substrate pool.  Admission is
+//!   earliest-deadline-first within a class and strict class priority
+//!   across classes ([`QosClass`] order); each tenant owns a private
+//!   batcher; background-class frames are **shed** — counted, never
+//!   silently dropped — when the pool saturates past their deadline.
+//!
+//! Per-tenant constraints ride on each [`Batch`] and gate admission in
+//! both engines: the whole-frame pool checks them per substrate at
+//! routing; the pipelined dispatcher checks them against each plan's
+//! serving-numerics profile at dispatch, on top of the build-time
+//! pool-level filter.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::config::{Config, Mode, Workload};
+use crate::coordinator::policy::QosClass;
+use crate::coordinator::scheduler::PoseEstimate;
+use crate::coordinator::telemetry::{Telemetry, TenantRecord};
+use crate::net::models;
+use crate::pose::EvalSet;
+use crate::sensor::{Camera, Frame};
+
+/// Tenant frame ids are offset by `tenant << TENANT_ID_SHIFT` so ids stay
+/// unique across tenants (2^40 frames per tenant before collision).
+pub const TENANT_ID_SHIFT: u32 = 40;
+
+/// Result of a serve run.
+pub struct RunOutput {
+    /// Primary mode (the engine's first backend / composite plan).
+    pub mode: Mode,
+    pub estimates: Vec<PoseEstimate>,
+    pub telemetry: Telemetry,
+}
+
+/// One executed batch coming back out of an [`Engine`].
+#[derive(Debug)]
+pub struct Completion {
+    /// Index of the tenant that submitted the batch (0 single-workload).
+    pub tenant: usize,
+    /// Estimates for the batch's real frames, in frame order.
+    pub estimates: Vec<PoseEstimate>,
+    /// Capture instants aligned with `estimates` rows (for latency and
+    /// deadline accounting on the simulated clock).
+    pub t_captures: Vec<Duration>,
+    /// Simulated instant the batch completed on its substrate(s).
+    pub t_done: Duration,
+}
+
+/// The unified execution surface every dispatch strategy implements.
+///
+/// Engines execute on the coordinator's simulated clock: `submit` runs the
+/// batch eagerly (charging substrate time from `max(busy, t_ready)`) and
+/// queues the completion; `poll` hands completions back in submission
+/// order.  `drain` closes utilization/occupancy accounting and must be
+/// called exactly once, after the last submit.
+pub trait Engine {
+    /// Mode the run reports.  Errors when no backend is bound (empty
+    /// pool) — an error path, not a panic, by contract.
+    fn primary_mode(&self) -> Result<Mode>;
+    /// Artifact batch size every submitted batch is padded to.
+    fn artifact_batch(&self) -> usize;
+    /// Submit one ready batch for execution.
+    fn submit(&mut self, batch: &Batch) -> Result<()>;
+    /// Completions since the last poll, in submission order.
+    fn poll(&mut self) -> Vec<Completion>;
+    /// Earliest simulated instant the engine can start new work (the
+    /// least-backlogged substrate's horizon) — the admission layer's
+    /// backpressure signal.
+    fn ready_at(&self) -> Duration;
+    /// Substrate faults observed so far (failed infer attempts that were
+    /// failed over).
+    fn fault_count(&self) -> usize;
+    /// Close accounting (utilization/occupancy records).
+    fn drain(&mut self) -> Result<()>;
+    /// Move the run telemetry out of the engine.
+    fn take_telemetry(&mut self) -> Telemetry;
+}
+
+/// One tenant's live serving state inside [`run_workloads`].
+struct Tenant {
+    w: Workload,
+    batcher: Batcher,
+    camera: Camera,
+    /// Next not-yet-admitted frame (peek buffer over the camera).
+    pending: Option<Frame>,
+    id_base: u64,
+    emitted: u64,
+    shed: u64,
+    completed: u64,
+    misses: u64,
+    latencies_s: Vec<f64>,
+}
+
+impl Tenant {
+    fn refill(&mut self) {
+        self.pending = self.camera.next().map(|mut f| {
+            f.id += self.id_base;
+            f
+        });
+    }
+}
+
+/// A batch awaiting dispatch, with its scheduling keys.
+struct Ready {
+    batch: Batch,
+    qos: QosClass,
+    /// EDF key: the batch's oldest capture + the tenant's frame deadline.
+    deadline: Duration,
+}
+
+fn enqueue(ready: &mut Vec<Ready>, w: &Workload, batch: Batch) {
+    let oldest = batch
+        .frames
+        .first()
+        .map(|f| f.t_capture)
+        .unwrap_or_default();
+    ready.push(Ready {
+        qos: w.qos,
+        deadline: oldest + w.deadline,
+        batch,
+    });
+}
+
+/// Serve N workloads on one shared engine: merged arrival streams on the
+/// simulated clock, per-tenant batchers, strict-class-priority + EDF
+/// dispatch, background load-shedding under saturation, per-tenant
+/// latency/deadline-miss/shed telemetry.
+pub fn run_workloads(
+    config: &Config,
+    eval: Arc<EvalSet>,
+    engine: &mut dyn Engine,
+    workloads: &[Workload],
+) -> Result<RunOutput> {
+    if workloads.is_empty() {
+        bail!("multi-tenant serve needs at least one workload");
+    }
+    let mode = engine.primary_mode()?;
+    let size = engine.artifact_batch();
+
+    // Service-cost ratio: the tenant's network complexity relative to the
+    // calibrated (paper-scale UrsoNet) network the mode profiles model.
+    let base_macs = crate::net::models::ursonet::build_full().total_macs() as f64;
+    let mut tenants: Vec<Tenant> = Vec::with_capacity(workloads.len());
+    for (k, w) in workloads.iter().enumerate() {
+        let net = models::by_name(&w.net).with_context(|| {
+            format!("workload {:?}: unknown network {:?}", w.name, w.net)
+        })?;
+        let cost = (net.total_macs() as f64 / base_macs).max(0.01);
+        let mut t = Tenant {
+            batcher: Batcher::new(size, config.batch_timeout)
+                .with_cost(cost)
+                .with_tenant(k)
+                .with_constraints(w.constraints),
+            camera: Camera::new(eval.clone(), w.rate_fps, w.frames),
+            pending: None,
+            id_base: (k as u64) << TENANT_ID_SHIFT,
+            emitted: 0,
+            shed: 0,
+            completed: 0,
+            misses: 0,
+            latencies_s: Vec::new(),
+            w: w.clone(),
+        };
+        t.refill();
+        tenants.push(t);
+    }
+
+    #[derive(Clone, Copy)]
+    enum Event {
+        /// A tenant's batcher timeout fires (partial batch dispatches).
+        Deadline,
+        /// A tenant's next frame arrives.
+        Arrival,
+    }
+
+    /// Earliest pending event across every tenant: `(instant, kind,
+    /// tenant)`.  A batcher deadline wins ties against an arrival — a
+    /// timed-out partial batch dispatches at its deadline, exactly like
+    /// the single-tenant pump.
+    fn next_event(tenants: &[Tenant]) -> Option<(Duration, Event, usize)> {
+        let next_deadline = tenants
+            .iter()
+            .enumerate()
+            .filter_map(|(k, t)| t.batcher.deadline().map(|d| (d, k)))
+            .min();
+        let next_arrival = tenants
+            .iter()
+            .enumerate()
+            .filter_map(|(k, t)| t.pending.as_ref().map(|f| (f.t_capture, k)))
+            .min();
+        match (next_deadline, next_arrival) {
+            (Some((d, k)), Some((a, _))) if d <= a => Some((d, Event::Deadline, k)),
+            (_, Some((a, k))) => Some((a, Event::Arrival, k)),
+            (Some((d, k)), None) => Some((d, Event::Deadline, k)),
+            (None, None) => None,
+        }
+    }
+
+    /// Apply one event: move frames into the tenant's batcher (or shed on
+    /// arrival backpressure) and enqueue any batch that became ready.
+    fn handle_event(
+        tenants: &mut [Tenant],
+        engine: &dyn Engine,
+        ready: &mut Vec<Ready>,
+        event: Event,
+        k: usize,
+        t_event: Duration,
+    ) {
+        match event {
+            Event::Deadline => {
+                let t = &mut tenants[k];
+                let due = match t.batcher.poll(t_event) {
+                    Some(b) => Some(b),
+                    // Unreachable by construction (the deadline is oldest +
+                    // timeout); the forced flush guards the serve loop
+                    // against ever spinning on a future batcher change.
+                    None => t.batcher.flush(t_event),
+                };
+                if let Some(batch) = due {
+                    enqueue(ready, &t.w, batch);
+                }
+            }
+            Event::Arrival => {
+                let horizon = engine.ready_at();
+                let t = &mut tenants[k];
+                let frame = t.pending.take().expect("arrival implies a pending frame");
+                t.refill();
+                t.emitted += 1;
+                // Admission backpressure: a background frame that cannot
+                // even START before its deadline is shed on arrival, along
+                // with the tenant's pending frames (older, so even more
+                // hopeless).  Counted, never silent.
+                if t.w.qos.sheddable() && horizon > frame.t_capture + t.w.deadline {
+                    t.shed += t.batcher.shed().len() as u64 + 1;
+                } else if let Some(batch) = t.batcher.push(frame) {
+                    enqueue(ready, &t.w, batch);
+                }
+            }
+        }
+    }
+
+    let mut estimates: Vec<PoseEstimate> = Vec::new();
+    let mut ready: Vec<Ready> = Vec::new();
+    loop {
+        let Some((now, event, k)) = next_event(&tenants) else {
+            break;
+        };
+        handle_event(&mut tenants, &*engine, &mut ready, event, k, now);
+        // Drain every event scheduled at the same simulated instant before
+        // dispatching, so the class-priority + EDF sort below actually
+        // arbitrates batches that become ready together (events only move
+        // forward in time, so this inner loop terminates).
+        while let Some((t_next, ev, kn)) = next_event(&tenants) {
+            if t_next > now {
+                break;
+            }
+            handle_event(&mut tenants, &*engine, &mut ready, ev, kn, t_next);
+        }
+
+        // Dispatch everything that became ready: strict class priority
+        // (realtime > standard > background), EDF within a class.
+        ready.sort_by(|a, b| a.qos.cmp(&b.qos).then(a.deadline.cmp(&b.deadline)));
+        for r in ready.drain(..) {
+            let start = engine.ready_at().max(now);
+            let t = &mut tenants[r.batch.tenant];
+            if t.w.qos.sheddable() && start > r.deadline {
+                // Saturated: the batch cannot start before its deadline —
+                // shed it and record the drop.
+                t.shed += r.batch.real_count() as u64;
+                continue;
+            }
+            engine.submit(&r.batch)?;
+        }
+
+        // Account completions on the simulated clock.
+        for c in engine.poll() {
+            let t = &mut tenants[c.tenant];
+            for t_cap in &c.t_captures {
+                let lat = c.t_done.saturating_sub(*t_cap);
+                t.latencies_s.push(lat.as_secs_f64());
+                if lat > t.w.deadline {
+                    t.misses += 1;
+                }
+            }
+            t.completed += c.estimates.len() as u64;
+            estimates.extend(c.estimates);
+        }
+    }
+    // Defensive: submission is synchronous, but a future async engine may
+    // complete work between the last event and drain.
+    for c in engine.poll() {
+        tenants[c.tenant].completed += c.estimates.len() as u64;
+        estimates.extend(c.estimates);
+    }
+    engine.drain()?;
+
+    let mut telemetry = engine.take_telemetry();
+    for t in tenants {
+        telemetry.record_tenant(TenantRecord {
+            name: t.w.name.clone(),
+            qos: t.w.qos.label(),
+            net: t.w.net.clone(),
+            deadline: t.w.deadline,
+            admitted: t.emitted - t.shed,
+            completed: t.completed,
+            shed: t.shed,
+            deadline_misses: t.misses,
+            latencies_s: t.latencies_s,
+        });
+    }
+    Ok(RunOutput {
+        mode,
+        estimates,
+        telemetry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::policy::{profile_modes, Constraints};
+    use crate::coordinator::sim::SimBackend;
+    use crate::runtime::artifacts::Manifest;
+    use crate::testkit::{check, Config as PropConfig};
+    use std::collections::BTreeSet;
+
+    fn workload(name: &str, qos: QosClass, deadline_ms: u64, rate: f64, frames: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos,
+            deadline: Duration::from_millis(deadline_ms),
+            rate_fps: rate,
+            frames,
+            constraints: Constraints::default(),
+        }
+    }
+
+    /// DPU+VPU pool over small synthetic frames; `vpu_fail_at` injects a
+    /// fault schedule on the second (slower) backend.
+    fn pool(vpu_fail_at: Vec<usize>) -> Dispatcher {
+        let profiles = profile_modes(&Manifest::synthetic());
+        let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+        d.add_backend(
+            Box::new(SimBackend::new(Mode::DpuInt8, &profiles[&Mode::DpuInt8], 31)),
+            Some(profiles[&Mode::DpuInt8]),
+        );
+        d.add_backend(
+            Box::new(
+                SimBackend::new(Mode::VpuFp16, &profiles[&Mode::VpuFp16], 32)
+                    .with_fail_at(vpu_fail_at),
+            ),
+            Some(profiles[&Mode::VpuFp16]),
+        );
+        d
+    }
+
+    fn tiny_eval() -> Arc<EvalSet> {
+        Arc::new(EvalSet::synthetic(6, 12, 16, 42))
+    }
+
+    fn cfg(timeout_ms: u64) -> Config {
+        Config {
+            sim: true,
+            batch_timeout: Duration::from_millis(timeout_ms),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn empty_workload_list_is_an_error() {
+        let mut engine = pool(vec![]);
+        let r = run_workloads(&cfg(50), tiny_eval(), &mut engine, &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn single_workload_serves_every_frame() {
+        let mut engine = pool(vec![]);
+        let ws = vec![workload("solo", QosClass::Standard, 5000, 50.0, 17)];
+        let out = run_workloads(&cfg(30), tiny_eval(), &mut engine, &ws).unwrap();
+        assert_eq!(out.estimates.len(), 17);
+        let t = &out.telemetry.tenants[0];
+        assert_eq!((t.admitted, t.completed, t.shed), (17, 17, 0));
+        assert_eq!(t.latencies_s.len(), 17);
+    }
+
+    #[test]
+    fn mixed_classes_share_the_pool_and_only_background_sheds() {
+        let ws = vec![
+            workload("rt", QosClass::Realtime, 8000, 8.0, 24),
+            workload("std", QosClass::Standard, 12000, 6.0, 18),
+            // Flooding background with a tight deadline: saturation sheds.
+            workload("bg", QosClass::Background, 300, 60.0, 120),
+        ];
+        let mut engine = pool(vec![]);
+        let out = run_workloads(&cfg(400), tiny_eval(), &mut engine, &ws).unwrap();
+        assert_eq!(out.telemetry.tenants.len(), 3);
+        let (rt, std_t, bg) = (
+            &out.telemetry.tenants[0],
+            &out.telemetry.tenants[1],
+            &out.telemetry.tenants[2],
+        );
+        // Non-sheddable classes: every emitted frame admitted + completed.
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (24, 24, 0));
+        assert_eq!((std_t.admitted, std_t.completed, std_t.shed), (18, 18, 0));
+        // The background flood saturates the pool; shedding is recorded.
+        assert!(bg.shed > 0, "background flood never shed");
+        assert_eq!(bg.admitted + bg.shed, 120);
+        assert_eq!(bg.completed, bg.admitted);
+        // Realtime deadlines hold despite the flood.
+        assert_eq!(rt.deadline_misses, 0, "p99 latency {}", rt.latency_summary().p99());
+        // Estimate stream covers exactly the completed frames.
+        let total = rt.completed + std_t.completed + bg.completed;
+        assert_eq!(out.estimates.len() as u64, total);
+    }
+
+    #[test]
+    fn per_tenant_constraints_route_their_batches() {
+        // The accurate tenant (max_loce 0.70) must never be served by the
+        // DPU's 0.96-LOCE numerics, while the lax tenant may use either.
+        let mut ws = vec![
+            workload("strict", QosClass::Standard, 10000, 10.0, 12),
+            workload("lax", QosClass::Standard, 10000, 10.0, 12),
+        ];
+        ws[0].constraints.max_loce_m = Some(0.70);
+        let mut engine = pool(vec![]);
+        let out = run_workloads(&cfg(100), tiny_eval(), &mut engine, &ws).unwrap();
+        // Tenant 0's ids sit below tenant 1's offset.
+        let lax_base = 1u64 << TENANT_ID_SHIFT;
+        let profiles = profile_modes(&Manifest::synthetic());
+        for r in &out.telemetry.records {
+            if r.frame_id < lax_base {
+                let mode = Mode::from_label(r.mode).unwrap();
+                assert!(
+                    profiles[&mode].loce_m <= 0.70,
+                    "strict tenant served by {} (LOCE {})",
+                    r.mode,
+                    profiles[&mode].loce_m
+                );
+            }
+        }
+        assert_eq!(out.telemetry.tenants[0].completed, 12);
+        assert_eq!(out.telemetry.tenants[1].completed, 12);
+    }
+
+    #[test]
+    fn realtime_survives_backend_faults_via_failover() {
+        // Faults on the VPU backend: the reliable DPU absorbs everything;
+        // no realtime frame is lost or shed.
+        let ws = vec![
+            workload("rt", QosClass::Realtime, 8000, 10.0, 20),
+            workload("bg", QosClass::Background, 2000, 20.0, 30),
+        ];
+        let mut engine = pool((1..=50).collect());
+        let out = run_workloads(&cfg(300), tiny_eval(), &mut engine, &ws).unwrap();
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (20, 20, 0));
+    }
+
+    #[test]
+    fn property_no_admitted_frame_lost_or_duplicated_under_faults_and_shedding() {
+        // The ISSUE invariant: across random tenant mixes, arrival rates,
+        // deadlines, and fault/shed schedules, the multi-tenant engine
+        // neither loses nor duplicates any admitted frame: per tenant,
+        // emitted = admitted + shed and completed = admitted; estimate ids
+        // are globally unique.  One backend stays reliable (all-substrates
+        // -fail aborts the run, as in the single-tenant dispatchers).
+        let eval = tiny_eval();
+        check(
+            "multi_tenant_conservation",
+            PropConfig {
+                cases: 48,
+                ..Default::default()
+            },
+            move |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let mut ws = Vec::new();
+                for k in 0..n_tenants {
+                    let qos = match ctx.rng.below(3) {
+                        0 => QosClass::Realtime,
+                        1 => QosClass::Standard,
+                        _ => QosClass::Background,
+                    };
+                    ws.push(workload(
+                        &format!("t{k}"),
+                        qos,
+                        50 + ctx.rng.below(3000) as u64,
+                        1.0 + ctx.rng.below(60) as f64,
+                        ctx.rng.below(28) as u64,
+                    ));
+                }
+                // Random fault schedule on the second backend.
+                let faults: Vec<usize> = {
+                    let mut s = BTreeSet::new();
+                    for _ in 0..ctx.rng.below(20) {
+                        s.insert(1 + ctx.rng.below(40));
+                    }
+                    s.into_iter().collect()
+                };
+                let mut engine = pool(faults);
+                let timeout = 1 + ctx.rng.below(600) as u64;
+                let out = run_workloads(&cfg(timeout), eval.clone(), &mut engine, &ws)
+                    .map_err(|e| format!("{e:#}"))?;
+
+                let mut total_completed = 0u64;
+                for (k, t) in out.telemetry.tenants.iter().enumerate() {
+                    crate::prop_assert!(
+                        t.admitted + t.shed == ws[k].frames,
+                        "tenant {k}: admitted {} + shed {} != emitted {}",
+                        t.admitted,
+                        t.shed,
+                        ws[k].frames
+                    );
+                    crate::prop_assert!(
+                        t.completed == t.admitted,
+                        "tenant {k}: completed {} != admitted {}",
+                        t.completed,
+                        t.admitted
+                    );
+                    crate::prop_assert!(
+                        ws[k].qos.sheddable() || t.shed == 0,
+                        "non-background tenant {k} shed {} frames",
+                        t.shed
+                    );
+                    crate::prop_assert!(
+                        t.latencies_s.len() as u64 == t.completed,
+                        "tenant {k}: {} latencies for {} completions",
+                        t.latencies_s.len(),
+                        t.completed
+                    );
+                    total_completed += t.completed;
+                }
+                crate::prop_assert!(
+                    out.estimates.len() as u64 == total_completed,
+                    "estimate stream {} != completed {total_completed}",
+                    out.estimates.len()
+                );
+                let mut seen = BTreeSet::new();
+                for e in &out.estimates {
+                    crate::prop_assert!(
+                        seen.insert(e.frame_id),
+                        "duplicate estimate for frame {}",
+                        e.frame_id
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

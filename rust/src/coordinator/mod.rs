@@ -1,11 +1,13 @@
 //! The MPAI coordinator — the paper's system contribution (DESIGN.md §4.5):
 //! frame ingestion, batching, partition-aware scheduling over heterogeneous
-//! accelerators, speed–accuracy–energy policy, telemetry.
+//! accelerators, multi-tenant QoS-aware admission over the unified
+//! execution engine (§4.6), speed–accuracy–energy policy, telemetry.
 
 pub mod backend;
 pub mod batcher;
 pub mod config;
 pub mod dispatcher;
+pub mod engine;
 pub mod pipeline;
 pub mod policy;
 pub mod scheduler;
@@ -15,11 +17,12 @@ pub mod telemetry;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
-pub use config::{Config, ManualStage, Mode, PartitionSpec};
+pub use config::{parse_tenant_file, Config, ManualStage, Mode, PartitionSpec, Workload};
 pub use dispatcher::Dispatcher;
+pub use engine::{run_workloads, Completion, Engine, RunOutput};
 pub use pipeline::{build_plans, PipelinePlan, PipelinedDispatcher, StagePlan};
-pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective};
+pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
-pub use server::{run, run_with_backend, run_with_pipeline, run_with_pool, RunOutput};
+pub use server::{run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool};
 pub use sim::SimBackend;
-pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry};
+pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};

@@ -33,7 +33,8 @@ use crate::accel::interconnect::Link;
 use crate::accel::traits::Accelerator;
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::config::{ManualStage, Mode, PartitionSpec};
-use crate::coordinator::policy::Constraints;
+use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{
     decode_batch, prepare_batch, Backend, PoseEstimate, StageOutput,
 };
@@ -42,7 +43,7 @@ use crate::net::compiler::partition::{evaluate_partition, select_cut, Partition}
 use crate::net::graph::Graph;
 use crate::pose::Pose;
 use crate::runtime::artifacts::Manifest;
-use crate::runtime::executor::Engine;
+use crate::runtime::executor::Engine as PjrtEngine;
 use crate::runtime::tensor::Tensor;
 
 /// Input job: batched images with an id for re-association.
@@ -72,8 +73,8 @@ impl MpaiPipeline {
         let (tx_out, rx_out) = mpsc::channel::<Result<PipelineOut>>();
 
         let w1 = thread::spawn(move || {
-            let run = || -> Result<Engine> {
-                let mut e = Engine::cpu()?;
+            let run = || -> Result<PjrtEngine> {
+                let mut e = PjrtEngine::cpu()?;
                 e.load(&backbone)?;
                 Ok(e)
             };
@@ -95,8 +96,8 @@ impl MpaiPipeline {
         });
 
         let w2 = thread::spawn(move || {
-            let run = || -> Result<Engine> {
-                let mut e = Engine::cpu()?;
+            let run = || -> Result<PjrtEngine> {
+                let mut e = PjrtEngine::cpu()?;
                 e.load(&head)?;
                 Ok(e)
             };
@@ -181,6 +182,11 @@ pub struct PipelinePlan {
     pub stages: Vec<StagePlan>,
     /// Analytic steady-state per-frame throughput (bottleneck-stage bound).
     pub steady_fps: f64,
+    /// Profile of the numerics this plan serves (the composite MPAI row
+    /// for a multi-stage plan, the engine's own row for a fallback) —
+    /// filled by the serve builder; when present, per-batch (tenant)
+    /// constraints gate the plan at dispatch time.
+    pub serving_profile: Option<ModeProfile>,
 }
 
 impl PipelinePlan {
@@ -212,6 +218,7 @@ impl PipelinePlan {
             label,
             stages: plan_stages,
             steady_fps: lat.pipelined_fps(),
+            serving_profile: None,
         })
     }
 
@@ -389,6 +396,8 @@ struct StageSlot {
 }
 
 /// Partition-aware N-stage pipelined dispatcher (see the module docs).
+/// Like the whole-frame pool, execution is reachable only through the
+/// unified [`Engine`] trait.
 pub struct PipelinedDispatcher {
     plans: Vec<PipelinePlan>,
     slots: BTreeMap<String, StageSlot>,
@@ -397,6 +406,8 @@ pub struct PipelinedDispatcher {
     net_w: usize,
     /// Latest batch-ready instant seen (simulated run clock).
     clock: Duration,
+    /// Executed batches awaiting [`Engine::poll`].
+    completed: Vec<Completion>,
     pub telemetry: Telemetry,
 }
 
@@ -417,6 +428,7 @@ impl PipelinedDispatcher {
             net_h,
             net_w,
             clock: Duration::ZERO,
+            completed: Vec::new(),
             telemetry: Telemetry::new(),
         })
     }
@@ -442,28 +454,6 @@ impl PipelinedDispatcher {
         &self.plans[0]
     }
 
-    /// Mode the run reports: the composite MPAI mode for a true pipeline,
-    /// else the bound backend's mode (falling back to the substrate's
-    /// default when no backend is bound yet).
-    pub fn primary_mode(&self) -> Mode {
-        let p = &self.plans[0];
-        if p.stages.len() > 1 {
-            Mode::Mpai
-        } else {
-            let accel = &p.stages[0].accel;
-            self.slots
-                .get(accel)
-                .map(|s| s.backend.mode())
-                .or_else(|| Mode::for_accel(accel))
-                .unwrap_or(Mode::Mpai)
-        }
-    }
-
-    /// The artifact batch size every stage executes.
-    pub fn artifact_batch(&self) -> usize {
-        self.batch
-    }
-
     fn check_bindings(&self) -> Result<()> {
         for p in &self.plans {
             for s in &p.stages {
@@ -483,8 +473,10 @@ impl PipelinedDispatcher {
     /// stage on the host, then simulated-clock accounting committed only
     /// for the plan that succeeded.  A stage fault marks its substrate
     /// faulted *for this batch* and fails over to the next plan avoiding
-    /// every faulted substrate.
-    pub fn process(&mut self, batch: &Batch) -> Result<Vec<PoseEstimate>> {
+    /// every faulted substrate.  Stage service/transfer scale with the
+    /// batch's network cost (multi-tenant).  Returns the estimates and the
+    /// batch's simulated completion instant (tail-stage finish).
+    fn execute(&mut self, batch: &Batch) -> Result<(Vec<PoseEstimate>, Duration)> {
         self.check_bindings()?;
         let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
         let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
@@ -503,6 +495,14 @@ impl PipelinedDispatcher {
         'plans: for plan in plans.iter() {
             if plan.stages.iter().any(|s| faulted.contains(&s.accel)) {
                 continue;
+            }
+            // Per-batch (tenant) constraints gate the plan's serving
+            // numerics, mirroring per-batch admission in the whole-frame
+            // pool — a tenant's accuracy bound is never silently dropped.
+            if let Some(p) = &plan.serving_profile {
+                if !batch.constraints.admits(p) {
+                    continue;
+                }
             }
             let n = plan.stages.len();
             let t0 = Instant::now();
@@ -534,19 +534,22 @@ impl PipelinedDispatcher {
             // Commit simulated-clock accounting for the successful plan:
             // each stage starts when its substrate frees up AND its input
             // arrives (previous stage finish + boundary hop), so stage k of
-            // this batch overlaps stage k+1 of the previous one.
+            // this batch overlaps stage k+1 of the previous one.  Service
+            // and boundary traffic scale with the batch's network cost.
             let mut arrival = t_ready;
             for st in &plan.stages {
+                let service = st.service.mul_f64(batch.cost);
+                let transfer = st.transfer.mul_f64(batch.cost);
                 let slot = slots.get_mut(&st.accel).expect("binding checked");
                 let start = slot.free_until.max(arrival);
-                let finish = start + st.service;
+                let finish = start + service;
                 slot.stall += start - arrival;
-                slot.busy += st.service;
-                slot.transfer += st.transfer;
+                slot.busy += service;
+                slot.transfer += transfer;
                 slot.free_until = finish;
                 slot.batches += 1;
                 slot.frames += batch.frames.len();
-                arrival = finish + st.transfer;
+                arrival = finish + transfer;
             }
 
             // A true multi-stage plan serves the composite MPAI numerics
@@ -558,7 +561,7 @@ impl PipelinedDispatcher {
                 let last = &plan.stages[n - 1];
                 slots[&last.accel].backend.mode().label()
             };
-            return decode_batch(
+            let estimates = decode_batch(
                 batch,
                 mode,
                 &prepared,
@@ -566,7 +569,10 @@ impl PipelinedDispatcher {
                 &quat,
                 infer_time,
                 telemetry,
-            );
+            )?;
+            // The tail stage emits no boundary transfer, so `arrival` is
+            // the batch's completion instant.
+            return Ok((estimates, arrival));
         }
         Err(last_err
             .unwrap_or_else(|| anyhow!("no pipeline plan available"))
@@ -574,8 +580,9 @@ impl PipelinedDispatcher {
     }
 
     /// Close accounting: per-substrate occupancy over the run window, one
-    /// [`StageRecord`] per substrate.  Call once, after the last batch.
-    pub fn finish(&mut self) {
+    /// [`StageRecord`] per substrate.  Call once, after the last batch
+    /// (the public path is [`Engine::drain`]).
+    fn finish(&mut self) {
         let window = self
             .slots
             .values()
@@ -599,6 +606,66 @@ impl PipelinedDispatcher {
                 occupancy,
             });
         }
+    }
+}
+
+impl Engine for PipelinedDispatcher {
+    /// Mode the run reports: the composite MPAI mode for a true pipeline,
+    /// else the bound backend's mode (falling back to the substrate's
+    /// default when no backend is bound yet).
+    fn primary_mode(&self) -> Result<Mode> {
+        let p = &self.plans[0];
+        let mode = if p.stages.len() > 1 {
+            Mode::Mpai
+        } else {
+            let accel = &p.stages[0].accel;
+            self.slots
+                .get(accel)
+                .map(|s| s.backend.mode())
+                .or_else(|| Mode::for_accel(accel))
+                .unwrap_or(Mode::Mpai)
+        };
+        Ok(mode)
+    }
+
+    fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn submit(&mut self, batch: &Batch) -> Result<()> {
+        let (estimates, t_done) = self.execute(batch)?;
+        self.completed.push(Completion {
+            tenant: batch.tenant,
+            t_captures: batch.frames.iter().map(|f| f.t_capture).collect(),
+            estimates,
+            t_done,
+        });
+        Ok(())
+    }
+
+    fn poll(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completed)
+    }
+
+    fn ready_at(&self) -> Duration {
+        self.slots
+            .values()
+            .map(|s| s.free_until)
+            .min()
+            .unwrap_or(Duration::ZERO)
+    }
+
+    fn fault_count(&self) -> usize {
+        self.slots.values().map(|s| s.failures).sum()
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.finish();
+        Ok(())
+    }
+
+    fn take_telemetry(&mut self) -> Telemetry {
+        std::mem::take(&mut self.telemetry)
     }
 }
 
@@ -628,11 +695,11 @@ mod tests {
     }
 
     fn batch(ids: &[u64], t_ready_ms: u64) -> Batch {
-        Batch {
-            frames: ids.iter().map(|&i| frame(i, t_ready_ms)).collect(),
-            size: 4,
-            t_ready: Duration::from_millis(t_ready_ms),
-        }
+        Batch::new(
+            ids.iter().map(|&i| frame(i, t_ready_ms)).collect(),
+            4,
+            Duration::from_millis(t_ready_ms),
+        )
     }
 
     fn profile(mode: Mode, loce_m: f64) -> ModeProfile {
@@ -674,6 +741,21 @@ mod tests {
                 },
             ],
             steady_fps: 100.0,
+            serving_profile: None,
+        }
+    }
+
+    fn vpu_fallback_plan() -> PipelinePlan {
+        PipelinePlan {
+            label: "single vpu".into(),
+            stages: vec![StagePlan {
+                accel: "vpu".into(),
+                layers: (1, 17),
+                service: Duration::from_millis(20),
+                transfer: Duration::ZERO,
+            }],
+            steady_fps: 50.0,
+            serving_profile: None,
         }
     }
 
@@ -791,10 +873,14 @@ mod tests {
 
         // Two batches ready at t=0: batch 2's head stage must wait for
         // batch 1 (10 ms stall), while its tail stage overlaps batch 1.
-        let est = d.process(&batch(&[0, 1], 0)).unwrap();
+        let (est, t_done) = d.execute(&batch(&[0, 1], 0)).unwrap();
         assert_eq!(est.len(), 2);
-        let est = d.process(&batch(&[2, 3], 0)).unwrap();
+        // Batch 1 completes at 10 (dpu) + 1 (hop) + 4 (vpu) = 15 ms.
+        assert_eq!(t_done, Duration::from_millis(15));
+        let (est, t_done) = d.execute(&batch(&[2, 3], 0)).unwrap();
         assert_eq!(est.len(), 2);
+        // Batch 2: head stalls to 10, finishes 20, +1 hop, tail 21..25.
+        assert_eq!(t_done, Duration::from_millis(25));
         d.finish();
 
         let stage = |a: &str| {
@@ -822,23 +908,13 @@ mod tests {
 
     #[test]
     fn stage_fault_fails_over_to_fallback_plan() {
-        let fallback = PipelinePlan {
-            label: "single vpu".into(),
-            stages: vec![StagePlan {
-                accel: "vpu".into(),
-                layers: (1, 17),
-                service: Duration::from_millis(20),
-                transfer: Duration::ZERO,
-            }],
-            steady_fps: 50.0,
-        };
         let mut d =
-            PipelinedDispatcher::new(vec![toy_plan(), fallback], 4, 6, 8).unwrap();
+            PipelinedDispatcher::new(vec![toy_plan(), vpu_fallback_plan()], 4, 6, 8).unwrap();
         // The head substrate faults on every invocation.
         d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, Some(1)));
         d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
 
-        let est = d.process(&batch(&[0, 1], 0)).unwrap();
+        let (est, _) = d.execute(&batch(&[0, 1], 0)).unwrap();
         assert_eq!(est.len(), 2);
         d.finish();
         let dpu = d.telemetry.stages.iter().find(|s| s.accel == "dpu").unwrap();
@@ -853,7 +929,74 @@ mod tests {
     fn missing_binding_is_an_error() {
         let mut d = PipelinedDispatcher::new(vec![toy_plan()], 4, 6, 8).unwrap();
         d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
-        assert!(d.process(&batch(&[0], 0)).is_err());
+        assert!(d.execute(&batch(&[0], 0)).is_err());
+    }
+
+    #[test]
+    fn per_batch_constraints_gate_plan_serving_numerics() {
+        // The primary plan serves DPU-grade numerics (LOCE 0.96); a batch
+        // carrying a tenant's 0.70 bound must fall through to the VPU
+        // fallback (LOCE 0.69) — per-tenant constraints are honored on the
+        // pipelined path, not silently dropped.
+        let mut primary = toy_plan();
+        primary.serving_profile = Some(profile(Mode::DpuInt8, 0.96));
+        let mut fallback = vpu_fallback_plan();
+        fallback.serving_profile = Some(profile(Mode::VpuFp16, 0.69));
+        let mut d = PipelinedDispatcher::new(vec![primary, fallback], 4, 6, 8).unwrap();
+        d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
+        d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
+
+        let mut b = batch(&[0, 1], 0);
+        b.constraints.max_loce_m = Some(0.70);
+        let (est, _) = d.execute(&b).unwrap();
+        assert_eq!(est.len(), 2);
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+
+        // An unconstrained batch takes the primary plan.
+        let (_, _) = d.execute(&batch(&[2, 3], 0)).unwrap();
+        assert_ne!(d.telemetry.records.last().unwrap().mode, "vpu-fp16");
+
+        // A bound no plan satisfies is a loud error, not a silent serve.
+        let mut b = batch(&[4], 0);
+        b.constraints.max_loce_m = Some(0.10);
+        assert!(d.execute(&b).is_err());
+    }
+
+    #[test]
+    fn batch_cost_scales_stage_service_and_transfer() {
+        let mut d = PipelinedDispatcher::new(vec![toy_plan()], 4, 6, 8).unwrap();
+        d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
+        d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
+        let mut b = batch(&[0, 1], 0);
+        b.cost = 2.0;
+        let (_, t_done) = d.execute(&b).unwrap();
+        // Doubled: 20 (dpu) + 2 (hop) + 8 (vpu) = 30 ms.
+        assert_eq!(t_done, Duration::from_millis(30));
+    }
+
+    #[test]
+    fn engine_surface_over_the_pipeline() {
+        // The unified Engine contract over the pipelined dispatcher.
+        let mut d = PipelinedDispatcher::new(vec![toy_plan()], 4, 6, 8).unwrap();
+        d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
+        d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
+        assert_eq!(Engine::primary_mode(&d).unwrap(), Mode::Mpai);
+        assert_eq!(d.artifact_batch(), 4);
+        assert_eq!(d.ready_at(), Duration::ZERO);
+        let mut b = batch(&[0, 1], 0);
+        b.tenant = 2;
+        d.submit(&b).unwrap();
+        // The head substrate frees first (10 ms) — that is the horizon.
+        assert_eq!(d.ready_at(), Duration::from_millis(10));
+        let cs = d.poll();
+        assert_eq!(cs.len(), 1);
+        assert_eq!((cs[0].tenant, cs[0].estimates.len()), (2, 2));
+        assert_eq!(cs[0].t_done, Duration::from_millis(15));
+        assert!(d.poll().is_empty());
+        assert_eq!(d.fault_count(), 0);
+        d.drain().unwrap();
+        let t = d.take_telemetry();
+        assert_eq!(t.stages.len(), 2);
     }
 
     #[test]
@@ -900,16 +1043,18 @@ mod tests {
                 t += ctx.rng.below(40) as u64;
                 if let Some(batch) = b.push(frame(id, t)) {
                     ids.extend(
-                        d.process(&batch)
+                        d.execute(&batch)
                             .map_err(|e| format!("{e:#}"))?
+                            .0
                             .iter()
                             .map(|e| e.frame_id),
                     );
                 }
                 if let Some(batch) = b.poll(Duration::from_millis(t)) {
                     ids.extend(
-                        d.process(&batch)
+                        d.execute(&batch)
                             .map_err(|e| format!("{e:#}"))?
+                            .0
                             .iter()
                             .map(|e| e.frame_id),
                     );
@@ -917,8 +1062,9 @@ mod tests {
             }
             if let Some(batch) = b.flush(Duration::from_millis(t + 1000)) {
                 ids.extend(
-                    d.process(&batch)
+                    d.execute(&batch)
                         .map_err(|e| format!("{e:#}"))?
+                        .0
                         .iter()
                         .map(|e| e.frame_id),
                 );

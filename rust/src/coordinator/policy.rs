@@ -37,6 +37,40 @@ pub struct ModeProfile {
     pub energy_j: f64,
 }
 
+/// Service class of a multi-tenant workload.  Classes are served under
+/// strict priority (the derived order: realtime first, background last);
+/// only the background class is sheddable under substrate saturation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Hard per-frame deadlines; never shed, dispatched first.
+    Realtime,
+    /// Best-effort latency; never shed.
+    Standard,
+    /// Scavenger class: consumes spare capacity, shed under backpressure.
+    Background,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Realtime, QosClass::Standard, QosClass::Background];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QosClass::Realtime => "realtime",
+            QosClass::Standard => "standard",
+            QosClass::Background => "background",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QosClass> {
+        QosClass::ALL.into_iter().find(|c| c.label() == s)
+    }
+
+    /// Whether frames of this class may be dropped under backpressure.
+    pub fn sheddable(self) -> bool {
+        matches!(self, QosClass::Background)
+    }
+}
+
 /// Selection constraints; `None` = unconstrained.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Constraints {
@@ -157,17 +191,13 @@ pub fn select(
     constraints: Constraints,
     objective: Objective,
 ) -> Option<ModeProfile> {
+    // `total_cmp` so a NaN metric (uncharacterized mode) cannot panic the
+    // selection; NaN sorts last, so it is never picked over a real value.
     let feasible = profiles.values().filter(|p| constraints.admits(p));
     match objective {
-        Objective::MinLatency => {
-            feasible.min_by(|a, b| a.total_ms.partial_cmp(&b.total_ms).unwrap())
-        }
-        Objective::MinEnergy => {
-            feasible.min_by(|a, b| a.energy_j.partial_cmp(&b.energy_j).unwrap())
-        }
-        Objective::MaxAccuracy => {
-            feasible.min_by(|a, b| a.loce_m.partial_cmp(&b.loce_m).unwrap())
-        }
+        Objective::MinLatency => feasible.min_by(|a, b| a.total_ms.total_cmp(&b.total_ms)),
+        Objective::MinEnergy => feasible.min_by(|a, b| a.energy_j.total_cmp(&b.energy_j)),
+        Objective::MaxAccuracy => feasible.min_by(|a, b| a.loce_m.total_cmp(&b.loce_m)),
     }
     .copied()
 }
@@ -280,6 +310,39 @@ mod tests {
             ..Default::default()
         }
         .admits(&nan));
+    }
+
+    #[test]
+    fn qos_class_roundtrip_and_priority_order() {
+        for c in QosClass::ALL {
+            assert_eq!(QosClass::parse(c.label()), Some(c));
+        }
+        assert_eq!(QosClass::parse("bulk"), None);
+        // Strict priority: realtime < standard < background in sort order.
+        assert!(QosClass::Realtime < QosClass::Standard);
+        assert!(QosClass::Standard < QosClass::Background);
+        assert!(QosClass::Background.sheddable());
+        assert!(!QosClass::Realtime.sheddable());
+        assert!(!QosClass::Standard.sheddable());
+    }
+
+    #[test]
+    fn nan_metrics_never_win_selection() {
+        // A NaN metric must neither panic the sort (f64::total_cmp) nor be
+        // selected over a characterized mode.
+        let p = profile_modes(&manifest());
+        let mut with_nan = p.clone();
+        for prof in with_nan.values_mut() {
+            if prof.mode == Mode::CpuFp32 {
+                prof.total_ms = f64::NAN;
+                prof.energy_j = f64::NAN;
+                prof.loce_m = f64::NAN;
+            }
+        }
+        for obj in [Objective::MinLatency, Objective::MinEnergy, Objective::MaxAccuracy] {
+            let sel = select(&with_nan, Constraints::default(), obj).unwrap();
+            assert_ne!(sel.mode, Mode::CpuFp32, "{obj:?} picked the NaN mode");
+        }
     }
 
     #[test]

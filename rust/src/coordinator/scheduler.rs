@@ -293,11 +293,7 @@ mod tests {
 
     fn batch(frames: Vec<Frame>, size: usize) -> Batch {
         let t_ready = frames.last().unwrap().t_capture;
-        Batch {
-            frames,
-            size,
-            t_ready,
-        }
+        Batch::new(frames, size, t_ready)
     }
 
     fn sched(bias: f32, fail_every: Option<usize>) -> Scheduler<MockBackend> {
@@ -371,11 +367,7 @@ mod tests {
         f0.t_capture = Duration::from_millis(0);
         let mut f1 = frame(1, 5.0);
         f1.t_capture = Duration::from_millis(30);
-        let b = Batch {
-            frames: vec![f0, f1],
-            size: 4,
-            t_ready: Duration::from_millis(50),
-        };
+        let b = Batch::new(vec![f0, f1], 4, Duration::from_millis(50));
         s.process(&b).unwrap();
         assert_eq!(s.telemetry.records[0].queue, Duration::from_millis(50));
         assert_eq!(s.telemetry.records[1].queue, Duration::from_millis(20));

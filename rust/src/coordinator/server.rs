@@ -1,37 +1,31 @@
-//! The MPAI run loop: camera -> preprocess -> batcher -> dispatcher.
+//! The MPAI run loop: camera -> preprocess -> batcher -> engine.
 //!
 //! This is the composition root for the end-to-end path (the
 //! `pose_estimation_e2e` / `pool_dispatch` examples and the `mpai serve`
-//! CLI command).  A run goes through the multi-backend [`Dispatcher`]
-//! (whole-frame dispatch; a single-backend run is a pool of one) or —
-//! with `Config::partition` set — through the partition-aware
-//! [`PipelinedDispatcher`], which splits the network across the pool's
-//! substrates per the spec (`auto` sweeps the cut space).
+//! CLI command).  A run builds one [`Engine`] — the multi-backend
+//! [`Dispatcher`] (whole-frame dispatch; a single-backend run is a pool of
+//! one) or, with `Config::partition` set, the partition-aware
+//! [`PipelinedDispatcher`] — and drives it through the unified
+//! submit/poll/drain surface: the single-workload pump
+//! ([`run_with_engine`]) or the multi-tenant QoS serve loop
+//! ([`run_workloads`]) when `Config::workloads` names tenants.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::PjrtBackend;
-use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::batcher::Batcher;
 use crate::coordinator::config::{Config, Mode, PartitionSpec};
 use crate::coordinator::dispatcher::Dispatcher;
+use crate::coordinator::engine::{run_workloads, Engine, RunOutput};
 use crate::coordinator::pipeline::{build_plans, PipelinedDispatcher};
 use crate::coordinator::policy::profile_modes;
 use crate::coordinator::scheduler::{Backend, PoseEstimate};
 use crate::coordinator::sim::SimBackend;
-use crate::coordinator::telemetry::Telemetry;
 use crate::pose::EvalSet;
 use crate::runtime::artifacts::Manifest;
 use crate::sensor::Camera;
-
-/// Result of a serve run.
-pub struct RunOutput {
-    /// Primary mode (the pool's first backend).
-    pub mode: Mode,
-    pub estimates: Vec<PoseEstimate>,
-    pub telemetry: Telemetry,
-}
 
 /// Modes a run engages: the configured pool, else the single `mode`.
 fn engaged_modes(config: &Config) -> Result<Vec<Mode>> {
@@ -45,14 +39,22 @@ fn engaged_modes(config: &Config) -> Result<Vec<Mode>> {
 }
 
 /// Run the full loop: PJRT backends over the AOT artifacts, or simulated
-/// backends (`config.sim`) that need no artifacts.  With
-/// `Config::partition` set the run goes through the partition-aware
-/// pipelined dispatcher instead of whole-frame dispatch.
+/// backends (`config.sim`) that need no artifacts.  `Config::partition`
+/// selects the partition-aware pipelined engine instead of whole-frame
+/// dispatch; `Config::workloads` selects the multi-tenant serve loop over
+/// whichever engine was built — both compose through the [`Engine`] trait.
 pub fn run(config: &Config) -> Result<RunOutput> {
     if config.partition.is_some() && !config.sim {
         bail!(
             "--partition requires --sim: stage execution binds simulated \
              engines (per-stage PJRT artifacts are not compiled)"
+        );
+    }
+    if !config.workloads.is_empty() && !config.sim {
+        bail!(
+            "--workload/--tenants requires --sim: multi-tenant serving \
+             binds simulated engines (per-network PJRT artifacts are not \
+             compiled)"
         );
     }
     let (manifest, eval) = if config.sim {
@@ -69,12 +71,22 @@ pub fn run(config: &Config) -> Result<RunOutput> {
         let eval = Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?);
         (manifest, eval)
     };
-    if let Some(spec) = &config.partition {
-        return run_partitioned(config, spec, &manifest, eval);
+    let mut engine: Box<dyn Engine> = match &config.partition {
+        Some(spec) => Box::new(build_pipeline_engine(config, spec, &manifest)?),
+        None => Box::new(build_pool_engine(config, &manifest)?),
+    };
+    if config.workloads.is_empty() {
+        run_with_engine(config, eval, engine.as_mut())
+    } else {
+        run_workloads(config, eval, engine.as_mut(), &config.workloads)
     }
+}
 
+/// Build the whole-frame dispatch pool: one backend per engaged mode
+/// (simulated or PJRT), profiles driving routing and admission.
+fn build_pool_engine(config: &Config, manifest: &Manifest) -> Result<Dispatcher> {
     let modes = engaged_modes(config)?;
-    let profiles = profile_modes(&manifest);
+    let profiles = profile_modes(manifest);
     let (net_h, net_w, _) = manifest.net_input;
     let mut pool = Dispatcher::new(manifest.batch, net_h, net_w, config.constraints);
     for (i, &mode) in modes.iter().enumerate() {
@@ -89,11 +101,11 @@ pub fn run(config: &Config) -> Result<RunOutput> {
             }
             Box::new(sim)
         } else {
-            Box::new(PjrtBackend::new(&manifest, mode)?)
+            Box::new(PjrtBackend::new(manifest, mode)?)
         };
         pool.add_backend(backend, profile);
     }
-    run_with_pool(config, eval, pool)
+    Ok(pool)
 }
 
 /// Run with any single backend (mock in tests, PJRT in production) — a
@@ -107,18 +119,17 @@ pub fn run_with_backend<B: Backend + 'static>(
     let (net_h, net_w, _) = manifest.net_input;
     let mut pool = Dispatcher::new(manifest.batch, net_h, net_w, config.constraints);
     pool.add_backend(Box::new(backend), None);
-    run_with_pool(config, eval, pool)
+    run_with_engine(config, eval, &mut pool)
 }
 
-/// Build the pipelined serve path: substrates from the engaged modes (or
+/// Build the pipelined serve engine: substrates from the engaged modes (or
 /// the manual spec), ranked plans from the partition spec, one simulated
 /// backend per substrate.
-fn run_partitioned(
+fn build_pipeline_engine(
     config: &Config,
     spec: &PartitionSpec,
     manifest: &Manifest,
-    eval: Arc<EvalSet>,
-) -> Result<RunOutput> {
+) -> Result<PipelinedDispatcher> {
     // Substrates engaged by the pool, deduped in order, each bound to the
     // *requested* execution mode (cpu-fp32 stays fp32 — no silent remap;
     // two pool modes contending for one substrate is an error, not a
@@ -184,7 +195,7 @@ fn run_partitioned(
     let within = |limit: Option<f64>, v: f64| limit.map_or(true, |max| v <= max);
     let plans: Vec<_> = plans
         .into_iter()
-        .filter(|pl| {
+        .filter_map(|mut pl| {
             let mode = if pl.stages.len() > 1 {
                 Some(Mode::Mpai)
             } else {
@@ -193,11 +204,17 @@ fn run_partitioned(
                     .find(|(n, _)| n == &pl.stages[0].accel)
                     .map(|(_, m)| *m)
             };
-            let Some(p) = mode.and_then(|m| profiles.get(&m)) else {
-                return false;
-            };
-            within(config.constraints.max_loce_m, p.loce_m)
+            let p = mode.and_then(|m| profiles.get(&m))?;
+            if within(config.constraints.max_loce_m, p.loce_m)
                 && within(config.constraints.max_orie_deg, p.orie_deg)
+            {
+                // The serving profile rides on the plan so per-batch
+                // (tenant) constraints can gate it at dispatch time.
+                pl.serving_profile = Some(*p);
+                Some(pl)
+            } else {
+                None
+            }
         })
         .collect();
     if plans.is_empty() {
@@ -224,45 +241,56 @@ fn run_partitioned(
         }
         pipeline.add_stage_backend(name, Box::new(sim));
     }
-    run_with_pipeline(config, eval, pipeline)
+    Ok(pipeline)
 }
 
-/// Drive the camera through the batcher into `process` — the shared serve
-/// loop.  Timed-out batches dispatch *at the deadline*, not at the next
-/// arrival instant, so a partial batch's queue time is bounded by the
-/// timeout even when the camera is slow; the final partial batch flushes
-/// at its own deadline (always past the last arrival — earlier deadlines
-/// drain in the loop).
-fn pump(
+/// Drive the camera through the batcher into any [`Engine`] — the shared
+/// single-workload serve loop.  Timed-out batches dispatch *at the
+/// deadline*, not at the next arrival instant, so a partial batch's queue
+/// time is bounded by the timeout even when the camera is slow; the final
+/// partial batch flushes at its own deadline (always past the last
+/// arrival — earlier deadlines drain in the loop).  An engine with no
+/// backend bound surfaces as an error here, not a panic.
+pub fn run_with_engine(
     config: &Config,
     eval: Arc<EvalSet>,
-    batch_size: usize,
-    mut process: impl FnMut(&Batch) -> Result<Vec<PoseEstimate>>,
-) -> Result<Vec<PoseEstimate>> {
-    let mut batcher = Batcher::new(batch_size, config.batch_timeout);
+    engine: &mut dyn Engine,
+) -> Result<RunOutput> {
+    let mode = engine.primary_mode()?;
+    let mut batcher = Batcher::new(engine.artifact_batch(), config.batch_timeout);
     let camera = Camera::new(eval, config.camera_fps, config.frames);
 
-    let mut estimates = Vec::new();
     for frame in camera {
         while let Some(deadline) = batcher.deadline() {
             if frame.t_capture < deadline {
                 break;
             }
             match batcher.poll(deadline) {
-                Some(batch) => estimates.extend(process(&batch)?),
+                Some(batch) => engine.submit(&batch)?,
                 None => break,
             }
         }
         if let Some(batch) = batcher.push(frame) {
-            estimates.extend(process(&batch)?);
+            engine.submit(&batch)?;
         }
     }
     if let Some(deadline) = batcher.deadline() {
         if let Some(batch) = batcher.flush(deadline) {
-            estimates.extend(process(&batch)?);
+            engine.submit(&batch)?;
         }
     }
-    Ok(estimates)
+    let estimates: Vec<PoseEstimate> = engine
+        .poll()
+        .into_iter()
+        .flat_map(|c| c.estimates)
+        .collect();
+    engine.drain()?;
+
+    Ok(RunOutput {
+        mode,
+        estimates,
+        telemetry: engine.take_telemetry(),
+    })
 }
 
 /// Drive the camera through the batcher into a backend pool.
@@ -271,19 +299,7 @@ pub fn run_with_pool(
     eval: Arc<EvalSet>,
     mut pool: Dispatcher,
 ) -> Result<RunOutput> {
-    if pool.is_empty() {
-        bail!("backend pool is empty");
-    }
-    let mode = pool.primary_mode().expect("non-empty pool");
-    let batch = pool.artifact_batch();
-    let estimates = pump(config, eval, batch, |b| pool.process(b))?;
-    pool.finish();
-
-    Ok(RunOutput {
-        mode,
-        estimates,
-        telemetry: pool.telemetry,
-    })
+    run_with_engine(config, eval, &mut pool)
 }
 
 /// Drive the camera through the partition-aware pipelined dispatcher.
@@ -292,21 +308,13 @@ pub fn run_with_pipeline(
     eval: Arc<EvalSet>,
     mut pipeline: PipelinedDispatcher,
 ) -> Result<RunOutput> {
-    let mode = pipeline.primary_mode();
-    let batch = pipeline.artifact_batch();
-    let estimates = pump(config, eval, batch, |b| pipeline.process(b))?;
-    pipeline.finish();
-
-    Ok(RunOutput {
-        mode,
-        estimates,
-        telemetry: pipeline.telemetry,
-    })
+    run_with_engine(config, eval, &mut pipeline)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::Workload;
     use crate::coordinator::policy::Constraints;
     use crate::coordinator::scheduler::mock::MockBackend;
     use crate::pose::Pose;
@@ -632,6 +640,125 @@ mod tests {
                 profiles[&mode].loce_m
             );
         }
+    }
+
+    #[test]
+    fn multi_tenant_three_classes_serve_on_one_shared_pool() {
+        // ISSUE acceptance: `mpai serve --sim` with three --workload specs
+        // of different QoS classes (ursonet realtime + mobilenet_v2
+        // standard + resnet50 background) runs end-to-end on one shared
+        // substrate pool.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            workloads: vec![
+                Workload::parse(
+                    "rt:net=ursonet,qos=realtime,deadline_ms=8000,rate=8,frames=24",
+                )
+                .unwrap(),
+                Workload::parse(
+                    "std:net=mobilenet_v2,qos=standard,deadline_ms=12000,rate=6,frames=18",
+                )
+                .unwrap(),
+                Workload::parse(
+                    "bg:net=resnet50,qos=background,deadline_ms=400,rate=40,frames=80",
+                )
+                .unwrap(),
+            ],
+            batch_timeout: Duration::from_millis(400),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.telemetry.tenants.len(), 3);
+        let (rt, std_t, bg) = (
+            &out.telemetry.tenants[0],
+            &out.telemetry.tenants[1],
+            &out.telemetry.tenants[2],
+        );
+        // Non-sheddable classes are served in full; realtime deadlines hold.
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (24, 24, 0));
+        assert_eq!(rt.deadline_misses, 0, "rt p99 {}", rt.latency_summary().p99());
+        assert_eq!((std_t.admitted, std_t.completed, std_t.shed), (18, 18, 0));
+        // Background conservation: every emitted frame is completed or
+        // recorded as shed — never silently dropped.
+        assert_eq!(bg.admitted + bg.shed, 80);
+        assert_eq!(bg.completed, bg.admitted);
+        let total = rt.completed + std_t.completed + bg.completed;
+        assert_eq!(out.estimates.len() as u64, total);
+        // One shared pool serves all three tenants.
+        assert_eq!(out.telemetry.backends.len(), 2);
+        let served: usize = out.telemetry.backends.iter().map(|b| b.frames).sum();
+        assert_eq!(served as u64, total, "pool accounting lost frames");
+    }
+
+    #[test]
+    fn multi_tenant_failover_preserves_realtime_frames() {
+        // Faults on the first (fastest) backend: failover must preserve
+        // every realtime frame.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            fail_every: Some(3),
+            workloads: vec![
+                Workload::parse(
+                    "rt:net=ursonet,qos=realtime,deadline_ms=10000,rate=10,frames=20",
+                )
+                .unwrap(),
+                Workload::parse(
+                    "bg:net=ursonet,qos=background,deadline_ms=2000,rate=20,frames=30",
+                )
+                .unwrap(),
+            ],
+            batch_timeout: Duration::from_millis(300),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (20, 20, 0));
+        let failures: usize = out.telemetry.backends.iter().map(|b| b.failures).sum();
+        assert!(failures > 0, "fault injection never fired");
+    }
+
+    #[test]
+    fn multi_tenant_composes_with_partitioned_pipeline_engine() {
+        // Workloads ride the unified Engine trait, so the multi-tenant
+        // loop also drives the partition-aware pipelined engine.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            partition: Some(PartitionSpec::Auto),
+            workloads: vec![
+                Workload::parse(
+                    "rt:net=ursonet,qos=realtime,deadline_ms=10000,rate=8,frames=16",
+                )
+                .unwrap(),
+                Workload::parse(
+                    "bg:net=ursonet,qos=background,deadline_ms=1000,rate=20,frames=24",
+                )
+                .unwrap(),
+            ],
+            batch_timeout: Duration::from_millis(400),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.mode, Mode::Mpai);
+        assert_eq!(out.telemetry.tenants.len(), 2);
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (16, 16, 0));
+        let bg = &out.telemetry.tenants[1];
+        assert_eq!(bg.admitted + bg.shed, 24);
+        // Tenants share the pipelined engine: stage telemetry is present.
+        assert_eq!(out.telemetry.stages.len(), 2);
+    }
+
+    #[test]
+    fn multi_tenant_requires_sim() {
+        let cfg = Config {
+            sim: false,
+            workloads: vec![Workload::parse("rt").unwrap()],
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! per-mode accuracy spreads.  Fault injection (`fail_every`) mirrors the
 //! test mock so failover is demonstrable from the CLI.
 
+use std::collections::BTreeSet;
+
 use anyhow::{bail, Result};
 
 use crate::coordinator::config::Mode;
@@ -39,6 +41,9 @@ pub struct SimBackend {
     calls: usize,
     /// Fail every Nth infer call (fault injection).
     pub fail_every: Option<usize>,
+    /// Fail exactly on these 1-based engine invocations (arbitrary fault
+    /// schedules, e.g. randomized property tests).
+    fail_at: BTreeSet<usize>,
 }
 
 impl SimBackend {
@@ -61,12 +66,20 @@ impl SimBackend {
             truths: Vec::new(),
             calls: 0,
             fail_every: None,
+            fail_at: BTreeSet::new(),
         }
     }
 
     /// Builder: inject a fault every `n`th infer call.
     pub fn with_fail_every(mut self, n: usize) -> SimBackend {
         self.fail_every = Some(n);
+        self
+    }
+
+    /// Builder: inject faults at exactly these 1-based engine invocations
+    /// (combines with `with_fail_every`; either firing fails the call).
+    pub fn with_fail_at(mut self, calls: impl IntoIterator<Item = usize>) -> SimBackend {
+        self.fail_at = calls.into_iter().collect();
         self
     }
 
@@ -100,6 +113,13 @@ impl SimBackend {
             if n > 0 && self.calls % n == 0 {
                 bail!("injected fault on {} sim backend", self.mode.label());
             }
+        }
+        if self.fail_at.contains(&self.calls) {
+            bail!(
+                "scheduled fault on {} sim backend (call {})",
+                self.mode.label(),
+                self.calls
+            );
         }
         Ok(())
     }
@@ -235,6 +255,19 @@ mod tests {
         assert!(b.infer(&images).is_err());
         assert!(b.infer(&images).is_ok());
         assert!(b.infer(&images).is_err());
+    }
+
+    #[test]
+    fn scheduled_faults_fire_on_exact_calls() {
+        let mut b = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3)
+            .with_fail_at(vec![2, 4]);
+        b.observe_truths(&truths(1));
+        let images = Tensor::zeros(vec![1, 6, 8, 3]);
+        assert!(b.infer(&images).is_ok()); // call 1
+        assert!(b.infer(&images).is_err()); // call 2: scheduled
+        assert!(b.infer(&images).is_ok()); // call 3
+        assert!(b.infer(&images).is_err()); // call 4: scheduled
+        assert!(b.infer(&images).is_ok()); // call 5
     }
 
     #[test]

@@ -60,6 +60,47 @@ pub struct StageRecord {
     pub occupancy: f64,
 }
 
+/// Per-tenant accounting of a multi-tenant serve run (filled by the
+/// engine's admission layer — one entry per workload, in workload order).
+#[derive(Debug, Clone)]
+pub struct TenantRecord {
+    pub name: String,
+    /// QoS class label ("realtime" | "standard" | "background").
+    pub qos: &'static str,
+    /// Network the tenant serves (model-zoo name).
+    pub net: String,
+    /// Per-frame completion deadline, measured from capture.
+    pub deadline: Duration,
+    /// Frames admitted into the engine (emitted minus shed).
+    pub admitted: u64,
+    /// Frames that completed with an estimate.
+    pub completed: u64,
+    /// Frames explicitly shed under backpressure (background class only —
+    /// shedding is recorded, never silent).
+    pub shed: u64,
+    /// Completed frames whose capture→completion latency exceeded the
+    /// deadline.
+    pub deadline_misses: u64,
+    /// Simulated capture→completion latency per completed frame (s).
+    pub latencies_s: Vec<f64>,
+}
+
+impl TenantRecord {
+    /// Summary over the simulated per-frame latencies.
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from(&self.latencies_s)
+    }
+
+    /// Deadline-miss rate over completed frames (0 when none completed).
+    pub fn miss_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.completed as f64
+        }
+    }
+}
+
 /// Aggregated run telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -72,6 +113,10 @@ pub struct Telemetry {
     /// filled by `PipelinedDispatcher::finish` (empty for whole-frame
     /// dispatch runs).
     pub stages: Vec<StageRecord>,
+    /// Per-tenant admission/latency/deadline accounting — one entry per
+    /// workload, filled by the multi-tenant serve loop (empty for
+    /// single-workload runs).
+    pub tenants: Vec<TenantRecord>,
 }
 
 impl Telemetry {
@@ -97,6 +142,24 @@ impl Telemetry {
 
     pub fn record_stage(&mut self, r: StageRecord) {
         self.stages.push(r);
+    }
+
+    pub fn record_tenant(&mut self, r: TenantRecord) {
+        self.tenants.push(r);
+    }
+
+    /// Total frames shed across tenants (0 for single-workload runs).
+    pub fn shed_total(&self) -> u64 {
+        self.tenants.iter().map(|t| t.shed).sum()
+    }
+
+    /// Deadline misses of one QoS class across tenants.
+    pub fn class_deadline_misses(&self, qos: &str) -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.qos == qos)
+            .map(|t| t.deadline_misses)
+            .sum()
     }
 
     pub fn accuracy(&self) -> (f64, f64) {
@@ -232,6 +295,25 @@ impl Telemetry {
                 st.occupancy * 100.0,
             );
         }
+        for t in &self.tenants {
+            let lat = t.latency_summary();
+            let _ = write!(
+                s,
+                "\ntenant {:<8} ({:<10} {:<12}) admitted {:>5}  completed {:>5}  \
+                 shed {:>4}  misses {:>4}  lat p50 {:>7.1} ms  p99 {:>7.1} ms  \
+                 deadline {:>6.0} ms",
+                t.name,
+                t.qos,
+                t.net,
+                t.admitted,
+                t.completed,
+                t.shed,
+                t.deadline_misses,
+                lat.p50() * 1e3,
+                lat.p99() * 1e3,
+                t.deadline.as_secs_f64() * 1e3,
+            );
+        }
         s
     }
 }
@@ -333,6 +415,49 @@ mod tests {
         let r = t.report();
         assert!(r.contains("stage dpu"), "{r}");
         assert!(r.contains("80.0%"), "{r}");
+    }
+
+    fn tenant(name: &str, qos: &'static str, completed: u64, misses: u64, shed: u64) -> TenantRecord {
+        TenantRecord {
+            name: name.to_string(),
+            qos,
+            net: "ursonet_full".into(),
+            deadline: Duration::from_millis(500),
+            admitted: completed,
+            completed,
+            shed,
+            deadline_misses: misses,
+            latencies_s: (0..completed).map(|i| 0.1 + 0.01 * i as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn tenant_records_summarize_latency_and_misses() {
+        let mut t = Telemetry::new();
+        t.record_tenant(tenant("rt", "realtime", 10, 0, 0));
+        t.record_tenant(tenant("bg", "background", 4, 2, 6));
+        assert_eq!(t.shed_total(), 6);
+        assert_eq!(t.class_deadline_misses("realtime"), 0);
+        assert_eq!(t.class_deadline_misses("background"), 2);
+        let rt = &t.tenants[0];
+        assert_eq!(rt.latency_summary().len(), 10);
+        assert!((rt.latency_summary().mean() - 0.145).abs() < 1e-9);
+        assert_eq!(rt.miss_rate(), 0.0);
+        assert_eq!(t.tenants[1].miss_rate(), 0.5);
+        // Empty tenant: no division by zero.
+        let empty = tenant("idle", "standard", 0, 0, 0);
+        assert_eq!(empty.miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn report_lists_tenants() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        t.record_tenant(tenant("rt", "realtime", 3, 1, 2));
+        let r = t.report();
+        assert!(r.contains("tenant rt"), "{r}");
+        assert!(r.contains("shed    2"), "{r}");
+        assert!(r.contains("misses    1"), "{r}");
     }
 
     #[test]

@@ -17,7 +17,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use mpai::accel::interconnect::links;
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
-use mpai::coordinator::{self, Config, Constraints, Mode, Objective, PartitionSpec};
+use mpai::coordinator::{
+    self, parse_tenant_file, Config, Constraints, Mode, Objective, PartitionSpec, Workload,
+};
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
 use mpai::pose::EvalSet;
@@ -63,7 +65,7 @@ fn print_usage() {
          commands:\n  \
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
-         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] run the coordinator\n  \
+         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] run the coordinator\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points"
@@ -198,6 +200,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
             ("pool", "[MODES]", "multi-backend pool; bare flag = dpu-int8,vpu-fp16"),
             ("partition", "SPEC", "auto | accel@layer,..,accel — N-stage pipelined split (sim)"),
+            (
+                "workload",
+                "SPEC",
+                "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=.. — multi-tenant serve (sim)",
+            ),
+            ("tenants", "FILE", "JSON workload list ([{...}] or {\"workloads\": [...]})"),
             ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
             ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
             ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
@@ -242,6 +250,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         Some(_) => Some(a.get_usize("fail-every", 0)?),
         None => None,
     };
+    let mut workloads: Vec<Workload> = Vec::new();
+    if let Some(path) = a.get("tenants") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --tenants file {path:?}"))?;
+        workloads.extend(
+            parse_tenant_file(&text).map_err(|e| anyhow!("bad --tenants {path:?}: {e}"))?,
+        );
+    }
+    for spec in a.get_all("workload") {
+        workloads.push(Workload::parse(spec).map_err(|e| anyhow!("bad --workload: {e}"))?);
+    }
     let cfg = Config {
         artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
         mode: Some(mode),
@@ -254,6 +273,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         constraints: parse_constraints(&a)?,
         partition,
         boundary_link,
+        workloads,
     };
     let engaged = if pool.is_empty() {
         format!("mode {}", mode.label())
@@ -261,6 +281,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         format!(
             "pool [{}]",
             pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", ")
+        )
+    };
+    let tenants_note = if cfg.workloads.is_empty() {
+        String::new()
+    } else {
+        format!(
+            " tenants [{}]",
+            cfg.workloads
+                .iter()
+                .map(|w| format!("{} ({})", w.name, w.qos.label()))
+                .collect::<Vec<_>>()
+                .join(", ")
         )
     };
     let split = match &cfg.partition {
@@ -276,7 +308,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         None => String::new(),
     };
     println!(
-        "mpai serve — {engaged}{split} fps {} frames {}{}",
+        "mpai serve — {engaged}{split}{tenants_note} fps {} frames {}{}",
         cfg.camera_fps,
         cfg.frames,
         if cfg.sim { " (simulated backends)" } else { "" }
@@ -390,16 +422,21 @@ fn cmd_cuts(argv: &[String]) -> Result<()> {
     accels.insert("dpu".into(), &dpu);
     accels.insert("vpu".into(), &vpu);
 
-    let mut rows: Vec<(f64, String, usize, u64, u64)> = enumerate_cuts(&compiled, 1)
-        .into_iter()
-        .map(|c| {
-            let p = Partition::two_way(&compiled, c.at, "dpu", "vpu");
-            let lat = partition_latency(&compiled, &p, &accels, &links::USB3)
-                .expect("dpu/vpu registered");
-            (lat.total_ms(), c.layer_name, c.boundary_bytes, c.macs.0, c.macs.1)
-        })
-        .collect();
-    rows.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    // The estimate's typed error (`EstimateError`) propagates as a CLI
+    // error instead of panicking, and `total_cmp` keeps the sort safe even
+    // if a model ever yields a NaN latency.
+    let mut rows: Vec<(f64, String, usize, u64, u64)> = Vec::new();
+    for c in enumerate_cuts(&compiled, 1) {
+        let lat = partition_latency(
+            &compiled,
+            &Partition::two_way(&compiled, c.at, "dpu", "vpu"),
+            &accels,
+            &links::USB3,
+        )
+        .with_context(|| format!("estimating the cut after layer {:?}", c.layer_name))?;
+        rows.push((lat.total_ms(), c.layer_name, c.boundary_bytes, c.macs.0, c.macs.1));
+    }
+    rows.sort_by(|x, y| x.0.total_cmp(&y.0));
 
     println!(
         "{} DPU->VPU cut-points for {name} (modeled, sorted by latency):\n",

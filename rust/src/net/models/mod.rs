@@ -16,13 +16,14 @@ pub fn fig2_models() -> Vec<Graph> {
     ]
 }
 
-/// Look a model up by CLI name.
+/// Look a model up by CLI name (`"ursonet"` is an alias for the
+/// paper-scale `ursonet_full`, matching the workload-spec vocabulary).
 pub fn by_name(name: &str) -> Option<Graph> {
     match name {
         "mobilenet_v2" => Some(mobilenet_v2::build(1000)),
         "resnet50" => Some(resnet50::build(1000)),
         "inception_v4" => Some(inception_v4::build(1000)),
-        "ursonet_full" => Some(ursonet::build_full()),
+        "ursonet" | "ursonet_full" => Some(ursonet::build_full()),
         "ursonet_lite" => Some(ursonet::build_lite()),
         _ => None,
     }
@@ -51,6 +52,8 @@ mod tests {
             let g = by_name(name).unwrap();
             assert_eq!(g.name, name);
         }
+        // The workload-spec alias resolves to the paper-scale network.
+        assert_eq!(by_name("ursonet").unwrap().name, "ursonet_full");
         assert!(by_name("vgg16").is_none());
     }
 

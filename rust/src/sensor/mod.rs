@@ -1,4 +1,4 @@
-//! Sensor pipeline: synthetic camera + preprocessing (DESIGN.md §4.6).
+//! Sensor pipeline: synthetic camera + preprocessing (DESIGN.md §4.7).
 
 pub mod camera;
 pub mod preprocess;

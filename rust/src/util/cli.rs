@@ -3,8 +3,10 @@
 //! Supports subcommands, `--flag`, `--key value` / `--key=value`,
 //! optional-value options (`[PLACEHOLDER]` spec: value may be omitted, in
 //! which case the key parses as a flag — `--pool` vs `--pool dpu-int8`),
-//! and positional arguments, with generated usage text.  Only what the
-//! `mpai` binary and examples need — deliberately no derive magic.
+//! repeatable options (`get_all` returns every occurrence in argv order;
+//! `get` keeps last-wins semantics), and positional arguments, with
+//! generated usage text.  Only what the `mpai` binary and examples need —
+//! deliberately no derive magic.
 
 use std::collections::BTreeMap;
 
@@ -13,6 +15,8 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
+    /// Every valued occurrence in argv order (repeatable options).
+    multi: Vec<(String, String)>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -104,11 +108,13 @@ impl Spec {
                     // `=` form) as a valued option.
                     match inline_val {
                         Some(v) => {
+                            out.multi.push((key.clone(), v.clone()));
                             out.opts.insert(key, v);
                         }
                         None => match argv.get(i + 1) {
                             Some(next) if !next.starts_with("--") => {
                                 i += 1;
+                                out.multi.push((key.clone(), next.clone()));
                                 out.opts.insert(key, next.clone());
                             }
                             _ => out.flags.push(key),
@@ -124,6 +130,7 @@ impl Spec {
                                 .ok_or_else(|| CliError::MissingValue(key.clone()))?
                         }
                     };
+                    out.multi.push((key.clone(), val.clone()));
                     out.opts.insert(key, val);
                 } else {
                     return Err(CliError::UnknownOption(key));
@@ -144,6 +151,16 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(String::as_str)
+    }
+
+    /// Every value given for a repeatable option, in argv order (empty
+    /// when the option never appeared).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.multi
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -253,6 +270,17 @@ mod tests {
         assert!(!a.flag("pool"));
         let a = spec().parse(&sv(&["--pool=mpai"])).unwrap();
         assert_eq!(a.get("pool"), Some("mpai"));
+    }
+
+    #[test]
+    fn repeatable_options_accumulate_in_order() {
+        let a = spec()
+            .parse(&sv(&["--out", "a", "--count", "1", "--out=b", "--out", "c"]))
+            .unwrap();
+        assert_eq!(a.get_all("out"), vec!["a", "b", "c"]);
+        // `get` keeps last-wins semantics for non-repeatable callers.
+        assert_eq!(a.get("out"), Some("c"));
+        assert!(a.get_all("rate").is_empty());
     }
 
     #[test]
