@@ -19,12 +19,13 @@ use mpai::coordinator::{
 };
 use mpai::pose::EvalSet;
 use mpai::runtime::Manifest;
+use mpai::util::benchio;
 
 const FRAMES: u64 = 240;
 const CAMERA_FPS: f64 = 120.0;
 
 fn run_modes(modes: &[Mode], fail_every: Option<usize>) -> RunOutput {
-    let manifest = Manifest::synthetic();
+    let manifest = Manifest::synthetic().expect("synthetic manifest");
     let profiles = profile_modes(&manifest);
     let eval = Arc::new(EvalSet::synthetic(
         manifest.eval_count,
@@ -111,6 +112,15 @@ fn main() {
     assert!(engaged >= 2, "pool engaged only {engaged} backend(s)");
     let failures: usize = faulty.telemetry.backends.iter().map(|b| b.failures).sum();
     assert!(failures > 0, "fault injection never fired");
+
+    benchio::emit(
+        "coordinator_dispatch",
+        &[
+            ("single_fps", single_fps),
+            ("pool_fps", pool_fps),
+            ("faulty_pool_fps", faulty_fps),
+        ],
+    );
 
     println!("\nablation gates held (no frame loss, pool > single, failover engaged).");
 }

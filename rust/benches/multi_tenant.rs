@@ -17,6 +17,7 @@
 //! `MPAI_BENCH_SMOKE=1` shortens the runs (CI smoke mode).
 
 use mpai::coordinator::{self, Config, Mode, RunOutput, Workload};
+use mpai::util::benchio;
 use std::time::Duration;
 
 /// All tenants serve the calibrated network (cost 1.0), so the ablation
@@ -199,6 +200,14 @@ fn main() {
         "failover lost realtime frames"
     );
     assert!(faults > 0, "fault injection never fired");
+
+    benchio::emit(
+        "multi_tenant",
+        &[
+            ("shared_pool_fps", shared_fps),
+            ("best_static_split_fps", best_split_fps),
+        ],
+    );
 
     println!(
         "\nablation gates held: shared {shared_fps:.1} FPS ≥ best split \

@@ -21,6 +21,7 @@ use mpai::accel::{partition_latency, Accelerator, Dpu, Vpu};
 use mpai::coordinator::{self, Config, Constraints, Mode, PartitionSpec, RunOutput};
 use mpai::net::compiler::{compile, enumerate_cuts, evaluate_cut, select_cut, Partition};
 use mpai::net::models::ursonet;
+use mpai::util::benchio;
 
 fn run_pipeline(frames: u64, fail_every: Option<usize>) -> RunOutput {
     let cfg = Config {
@@ -150,6 +151,17 @@ fn main() {
         sim_fps > 0.4 * best.steady_fps && sim_fps < 1.5 * best.steady_fps,
         "sim {sim_fps:.1} FPS drifted from modeled {:.1} FPS",
         best.steady_fps
+    );
+
+    benchio::emit(
+        "pipeline_partition",
+        &[
+            ("auto_cut_steady_fps", best.steady_fps),
+            ("worst_cut_steady_fps", worst.steady_fps),
+            ("dpu_whole_frame_fps", dpu_whole),
+            ("vpu_whole_frame_fps", vpu_whole),
+            ("sim_pipeline_fps", sim_fps),
+        ],
     );
 
     println!(

@@ -1,0 +1,239 @@
+//! Bench AB-WC: measured vs modeled throughput — the threaded wall-clock
+//! executor against the single-threaded replay.
+//!
+//! Three runs over one fixed DPU+VPU pool (explicit profiles with round
+//! service times — 240 ms and 1000 ms per 4-frame batch — so the modeled
+//! numbers are exact by construction, machine-independent, and gateable):
+//!
+//! * **modeled** — the classic sim executor: everything virtual, the
+//!   throughput is the analytic/simulated window (deterministic; the
+//!   baseline-gated metric);
+//! * **measured serial** — the same engine with `SimBackend`s in sleep
+//!   service mode: every modeled service second costs `SCALE` host
+//!   seconds *on the coordinator thread*, so the run serializes both
+//!   substrates (what a naive single-threaded host really does);
+//! * **measured threaded** — `--executor threaded`: per-substrate worker
+//!   threads replay the same service spans concurrently, so wall time
+//!   collapses toward the bottleneck substrate (the modeled window).
+//!
+//! Gates: frame conservation in all three runs, modeled window identical
+//! across executors (determinism), threaded speedup over serial ≥ 1.2x
+//! (ideal here ≈ 1.57x), and the multi-tenant accounting equivalence the
+//! ISSUE acceptance names (3 mixed-QoS workloads, `--executor sim` vs
+//! `threaded`, identical admitted/completed/shed/miss counts).
+//!
+//! `MPAI_BENCH_SMOKE=1` shrinks the host-time scale (CI smoke mode);
+//! `MPAI_BENCH_JSON=dir` emits `BENCH_wall_clock.json` for the CI gate.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpai::coordinator::{
+    self, run_with_engine, Config, Constraints, Dispatcher, Engine, ExecutorKind, Mode,
+    ModeProfile, RunOutput, ServiceMode, SimBackend, ThreadedExecutor, Workload,
+};
+use mpai::pose::EvalSet;
+use mpai::util::benchio;
+
+const FRAMES: u64 = 32;
+const CAMERA_FPS: f64 = 100.0;
+
+fn profile(mode: Mode, total_ms: f64, loce_m: f64) -> ModeProfile {
+    ModeProfile {
+        mode,
+        inference_ms: total_ms,
+        total_ms,
+        loce_m,
+        orie_deg: 8.0,
+        energy_j: 1.0,
+    }
+}
+
+/// The fixed pool: DPU 60 ms/frame (240 ms/batch), VPU 250 ms/frame
+/// (1000 ms/batch).  `service` applies to the backends (the serial
+/// measured run); the threaded executor replays spans itself.
+fn pool(service: ServiceMode) -> Dispatcher {
+    let dpu = profile(Mode::DpuInt8, 60.0, 0.96);
+    let vpu = profile(Mode::VpuFp16, 250.0, 0.69);
+    let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+    d.add_backend(
+        Box::new(SimBackend::new(Mode::DpuInt8, &dpu, 11).with_service(service)),
+        Some(dpu),
+    );
+    d.add_backend(
+        Box::new(SimBackend::new(Mode::VpuFp16, &vpu, 12).with_service(service)),
+        Some(vpu),
+    );
+    d
+}
+
+fn cfg(executor: ExecutorKind, time_scale: f64) -> Config {
+    Config {
+        sim: true,
+        frames: FRAMES,
+        camera_fps: CAMERA_FPS,
+        batch_timeout: Duration::from_millis(500),
+        executor,
+        time_scale,
+        ..Default::default()
+    }
+}
+
+fn eval() -> Arc<EvalSet> {
+    Arc::new(EvalSet::synthetic(8, 12, 16, 42))
+}
+
+/// Simulated run window (s), recovered from busy/utilization accounting.
+fn sim_window_s(out: &RunOutput) -> f64 {
+    out.telemetry
+        .backends
+        .iter()
+        .filter(|b| b.utilization > 0.0)
+        .map(|b| b.busy.as_secs_f64() / b.utilization)
+        .fold(0.0, f64::max)
+}
+
+fn assert_conserved(label: &str, out: &RunOutput) {
+    assert_eq!(out.estimates.len() as u64, FRAMES, "{label} lost frames");
+    let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+    let expect: Vec<u64> = (0..FRAMES).collect();
+    assert_eq!(ids, expect, "{label} reordered/duplicated frames");
+}
+
+fn main() {
+    println!("=== AB-WC: measured vs modeled throughput (threaded executor) ===\n");
+    let smoke = std::env::var("MPAI_BENCH_SMOKE").is_ok();
+    // Host seconds per modeled second for the two measured runs.
+    let scale: f64 = if smoke { 0.05 } else { 0.2 };
+
+    // ---- Modeled (sim executor, no host time) -----------------------------
+    let mut modeled_engine = pool(ServiceMode::Off);
+    let modeled = run_with_engine(&cfg(ExecutorKind::Sim, 0.0), eval(), &mut modeled_engine)
+        .expect("modeled run");
+    let modeled_window = sim_window_s(&modeled);
+    let modeled_fps = FRAMES as f64 / modeled_window;
+    println!("modeled:          {modeled_fps:.2} FPS over {modeled_window:.3} modeled s");
+
+    // ---- Measured serial (service sleeps on the coordinator thread) ------
+    let mut serial_engine = pool(ServiceMode::Sleep { time_scale: scale });
+    let t0 = Instant::now();
+    let serial = run_with_engine(&cfg(ExecutorKind::Sim, 0.0), eval(), &mut serial_engine)
+        .expect("serial measured run");
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let serial_fps = FRAMES as f64 / (serial_wall / scale);
+    println!(
+        "measured serial:  {serial_fps:.2} FPS-equivalent over {serial_wall:.3} wall s \
+         (scale {scale})"
+    );
+
+    // ---- Measured threaded (per-substrate workers replay the spans) ------
+    let mut threaded_engine: Box<dyn Engine> = Box::new(ThreadedExecutor::new(
+        Box::new(pool(ServiceMode::Off)),
+        ServiceMode::Sleep { time_scale: scale },
+    ));
+    let threaded = run_with_engine(
+        &cfg(ExecutorKind::Threaded, scale),
+        eval(),
+        threaded_engine.as_mut(),
+    )
+    .expect("threaded measured run");
+    let threaded_wall = threaded
+        .telemetry
+        .measured_elapsed_s
+        .expect("threaded run measures wall elapsed");
+    let threaded_window = sim_window_s(&threaded);
+    let threaded_fps = FRAMES as f64 / (threaded_wall / scale);
+    let speedup = serial_wall / threaded_wall;
+    println!(
+        "measured threaded: {threaded_fps:.2} FPS-equivalent over {threaded_wall:.3} wall s \
+         ({speedup:.2}x over serial)"
+    );
+    println!(
+        "batch replay p50 {:.1} ms / p99 {:.1} ms",
+        threaded.telemetry.measured_batch_summary().p50() * 1e3,
+        threaded.telemetry.measured_batch_summary().p99() * 1e3,
+    );
+
+    // ---- Gates ------------------------------------------------------------
+    assert_conserved("modeled", &modeled);
+    assert_conserved("serial", &serial);
+    assert_conserved("threaded", &threaded);
+    assert!(
+        (modeled_window - threaded_window).abs() < 1e-9,
+        "executors diverged on the modeled window: sim {modeled_window} vs \
+         threaded {threaded_window}"
+    );
+    assert!(
+        speedup >= 1.2,
+        "threaded executor {threaded_wall:.3}s must beat serial {serial_wall:.3}s \
+         by >= 1.2x (got {speedup:.2}x)"
+    );
+    assert!(
+        threaded_wall >= modeled_window * scale * 0.9,
+        "threaded wall {threaded_wall:.3}s beat the modeled bottleneck \
+         {:.3}s — replay is dropping service time",
+        modeled_window * scale
+    );
+
+    // ---- Multi-tenant accounting equivalence (ISSUE acceptance) -----------
+    let mix = || -> Vec<Workload> {
+        vec![
+            Workload::parse("rt:net=ursonet,qos=realtime,deadline_ms=8000,rate=8,frames=24")
+                .expect("rt spec"),
+            Workload::parse("std:net=mobilenet_v2,qos=standard,deadline_ms=12000,rate=6,frames=18")
+                .expect("std spec"),
+            Workload::parse("bg:net=resnet50,qos=background,deadline_ms=400,rate=40,frames=80")
+                .expect("bg spec"),
+        ]
+    };
+    let serve = |executor: ExecutorKind| -> RunOutput {
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            workloads: mix(),
+            batch_timeout: Duration::from_millis(400),
+            executor,
+            time_scale: 0.01,
+            ..Default::default()
+        };
+        coordinator::run(&cfg).expect("multi-tenant serve")
+    };
+    let sim_mt = serve(ExecutorKind::Sim);
+    let thr_mt = serve(ExecutorKind::Threaded);
+    for (s, t) in sim_mt.telemetry.tenants.iter().zip(&thr_mt.telemetry.tenants) {
+        println!(
+            "tenant {:<4} sim (admitted {}, completed {}, shed {}, misses {}) == threaded \
+             (admitted {}, completed {}, shed {}, misses {})",
+            s.name, s.admitted, s.completed, s.shed, s.deadline_misses,
+            t.admitted, t.completed, t.shed, t.deadline_misses,
+        );
+        assert_eq!(
+            (s.admitted, s.completed, s.shed, s.deadline_misses),
+            (t.admitted, t.completed, t.shed, t.deadline_misses),
+            "tenant {} accounting diverged across executors",
+            s.name
+        );
+    }
+    assert_eq!(
+        sim_mt.estimates.len(),
+        thr_mt.estimates.len(),
+        "estimate streams diverged across executors"
+    );
+
+    benchio::emit(
+        "wall_clock",
+        &[
+            ("modeled_fps", modeled_fps),
+            ("modeled_window_s", modeled_window),
+            ("serial_wall_s", serial_wall),
+            ("threaded_wall_s", threaded_wall),
+            ("threaded_speedup", speedup),
+        ],
+    );
+
+    println!(
+        "\nAB-WC gates held: conservation x3, modeled window identical across \
+         executors, threaded {speedup:.2}x over serial, multi-tenant accounting \
+         equivalent."
+    );
+}

@@ -1,0 +1,258 @@
+//! `bench-gate` — CI regression gate over machine-readable bench results.
+//!
+//! The bench-smoke CI job runs the ablation benches with
+//! `MPAI_BENCH_JSON=<dir>`, which makes each bench emit a
+//! `BENCH_<name>.json` results document (see `mpai::util::benchio`).
+//! This binary compares those results against the committed
+//! `bench/baseline.json` and fails (exit 1) on regressions past the
+//! baseline's tolerance:
+//!
+//! ```text
+//! bench-gate check   bench/baseline.json <results-dir>
+//! bench-gate refresh bench/baseline.json <results-dir>
+//! ```
+//!
+//! Direction is inferred from the metric name: `*_fps` / `*_speedup` are
+//! higher-is-better, `*_s` / `*_ms` are lower-is-better, anything else is
+//! gated two-sided.  A baseline value of `null` marks a metric that is
+//! tracked but not yet baselined (recorded, never failed) — `refresh`
+//! replaces every baseline entry with the observed values (the refresh
+//! procedure is documented in EXPERIMENTS.md).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use mpai::util::json::{self, Json};
+
+const DEFAULT_TOLERANCE_PCT: f64 = 15.0;
+
+/// Which way a metric is allowed to move freely.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    TwoSided,
+}
+
+fn direction(metric: &str) -> Direction {
+    if metric.ends_with("_fps") || metric.ends_with("_speedup") {
+        Direction::HigherIsBetter
+    } else if metric.ends_with("_s") || metric.ends_with("_ms") {
+        Direction::LowerIsBetter
+    } else {
+        Direction::TwoSided
+    }
+}
+
+fn load(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+}
+
+fn results_path(dir: &Path, bench: &str) -> PathBuf {
+    dir.join(format!("BENCH_{bench}.json"))
+}
+
+/// Observed metrics of one emitted results document.
+fn observed_metrics(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let metrics = doc
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .context("results document has no \"metrics\" object")?;
+    Ok(metrics
+        .iter()
+        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+        .collect())
+}
+
+fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
+    let baseline = load(baseline_path)?;
+    let tolerance_pct = baseline
+        .get("tolerance_pct")
+        .and_then(Json::as_f64)
+        .unwrap_or(DEFAULT_TOLERANCE_PCT);
+    let tol = tolerance_pct / 100.0;
+    let benches = baseline
+        .get("benches")
+        .and_then(Json::as_obj)
+        .context("baseline has no \"benches\" object")?;
+
+    let mut failures = 0usize;
+    for (bench, metrics) in benches {
+        let Some(metrics) = metrics.as_obj() else {
+            bail!("baseline bench {bench:?} is not an object");
+        };
+        let gated = metrics.values().any(|v| v.as_f64().is_some());
+        let path = results_path(results_dir, bench);
+        let doc = match load(&path) {
+            Ok(d) => d,
+            // A bench with only tracked (`null`) metrics may legitimately
+            // not have run (e.g. a single-bench local check); a *gated*
+            // bench that emitted nothing is a hard failure.
+            Err(e) if gated => {
+                println!("FAIL  {bench}: no results emitted ({e:#})");
+                failures += 1;
+                continue;
+            }
+            Err(_) => {
+                println!("note  {bench}: no results emitted (all metrics unbaselined) — skipped");
+                continue;
+            }
+        };
+        for (metric, base) in metrics {
+            let observed = doc
+                .get("metrics")
+                .and_then(|m| m.get(metric))
+                .and_then(Json::as_f64);
+            let Some(observed) = observed else {
+                println!("FAIL  {bench}.{metric}: metric missing from {path:?}");
+                failures += 1;
+                continue;
+            };
+            let Some(base) = base.as_f64() else {
+                println!(
+                    "note  {bench}.{metric}: observed {observed:.4} (unbaselined — \
+                     run `bench-gate refresh` to start gating it)"
+                );
+                continue;
+            };
+            if !base.is_finite() || base == 0.0 {
+                println!("note  {bench}.{metric}: unusable baseline {base} — skipped");
+                continue;
+            }
+            let delta = (observed - base) / base;
+            let regressed = match direction(metric) {
+                Direction::HigherIsBetter => delta < -tol,
+                Direction::LowerIsBetter => delta > tol,
+                Direction::TwoSided => delta.abs() > tol,
+            };
+            if regressed {
+                println!(
+                    "FAIL  {bench}.{metric}: {observed:.4} vs baseline {base:.4} \
+                     ({:+.1}% > {tolerance_pct}% tolerance)",
+                    delta * 100.0
+                );
+                failures += 1;
+            } else if delta.abs() > tol {
+                // Only reachable for one-sided metrics that *improved*
+                // past the tolerance: keep the baseline honest.
+                println!(
+                    "note  {bench}.{metric}: improved {:+.1}% past tolerance — \
+                     consider a baseline refresh",
+                    delta * 100.0
+                );
+            } else {
+                println!(
+                    "ok    {bench}.{metric}: {observed:.4} vs {base:.4} ({:+.1}%)",
+                    delta * 100.0
+                );
+            }
+        }
+    }
+    Ok(failures)
+}
+
+/// Rewrite the baseline from observed results.  By default a metric that
+/// was `null` (tracked, unbaselined — e.g. machine-dependent wall times)
+/// stays `null` and newly-seen metrics enter as `null`; `promote_all`
+/// turns every observed value into a gated baseline.
+fn refresh(baseline_path: &Path, results_dir: &Path, promote_all: bool) -> Result<()> {
+    let old = load(baseline_path).ok();
+    let tolerance_pct = old
+        .as_ref()
+        .and_then(|b| b.get("tolerance_pct").and_then(Json::as_f64))
+        .unwrap_or(DEFAULT_TOLERANCE_PCT);
+    // A metric is gated iff the old baseline holds a number for it.
+    let was_gated = |bench: &str, metric: &str| -> bool {
+        old.as_ref()
+            .and_then(|b| b.get("benches"))
+            .and_then(|bs| bs.get(bench))
+            .and_then(|m| m.get(metric))
+            .and_then(Json::as_f64)
+            .is_some()
+    };
+
+    let mut benches = Json::obj();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(results_dir)
+        .with_context(|| format!("listing {results_dir:?}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    entries.sort();
+    if entries.is_empty() {
+        bail!("no BENCH_*.json results in {results_dir:?}");
+    }
+    for path in entries {
+        let doc = load(&path)?;
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{path:?} has no \"name\""))?
+            .to_string();
+        let mut metrics = Json::obj();
+        for (k, v) in observed_metrics(&doc)? {
+            if promote_all || was_gated(&name, &k) {
+                metrics.set(&k, Json::Num(v));
+            } else {
+                metrics.set(&k, Json::Null);
+            }
+        }
+        benches.set(&name, metrics);
+    }
+
+    let mut out = Json::obj();
+    out.set("tolerance_pct", Json::Num(tolerance_pct));
+    out.set("benches", benches);
+    std::fs::write(baseline_path, format!("{out}\n"))
+        .with_context(|| format!("writing {baseline_path:?}"))?;
+    println!("baseline refreshed -> {baseline_path:?}");
+    Ok(())
+}
+
+fn run() -> Result<usize> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.as_slice() {
+        [cmd, baseline, results] if cmd == "check" => {
+            check(Path::new(baseline), Path::new(results))
+        }
+        [cmd, baseline, results] if cmd == "refresh" => {
+            refresh(Path::new(baseline), Path::new(results), false)?;
+            Ok(0)
+        }
+        [cmd, flag, baseline, results] if cmd == "refresh" && flag == "--all" => {
+            refresh(Path::new(baseline), Path::new(results), true)?;
+            Ok(0)
+        }
+        _ => bail!(
+            "usage: bench-gate check <baseline.json> <results-dir>\n\
+             \x20      bench-gate refresh [--all] <baseline.json> <results-dir>\n\
+             (results are the BENCH_*.json files benches emit under \
+             MPAI_BENCH_JSON; refresh keeps unbaselined `null` metrics null \
+             unless --all promotes them)"
+        ),
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(0) => {
+            println!("bench gate passed");
+            ExitCode::SUCCESS
+        }
+        Ok(n) => {
+            println!("bench gate FAILED: {n} regression(s)");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! The run clock: one abstraction over the two timelines every serve run
+//! straddles.
+//!
+//! Every scheduling decision in the coordinator — batcher deadlines,
+//! arrival ordering, `ready_at` backpressure, shed/deadline accounting —
+//! is expressed in *virtual* instants (`Duration` offsets from the run
+//! epoch, the synthetic camera's capture timestamps).  What differs
+//! between executors is how those instants relate to host time:
+//!
+//! * [`SimClock`] — the deterministic simulated timeline the engines have
+//!   always used: `wait_until` just advances a cursor, so a whole run
+//!   replays instantly and every number is reproducible bit-for-bit;
+//! * [`WallClock`] — maps virtual instants onto host [`Instant`]s through
+//!   a `time_scale` (virtual second → `time_scale` wall seconds):
+//!   `wait_until` genuinely sleeps, so arrivals are paced in real time
+//!   and the [`ThreadedExecutor`](crate::coordinator::executor::ThreadedExecutor)'s
+//!   worker threads service batches concurrently while the admission
+//!   loop waits for the next arrival.
+//!
+//! The split is deliberate: accounting stays on the virtual timeline for
+//! both clocks (that is what makes the sim/threaded determinism
+//! equivalence hold — see `coordinator::executor`), while the wall clock
+//! adds *measured* elapsed time on top (reported separately in
+//! telemetry).  The clock never feeds back into scheduling decisions.
+
+use std::time::{Duration, Instant};
+
+/// A run timeline: virtual instants, optionally paced against host time.
+pub trait Clock: Send {
+    /// Latest virtual instant reached (the run cursor).
+    fn now(&self) -> Duration;
+    /// Advance the cursor to `t` (monotone; earlier instants are no-ops).
+    /// The simulated clock returns immediately; the wall clock sleeps
+    /// until `t` maps onto the host timeline.
+    fn wait_until(&mut self, t: Duration);
+    /// Host wall time elapsed since the run epoch (`None` on the
+    /// simulated clock — nothing was measured).
+    fn wall_elapsed(&self) -> Option<Duration> {
+        None
+    }
+}
+
+/// Deterministic virtual time: today's engine timeline, now explicit.
+#[derive(Debug, Default, Clone)]
+pub struct SimClock {
+    cursor: Duration,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// Advance the cursor (monotone) and return it — the engines' run
+    /// window tracks `max(batch ready instants)` through this.
+    pub fn advance_to(&mut self, t: Duration) -> Duration {
+        self.cursor = self.cursor.max(t);
+        self.cursor
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Duration {
+        self.cursor
+    }
+
+    fn wait_until(&mut self, t: Duration) {
+        self.advance_to(t);
+    }
+}
+
+/// Virtual instants paced against the host clock: virtual time `t` maps
+/// to host instant `epoch + t * time_scale`.  A `time_scale` of zero
+/// degenerates to an unpaced replay (no sleeping) that still measures
+/// wall elapsed time.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    epoch: Instant,
+    cursor: Duration,
+    time_scale: f64,
+}
+
+impl WallClock {
+    /// `time_scale`: wall seconds per virtual second (0 = no pacing).
+    pub fn new(time_scale: f64) -> WallClock {
+        WallClock {
+            epoch: Instant::now(),
+            cursor: Duration::ZERO,
+            time_scale: if time_scale.is_finite() {
+                time_scale.max(0.0)
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.cursor
+    }
+
+    fn wait_until(&mut self, t: Duration) {
+        self.cursor = self.cursor.max(t);
+        if self.time_scale > 0.0 {
+            let target = self.epoch + t.mul_f64(self.time_scale);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+    }
+
+    fn wall_elapsed(&self) -> Option<Duration> {
+        Some(self.epoch.elapsed())
+    }
+}
+
+/// How a simulated device spends its modeled service time on the host:
+/// the knob that lets wall-clock runs exercise real contention without
+/// hardware.  `Off` keeps service purely virtual (the deterministic sim
+/// path); `Sleep` yields the thread for the scaled service duration (a
+/// device busy elsewhere); `Spin` busy-waits (a device whose host-side
+/// driver polls — burns a core, creating genuine CPU contention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServiceMode {
+    /// No host time spent (virtual service only).
+    Off,
+    /// Sleep `service * time_scale` on the serving thread.
+    Sleep { time_scale: f64 },
+    /// Busy-wait `service * time_scale` on the serving thread.
+    Spin { time_scale: f64 },
+}
+
+impl ServiceMode {
+    /// Occupy the calling thread for `service` of modeled device time.
+    pub fn serve(&self, service: Duration) {
+        match *self {
+            ServiceMode::Off => {}
+            ServiceMode::Sleep { time_scale } => {
+                let d = scaled(service, time_scale);
+                if d > Duration::ZERO {
+                    std::thread::sleep(d);
+                }
+            }
+            ServiceMode::Spin { time_scale } => {
+                let d = scaled(service, time_scale);
+                if d > Duration::ZERO {
+                    let t0 = Instant::now();
+                    while t0.elapsed() < d {
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn scaled(service: Duration, time_scale: f64) -> Duration {
+    if time_scale.is_finite() && time_scale > 0.0 {
+        service.mul_f64(time_scale)
+    } else {
+        Duration::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances_monotonically_without_waiting() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.wait_until(Duration::from_millis(40));
+        assert_eq!(c.now(), Duration::from_millis(40));
+        // Earlier instants never move the cursor backwards.
+        c.wait_until(Duration::from_millis(10));
+        assert_eq!(c.now(), Duration::from_millis(40));
+        assert_eq!(c.wall_elapsed(), None);
+    }
+
+    #[test]
+    fn wall_clock_paces_against_host_time() {
+        let mut c = WallClock::new(0.5);
+        let t0 = Instant::now();
+        c.wait_until(Duration::from_millis(40)); // 20 ms wall at scale 0.5
+        assert!(t0.elapsed() >= Duration::from_millis(18), "{:?}", t0.elapsed());
+        assert_eq!(c.now(), Duration::from_millis(40));
+        assert!(c.wall_elapsed().is_some());
+    }
+
+    #[test]
+    fn wall_clock_scale_zero_never_sleeps() {
+        let mut c = WallClock::new(0.0);
+        let t0 = Instant::now();
+        c.wait_until(Duration::from_secs(3600));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert_eq!(c.now(), Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn service_modes_occupy_the_thread() {
+        ServiceMode::Off.serve(Duration::from_secs(1000)); // returns instantly
+        let t0 = Instant::now();
+        ServiceMode::Sleep { time_scale: 0.5 }.serve(Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+        let t0 = Instant::now();
+        ServiceMode::Spin { time_scale: 0.5 }.serve(Duration::from_millis(10));
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+}

@@ -6,6 +6,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::accel::interconnect::{links, Link};
+use crate::coordinator::clock::{Clock, SimClock, WallClock};
 use crate::coordinator::policy::{Constraints, QosClass};
 use crate::util::json::{self, Json};
 
@@ -96,6 +97,35 @@ impl Mode {
             "tpu" => Some(Mode::TpuInt8),
             "dpu" => Some(Mode::DpuInt8),
             _ => None,
+        }
+    }
+}
+
+/// Which executor runs a serve: the deterministic virtual-time replay or
+/// the threaded wall-clock executor (`coordinator::executor`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutorKind {
+    /// Single-threaded deterministic replay on the simulated clock.
+    #[default]
+    Sim,
+    /// Per-substrate worker threads replay each batch's service chain in
+    /// wall time; decisions and accounting stay on the virtual timeline.
+    Threaded,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Option<ExecutorKind> {
+        match s {
+            "sim" => Some(ExecutorKind::Sim),
+            "threaded" => Some(ExecutorKind::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecutorKind::Sim => "sim",
+            ExecutorKind::Threaded => "threaded",
         }
     }
 }
@@ -354,6 +384,12 @@ pub struct Config {
     /// Multi-tenant serving: N workloads sharing the substrate pool under
     /// QoS-aware admission (empty = classic single-workload serve).
     pub workloads: Vec<Workload>,
+    /// Which executor runs the serve (`--executor sim|threaded`).
+    pub executor: ExecutorKind,
+    /// Wall seconds per virtual second for threaded runs: paces arrivals
+    /// and scales the workers' service replay (0 = unpaced replay that
+    /// still exercises the threading structure).
+    pub time_scale: f64,
 }
 
 impl Default for Config {
@@ -371,6 +407,19 @@ impl Default for Config {
             partition: None,
             boundary_link: links::USB3,
             workloads: Vec::new(),
+            executor: ExecutorKind::Sim,
+            time_scale: 0.01,
+        }
+    }
+}
+
+impl Config {
+    /// The run clock matching the configured executor: virtual-only for
+    /// the sim executor, arrival pacing against host time for threaded.
+    pub fn clock(&self) -> Box<dyn Clock> {
+        match self.executor {
+            ExecutorKind::Sim => Box::new(SimClock::new()),
+            ExecutorKind::Threaded => Box::new(WallClock::new(self.time_scale)),
         }
     }
 }
@@ -499,6 +548,19 @@ mod tests {
         assert!(parse_tenant_file("[]").is_err());
         assert!(parse_tenant_file("[{\"net\": \"ursonet_full\"}]").is_err());
         assert!(parse_tenant_file("not json").is_err());
+    }
+
+    #[test]
+    fn executor_kind_parses_and_labels() {
+        assert_eq!(ExecutorKind::parse("sim"), Some(ExecutorKind::Sim));
+        assert_eq!(ExecutorKind::parse("threaded"), Some(ExecutorKind::Threaded));
+        assert_eq!(ExecutorKind::parse("async"), None);
+        for k in [ExecutorKind::Sim, ExecutorKind::Threaded] {
+            assert_eq!(ExecutorKind::parse(k.label()), Some(k));
+        }
+        // The default config replays on the simulated clock.
+        assert_eq!(Config::default().executor, ExecutorKind::Sim);
+        assert_eq!(Config::default().clock().now(), Duration::ZERO);
     }
 
     #[test]

@@ -29,8 +29,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::clock::SimClock;
 use crate::coordinator::config::Mode;
-use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{decode_batch, prepare_batch, Backend, PoseEstimate};
 use crate::coordinator::telemetry::{BackendRecord, Telemetry};
@@ -91,8 +92,8 @@ pub struct Dispatcher {
     net_h: usize,
     net_w: usize,
     constraints: Constraints,
-    /// Latest batch-ready instant seen (simulated run clock).
-    clock: Duration,
+    /// Virtual run clock (advanced to the latest batch-ready instant).
+    clock: SimClock,
     /// Executed batches awaiting [`Engine::poll`].
     completed: Vec<Completion>,
     pub telemetry: Telemetry,
@@ -106,7 +107,7 @@ impl Dispatcher {
             net_h,
             net_w,
             constraints,
-            clock: Duration::ZERO,
+            clock: SimClock::new(),
             completed: Vec::new(),
             telemetry: Telemetry::new(),
         }
@@ -142,13 +143,14 @@ impl Dispatcher {
     /// Route one batch: preprocess once, then try feasible backends in
     /// least-estimated-completion order, failing over on infer errors.
     /// Feasibility merges the pool-level constraints with the batch's own
-    /// (the submitting tenant's).  Returns the estimates and the batch's
-    /// simulated completion instant.
-    fn execute(&mut self, batch: &Batch) -> Result<(Vec<PoseEstimate>, Duration)> {
+    /// (the submitting tenant's).  Returns the estimates, the batch's
+    /// simulated completion instant, and the serving substrate's span
+    /// (what a wall-clock executor replays).
+    fn execute(&mut self, batch: &Batch) -> Result<(Vec<PoseEstimate>, Duration, ServiceSpan)> {
         let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
         let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
         let t_ready = batch.t_ready;
-        self.clock = self.clock.max(t_ready);
+        self.clock.advance_to(t_ready);
 
         let mut order: Vec<usize> = (0..self.entries.len())
             .filter(|&i| match &self.entries[i].profile {
@@ -206,7 +208,12 @@ impl Dispatcher {
                         infer_time,
                         &mut self.telemetry,
                     )?;
-                    return Ok((estimates, completion));
+                    let span = ServiceSpan {
+                        substrate: mode.to_string(),
+                        lead_in: Duration::ZERO,
+                        service,
+                    };
+                    return Ok((estimates, completion, span));
                 }
                 Err(e) => {
                     entry.failures += 1;
@@ -230,7 +237,7 @@ impl Dispatcher {
             .entries
             .iter()
             .map(|e| e.busy_until)
-            .fold(self.clock, Duration::max);
+            .fold(self.clock.now(), Duration::max);
         for e in &self.entries {
             let utilization = if window > Duration::ZERO {
                 e.busy.as_secs_f64() / window.as_secs_f64()
@@ -263,12 +270,13 @@ impl Engine for Dispatcher {
     }
 
     fn submit(&mut self, batch: &Batch) -> Result<()> {
-        let (estimates, t_done) = self.execute(batch)?;
+        let (estimates, t_done, span) = self.execute(batch)?;
         self.completed.push(Completion {
             tenant: batch.tenant,
             t_captures: batch.frames.iter().map(|f| f.t_capture).collect(),
             estimates,
             t_done,
+            spans: vec![span],
         });
         Ok(())
     }
@@ -370,16 +378,20 @@ mod tests {
             (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
             (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
         ]);
-        let (est, t_done) = d.execute(&batch(&[0, 1, 2, 3], 40)).unwrap();
+        let (est, t_done, span) = d.execute(&batch(&[0, 1, 2, 3], 40)).unwrap();
         assert_eq!(est.len(), 4);
         // The idle DPU has the smaller modeled completion: it serves first,
         // completing at t_ready (40 ms) + 4 x 60 ms modeled service.
         assert_eq!(d.telemetry.records[0].mode, "dpu-int8");
         assert_eq!(t_done, Duration::from_millis(40 + 240));
+        // The replayable span names the serving substrate and its charge.
+        assert_eq!(span.substrate, "dpu-int8");
+        assert_eq!(span.service, Duration::from_millis(240));
+        assert_eq!(span.lead_in, Duration::ZERO);
         // A burst saturates the DPU; the VPU picks up the spillover.
         let mut served_vpu = false;
         for k in 1..8u64 {
-            let (est, _) =
+            let (est, _, _) =
                 d.execute(&batch(&[4 * k, 4 * k + 1, 4 * k + 2, 4 * k + 3], 40)).unwrap();
             served_vpu |= est.len() == 4
                 && d.telemetry.records.last().unwrap().mode == "vpu-fp16";
@@ -397,9 +409,11 @@ mod tests {
             (mock(Mode::DpuInt8, Some(1)), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
             (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
         ]);
-        let (est, _) = d.execute(&batch(&[0, 1], 20)).unwrap();
+        let (est, _, span) = d.execute(&batch(&[0, 1], 20)).unwrap();
         assert_eq!(est.len(), 2);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+        // The span follows the failover: the VPU served the batch.
+        assert_eq!(span.substrate, "vpu-fp16");
         d.finish();
         let dpu = &d.telemetry.backends[0];
         assert_eq!((dpu.mode, dpu.failures, dpu.batches), ("dpu-int8", 1, 0));
@@ -420,7 +434,7 @@ mod tests {
         );
         d.add_backend(mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96)));
         d.add_backend(mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69)));
-        let (est, _) = d.execute(&batch(&[0], 10)).unwrap();
+        let (est, _, _) = d.execute(&batch(&[0], 10)).unwrap();
         assert_eq!(est.len(), 1);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
     }
@@ -435,11 +449,11 @@ mod tests {
         ]);
         let mut b = batch(&[0], 10);
         b.constraints.max_loce_m = Some(0.70);
-        let (est, _) = d.execute(&b).unwrap();
+        let (est, _, _) = d.execute(&b).unwrap();
         assert_eq!(est.len(), 1);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
         // An unconstrained batch on the same pool takes the fast DPU.
-        let (_, _) = d.execute(&batch(&[1], 10)).unwrap();
+        let (_, _, _) = d.execute(&batch(&[1], 10)).unwrap();
         assert_eq!(d.telemetry.records.last().unwrap().mode, "dpu-int8");
     }
 
@@ -450,7 +464,7 @@ mod tests {
         ]);
         let mut b = batch(&[0, 1, 2, 3], 0);
         b.cost = 2.0;
-        let (_, t_done) = d.execute(&b).unwrap();
+        let (_, t_done, _) = d.execute(&b).unwrap();
         // 4 x 60 ms modeled service, doubled by the batch's network cost.
         assert_eq!(t_done, Duration::from_millis(480));
     }

@@ -32,6 +32,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::clock::Clock;
 use crate::coordinator::config::{Config, Mode, Workload};
 use crate::coordinator::policy::QosClass;
 use crate::coordinator::scheduler::PoseEstimate;
@@ -52,6 +53,24 @@ pub struct RunOutput {
     pub telemetry: Telemetry,
 }
 
+/// One substrate's share of a batch's modeled service — the replayable
+/// unit of work.  Engines attach one span per substrate that served the
+/// batch (one for whole-frame dispatch, one per stage for a pipelined
+/// plan, in stage order); the
+/// [`ThreadedExecutor`](crate::coordinator::executor::ThreadedExecutor)
+/// replays the chain on per-substrate worker threads so wall-clock runs
+/// genuinely overlap where the virtual timeline only modeled overlap.
+#[derive(Debug, Clone)]
+pub struct ServiceSpan {
+    /// Substrate that served the span (backend mode label or stage accel).
+    pub substrate: String,
+    /// Inbound boundary transfer preceding the service (ZERO for the
+    /// first span of a chain and for whole-frame dispatch).
+    pub lead_in: Duration,
+    /// Modeled service time charged on the virtual timeline.
+    pub service: Duration,
+}
+
 /// One executed batch coming back out of an [`Engine`].
 #[derive(Debug)]
 pub struct Completion {
@@ -64,6 +83,9 @@ pub struct Completion {
     pub t_captures: Vec<Duration>,
     /// Simulated instant the batch completed on its substrate(s).
     pub t_done: Duration,
+    /// Per-substrate service chain behind `t_done`, in execution order
+    /// (what a wall-clock executor replays on worker threads).
+    pub spans: Vec<ServiceSpan>,
 }
 
 /// The unified execution surface every dispatch strategy implements.
@@ -90,7 +112,9 @@ pub trait Engine {
     /// Substrate faults observed so far (failed infer attempts that were
     /// failed over).
     fn fault_count(&self) -> usize;
-    /// Close accounting (utilization/occupancy records).
+    /// Close accounting (utilization/occupancy records).  An asynchronous
+    /// engine (the threaded executor) finishes its in-flight work here, so
+    /// callers must issue one final [`Engine::poll`] *after* draining.
     fn drain(&mut self) -> Result<()>;
     /// Move the run telemetry out of the engine.
     fn take_telemetry(&mut self) -> Telemetry;
@@ -142,9 +166,17 @@ fn enqueue(ready: &mut Vec<Ready>, w: &Workload, batch: Batch) {
 }
 
 /// Serve N workloads on one shared engine: merged arrival streams on the
-/// simulated clock, per-tenant batchers, strict-class-priority + EDF
-/// dispatch, background load-shedding under saturation, per-tenant
+/// run clock, per-tenant batchers, strict-class-priority + EDF dispatch,
+/// background load-shedding under saturation, per-tenant
 /// latency/deadline-miss/shed telemetry.
+///
+/// The clock (built from `Config::executor`) paces the event loop:
+/// [`SimClock`](crate::coordinator::clock::SimClock) replays instantly,
+/// [`WallClock`](crate::coordinator::clock::WallClock) sleeps until each
+/// arrival's host instant so a threaded engine services earlier batches
+/// concurrently.  All shed/deadline accounting stays on the virtual
+/// timeline, so the two clocks report identical per-tenant counts for the
+/// same schedule (property-tested in `coordinator::executor`).
 pub fn run_workloads(
     config: &Config,
     eval: Arc<EvalSet>,
@@ -259,12 +291,33 @@ pub fn run_workloads(
         }
     }
 
+    /// Account one completion against its tenant on the virtual timeline.
+    /// Shared by the in-loop polls and the final post-drain poll so an
+    /// asynchronous engine whose completions land late gets identical
+    /// latency/deadline accounting to the synchronous path.
+    fn account(tenants: &mut [Tenant], estimates: &mut Vec<PoseEstimate>, c: Completion) {
+        let t = &mut tenants[c.tenant];
+        for t_cap in &c.t_captures {
+            let lat = c.t_done.saturating_sub(*t_cap);
+            t.latencies_s.push(lat.as_secs_f64());
+            if lat > t.w.deadline {
+                t.misses += 1;
+            }
+        }
+        t.completed += c.estimates.len() as u64;
+        estimates.extend(c.estimates);
+    }
+
+    let mut clock = config.clock();
     let mut estimates: Vec<PoseEstimate> = Vec::new();
     let mut ready: Vec<Ready> = Vec::new();
     loop {
         let Some((now, event, k)) = next_event(&tenants) else {
             break;
         };
+        // Pace the loop: free on the simulated clock, a real sleep on the
+        // wall clock (in-flight threaded work services meanwhile).
+        clock.wait_until(now);
         handle_event(&mut tenants, &*engine, &mut ready, event, k, now);
         // Drain every event scheduled at the same simulated instant before
         // dispatching, so the class-priority + EDF sort below actually
@@ -292,29 +345,25 @@ pub fn run_workloads(
             engine.submit(&r.batch)?;
         }
 
-        // Account completions on the simulated clock.
+        // Account completions on the virtual timeline (t_done is modeled,
+        // so accounting is identical whether the completion surfaces here
+        // or after the drain below).
         for c in engine.poll() {
-            let t = &mut tenants[c.tenant];
-            for t_cap in &c.t_captures {
-                let lat = c.t_done.saturating_sub(*t_cap);
-                t.latencies_s.push(lat.as_secs_f64());
-                if lat > t.w.deadline {
-                    t.misses += 1;
-                }
-            }
-            t.completed += c.estimates.len() as u64;
-            estimates.extend(c.estimates);
+            account(&mut tenants, &mut estimates, c);
         }
     }
-    // Defensive: submission is synchronous, but a future async engine may
-    // complete work between the last event and drain.
-    for c in engine.poll() {
-        tenants[c.tenant].completed += c.estimates.len() as u64;
-        estimates.extend(c.estimates);
-    }
+    // Drain first — an asynchronous engine finishes its in-flight batches
+    // here — then take the final completions with full latency/deadline
+    // accounting (identical to the in-loop path).
     engine.drain()?;
+    for c in engine.poll() {
+        account(&mut tenants, &mut estimates, c);
+    }
 
     let mut telemetry = engine.take_telemetry();
+    if let Some(d) = clock.wall_elapsed() {
+        telemetry.measured_elapsed_s = Some(d.as_secs_f64());
+    }
     for t in tenants {
         telemetry.record_tenant(TenantRecord {
             name: t.w.name.clone(),
@@ -360,7 +409,7 @@ mod tests {
     /// DPU+VPU pool over small synthetic frames; `vpu_fail_at` injects a
     /// fault schedule on the second (slower) backend.
     fn pool(vpu_fail_at: Vec<usize>) -> Dispatcher {
-        let profiles = profile_modes(&Manifest::synthetic());
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
         let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
         d.add_backend(
             Box::new(SimBackend::new(Mode::DpuInt8, &profiles[&Mode::DpuInt8], 31)),
@@ -449,7 +498,7 @@ mod tests {
         let out = run_workloads(&cfg(100), tiny_eval(), &mut engine, &ws).unwrap();
         // Tenant 0's ids sit below tenant 1's offset.
         let lax_base = 1u64 << TENANT_ID_SHIFT;
-        let profiles = profile_modes(&Manifest::synthetic());
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
         for r in &out.telemetry.records {
             if r.frame_id < lax_base {
                 let mode = Mode::from_label(r.mode).unwrap();

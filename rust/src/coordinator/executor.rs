@@ -1,0 +1,567 @@
+//! The threaded wall-clock executor: per-substrate worker threads that
+//! genuinely overlap the service the virtual timeline only models.
+//!
+//! ## Split of responsibilities
+//!
+//! Every dispatch *decision* — routing, failover, constraint admission,
+//! `ready_at` backpressure, shed/deadline accounting — stays in the
+//! wrapped [`Engine`] (the whole-frame
+//! [`Dispatcher`](crate::coordinator::dispatcher::Dispatcher) or the
+//! pipelined dispatcher) on the deterministic virtual timeline, exactly
+//! as in a `--executor sim` run.  What the [`ThreadedExecutor`] adds is
+//! *execution*: each completion's
+//! [`ServiceSpan`](crate::coordinator::engine::ServiceSpan) chain (one
+//! span per serving substrate, in stage order) is replayed on that
+//! substrate's own worker thread, occupying host time per the configured
+//! [`ServiceMode`].  Chains hop worker-to-worker over `mpsc` channels,
+//! so stage k of batch i runs concurrently with stage k-1 of batch i+1 —
+//! the paper's DPU/VPU co-processing overlap, measured instead of
+//! replayed on one simulated timeline.
+//!
+//! This split is what makes the **determinism equivalence** hold (and is
+//! property-tested below): for the same arrival/fault schedule, a
+//! multi-tenant serve over `SimClock` and over the `ThreadedExecutor`
+//! reports identical per-tenant admitted/completed/shed/deadline counts,
+//! because none of those numbers depend on host scheduling — only the
+//! *measured* telemetry (wall elapsed, per-batch replay times) differs.
+//!
+//! ## Backpressure
+//!
+//! Worker inboxes are unbounded channels (a bounded worker-to-worker hop
+//! could deadlock two substrates forwarding to each other), so the bound
+//! lives at the submission edge: at most `inflight_limit` chains
+//! ([`DEFAULT_INFLIGHT_LIMIT`], or [`ThreadedExecutor::with_inflight_limit`])
+//! may be outstanding per head substrate; `submit` blocks on the
+//! completion channel until the backlog drains below the bound.  The
+//! admission layers never get that far in practice — they read
+//! [`Engine::ready_at`] (the modeled horizon, identical to the sim path)
+//! and shed/hold work first.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::clock::ServiceMode;
+use crate::coordinator::config::Mode;
+use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::telemetry::Telemetry;
+
+/// Default per-substrate bound on outstanding replay chains.
+pub const DEFAULT_INFLIGHT_LIMIT: usize = 8;
+
+/// One replayable hop of a chain: occupy the worker for `lead_in`
+/// (incoming boundary transfer) plus `service` of modeled device time.
+struct Hop {
+    lead_in: Duration,
+    service: Duration,
+}
+
+/// A batch's replay token, forwarded worker-to-worker along its chain.
+struct Token {
+    seq: u64,
+    /// Remaining hops; the receiving worker owns the front.
+    hops: VecDeque<Hop>,
+    /// Inboxes of the workers executing `hops[1..]`, in order.
+    route: VecDeque<mpsc::Sender<Token>>,
+    /// Chain-complete notifications back to the executor.
+    done: mpsc::Sender<u64>,
+}
+
+struct Worker {
+    tx: mpsc::Sender<Token>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+/// A chain in flight: its completion payload and measurement state.
+struct Inflight {
+    completion: Completion,
+    /// Head substrate charged against the per-substrate in-flight bound.
+    head: String,
+    dispatched: Instant,
+}
+
+/// Wall-clock engine wrapper: deterministic decisions from the inner
+/// engine, concurrent per-substrate service replay on worker threads.
+pub struct ThreadedExecutor {
+    inner: Box<dyn Engine>,
+    service: ServiceMode,
+    inflight_limit: usize,
+    workers: BTreeMap<String, Worker>,
+    tx_done: mpsc::Sender<u64>,
+    rx_done: mpsc::Receiver<u64>,
+    inflight: BTreeMap<u64, Inflight>,
+    /// Outstanding chains per head substrate (submission-edge bound).
+    outstanding: BTreeMap<String, usize>,
+    /// Wall-finished completions awaiting [`Engine::poll`].
+    finished: Vec<(u64, Completion)>,
+    next_seq: u64,
+    epoch: Instant,
+    /// Host seconds each batch's replay chain took (dispatch → done).
+    measured_batch_s: Vec<f64>,
+    /// Host seconds from construction to drain (the measured run window).
+    measured_elapsed_s: Option<f64>,
+}
+
+impl ThreadedExecutor {
+    /// Wrap an engine; `service` sets how workers occupy host time per
+    /// span (`ServiceMode::Off` replays chains without sleeping — the
+    /// threading structure alone, for tests and unpaced runs).
+    pub fn new(inner: Box<dyn Engine>, service: ServiceMode) -> ThreadedExecutor {
+        let (tx_done, rx_done) = mpsc::channel();
+        ThreadedExecutor {
+            inner,
+            service,
+            inflight_limit: DEFAULT_INFLIGHT_LIMIT,
+            workers: BTreeMap::new(),
+            tx_done,
+            rx_done,
+            inflight: BTreeMap::new(),
+            outstanding: BTreeMap::new(),
+            finished: Vec::new(),
+            next_seq: 0,
+            epoch: Instant::now(),
+            measured_batch_s: Vec::new(),
+            measured_elapsed_s: None,
+        }
+    }
+
+    /// Builder: per-substrate bound on outstanding replay chains.
+    pub fn with_inflight_limit(mut self, limit: usize) -> ThreadedExecutor {
+        self.inflight_limit = limit.max(1);
+        self
+    }
+
+    /// Inbox of the worker thread bound to `substrate` (spawned lazily on
+    /// first use — substrate names only surface with the first span).
+    fn worker_tx(&mut self, substrate: &str) -> mpsc::Sender<Token> {
+        if let Some(w) = self.workers.get(substrate) {
+            return w.tx.clone();
+        }
+        let (tx, rx) = mpsc::channel::<Token>();
+        let service = self.service;
+        let name = substrate.to_string();
+        let handle = thread::Builder::new()
+            .name(format!("mpai-substrate-{name}"))
+            .spawn(move || {
+                while let Ok(mut tok) = rx.recv() {
+                    let hop = tok.hops.pop_front().expect("token routed with a hop");
+                    service.serve(hop.lead_in + hop.service);
+                    match tok.route.pop_front() {
+                        Some(next) => {
+                            // Receiver gone only during teardown.
+                            let _ = next.send(tok);
+                        }
+                        None => {
+                            let _ = tok.done.send(tok.seq);
+                        }
+                    }
+                }
+            })
+            .expect("spawning substrate worker");
+        self.workers.insert(
+            substrate.to_string(),
+            Worker {
+                tx: tx.clone(),
+                handle: Some(handle),
+            },
+        );
+        tx
+    }
+
+    /// Hand one completion's span chain to the worker threads.
+    fn dispatch(&mut self, completion: Completion) {
+        if completion.spans.is_empty() {
+            // Nothing to replay (defensive): surface immediately.
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.finished.push((seq, completion));
+            return;
+        }
+        let head = completion.spans[0].substrate.clone();
+        // Submission-edge backpressure: block on completions until the
+        // head substrate's backlog drops below the bound.
+        while self.outstanding.get(&head).copied().unwrap_or(0) >= self.inflight_limit {
+            match self.rx_done.recv() {
+                Ok(seq) => self.settle(seq),
+                Err(_) => break, // workers gone; nothing left to wait for
+            }
+        }
+
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let hops: VecDeque<Hop> = completion
+            .spans
+            .iter()
+            .map(|s| Hop {
+                lead_in: s.lead_in,
+                service: s.service,
+            })
+            .collect();
+        let mut route: VecDeque<mpsc::Sender<Token>> = VecDeque::new();
+        for s in completion.spans.iter().skip(1) {
+            let tx = self.worker_tx(&s.substrate);
+            route.push_back(tx);
+        }
+        let head_tx = self.worker_tx(&head);
+        *self.outstanding.entry(head.clone()).or_insert(0) += 1;
+        self.inflight.insert(
+            seq,
+            Inflight {
+                completion,
+                head,
+                dispatched: Instant::now(),
+            },
+        );
+        let token = Token {
+            seq,
+            hops,
+            route,
+            done: self.tx_done.clone(),
+        };
+        // Receiver alive: the worker was just (re)fetched above.
+        let _ = head_tx.send(token);
+    }
+
+    /// Move a wall-finished chain into the poll buffer.
+    fn settle(&mut self, seq: u64) {
+        if let Some(inf) = self.inflight.remove(&seq) {
+            self.measured_batch_s
+                .push(inf.dispatched.elapsed().as_secs_f64());
+            if let Some(n) = self.outstanding.get_mut(&inf.head) {
+                *n = n.saturating_sub(1);
+            }
+            self.finished.push((seq, inf.completion));
+        }
+    }
+}
+
+impl Engine for ThreadedExecutor {
+    fn primary_mode(&self) -> Result<Mode> {
+        self.inner.primary_mode()
+    }
+
+    fn artifact_batch(&self) -> usize {
+        self.inner.artifact_batch()
+    }
+
+    /// Deterministic decision path (inner engine), then wall replay: the
+    /// inner submit routes/accounts on the virtual timeline and its
+    /// completion chains go to the worker threads.
+    fn submit(&mut self, batch: &Batch) -> Result<()> {
+        self.inner.submit(batch)?;
+        for c in self.inner.poll() {
+            self.dispatch(c);
+        }
+        Ok(())
+    }
+
+    /// Completions whose wall replay finished, in submission order.
+    fn poll(&mut self) -> Vec<Completion> {
+        while let Ok(seq) = self.rx_done.try_recv() {
+            self.settle(seq);
+        }
+        self.finished.sort_by_key(|(seq, _)| *seq);
+        self.finished.drain(..).map(|(_, c)| c).collect()
+    }
+
+    /// The *modeled* horizon — identical to the sim path by construction,
+    /// which is what keeps shed/deadline accounting deterministic.
+    fn ready_at(&self) -> Duration {
+        self.inner.ready_at()
+    }
+
+    fn fault_count(&self) -> usize {
+        self.inner.fault_count()
+    }
+
+    /// Wait for every in-flight chain, then close the inner accounting.
+    fn drain(&mut self) -> Result<()> {
+        while !self.inflight.is_empty() {
+            let seq = self
+                .rx_done
+                .recv()
+                .context("substrate workers exited with chains in flight")?;
+            self.settle(seq);
+        }
+        self.measured_elapsed_s = Some(self.epoch.elapsed().as_secs_f64());
+        self.inner.drain()
+    }
+
+    fn take_telemetry(&mut self) -> Telemetry {
+        let mut t = self.inner.take_telemetry();
+        t.executor = Some("threaded");
+        t.measured_batch_s = std::mem::take(&mut self.measured_batch_s);
+        t.measured_elapsed_s = self.measured_elapsed_s;
+        t
+    }
+}
+
+impl Drop for ThreadedExecutor {
+    fn drop(&mut self) {
+        // Close every inbox so workers drain and exit, then join them.
+        // In-flight tokens hold sender clones, so a worker only exits
+        // after the chains queued to it have been forwarded — chains move
+        // strictly forward, so every join terminates.
+        for w in self.workers.values_mut() {
+            drop(std::mem::replace(&mut w.tx, mpsc::channel().0));
+        }
+        for w in self.workers.values_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Config, Workload};
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::engine::run_workloads;
+    use crate::coordinator::policy::{profile_modes, Constraints, QosClass};
+    use crate::coordinator::sim::SimBackend;
+    use crate::coordinator::telemetry::TenantRecord;
+    use crate::pose::EvalSet;
+    use crate::runtime::artifacts::Manifest;
+    use crate::testkit::{check, Config as PropConfig};
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    /// DPU+VPU sim pool, seeds fixed so two builds are bit-identical;
+    /// `vpu_fail_at` injects an exact-call fault schedule on the VPU.
+    fn pool(vpu_fail_at: Vec<usize>) -> Dispatcher {
+        let profiles = profile_modes(&Manifest::synthetic().expect("synthetic manifest"));
+        let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+        d.add_backend(
+            Box::new(SimBackend::new(Mode::DpuInt8, &profiles[&Mode::DpuInt8], 31)),
+            Some(profiles[&Mode::DpuInt8]),
+        );
+        d.add_backend(
+            Box::new(
+                SimBackend::new(Mode::VpuFp16, &profiles[&Mode::VpuFp16], 32)
+                    .with_fail_at(vpu_fail_at),
+            ),
+            Some(profiles[&Mode::VpuFp16]),
+        );
+        d
+    }
+
+    fn workload(name: &str, qos: QosClass, deadline_ms: u64, rate: f64, frames: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos,
+            deadline: Duration::from_millis(deadline_ms),
+            rate_fps: rate,
+            frames,
+            constraints: Constraints::default(),
+        }
+    }
+
+    fn tiny_eval() -> Arc<EvalSet> {
+        Arc::new(EvalSet::synthetic(6, 12, 16, 42))
+    }
+
+    fn cfg(timeout_ms: u64) -> Config {
+        Config {
+            sim: true,
+            batch_timeout: Duration::from_millis(timeout_ms),
+            ..Default::default()
+        }
+    }
+
+    /// The per-tenant tuple the determinism equivalence is stated over.
+    fn tenant_counts(t: &TenantRecord) -> (u64, u64, u64, u64) {
+        (t.admitted, t.completed, t.shed, t.deadline_misses)
+    }
+
+    #[test]
+    fn threaded_single_workload_conserves_frames_in_order() {
+        let mut engine =
+            ThreadedExecutor::new(Box::new(pool(vec![])), ServiceMode::Off);
+        let ws = vec![workload("solo", QosClass::Standard, 5000, 50.0, 17)];
+        let out = run_workloads(&cfg(30), tiny_eval(), &mut engine, &ws).unwrap();
+        assert_eq!(out.estimates.len(), 17);
+        let ids: BTreeSet<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+        assert_eq!(ids.len(), 17, "duplicated frame ids");
+        let t = &out.telemetry.tenants[0];
+        assert_eq!(tenant_counts(t), (17, 17, 0, 0));
+        // Measured telemetry rides along: one wall sample per batch, and
+        // the executor labels itself.
+        assert_eq!(out.telemetry.executor, Some("threaded"));
+        assert!(!out.telemetry.measured_batch_s.is_empty());
+        assert!(out.telemetry.measured_elapsed_s.is_some());
+    }
+
+    #[test]
+    fn threaded_replay_sleeps_span_service() {
+        // With a sleep service mode, the wall replay takes real time: the
+        // modeled DPU service is tens of ms per frame, so a 4-frame batch
+        // at 1% scale sleeps on the order of milliseconds — the measured
+        // samples must show at least that.
+        let mut engine = ThreadedExecutor::new(
+            Box::new(pool(vec![])),
+            ServiceMode::Sleep { time_scale: 0.01 },
+        );
+        let ws = vec![workload("solo", QosClass::Standard, 60000, 200.0, 8)];
+        let out = run_workloads(&cfg(20), tiny_eval(), &mut engine, &ws).unwrap();
+        assert_eq!(out.estimates.len(), 8);
+        let measured = out.telemetry.measured_batch_summary();
+        assert!(measured.len() >= 2, "no wall samples recorded");
+        assert!(
+            measured.max() >= 0.001,
+            "sleep replay too fast: {:?} s",
+            measured.max()
+        );
+    }
+
+    fn frame(id: u64, ms: u64) -> crate::sensor::Frame {
+        crate::sensor::Frame {
+            id,
+            t_capture: Duration::from_millis(ms),
+            pixels: vec![100; 8 * 12 * 3],
+            h: 8,
+            w: 12,
+            truth: crate::pose::Pose {
+                loc: [0.0, 0.0, 5.0],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            },
+        }
+    }
+
+    #[test]
+    fn drain_then_poll_surfaces_every_completion() {
+        // The Engine contract addition: an async engine finishes in-flight
+        // work at drain, and the final poll returns it.
+        let mut e = ThreadedExecutor::new(
+            Box::new(pool(vec![])),
+            ServiceMode::Sleep { time_scale: 0.001 },
+        );
+        let frames: Vec<crate::sensor::Frame> =
+            (0..4).map(|i| frame(i, i * 5)).collect();
+        let batch = Batch::new(frames, 4, Duration::from_millis(20));
+        e.submit(&batch).unwrap();
+        e.drain().unwrap();
+        let cs = e.poll();
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs[0].estimates.len(), 4);
+        assert!(e.poll().is_empty());
+    }
+
+    #[test]
+    fn property_sim_and_threaded_report_identical_accounting() {
+        // THE determinism equivalence (ISSUE acceptance): for the same
+        // seeded multi-tenant schedule and the same exact-call fault
+        // schedule, the sim engine and the threaded executor report
+        // identical per-tenant admitted/completed/shed/deadline-miss
+        // counts and the same per-tenant latency multisets — wall-clock
+        // scheduling must never leak into the accounting.
+        let eval = tiny_eval();
+        check(
+            "sim_threaded_equivalence",
+            PropConfig {
+                cases: 32,
+                ..Default::default()
+            },
+            move |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let mut ws = Vec::new();
+                for k in 0..n_tenants {
+                    let qos = match ctx.rng.below(3) {
+                        0 => QosClass::Realtime,
+                        1 => QosClass::Standard,
+                        _ => QosClass::Background,
+                    };
+                    ws.push(workload(
+                        &format!("t{k}"),
+                        qos,
+                        50 + ctx.rng.below(3000) as u64,
+                        1.0 + ctx.rng.below(60) as f64,
+                        ctx.rng.below(24) as u64,
+                    ));
+                }
+                let faults: Vec<usize> = {
+                    let mut s = BTreeSet::new();
+                    for _ in 0..ctx.rng.below(16) {
+                        s.insert(1 + ctx.rng.below(32));
+                    }
+                    s.into_iter().collect()
+                };
+                let timeout = 1 + ctx.rng.below(500) as u64;
+
+                let mut sim_engine = pool(faults.clone());
+                let sim = run_workloads(&cfg(timeout), eval.clone(), &mut sim_engine, &ws)
+                    .map_err(|e| format!("sim: {e:#}"))?;
+
+                let mut thr_engine =
+                    ThreadedExecutor::new(Box::new(pool(faults)), ServiceMode::Off)
+                        .with_inflight_limit(1 + ctx.rng.below(4));
+                let thr = run_workloads(&cfg(timeout), eval.clone(), &mut thr_engine, &ws)
+                    .map_err(|e| format!("threaded: {e:#}"))?;
+
+                for (k, (s, t)) in sim
+                    .telemetry
+                    .tenants
+                    .iter()
+                    .zip(&thr.telemetry.tenants)
+                    .enumerate()
+                {
+                    crate::prop_assert!(
+                        tenant_counts(s) == tenant_counts(t),
+                        "tenant {k}: sim {:?} != threaded {:?}",
+                        tenant_counts(s),
+                        tenant_counts(t)
+                    );
+                    let mut ls = s.latencies_s.clone();
+                    let mut lt = t.latencies_s.clone();
+                    ls.sort_by(f64::total_cmp);
+                    lt.sort_by(f64::total_cmp);
+                    crate::prop_assert!(
+                        ls == lt,
+                        "tenant {k}: latency multisets diverge"
+                    );
+                }
+                crate::prop_assert!(
+                    sim.estimates.len() == thr.estimates.len(),
+                    "estimate streams diverge: sim {} threaded {}",
+                    sim.estimates.len(),
+                    thr.estimates.len()
+                );
+                let sim_ids: BTreeSet<u64> =
+                    sim.estimates.iter().map(|e| e.frame_id).collect();
+                let thr_ids: BTreeSet<u64> =
+                    thr.estimates.iter().map(|e| e.frame_id).collect();
+                crate::prop_assert!(
+                    sim_ids == thr_ids,
+                    "served frame-id sets diverge"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threaded_failover_matches_sim_under_heavy_faults() {
+        // Deterministic spot-check of the equivalence under a dense fault
+        // schedule (every early VPU call fails): failover decisions are
+        // the inner engine's, so counts match the sim engine exactly.
+        let ws = vec![
+            workload("rt", QosClass::Realtime, 8000, 10.0, 20),
+            workload("bg", QosClass::Background, 2000, 20.0, 30),
+        ];
+        let mut sim_engine = pool((1..=50).collect());
+        let sim = run_workloads(&cfg(300), tiny_eval(), &mut sim_engine, &ws).unwrap();
+        let mut thr_engine =
+            ThreadedExecutor::new(Box::new(pool((1..=50).collect())), ServiceMode::Off);
+        let thr = run_workloads(&cfg(300), tiny_eval(), &mut thr_engine, &ws).unwrap();
+        for (s, t) in sim.telemetry.tenants.iter().zip(&thr.telemetry.tenants) {
+            assert_eq!(tenant_counts(s), tenant_counts(t), "tenant {}", s.name);
+        }
+        assert_eq!(tenant_counts(&thr.telemetry.tenants[0]), (20, 20, 0, 0));
+    }
+}

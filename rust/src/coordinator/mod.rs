@@ -5,9 +5,11 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod clock;
 pub mod config;
 pub mod dispatcher;
 pub mod engine;
+pub mod executor;
 pub mod pipeline;
 pub mod policy;
 pub mod scheduler;
@@ -17,9 +19,13 @@ pub mod telemetry;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
-pub use config::{parse_tenant_file, Config, ManualStage, Mode, PartitionSpec, Workload};
+pub use clock::{Clock, ServiceMode, SimClock, WallClock};
+pub use config::{
+    parse_tenant_file, Config, ExecutorKind, ManualStage, Mode, PartitionSpec, Workload,
+};
 pub use dispatcher::Dispatcher;
-pub use engine::{run_workloads, Completion, Engine, RunOutput};
+pub use engine::{run_workloads, Completion, Engine, RunOutput, ServiceSpan};
+pub use executor::ThreadedExecutor;
 pub use pipeline::{build_plans, PipelinePlan, PipelinedDispatcher, StagePlan};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};

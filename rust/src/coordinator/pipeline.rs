@@ -32,8 +32,9 @@ use crate::accel::estimate::{latency_from_stages, stage_latencies};
 use crate::accel::interconnect::Link;
 use crate::accel::traits::Accelerator;
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::clock::SimClock;
 use crate::coordinator::config::{ManualStage, Mode, PartitionSpec};
-use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{
     decode_batch, prepare_batch, Backend, PoseEstimate, StageOutput,
@@ -404,8 +405,8 @@ pub struct PipelinedDispatcher {
     batch: usize,
     net_h: usize,
     net_w: usize,
-    /// Latest batch-ready instant seen (simulated run clock).
-    clock: Duration,
+    /// Virtual run clock (advanced to the latest batch-ready instant).
+    clock: SimClock,
     /// Executed batches awaiting [`Engine::poll`].
     completed: Vec<Completion>,
     pub telemetry: Telemetry,
@@ -427,7 +428,7 @@ impl PipelinedDispatcher {
             batch,
             net_h,
             net_w,
-            clock: Duration::ZERO,
+            clock: SimClock::new(),
             completed: Vec::new(),
             telemetry: Telemetry::new(),
         })
@@ -474,14 +475,18 @@ impl PipelinedDispatcher {
     /// for the plan that succeeded.  A stage fault marks its substrate
     /// faulted *for this batch* and fails over to the next plan avoiding
     /// every faulted substrate.  Stage service/transfer scale with the
-    /// batch's network cost (multi-tenant).  Returns the estimates and the
-    /// batch's simulated completion instant (tail-stage finish).
-    fn execute(&mut self, batch: &Batch) -> Result<(Vec<PoseEstimate>, Duration)> {
+    /// batch's network cost (multi-tenant).  Returns the estimates, the
+    /// batch's simulated completion instant (tail-stage finish), and the
+    /// per-stage service chain (what a wall-clock executor replays).
+    fn execute(
+        &mut self,
+        batch: &Batch,
+    ) -> Result<(Vec<PoseEstimate>, Duration, Vec<ServiceSpan>)> {
         self.check_bindings()?;
         let prepared = prepare_batch(batch, self.batch, self.net_h, self.net_w)?;
         let truths: Vec<Pose> = batch.frames.iter().map(|f| f.truth).collect();
         let t_ready = batch.t_ready;
-        self.clock = self.clock.max(t_ready);
+        self.clock.advance_to(t_ready);
 
         let mut faulted: BTreeSet<String> = BTreeSet::new();
         let mut last_err: Option<anyhow::Error> = None;
@@ -537,6 +542,8 @@ impl PipelinedDispatcher {
             // this batch overlaps stage k+1 of the previous one.  Service
             // and boundary traffic scale with the batch's network cost.
             let mut arrival = t_ready;
+            let mut spans: Vec<ServiceSpan> = Vec::with_capacity(plan.stages.len());
+            let mut lead_in = Duration::ZERO;
             for st in &plan.stages {
                 let service = st.service.mul_f64(batch.cost);
                 let transfer = st.transfer.mul_f64(batch.cost);
@@ -550,6 +557,13 @@ impl PipelinedDispatcher {
                 slot.batches += 1;
                 slot.frames += batch.frames.len();
                 arrival = finish + transfer;
+                spans.push(ServiceSpan {
+                    substrate: st.accel.clone(),
+                    lead_in,
+                    service,
+                });
+                // The outgoing hop is the *next* stage's lead-in.
+                lead_in = transfer;
             }
 
             // A true multi-stage plan serves the composite MPAI numerics
@@ -572,7 +586,7 @@ impl PipelinedDispatcher {
             )?;
             // The tail stage emits no boundary transfer, so `arrival` is
             // the batch's completion instant.
-            return Ok((estimates, arrival));
+            return Ok((estimates, arrival, spans));
         }
         Err(last_err
             .unwrap_or_else(|| anyhow!("no pipeline plan available"))
@@ -587,7 +601,7 @@ impl PipelinedDispatcher {
             .slots
             .values()
             .map(|s| s.free_until)
-            .fold(self.clock, Duration::max);
+            .fold(self.clock.now(), Duration::max);
         for (name, s) in &self.slots {
             let occupancy = if window > Duration::ZERO {
                 s.busy.as_secs_f64() / window.as_secs_f64()
@@ -633,12 +647,13 @@ impl Engine for PipelinedDispatcher {
     }
 
     fn submit(&mut self, batch: &Batch) -> Result<()> {
-        let (estimates, t_done) = self.execute(batch)?;
+        let (estimates, t_done, spans) = self.execute(batch)?;
         self.completed.push(Completion {
             tenant: batch.tenant,
             t_captures: batch.frames.iter().map(|f| f.t_capture).collect(),
             estimates,
             t_done,
+            spans,
         });
         Ok(())
     }
@@ -873,11 +888,20 @@ mod tests {
 
         // Two batches ready at t=0: batch 2's head stage must wait for
         // batch 1 (10 ms stall), while its tail stage overlaps batch 1.
-        let (est, t_done) = d.execute(&batch(&[0, 1], 0)).unwrap();
+        let (est, t_done, spans) = d.execute(&batch(&[0, 1], 0)).unwrap();
         assert_eq!(est.len(), 2);
         // Batch 1 completes at 10 (dpu) + 1 (hop) + 4 (vpu) = 15 ms.
         assert_eq!(t_done, Duration::from_millis(15));
-        let (est, t_done) = d.execute(&batch(&[2, 3], 0)).unwrap();
+        // The replayable chain mirrors the plan: dpu 10 ms, then the 1 ms
+        // hop leads into the vpu's 4 ms tail stage.
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].substrate, "dpu");
+        assert_eq!(spans[0].service, Duration::from_millis(10));
+        assert_eq!(spans[0].lead_in, Duration::ZERO);
+        assert_eq!(spans[1].substrate, "vpu");
+        assert_eq!(spans[1].service, Duration::from_millis(4));
+        assert_eq!(spans[1].lead_in, Duration::from_millis(1));
+        let (est, t_done, _) = d.execute(&batch(&[2, 3], 0)).unwrap();
         assert_eq!(est.len(), 2);
         // Batch 2: head stalls to 10, finishes 20, +1 hop, tail 21..25.
         assert_eq!(t_done, Duration::from_millis(25));
@@ -914,8 +938,11 @@ mod tests {
         d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, Some(1)));
         d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
 
-        let (est, _) = d.execute(&batch(&[0, 1], 0)).unwrap();
+        let (est, _, spans) = d.execute(&batch(&[0, 1], 0)).unwrap();
         assert_eq!(est.len(), 2);
+        // The chain reflects the fallback plan, not the faulted primary.
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].substrate, "vpu");
         d.finish();
         let dpu = d.telemetry.stages.iter().find(|s| s.accel == "dpu").unwrap();
         let vpu = d.telemetry.stages.iter().find(|s| s.accel == "vpu").unwrap();
@@ -948,12 +975,12 @@ mod tests {
 
         let mut b = batch(&[0, 1], 0);
         b.constraints.max_loce_m = Some(0.70);
-        let (est, _) = d.execute(&b).unwrap();
+        let (est, _, _) = d.execute(&b).unwrap();
         assert_eq!(est.len(), 2);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
 
         // An unconstrained batch takes the primary plan.
-        let (_, _) = d.execute(&batch(&[2, 3], 0)).unwrap();
+        let (_, _, _) = d.execute(&batch(&[2, 3], 0)).unwrap();
         assert_ne!(d.telemetry.records.last().unwrap().mode, "vpu-fp16");
 
         // A bound no plan satisfies is a loud error, not a silent serve.
@@ -969,7 +996,7 @@ mod tests {
         d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
         let mut b = batch(&[0, 1], 0);
         b.cost = 2.0;
-        let (_, t_done) = d.execute(&b).unwrap();
+        let (_, t_done, _) = d.execute(&b).unwrap();
         // Doubled: 20 (dpu) + 2 (hop) + 8 (vpu) = 30 ms.
         assert_eq!(t_done, Duration::from_millis(30));
     }

@@ -16,9 +16,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::PjrtBackend;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::config::{Config, Mode, PartitionSpec};
+use crate::coordinator::clock::{Clock as _, ServiceMode};
+use crate::coordinator::config::{Config, ExecutorKind, Mode, PartitionSpec};
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::engine::{run_workloads, Engine, RunOutput};
+use crate::coordinator::executor::ThreadedExecutor;
 use crate::coordinator::pipeline::{build_plans, PipelinedDispatcher};
 use crate::coordinator::policy::profile_modes;
 use crate::coordinator::scheduler::{Backend, PoseEstimate};
@@ -57,8 +59,14 @@ pub fn run(config: &Config) -> Result<RunOutput> {
              compiled)"
         );
     }
+    if config.executor == ExecutorKind::Threaded && !config.sim {
+        bail!(
+            "--executor threaded requires --sim: the wall-clock replay \
+             services modeled spans (PJRT artifacts execute inline)"
+        );
+    }
     let (manifest, eval) = if config.sim {
-        let manifest = Manifest::synthetic();
+        let manifest = Manifest::synthetic()?;
         let eval = Arc::new(EvalSet::synthetic(
             manifest.eval_count,
             manifest.camera.0,
@@ -75,6 +83,17 @@ pub fn run(config: &Config) -> Result<RunOutput> {
         Some(spec) => Box::new(build_pipeline_engine(config, spec, &manifest)?),
         None => Box::new(build_pool_engine(config, &manifest)?),
     };
+    // The threaded executor wraps whichever engine was built: decisions
+    // stay in the inner engine on the virtual timeline; worker threads
+    // replay each batch's service chain in (scaled) wall time.
+    if config.executor == ExecutorKind::Threaded {
+        engine = Box::new(ThreadedExecutor::new(
+            engine,
+            ServiceMode::Sleep {
+                time_scale: config.time_scale,
+            },
+        ));
+    }
     if config.workloads.is_empty() {
         run_with_engine(config, eval, engine.as_mut())
     } else {
@@ -251,12 +270,19 @@ fn build_pipeline_engine(
 /// partial batch flushes at its own deadline (always past the last
 /// arrival — earlier deadlines drain in the loop).  An engine with no
 /// backend bound surfaces as an error here, not a panic.
+///
+/// The run clock (from `Config::executor`) paces the loop: a no-op on the
+/// simulated clock, real sleeps on the wall clock so a threaded engine
+/// services earlier batches while the camera advances.  The final poll
+/// happens *after* [`Engine::drain`], which is where an asynchronous
+/// engine finishes its in-flight work.
 pub fn run_with_engine(
     config: &Config,
     eval: Arc<EvalSet>,
     engine: &mut dyn Engine,
 ) -> Result<RunOutput> {
     let mode = engine.primary_mode()?;
+    let mut clock = config.clock();
     let mut batcher = Batcher::new(engine.artifact_batch(), config.batch_timeout);
     let camera = Camera::new(eval, config.camera_fps, config.frames);
 
@@ -265,31 +291,38 @@ pub fn run_with_engine(
             if frame.t_capture < deadline {
                 break;
             }
+            clock.wait_until(deadline);
             match batcher.poll(deadline) {
                 Some(batch) => engine.submit(&batch)?,
                 None => break,
             }
         }
+        clock.wait_until(frame.t_capture);
         if let Some(batch) = batcher.push(frame) {
             engine.submit(&batch)?;
         }
     }
     if let Some(deadline) = batcher.deadline() {
+        clock.wait_until(deadline);
         if let Some(batch) = batcher.flush(deadline) {
             engine.submit(&batch)?;
         }
     }
+    engine.drain()?;
     let estimates: Vec<PoseEstimate> = engine
         .poll()
         .into_iter()
         .flat_map(|c| c.estimates)
         .collect();
-    engine.drain()?;
 
+    let mut telemetry = engine.take_telemetry();
+    if let Some(d) = clock.wall_elapsed() {
+        telemetry.measured_elapsed_s = Some(d.as_secs_f64());
+    }
     Ok(RunOutput {
         mode,
         estimates,
-        telemetry: engine.take_telemetry(),
+        telemetry,
     })
 }
 
@@ -523,7 +556,7 @@ mod tests {
         // The per-mode expected LOCE comes from the synthetic manifest's
         // profile table — no hardcoded match, no panic path: an unknown
         // serving mode is a plain assertion failure.
-        let profiles = profile_modes(&Manifest::synthetic());
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
         for r in &out.telemetry.records {
             let mode = Mode::from_label(r.mode);
             assert!(mode.is_some(), "unknown serving mode {:?}", r.mode);
@@ -572,7 +605,7 @@ mod tests {
         assert!(!out.telemetry.stage_occupancy_summary().is_empty());
         // The pipelined path serves the composite MPAI numerics (Table I
         // mpai row), not the tail engine's whole-network row.
-        let mpai = profile_modes(&Manifest::synthetic())[&Mode::Mpai];
+        let mpai = profile_modes(&Manifest::synthetic().unwrap())[&Mode::Mpai];
         for r in &out.telemetry.records {
             assert_eq!(r.mode, "mpai");
             assert!(
@@ -629,7 +662,7 @@ mod tests {
         };
         let out = run(&cfg).unwrap();
         assert_eq!(out.estimates.len(), 16);
-        let profiles = profile_modes(&Manifest::synthetic());
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
         for r in &out.telemetry.records {
             assert_ne!(r.mode, "dpu-int8", "accuracy bound violated by failover");
             let mode = Mode::from_label(r.mode).unwrap();
@@ -749,6 +782,100 @@ mod tests {
         assert_eq!(bg.admitted + bg.shed, 24);
         // Tenants share the pipelined engine: stage telemetry is present.
         assert_eq!(out.telemetry.stages.len(), 2);
+    }
+
+    #[test]
+    fn threaded_executor_serves_the_sim_pool_end_to_end() {
+        // `mpai serve --sim --pool --executor threaded`: conservation and
+        // order hold through the worker threads, and the telemetry grows
+        // the measured block.
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            executor: crate::coordinator::config::ExecutorKind::Threaded,
+            time_scale: 0.0,
+            frames: 16,
+            camera_fps: 100.0,
+            // Generous timeout: batches fill to the full artifact size (4),
+            // so exactly 4 replay chains run on the workers.
+            batch_timeout: Duration::from_millis(500),
+            ..Default::default()
+        };
+        let out = run(&cfg).unwrap();
+        assert_eq!(out.estimates.len(), 16);
+        let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+        assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+        assert_eq!(out.telemetry.executor, Some("threaded"));
+        assert!(out.telemetry.measured_elapsed_s.is_some());
+        assert_eq!(out.telemetry.measured_batch_s.len(), 4);
+    }
+
+    #[test]
+    fn threaded_executor_matches_sim_accounting_for_mixed_qos_workloads() {
+        // THE ISSUE acceptance: `mpai serve --sim --pool --executor
+        // threaded` with 3 mixed-QoS workloads completes with zero
+        // lost/duplicated frames and the same shed/deadline accounting as
+        // `--executor sim` on the same schedule.
+        let workloads = || -> Vec<Workload> {
+            vec![
+                Workload::parse("rt:net=ursonet,qos=realtime,deadline_ms=8000,rate=8,frames=24")
+                    .unwrap(),
+                Workload::parse(
+                    "std:net=mobilenet_v2,qos=standard,deadline_ms=12000,rate=6,frames=18",
+                )
+                .unwrap(),
+                Workload::parse("bg:net=resnet50,qos=background,deadline_ms=400,rate=40,frames=80")
+                    .unwrap(),
+            ]
+        };
+        let serve = |executor: crate::coordinator::config::ExecutorKind| {
+            let cfg = Config {
+                sim: true,
+                pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+                workloads: workloads(),
+                batch_timeout: Duration::from_millis(400),
+                executor,
+                time_scale: 0.0,
+                ..Default::default()
+            };
+            run(&cfg).unwrap()
+        };
+        let sim = serve(crate::coordinator::config::ExecutorKind::Sim);
+        let thr = serve(crate::coordinator::config::ExecutorKind::Threaded);
+
+        // Zero lost/duplicated frames through the worker threads.
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &thr.estimates {
+            assert!(seen.insert(e.frame_id), "duplicate frame {}", e.frame_id);
+        }
+        assert_eq!(sim.estimates.len(), thr.estimates.len());
+
+        // Identical per-tenant shed/deadline accounting across executors.
+        assert_eq!(sim.telemetry.tenants.len(), 3);
+        for (s, t) in sim.telemetry.tenants.iter().zip(&thr.telemetry.tenants) {
+            assert_eq!(
+                (s.admitted, s.completed, s.shed, s.deadline_misses),
+                (t.admitted, t.completed, t.shed, t.deadline_misses),
+                "tenant {} accounting diverged",
+                s.name
+            );
+        }
+        // The mix exercises real QoS behavior: background sheds, realtime
+        // never does.
+        let (rt, bg) = (&thr.telemetry.tenants[0], &thr.telemetry.tenants[2]);
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (24, 24, 0));
+        assert!(bg.shed > 0, "background flood never shed");
+        assert_eq!(bg.admitted + bg.shed, 80);
+    }
+
+    #[test]
+    fn threaded_executor_requires_sim() {
+        let cfg = Config {
+            sim: false,
+            executor: crate::coordinator::config::ExecutorKind::Threaded,
+            ..Default::default()
+        };
+        assert!(run(&cfg).is_err());
     }
 
     #[test]

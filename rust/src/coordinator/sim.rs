@@ -15,6 +15,7 @@ use std::collections::BTreeSet;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::clock::ServiceMode;
 use crate::coordinator::config::Mode;
 use crate::coordinator::policy::ModeProfile;
 use crate::coordinator::scheduler::{Backend, StageOutput};
@@ -44,6 +45,11 @@ pub struct SimBackend {
     /// Fail exactly on these 1-based engine invocations (arbitrary fault
     /// schedules, e.g. randomized property tests).
     fail_at: BTreeSet<usize>,
+    /// Modeled per-frame device time (the profile's total_ms), occupied
+    /// on the calling thread per `service` — real contention without
+    /// hardware for wall-clock runs.
+    service_s_per_frame: f64,
+    service: ServiceMode,
 }
 
 impl SimBackend {
@@ -67,6 +73,12 @@ impl SimBackend {
             calls: 0,
             fail_every: None,
             fail_at: BTreeSet::new(),
+            service_s_per_frame: if profile.total_ms.is_finite() {
+                (profile.total_ms / 1e3).max(0.0)
+            } else {
+                0.0
+            },
+            service: ServiceMode::Off,
         }
     }
 
@@ -80,6 +92,17 @@ impl SimBackend {
     /// (combines with `with_fail_every`; either firing fails the call).
     pub fn with_fail_at(mut self, calls: impl IntoIterator<Item = usize>) -> SimBackend {
         self.fail_at = calls.into_iter().collect();
+        self
+    }
+
+    /// Builder: occupy the calling thread for the modeled service time of
+    /// each whole-network `infer` (profile total_ms x batch rows, scaled
+    /// by the mode's `time_scale`).  `Sleep` yields (an off-host device),
+    /// `Spin` busy-waits (a polling driver — genuine CPU contention).
+    /// Stage-granular timing stays in the pipeline plan (replayed by the
+    /// threaded executor), so `infer_stage` never sleeps here.
+    pub fn with_service(mut self, service: ServiceMode) -> SimBackend {
+        self.service = service;
         self
     }
 
@@ -165,7 +188,10 @@ impl Backend for SimBackend {
 
     fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
         self.tick()?;
-        self.poses(images.shape[0], self.loce_m, self.orie_deg)
+        let b = images.shape[0];
+        let service = std::time::Duration::from_secs_f64(self.service_s_per_frame * b as f64);
+        self.service.serve(service);
+        self.poses(b, self.loce_m, self.orie_deg)
     }
 
     /// Stage-granular execution for the partitioned pipeline: every stage
@@ -333,6 +359,28 @@ mod tests {
         assert!(b.infer_stage(1, 2, &images).is_err()); // 2nd engine invocation
         assert!(b.infer(&images).is_ok());
         assert!(b.infer_stage(0, 2, &images).is_err()); // 4th
+    }
+
+    #[test]
+    fn service_mode_occupies_host_time_per_batch_row() {
+        // total_ms 66 x 2 rows x 0.05 scale = ~6.6 ms of host sleep.
+        let mut b = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3)
+            .with_service(ServiceMode::Sleep { time_scale: 0.05 });
+        b.observe_truths(&truths(2));
+        let images = Tensor::zeros(vec![2, 6, 8, 3]);
+        let t0 = std::time::Instant::now();
+        b.infer(&images).unwrap();
+        assert!(
+            t0.elapsed() >= std::time::Duration::from_millis(5),
+            "{:?}",
+            t0.elapsed()
+        );
+        // Off by default: no measurable service sleep.
+        let mut fast = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3);
+        fast.observe_truths(&truths(2));
+        let t0 = std::time::Instant::now();
+        fast.infer(&images).unwrap();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(50));
     }
 
     #[test]

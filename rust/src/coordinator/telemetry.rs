@@ -117,6 +117,18 @@ pub struct Telemetry {
     /// workload, filled by the multi-tenant serve loop (empty for
     /// single-workload runs).
     pub tenants: Vec<TenantRecord>,
+    /// Executor that ran the serve (`Some("threaded")` for wall-clock
+    /// runs; `None` for the classic simulated replay).
+    pub executor: Option<&'static str>,
+    /// *Measured* host seconds each batch's service replay took on the
+    /// worker threads (threaded executor only; empty otherwise).  The
+    /// modeled counterpart is the per-backend `busy`/`utilization` and
+    /// per-stage `busy`/`occupancy` accounting above.
+    pub measured_batch_s: Vec<f64>,
+    /// Measured host seconds for the whole run window (threaded executor
+    /// and wall-clock paced runs only; the serve loop's clock measurement
+    /// supersedes the executor's own when both exist).
+    pub measured_elapsed_s: Option<f64>,
 }
 
 impl Telemetry {
@@ -224,6 +236,23 @@ impl Telemetry {
         )
     }
 
+    /// Summary over the measured per-batch wall replay times (threaded
+    /// executor only; empty — NaN percentiles — otherwise).
+    pub fn measured_batch_summary(&self) -> Summary {
+        Summary::from(&self.measured_batch_s)
+    }
+
+    /// Total modeled device-busy seconds across backends and stages — the
+    /// virtual-timeline counterpart of `measured_elapsed_s` (a serial
+    /// replay spends ~this much wall time; a threaded one overlaps it).
+    pub fn modeled_busy_s(&self) -> f64 {
+        self.backends
+            .iter()
+            .map(|b| b.busy.as_secs_f64())
+            .chain(self.stages.iter().map(|s| s.busy.as_secs_f64()))
+            .sum()
+    }
+
     /// CSV export (one row per frame) for offline analysis.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
@@ -293,6 +322,19 @@ impl Telemetry {
                 st.transfer.as_secs_f64() * 1e3,
                 st.stall.as_secs_f64() * 1e3,
                 st.occupancy * 100.0,
+            );
+        }
+        if let Some(elapsed) = self.measured_elapsed_s {
+            let m = self.measured_batch_summary();
+            let _ = write!(
+                s,
+                "\nexecutor {:<9} measured elapsed {:>8.2} ms (modeled busy \
+                 {:>8.2} ms)  batch replay p50 {:>7.2} ms  p99 {:>7.2} ms",
+                self.executor.unwrap_or("sim"),
+                elapsed * 1e3,
+                self.modeled_busy_s() * 1e3,
+                m.p50() * 1e3,
+                m.p99() * 1e3,
             );
         }
         for t in &self.tenants {
@@ -458,6 +500,31 @@ mod tests {
         assert!(r.contains("tenant rt"), "{r}");
         assert!(r.contains("shed    2"), "{r}");
         assert!(r.contains("misses    1"), "{r}");
+    }
+
+    #[test]
+    fn measured_summaries_and_report_cover_the_executor_block() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        assert!(t.measured_batch_summary().is_empty());
+        assert!(!t.report().contains("executor"), "no block without wall data");
+        t.executor = Some("threaded");
+        t.measured_batch_s = vec![0.010, 0.030];
+        t.measured_elapsed_s = Some(0.120);
+        t.record_backend(BackendRecord {
+            mode: "dpu-int8",
+            batches: 2,
+            frames: 8,
+            failures: 0,
+            busy: Duration::from_millis(80),
+            utilization: 0.6,
+            max_queue_depth: 1,
+        });
+        assert!((t.measured_batch_summary().mean() - 0.020).abs() < 1e-12);
+        assert!((t.modeled_busy_s() - 0.080).abs() < 1e-12);
+        let r = t.report();
+        assert!(r.contains("executor threaded"), "{r}");
+        assert!(r.contains("measured elapsed   120.00 ms"), "{r}");
     }
 
     #[test]

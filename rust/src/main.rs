@@ -18,7 +18,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use mpai::accel::interconnect::links;
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
 use mpai::coordinator::{
-    self, parse_tenant_file, Config, Constraints, Mode, Objective, PartitionSpec, Workload,
+    self, parse_tenant_file, Config, Constraints, ExecutorKind, Mode, Objective, PartitionSpec,
+    Workload,
 };
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
@@ -65,7 +66,7 @@ fn print_usage() {
          commands:\n  \
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
-         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] run the coordinator\n  \
+         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] [--executor sim|threaded] run the coordinator\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points"
@@ -207,6 +208,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ),
             ("tenants", "FILE", "JSON workload list ([{...}] or {\"workloads\": [...]})"),
             ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
+            ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock workers)"),
+            ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
             ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
             ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
             ("max-ms", "X", "constraint: max modeled total latency (ms)"),
@@ -261,6 +264,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     for spec in a.get_all("workload") {
         workloads.push(Workload::parse(spec).map_err(|e| anyhow!("bad --workload: {e}"))?);
     }
+    let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
+        .context("bad --executor (sim | threaded)")?;
     let cfg = Config {
         artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
         mode: Some(mode),
@@ -274,6 +279,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         partition,
         boundary_link,
         workloads,
+        executor,
+        time_scale: a.get_f64("time-scale", 0.01)?,
     };
     let engaged = if pool.is_empty() {
         format!("mode {}", mode.label())
@@ -308,9 +315,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         None => String::new(),
     };
     println!(
-        "mpai serve — {engaged}{split}{tenants_note} fps {} frames {}{}",
+        "mpai serve — {engaged}{split}{tenants_note} fps {} frames {} executor {}{}",
         cfg.camera_fps,
         cfg.frames,
+        cfg.executor.label(),
         if cfg.sim { " (simulated backends)" } else { "" }
     );
     let out = coordinator::run(&cfg)?;

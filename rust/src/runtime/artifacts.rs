@@ -158,8 +158,10 @@ impl Manifest {
 
     /// Manifest stand-in for artifact-less runs (`mpai serve --sim`, the
     /// dispatch ablation bench): the deployed batch/shape contract plus the
-    /// paper's Table I accuracy per mode, and no artifact files.
-    pub fn synthetic() -> Manifest {
+    /// paper's Table I accuracy per mode, and no artifact files.  A
+    /// malformed synthetic document is an `anyhow` error in the sim serve
+    /// path, not a panic — the same contract as an on-disk manifest.
+    pub fn synthetic() -> Result<Manifest> {
         const SYNTH: &str = r#"{
           "version": 1, "batch": 4,
           "net_input": [96, 128, 3], "camera": [240, 320, 3],
@@ -175,7 +177,7 @@ impl Manifest {
           "layers": {"backbone": [], "head": []},
           "param_count": 0
         }"#;
-        Manifest::parse(SYNTH, Path::new("artifacts-sim")).expect("synthetic manifest")
+        Manifest::parse(SYNTH, Path::new("artifacts-sim")).context("parsing synthetic manifest")
     }
 }
 
@@ -215,7 +217,7 @@ mod tests {
 
     #[test]
     fn synthetic_manifest_covers_every_mode_key() {
-        let m = Manifest::synthetic();
+        let m = Manifest::synthetic().expect("synthetic manifest parses");
         assert_eq!(m.batch, 4);
         assert_eq!(m.net_input, (96, 128, 3));
         for key in ["fp32", "fp16", "tpu_int8", "dpu_int8", "mpai"] {

@@ -1,0 +1,81 @@
+//! Machine-readable bench results: `BENCH_<name>.json` emission.
+//!
+//! Every ablation bench prints a human report and asserts its own gates;
+//! this module adds the CI contract on top: when `MPAI_BENCH_JSON` names
+//! a directory, a bench calls [`emit`] with its headline metrics and a
+//! `BENCH_<name>.json` document lands there.  The CI bench-smoke job
+//! uploads those files as workflow artifacts and the `bench-gate` binary
+//! compares them against the committed `bench/baseline.json`, failing on
+//! regressions past the tolerance (see EXPERIMENTS.md for the baseline
+//! refresh procedure).
+//!
+//! Emission is a no-op without the env var, so local `cargo bench` runs
+//! stay filesystem-clean.
+
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+
+/// Env var naming the output directory for bench JSON results.
+pub const BENCH_JSON_ENV: &str = "MPAI_BENCH_JSON";
+
+/// Serialize one bench's metrics to `$MPAI_BENCH_JSON/BENCH_<name>.json`
+/// (creating the directory if needed).  Non-finite metric values are
+/// recorded as `null` — the gate treats them as unbaselined.  Returns the
+/// path written, `None` when emission is disabled.  I/O failures panic:
+/// in CI a silently missing result file would read as "nothing to gate".
+pub fn emit(name: &str, metrics: &[(&str, f64)]) -> Option<PathBuf> {
+    let dir = std::env::var_os(BENCH_JSON_ENV)?;
+    let dir = PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)
+        .unwrap_or_else(|e| panic!("creating bench-json dir {dir:?}: {e}"));
+
+    let mut doc = Json::obj();
+    doc.set("name", Json::Str(name.to_string()));
+    let mut m = Json::obj();
+    for (k, v) in metrics {
+        let val = if v.is_finite() { Json::Num(*v) } else { Json::Null };
+        m.set(k, val);
+    }
+    doc.set("metrics", m);
+
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{doc}\n"))
+        .unwrap_or_else(|e| panic!("writing {path:?}: {e}"));
+    Some(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn emits_parseable_document_when_env_set() {
+        // Serialize/parse round-trip without touching process env (tests
+        // run in parallel): exercise the document shape directly.
+        let mut doc = Json::obj();
+        doc.set("name", Json::Str("wall_clock".into()));
+        let mut m = Json::obj();
+        m.set("modeled_fps", Json::Num(18.71));
+        m.set("unbaselined", Json::Null);
+        doc.set("metrics", m);
+        let parsed = json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.req("name").unwrap().as_str(), Some("wall_clock"));
+        assert_eq!(
+            parsed.req("metrics").unwrap().get("modeled_fps").and_then(Json::as_f64),
+            Some(18.71)
+        );
+        assert_eq!(
+            parsed.req("metrics").unwrap().get("unbaselined"),
+            Some(&Json::Null)
+        );
+    }
+
+    #[test]
+    fn emit_is_a_no_op_without_the_env_var() {
+        if std::env::var_os(BENCH_JSON_ENV).is_none() {
+            assert_eq!(emit("noop_probe", &[("x", 1.0)]), None);
+        }
+    }
+}

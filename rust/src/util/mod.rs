@@ -1,6 +1,7 @@
 //! Infrastructure substrates built in-repo (the offline environment carries
 //! no serde/clap/criterion/proptest — DESIGN.md §4.11).
 
+pub mod benchio;
 pub mod cli;
 pub mod json;
 pub mod mpt;
