@@ -12,12 +12,15 @@
 //! bench-gate refresh bench/baseline.json <results-dir>
 //! ```
 //!
-//! Direction is inferred from the metric name: `*_fps` / `*_speedup` are
-//! higher-is-better, `*_s` / `*_ms` are lower-is-better, anything else is
-//! gated two-sided.  A baseline value of `null` marks a metric that is
-//! tracked but not yet baselined (recorded, never failed) — `refresh`
-//! replaces every baseline entry with the observed values (the refresh
-//! procedure is documented in EXPERIMENTS.md).
+//! Direction is inferred from the metric name: `*_fps` / `*_speedup` /
+//! `*_eps` are higher-is-better, `*_s` / `*_ms` are lower-is-better,
+//! anything else is gated two-sided.  A baseline value of `null` marks a
+//! metric that is tracked but not yet baselined (recorded, never failed);
+//! a metric may also be an object `{"value": V, "tolerance_pct": T}` to
+//! gate at a per-metric tolerance (wider bands for metrics with host
+//! jitter, e.g. normalized wall-replay times) — `refresh` replaces every
+//! gated baseline entry with the observed values, preserving per-metric
+//! tolerances (the refresh procedure is documented in EXPERIMENTS.md).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -37,13 +40,31 @@ enum Direction {
 }
 
 fn direction(metric: &str) -> Direction {
-    if metric.ends_with("_fps") || metric.ends_with("_speedup") {
+    if metric.ends_with("_fps") || metric.ends_with("_speedup") || metric.ends_with("_eps") {
         Direction::HigherIsBetter
     } else if metric.ends_with("_s") || metric.ends_with("_ms") {
         Direction::LowerIsBetter
     } else {
         Direction::TwoSided
     }
+}
+
+/// Gated value of a baseline entry: a bare number, or the `value` field
+/// of a `{"value": V, "tolerance_pct": T}` object.  `None` marks a
+/// tracked-only (unbaselined) metric.
+fn baseline_value(entry: &Json) -> Option<f64> {
+    entry
+        .as_f64()
+        .or_else(|| entry.get("value").and_then(Json::as_f64))
+}
+
+/// Per-metric tolerance (fraction), falling back to the file default.
+fn baseline_tolerance(entry: &Json, default_tol: f64) -> f64 {
+    entry
+        .get("tolerance_pct")
+        .and_then(Json::as_f64)
+        .map(|p| p / 100.0)
+        .unwrap_or(default_tol)
 }
 
 fn load(path: &Path) -> Result<Json> {
@@ -84,7 +105,7 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
         let Some(metrics) = metrics.as_obj() else {
             bail!("baseline bench {bench:?} is not an object");
         };
-        let gated = metrics.values().any(|v| v.as_f64().is_some());
+        let gated = metrics.values().any(|v| baseline_value(v).is_some());
         let path = results_path(results_dir, bench);
         let doc = match load(&path) {
             Ok(d) => d,
@@ -101,7 +122,7 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
                 continue;
             }
         };
-        for (metric, base) in metrics {
+        for (metric, entry) in metrics {
             let observed = doc
                 .get("metrics")
                 .and_then(|m| m.get(metric))
@@ -111,7 +132,7 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
                 failures += 1;
                 continue;
             };
-            let Some(base) = base.as_f64() else {
+            let Some(base) = baseline_value(entry) else {
                 println!(
                     "note  {bench}.{metric}: observed {observed:.4} (unbaselined — \
                      run `bench-gate refresh` to start gating it)"
@@ -122,6 +143,7 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
                 println!("note  {bench}.{metric}: unusable baseline {base} — skipped");
                 continue;
             }
+            let tol = baseline_tolerance(entry, tol);
             let delta = (observed - base) / base;
             let regressed = match direction(metric) {
                 Direction::HigherIsBetter => delta < -tol,
@@ -131,8 +153,9 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
             if regressed {
                 println!(
                     "FAIL  {bench}.{metric}: {observed:.4} vs baseline {base:.4} \
-                     ({:+.1}% > {tolerance_pct}% tolerance)",
-                    delta * 100.0
+                     ({:+.1}% > {:.0}% tolerance)",
+                    delta * 100.0,
+                    tol * 100.0
                 );
                 failures += 1;
             } else if delta.abs() > tol {
@@ -157,21 +180,20 @@ fn check(baseline_path: &Path, results_dir: &Path) -> Result<usize> {
 /// Rewrite the baseline from observed results.  By default a metric that
 /// was `null` (tracked, unbaselined — e.g. machine-dependent wall times)
 /// stays `null` and newly-seen metrics enter as `null`; `promote_all`
-/// turns every observed value into a gated baseline.
+/// turns every observed value into a gated baseline.  Per-metric
+/// tolerance objects keep their `tolerance_pct` across a refresh.
 fn refresh(baseline_path: &Path, results_dir: &Path, promote_all: bool) -> Result<()> {
     let old = load(baseline_path).ok();
     let tolerance_pct = old
         .as_ref()
         .and_then(|b| b.get("tolerance_pct").and_then(Json::as_f64))
         .unwrap_or(DEFAULT_TOLERANCE_PCT);
-    // A metric is gated iff the old baseline holds a number for it.
-    let was_gated = |bench: &str, metric: &str| -> bool {
+    // The old baseline entry for one bench.metric, if any.
+    let old_entry = |bench: &str, metric: &str| -> Option<&Json> {
         old.as_ref()
             .and_then(|b| b.get("benches"))
             .and_then(|bs| bs.get(bench))
             .and_then(|m| m.get(metric))
-            .and_then(Json::as_f64)
-            .is_some()
     };
 
     let mut benches = Json::obj();
@@ -198,13 +220,64 @@ fn refresh(baseline_path: &Path, results_dir: &Path, promote_all: bool) -> Resul
             .to_string();
         let mut metrics = Json::obj();
         for (k, v) in observed_metrics(&doc)? {
-            if promote_all || was_gated(&name, &k) {
-                metrics.set(&k, Json::Num(v));
-            } else {
-                metrics.set(&k, Json::Null);
+            let entry = old_entry(&name, &k);
+            let gated = promote_all || entry.is_some_and(|e| baseline_value(e).is_some());
+            if !gated {
+                // A tracked-only object keeps its shape so a preset
+                // tolerance_pct survives until the metric is promoted;
+                // bare nulls (and new metrics) stay null.
+                match entry {
+                    Some(e) if e.get("tolerance_pct").is_some() => metrics.set(&k, e.clone()),
+                    _ => metrics.set(&k, Json::Null),
+                }
+                continue;
+            }
+            let pct = entry
+                .and_then(|e| e.get("tolerance_pct"))
+                .and_then(Json::as_f64);
+            match pct {
+                Some(pct) => {
+                    let mut o = Json::obj();
+                    o.set("value", Json::Num(v));
+                    o.set("tolerance_pct", Json::Num(pct));
+                    metrics.set(&k, o);
+                }
+                None => metrics.set(&k, Json::Num(v)),
+            }
+        }
+        // Gated metrics the new document did not emit also survive: a
+        // bench dropping a metric must be an explicit baseline edit, not
+        // a silent un-gating by refresh.
+        if let Some(old_metrics) = old
+            .as_ref()
+            .and_then(|b| b.get("benches"))
+            .and_then(|bs| bs.get(&name))
+            .and_then(Json::as_obj)
+        {
+            for (k, v) in old_metrics {
+                if metrics.get(k).is_none() {
+                    println!("note  {name}.{k}: not in new results — keeping its baseline entry");
+                    metrics.set(k, v.clone());
+                }
             }
         }
         benches.set(&name, metrics);
+    }
+
+    // Benches in the old baseline with no results in this run keep their
+    // entries untouched: refreshing from a partial bench run must not
+    // silently un-gate everything it did not re-measure.
+    if let Some(old_benches) = old
+        .as_ref()
+        .and_then(|b| b.get("benches"))
+        .and_then(Json::as_obj)
+    {
+        for (name, entry) in old_benches {
+            if benches.get(name).is_none() {
+                println!("note  {name}: no new results — keeping its existing baseline entry");
+                benches.set(name, entry.clone());
+            }
+        }
     }
 
     let mut out = Json::obj();
@@ -254,5 +327,45 @@ fn main() -> ExitCode {
             eprintln!("error: {e:#}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_from_metric_name() {
+        assert_eq!(direction("pool_fps"), Direction::HigherIsBetter);
+        assert_eq!(direction("threaded_speedup"), Direction::HigherIsBetter);
+        assert_eq!(direction("serve_loop_eps"), Direction::HigherIsBetter);
+        assert_eq!(direction("serial_wall_s"), Direction::LowerIsBetter);
+        assert_eq!(direction("latency_ms"), Direction::LowerIsBetter);
+        assert_eq!(direction("occupancy"), Direction::TwoSided);
+    }
+
+    #[test]
+    fn baseline_entry_forms() {
+        let bare = Json::Num(2.5);
+        assert_eq!(baseline_value(&bare), Some(2.5));
+        assert_eq!(baseline_tolerance(&bare, 0.15), 0.15);
+
+        let tracked = Json::Null;
+        assert_eq!(baseline_value(&tracked), None);
+
+        let mut obj = Json::obj();
+        obj.set("value", Json::Num(1.5));
+        obj.set("tolerance_pct", Json::Num(40.0));
+        assert_eq!(baseline_value(&obj), Some(1.5));
+        assert!((baseline_tolerance(&obj, 0.15) - 0.40).abs() < 1e-12);
+
+        // Object without a value is tracked-only; without a tolerance it
+        // inherits the file default.
+        let mut bare_obj = Json::obj();
+        bare_obj.set("tolerance_pct", Json::Num(40.0));
+        assert_eq!(baseline_value(&bare_obj), None);
+        let mut val_only = Json::obj();
+        val_only.set("value", Json::Num(3.0));
+        assert_eq!(baseline_tolerance(&val_only, 0.15), 0.15);
     }
 }

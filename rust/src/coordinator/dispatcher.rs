@@ -34,12 +34,16 @@ use crate::coordinator::config::Mode;
 use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{decode_batch, prepare_batch, Backend, PoseEstimate};
+use crate::coordinator::substrate::SubstrateId;
 use crate::coordinator::telemetry::{BackendRecord, Telemetry};
 use crate::pose::Pose;
 
 /// One pool member: a backend plus its routing state.
 struct PoolEntry {
     backend: Box<dyn Backend>,
+    /// Interned substrate key stamped on every [`ServiceSpan`] — a `Copy`
+    /// id, so span creation never clones the mode label per batch.
+    substrate: SubstrateId,
     /// Modeled profile used for routing estimates + constraint admission;
     /// `None` (uncharacterized backend) is always admitted and estimated
     /// from observed host inference times.  Note the hybrid clock that
@@ -117,8 +121,10 @@ impl Dispatcher {
     /// admission; pass `None` for backends without a modeled profile (they
     /// are always admitted and estimated from observed host latency).
     pub fn add_backend(&mut self, backend: Box<dyn Backend>, profile: Option<ModeProfile>) {
+        let substrate = SubstrateId::intern(backend.mode().label());
         self.entries.push(PoolEntry {
             backend,
+            substrate,
             profile,
             busy_until: Duration::ZERO,
             inflight: VecDeque::new(),
@@ -209,7 +215,7 @@ impl Dispatcher {
                         &mut self.telemetry,
                     )?;
                     let span = ServiceSpan {
-                        substrate: mode.to_string(),
+                        substrate: entry.substrate,
                         lead_in: Duration::ZERO,
                         service,
                     };
@@ -385,7 +391,7 @@ mod tests {
         assert_eq!(d.telemetry.records[0].mode, "dpu-int8");
         assert_eq!(t_done, Duration::from_millis(40 + 240));
         // The replayable span names the serving substrate and its charge.
-        assert_eq!(span.substrate, "dpu-int8");
+        assert_eq!(span.substrate.name(), "dpu-int8");
         assert_eq!(span.service, Duration::from_millis(240));
         assert_eq!(span.lead_in, Duration::ZERO);
         // A burst saturates the DPU; the VPU picks up the spillover.
@@ -413,7 +419,7 @@ mod tests {
         assert_eq!(est.len(), 2);
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
         // The span follows the failover: the VPU served the batch.
-        assert_eq!(span.substrate, "vpu-fp16");
+        assert_eq!(span.substrate.name(), "vpu-fp16");
         d.finish();
         let dpu = &d.telemetry.backends[0];
         assert_eq!((dpu.mode, dpu.failures, dpu.batches), ("dpu-int8", 1, 0));

@@ -20,12 +20,32 @@
 //!   batcher; background-class frames are **shed** — counted, never
 //!   silently dropped — when the pool saturates past their deadline.
 //!
+//! ## The event calendar (hot-path scheduling)
+//!
+//! The serve loop is event-driven: the next thing to happen is either a
+//! tenant's **arrival** (its camera's next frame) or a tenant's batcher
+//! **deadline** (a timed-out partial batch dispatches).  The original
+//! implementation rescanned every tenant twice per event to find the
+//! minimum — O(n) per event, O(n·m) per run for n tenants and m events.
+//! The hot path now keeps a binary-heap **event calendar** keyed by
+//! `(instant, kind, tenant)` with *lazy invalidation*: entries are pushed
+//! whenever a tenant's batcher/arrival state changes and validated
+//! against live tenant state when popped (stale entries are dropped), so
+//! each event costs O(log n).  Batches that became ready together are
+//! dispatched from per-QoS-class EDF heaps keyed `(deadline, seq)` — the
+//! monotone `seq` reproduces the old stable sort exactly.  Both queues
+//! are **bit-identical in dispatch order** to the pre-calendar scan
+//! loop, which is kept as [`EventQueueKind::Scan`] and property-tested
+//! against the calendar (`event_order_equivalence`).
+//!
 //! Per-tenant constraints ride on each [`Batch`] and gate admission in
 //! both engines: the whole-frame pool checks them per substrate at
 //! routing; the pipelined dispatcher checks them against each plan's
 //! serving-numerics profile at dispatch, on top of the build-time
 //! pool-level filter.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -36,6 +56,7 @@ use crate::coordinator::clock::Clock;
 use crate::coordinator::config::{Config, Mode, Workload};
 use crate::coordinator::policy::QosClass;
 use crate::coordinator::scheduler::PoseEstimate;
+use crate::coordinator::substrate::SubstrateId;
 use crate::coordinator::telemetry::{Telemetry, TenantRecord};
 use crate::net::models;
 use crate::pose::EvalSet;
@@ -60,10 +81,13 @@ pub struct RunOutput {
 /// [`ThreadedExecutor`](crate::coordinator::executor::ThreadedExecutor)
 /// replays the chain on per-substrate worker threads so wall-clock runs
 /// genuinely overlap where the virtual timeline only modeled overlap.
+/// The substrate is an interned [`SubstrateId`] (a `Copy` key), so
+/// stamping and routing spans never clones a `String` on the hot path;
+/// telemetry resolves the name at report time.
 #[derive(Debug, Clone)]
 pub struct ServiceSpan {
     /// Substrate that served the span (backend mode label or stage accel).
-    pub substrate: String,
+    pub substrate: SubstrateId,
     /// Inbound boundary transfer preceding the service (ZERO for the
     /// first span of a chain and for whole-frame dispatch).
     pub lead_in: Duration,
@@ -120,6 +144,26 @@ pub trait Engine {
     fn take_telemetry(&mut self) -> Telemetry;
 }
 
+/// Which serve-loop scheduling implementation drives [`run_workloads`]:
+/// both the admission-event source AND the ready-batch ordering.
+///
+/// Both produce **bit-identical** dispatch orders and accounting; the
+/// scan is the full pre-change reference (tenant scan per event + `Vec`
+/// with a stable sort per dispatch round) kept as the equivalence
+/// oracle (property-tested below) and as the AB-HP bench's "before"
+/// arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EventQueueKind {
+    /// Lazily-invalidated binary-heap event calendar + per-QoS-class
+    /// EDF heaps — O(log n) per event.  The default.
+    #[default]
+    Calendar,
+    /// Full scan of every tenant per event — O(n) per event — plus the
+    /// old sort-per-dispatch ready vector (the pre-calendar reference
+    /// implementation, end to end).
+    Scan,
+}
+
 /// One tenant's live serving state inside [`run_workloads`].
 struct Tenant {
     w: Workload,
@@ -144,25 +188,281 @@ impl Tenant {
     }
 }
 
-/// A batch awaiting dispatch, with its scheduling keys.
-struct Ready {
-    batch: Batch,
-    qos: QosClass,
-    /// EDF key: the batch's oldest capture + the tenant's frame deadline.
-    deadline: Duration,
+/// What the next event is.  `Deadline` orders before `Arrival` (derived
+/// `Ord`), so a batcher deadline wins ties against an arrival at the same
+/// instant — a timed-out partial batch dispatches at its deadline,
+/// exactly like the single-tenant pump.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// A tenant's batcher timeout fires (partial batch dispatches).
+    Deadline,
+    /// A tenant's next frame arrives.
+    Arrival,
 }
 
-fn enqueue(ready: &mut Vec<Ready>, w: &Workload, batch: Batch) {
+/// Earliest pending event across every tenant by full scan:
+/// `(instant, kind, tenant)` — the [`EventQueueKind::Scan`] reference.
+fn scan_next_event(tenants: &[Tenant]) -> Option<(Duration, EventKind, usize)> {
+    let next_deadline = tenants
+        .iter()
+        .enumerate()
+        .filter_map(|(k, t)| t.batcher.deadline().map(|d| (d, k)))
+        .min();
+    let next_arrival = tenants
+        .iter()
+        .enumerate()
+        .filter_map(|(k, t)| t.pending.as_ref().map(|f| (f.t_capture, k)))
+        .min();
+    match (next_deadline, next_arrival) {
+        (Some((d, k)), Some((a, _))) if d <= a => Some((d, EventKind::Deadline, k)),
+        (_, Some((a, k))) => Some((a, EventKind::Arrival, k)),
+        (Some((d, k)), None) => Some((d, EventKind::Deadline, k)),
+        (None, None) => None,
+    }
+}
+
+/// The admission-event source: either the heap calendar or the scan
+/// reference.  Calendar entries are validated against live tenant state
+/// on pop (lazy invalidation), so batcher state changes never require a
+/// heap rebuild — stale entries simply fall through.
+enum EventQueue {
+    Calendar(BinaryHeap<Reverse<(Duration, EventKind, usize)>>),
+    Scan,
+}
+
+impl EventQueue {
+    fn new(kind: EventQueueKind, tenants: &[Tenant]) -> EventQueue {
+        match kind {
+            EventQueueKind::Scan => EventQueue::Scan,
+            EventQueueKind::Calendar => {
+                let mut q = EventQueue::Calendar(BinaryHeap::with_capacity(tenants.len() * 2));
+                for (k, t) in tenants.iter().enumerate() {
+                    q.tenant_changed(k, t);
+                }
+                q
+            }
+        }
+    }
+
+    /// A calendar entry is live iff the tenant's current state still
+    /// schedules exactly this event at exactly this instant.
+    fn live(tenants: &[Tenant], t: Duration, kind: EventKind, k: usize) -> bool {
+        match kind {
+            EventKind::Deadline => tenants[k].batcher.deadline() == Some(t),
+            EventKind::Arrival => tenants[k].pending.as_ref().map(|f| f.t_capture) == Some(t),
+        }
+    }
+
+    /// Next event across all tenants, or `None` when the run is done.
+    fn next(&mut self, tenants: &[Tenant]) -> Option<(Duration, EventKind, usize)> {
+        match self {
+            EventQueue::Scan => scan_next_event(tenants),
+            EventQueue::Calendar(heap) => {
+                while let Some(Reverse((t, kind, k))) = heap.pop() {
+                    if Self::live(tenants, t, kind, k) {
+                        return Some((t, kind, k));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Next event at or before `now` (drains the same-instant cohort so
+    /// class-priority + EDF arbitration sees every batch that became
+    /// ready together).  Calendar: stale entries at or before `now` are
+    /// discarded; a later live entry stays queued.
+    fn next_until(
+        &mut self,
+        tenants: &[Tenant],
+        now: Duration,
+    ) -> Option<(Duration, EventKind, usize)> {
+        match self {
+            EventQueue::Scan => scan_next_event(tenants).filter(|&(t, _, _)| t <= now),
+            EventQueue::Calendar(heap) => {
+                while let Some(&Reverse((t, kind, k))) = heap.peek() {
+                    if t > now {
+                        return None;
+                    }
+                    heap.pop();
+                    if Self::live(tenants, t, kind, k) {
+                        return Some((t, kind, k));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Re-arm the calendar after tenant `k`'s state changed (arrival
+    /// consumed, batch formed/shed, batcher drained).  Pushing without
+    /// deduplication is fine: superseded entries fail the liveness check
+    /// on pop, and the push count is bounded by a small constant per
+    /// handled event.
+    fn tenant_changed(&mut self, k: usize, t: &Tenant) {
+        if let EventQueue::Calendar(heap) = self {
+            if let Some(d) = t.batcher.deadline() {
+                heap.push(Reverse((d, EventKind::Deadline, k)));
+            }
+            if let Some(f) = &t.pending {
+                heap.push(Reverse((f.t_capture, EventKind::Arrival, k)));
+            }
+        }
+    }
+}
+
+/// A ready batch awaiting dispatch inside one EDF heap: ordered by
+/// `(deadline, seq)`, where `seq` is the monotone enqueue sequence —
+/// exactly the order the old per-iteration stable sort produced.
+struct ReadyEntry {
+    /// EDF key: the batch's oldest capture + the tenant's frame deadline.
+    deadline: Duration,
+    seq: u64,
+    batch: Batch,
+}
+
+impl PartialEq for ReadyEntry {
+    fn eq(&self, other: &ReadyEntry) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+
+impl Eq for ReadyEntry {}
+
+impl PartialOrd for ReadyEntry {
+    fn partial_cmp(&self, other: &ReadyEntry) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyEntry {
+    fn cmp(&self, other: &ReadyEntry) -> std::cmp::Ordering {
+        (self.deadline, self.seq).cmp(&(other.deadline, other.seq))
+    }
+}
+
+/// Ready-batch ordering: per-QoS-class EDF heaps (strict class priority
+/// across heaps, earliest-deadline-first within one, enqueue order on
+/// ties via `seq`) for the calendar path, or the pre-change `Vec` with
+/// one stable `(class, deadline)` sort per dispatch round for the scan
+/// reference — so the equivalence oracle covers the heap replacement,
+/// not just the event-source swap.
+struct ReadyQueue {
+    kind: EventQueueKind,
+    classes: [BinaryHeap<Reverse<ReadyEntry>>; 3],
+    /// Scan reference only: pending entries, sorted (descending, popped
+    /// from the back) on the first pop after a push.
+    scan: Vec<(QosClass, ReadyEntry)>,
+    scan_sorted: bool,
+    next_seq: u64,
+}
+
+impl ReadyQueue {
+    fn new(kind: EventQueueKind) -> ReadyQueue {
+        ReadyQueue {
+            kind,
+            classes: [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()],
+            scan: Vec::new(),
+            scan_sorted: false,
+            next_seq: 0,
+        }
+    }
+
+    fn push(&mut self, qos: QosClass, deadline: Duration, batch: Batch) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let entry = ReadyEntry {
+            deadline,
+            seq,
+            batch,
+        };
+        match self.kind {
+            EventQueueKind::Calendar => self.classes[qos as usize].push(Reverse(entry)),
+            EventQueueKind::Scan => {
+                self.scan.push((qos, entry));
+                self.scan_sorted = false;
+            }
+        }
+    }
+
+    /// Highest-priority ready batch: classes in [`QosClass`] order, EDF
+    /// (then enqueue order) within a class.
+    fn pop(&mut self) -> Option<(Duration, Batch)> {
+        match self.kind {
+            EventQueueKind::Calendar => {
+                for class in &mut self.classes {
+                    if let Some(Reverse(e)) = class.pop() {
+                        return Some((e.deadline, e.batch));
+                    }
+                }
+                None
+            }
+            EventQueueKind::Scan => {
+                if !self.scan_sorted {
+                    // The pre-change dispatch ordering, verbatim: one
+                    // stable sort by (class, deadline) per round —
+                    // insertion order breaks ties.  Reversed so popping
+                    // from the back walks the ascending order.
+                    self.scan.sort_by_key(|(q, e)| (*q, e.deadline));
+                    self.scan.reverse();
+                    self.scan_sorted = true;
+                }
+                self.scan.pop().map(|(_, e)| (e.deadline, e.batch))
+            }
+        }
+    }
+}
+
+fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
     let oldest = batch
         .frames
         .first()
         .map(|f| f.t_capture)
         .unwrap_or_default();
-    ready.push(Ready {
-        qos: w.qos,
-        deadline: oldest + w.deadline,
-        batch,
-    });
+    ready.push(w.qos, oldest + w.deadline, batch);
+}
+
+/// Apply one event: move frames into the tenant's batcher (or shed on
+/// arrival backpressure) and enqueue any batch that became ready.
+fn handle_event(
+    tenants: &mut [Tenant],
+    engine: &dyn Engine,
+    ready: &mut ReadyQueue,
+    event: EventKind,
+    k: usize,
+    t_event: Duration,
+) {
+    match event {
+        EventKind::Deadline => {
+            let t = &mut tenants[k];
+            let due = match t.batcher.poll(t_event) {
+                Some(b) => Some(b),
+                // Unreachable by construction (the deadline is oldest +
+                // timeout); the forced flush guards the serve loop
+                // against ever spinning on a future batcher change.
+                None => t.batcher.flush(t_event),
+            };
+            if let Some(batch) = due {
+                enqueue(ready, &t.w, batch);
+            }
+        }
+        EventKind::Arrival => {
+            let horizon = engine.ready_at();
+            let t = &mut tenants[k];
+            let frame = t.pending.take().expect("arrival implies a pending frame");
+            t.refill();
+            t.emitted += 1;
+            // Admission backpressure: a background frame that cannot
+            // even START before its deadline is shed on arrival, along
+            // with the tenant's pending frames (older, so even more
+            // hopeless).  Counted, never silent.
+            if t.w.qos.sheddable() && horizon > frame.t_capture + t.w.deadline {
+                t.shed += t.batcher.shed().len() as u64 + 1;
+            } else if let Some(batch) = t.batcher.push(frame) {
+                enqueue(ready, &t.w, batch);
+            }
+        }
+    }
 }
 
 /// Serve N workloads on one shared engine: merged arrival streams on the
@@ -177,11 +477,27 @@ fn enqueue(ready: &mut Vec<Ready>, w: &Workload, batch: Batch) {
 /// concurrently.  All shed/deadline accounting stays on the virtual
 /// timeline, so the two clocks report identical per-tenant counts for the
 /// same schedule (property-tested in `coordinator::executor`).
+///
+/// Events come from the heap calendar; [`run_workloads_with_events`]
+/// selects the scan reference instead (tests and the AB-HP bench).
 pub fn run_workloads(
     config: &Config,
     eval: Arc<EvalSet>,
     engine: &mut dyn Engine,
     workloads: &[Workload],
+) -> Result<RunOutput> {
+    run_workloads_with_events(config, eval, engine, workloads, EventQueueKind::Calendar)
+}
+
+/// [`run_workloads`] with an explicit admission-event source.  Dispatch
+/// order and all accounting are bit-identical across the two kinds
+/// (property-tested: `event_order_equivalence`).
+pub fn run_workloads_with_events(
+    config: &Config,
+    eval: Arc<EvalSet>,
+    engine: &mut dyn Engine,
+    workloads: &[Workload],
+    events: EventQueueKind,
 ) -> Result<RunOutput> {
     if workloads.is_empty() {
         bail!("multi-tenant serve needs at least one workload");
@@ -217,80 +533,6 @@ pub fn run_workloads(
         tenants.push(t);
     }
 
-    #[derive(Clone, Copy)]
-    enum Event {
-        /// A tenant's batcher timeout fires (partial batch dispatches).
-        Deadline,
-        /// A tenant's next frame arrives.
-        Arrival,
-    }
-
-    /// Earliest pending event across every tenant: `(instant, kind,
-    /// tenant)`.  A batcher deadline wins ties against an arrival — a
-    /// timed-out partial batch dispatches at its deadline, exactly like
-    /// the single-tenant pump.
-    fn next_event(tenants: &[Tenant]) -> Option<(Duration, Event, usize)> {
-        let next_deadline = tenants
-            .iter()
-            .enumerate()
-            .filter_map(|(k, t)| t.batcher.deadline().map(|d| (d, k)))
-            .min();
-        let next_arrival = tenants
-            .iter()
-            .enumerate()
-            .filter_map(|(k, t)| t.pending.as_ref().map(|f| (f.t_capture, k)))
-            .min();
-        match (next_deadline, next_arrival) {
-            (Some((d, k)), Some((a, _))) if d <= a => Some((d, Event::Deadline, k)),
-            (_, Some((a, k))) => Some((a, Event::Arrival, k)),
-            (Some((d, k)), None) => Some((d, Event::Deadline, k)),
-            (None, None) => None,
-        }
-    }
-
-    /// Apply one event: move frames into the tenant's batcher (or shed on
-    /// arrival backpressure) and enqueue any batch that became ready.
-    fn handle_event(
-        tenants: &mut [Tenant],
-        engine: &dyn Engine,
-        ready: &mut Vec<Ready>,
-        event: Event,
-        k: usize,
-        t_event: Duration,
-    ) {
-        match event {
-            Event::Deadline => {
-                let t = &mut tenants[k];
-                let due = match t.batcher.poll(t_event) {
-                    Some(b) => Some(b),
-                    // Unreachable by construction (the deadline is oldest +
-                    // timeout); the forced flush guards the serve loop
-                    // against ever spinning on a future batcher change.
-                    None => t.batcher.flush(t_event),
-                };
-                if let Some(batch) = due {
-                    enqueue(ready, &t.w, batch);
-                }
-            }
-            Event::Arrival => {
-                let horizon = engine.ready_at();
-                let t = &mut tenants[k];
-                let frame = t.pending.take().expect("arrival implies a pending frame");
-                t.refill();
-                t.emitted += 1;
-                // Admission backpressure: a background frame that cannot
-                // even START before its deadline is shed on arrival, along
-                // with the tenant's pending frames (older, so even more
-                // hopeless).  Counted, never silent.
-                if t.w.qos.sheddable() && horizon > frame.t_capture + t.w.deadline {
-                    t.shed += t.batcher.shed().len() as u64 + 1;
-                } else if let Some(batch) = t.batcher.push(frame) {
-                    enqueue(ready, &t.w, batch);
-                }
-            }
-        }
-    }
-
     /// Account one completion against its tenant on the virtual timeline.
     /// Shared by the in-loop polls and the final post-drain poll so an
     /// asynchronous engine whose completions land late gets identical
@@ -310,39 +552,38 @@ pub fn run_workloads(
 
     let mut clock = config.clock();
     let mut estimates: Vec<PoseEstimate> = Vec::new();
-    let mut ready: Vec<Ready> = Vec::new();
+    let mut ready = ReadyQueue::new(events);
+    let mut queue = EventQueue::new(events, &tenants);
     loop {
-        let Some((now, event, k)) = next_event(&tenants) else {
+        let Some((now, event, k)) = queue.next(&tenants) else {
             break;
         };
         // Pace the loop: free on the simulated clock, a real sleep on the
         // wall clock (in-flight threaded work services meanwhile).
         clock.wait_until(now);
         handle_event(&mut tenants, &*engine, &mut ready, event, k, now);
+        queue.tenant_changed(k, &tenants[k]);
         // Drain every event scheduled at the same simulated instant before
-        // dispatching, so the class-priority + EDF sort below actually
-        // arbitrates batches that become ready together (events only move
-        // forward in time, so this inner loop terminates).
-        while let Some((t_next, ev, kn)) = next_event(&tenants) {
-            if t_next > now {
-                break;
-            }
+        // dispatching, so the class-priority + EDF arbitration below
+        // actually sees batches that become ready together (events only
+        // move forward in time, so this inner loop terminates).
+        while let Some((t_next, ev, kn)) = queue.next_until(&tenants, now) {
             handle_event(&mut tenants, &*engine, &mut ready, ev, kn, t_next);
+            queue.tenant_changed(kn, &tenants[kn]);
         }
 
         // Dispatch everything that became ready: strict class priority
         // (realtime > standard > background), EDF within a class.
-        ready.sort_by(|a, b| a.qos.cmp(&b.qos).then(a.deadline.cmp(&b.deadline)));
-        for r in ready.drain(..) {
+        while let Some((deadline, batch)) = ready.pop() {
             let start = engine.ready_at().max(now);
-            let t = &mut tenants[r.batch.tenant];
-            if t.w.qos.sheddable() && start > r.deadline {
+            let t = &mut tenants[batch.tenant];
+            if t.w.qos.sheddable() && start > deadline {
                 // Saturated: the batch cannot start before its deadline —
                 // shed it and record the drop.
-                t.shed += r.batch.real_count() as u64;
+                t.shed += batch.real_count() as u64;
                 continue;
             }
-            engine.submit(&r.batch)?;
+            engine.submit(&batch)?;
         }
 
         // Account completions on the virtual timeline (t_done is modeled,
@@ -437,6 +678,28 @@ mod tests {
         }
     }
 
+    /// Random tenant mix shared by the conservation and equivalence
+    /// property tests.
+    fn random_workloads(ctx: &mut crate::testkit::Ctx, max_frames: usize) -> Vec<Workload> {
+        let n_tenants = 1 + ctx.rng.below(3);
+        (0..n_tenants)
+            .map(|k| {
+                let qos = match ctx.rng.below(3) {
+                    0 => QosClass::Realtime,
+                    1 => QosClass::Standard,
+                    _ => QosClass::Background,
+                };
+                workload(
+                    &format!("t{k}"),
+                    qos,
+                    50 + ctx.rng.below(3000) as u64,
+                    1.0 + ctx.rng.below(60) as f64,
+                    ctx.rng.below(max_frames) as u64,
+                )
+            })
+            .collect()
+    }
+
     #[test]
     fn empty_workload_list_is_an_error() {
         let mut engine = pool(vec![]);
@@ -529,6 +792,128 @@ mod tests {
     }
 
     #[test]
+    fn scan_reference_serves_identically_on_a_fixed_mix() {
+        // Deterministic spot-check of the two event sources (the property
+        // test below covers random mixes): same mix, same fault schedule,
+        // identical estimate stream and tenant accounting.
+        let ws = vec![
+            workload("rt", QosClass::Realtime, 8000, 12.0, 24),
+            workload("bg", QosClass::Background, 250, 60.0, 80),
+        ];
+        let mut cal_engine = pool(vec![3, 7]);
+        let cal = run_workloads_with_events(
+            &cfg(200),
+            tiny_eval(),
+            &mut cal_engine,
+            &ws,
+            EventQueueKind::Calendar,
+        )
+        .unwrap();
+        let mut scan_engine = pool(vec![3, 7]);
+        let scan = run_workloads_with_events(
+            &cfg(200),
+            tiny_eval(),
+            &mut scan_engine,
+            &ws,
+            EventQueueKind::Scan,
+        )
+        .unwrap();
+        let ids = |o: &RunOutput| o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>();
+        assert_eq!(ids(&cal), ids(&scan), "dispatch order diverged");
+        for (a, b) in cal.telemetry.tenants.iter().zip(&scan.telemetry.tenants) {
+            assert_eq!(
+                (a.admitted, a.completed, a.shed, a.deadline_misses),
+                (b.admitted, b.completed, b.shed, b.deadline_misses),
+                "tenant {} accounting diverged",
+                a.name
+            );
+            assert_eq!(a.latencies_s, b.latencies_s, "tenant {} latencies", a.name);
+        }
+    }
+
+    #[test]
+    fn property_event_calendar_matches_scan_reference_bit_for_bit() {
+        // THE tentpole equivalence (ISSUE acceptance): for random tenant
+        // mixes, arrival rates, deadlines, batcher timeouts, and fault
+        // schedules, the heap event calendar + per-class EDF heaps
+        // produce the *same dispatch order* (estimate stream compared in
+        // order, not as a set), the same per-tenant
+        // admitted/completed/shed/miss counts, and the same latency
+        // sequences as the pre-calendar full-scan reference.
+        let eval = tiny_eval();
+        check(
+            "event_order_equivalence",
+            PropConfig {
+                cases: 48,
+                ..Default::default()
+            },
+            move |ctx| {
+                let ws = random_workloads(ctx, 28);
+                let faults: Vec<usize> = {
+                    let mut s = BTreeSet::new();
+                    for _ in 0..ctx.rng.below(20) {
+                        s.insert(1 + ctx.rng.below(40));
+                    }
+                    s.into_iter().collect()
+                };
+                let timeout = 1 + ctx.rng.below(600) as u64;
+
+                let mut cal_engine = pool(faults.clone());
+                let cal = run_workloads_with_events(
+                    &cfg(timeout),
+                    eval.clone(),
+                    &mut cal_engine,
+                    &ws,
+                    EventQueueKind::Calendar,
+                )
+                .map_err(|e| format!("calendar: {e:#}"))?;
+                let mut scan_engine = pool(faults);
+                let scan = run_workloads_with_events(
+                    &cfg(timeout),
+                    eval.clone(),
+                    &mut scan_engine,
+                    &ws,
+                    EventQueueKind::Scan,
+                )
+                .map_err(|e| format!("scan: {e:#}"))?;
+
+                let cal_ids: Vec<u64> = cal.estimates.iter().map(|e| e.frame_id).collect();
+                let scan_ids: Vec<u64> = scan.estimates.iter().map(|e| e.frame_id).collect();
+                crate::prop_assert!(
+                    cal_ids == scan_ids,
+                    "dispatch order diverged: calendar {cal_ids:?} vs scan {scan_ids:?}"
+                );
+                for (k, (a, b)) in cal
+                    .telemetry
+                    .tenants
+                    .iter()
+                    .zip(&scan.telemetry.tenants)
+                    .enumerate()
+                {
+                    crate::prop_assert!(
+                        (a.admitted, a.completed, a.shed, a.deadline_misses)
+                            == (b.admitted, b.completed, b.shed, b.deadline_misses),
+                        "tenant {k}: calendar ({}, {}, {}, {}) vs scan ({}, {}, {}, {})",
+                        a.admitted,
+                        a.completed,
+                        a.shed,
+                        a.deadline_misses,
+                        b.admitted,
+                        b.completed,
+                        b.shed,
+                        b.deadline_misses
+                    );
+                    crate::prop_assert!(
+                        a.latencies_s == b.latencies_s,
+                        "tenant {k}: latency sequences diverge"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn property_no_admitted_frame_lost_or_duplicated_under_faults_and_shedding() {
         // The ISSUE invariant: across random tenant mixes, arrival rates,
         // deadlines, and fault/shed schedules, the multi-tenant engine
@@ -544,22 +929,7 @@ mod tests {
                 ..Default::default()
             },
             move |ctx| {
-                let n_tenants = 1 + ctx.rng.below(3);
-                let mut ws = Vec::new();
-                for k in 0..n_tenants {
-                    let qos = match ctx.rng.below(3) {
-                        0 => QosClass::Realtime,
-                        1 => QosClass::Standard,
-                        _ => QosClass::Background,
-                    };
-                    ws.push(workload(
-                        &format!("t{k}"),
-                        qos,
-                        50 + ctx.rng.below(3000) as u64,
-                        1.0 + ctx.rng.below(60) as f64,
-                        ctx.rng.below(28) as u64,
-                    ));
-                }
+                let ws = random_workloads(ctx, 28);
                 // Random fault schedule on the second backend.
                 let faults: Vec<usize> = {
                     let mut s = BTreeSet::new();

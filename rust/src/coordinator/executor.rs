@@ -37,7 +37,8 @@
 //! [`Engine::ready_at`] (the modeled horizon, identical to the sim path)
 //! and shed/hold work first.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -48,6 +49,7 @@ use crate::coordinator::batcher::Batch;
 use crate::coordinator::clock::ServiceMode;
 use crate::coordinator::config::Mode;
 use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::substrate::SubstrateId;
 use crate::coordinator::telemetry::Telemetry;
 
 /// Default per-substrate bound on outstanding replay chains.
@@ -79,9 +81,35 @@ struct Worker {
 /// A chain in flight: its completion payload and measurement state.
 struct Inflight {
     completion: Completion,
-    /// Head substrate charged against the per-substrate in-flight bound.
-    head: String,
+    /// Head substrate charged against the per-substrate in-flight bound
+    /// (interned — charging the bound is a `Copy`, not a `String` clone).
+    head: SubstrateId,
     dispatched: Instant,
+}
+
+/// A wall-finished chain awaiting [`Engine::poll`], ordered by
+/// submission sequence so the min-heap below surfaces completions in
+/// submission order without re-sorting on every poll.
+struct Finished(u64, Completion);
+
+impl PartialEq for Finished {
+    fn eq(&self, other: &Finished) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl Eq for Finished {}
+
+impl PartialOrd for Finished {
+    fn partial_cmp(&self, other: &Finished) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Finished {
+    fn cmp(&self, other: &Finished) -> std::cmp::Ordering {
+        self.0.cmp(&other.0)
+    }
 }
 
 /// Wall-clock engine wrapper: deterministic decisions from the inner
@@ -90,14 +118,17 @@ pub struct ThreadedExecutor {
     inner: Box<dyn Engine>,
     service: ServiceMode,
     inflight_limit: usize,
-    workers: BTreeMap<String, Worker>,
+    workers: BTreeMap<SubstrateId, Worker>,
     tx_done: mpsc::Sender<u64>,
     rx_done: mpsc::Receiver<u64>,
     inflight: BTreeMap<u64, Inflight>,
     /// Outstanding chains per head substrate (submission-edge bound).
-    outstanding: BTreeMap<String, usize>,
-    /// Wall-finished completions awaiting [`Engine::poll`].
-    finished: Vec<(u64, Completion)>,
+    outstanding: BTreeMap<SubstrateId, usize>,
+    /// Wall-finished completions awaiting [`Engine::poll`]: a min-heap
+    /// keyed by submission seq, so out-of-order worker completions
+    /// settle in O(log n) and drain in submission order (the old `Vec`
+    /// re-sorted everything on every poll).
+    finished: BinaryHeap<Reverse<Finished>>,
     next_seq: u64,
     epoch: Instant,
     /// Host seconds each batch's replay chain took (dispatch → done).
@@ -121,7 +152,7 @@ impl ThreadedExecutor {
             rx_done,
             inflight: BTreeMap::new(),
             outstanding: BTreeMap::new(),
-            finished: Vec::new(),
+            finished: BinaryHeap::new(),
             next_seq: 0,
             epoch: Instant::now(),
             measured_batch_s: Vec::new(),
@@ -136,16 +167,15 @@ impl ThreadedExecutor {
     }
 
     /// Inbox of the worker thread bound to `substrate` (spawned lazily on
-    /// first use — substrate names only surface with the first span).
-    fn worker_tx(&mut self, substrate: &str) -> mpsc::Sender<Token> {
-        if let Some(w) = self.workers.get(substrate) {
+    /// first use — substrate ids only surface with the first span).
+    fn worker_tx(&mut self, substrate: SubstrateId) -> mpsc::Sender<Token> {
+        if let Some(w) = self.workers.get(&substrate) {
             return w.tx.clone();
         }
         let (tx, rx) = mpsc::channel::<Token>();
         let service = self.service;
-        let name = substrate.to_string();
         let handle = thread::Builder::new()
-            .name(format!("mpai-substrate-{name}"))
+            .name(format!("mpai-substrate-{}", substrate.name()))
             .spawn(move || {
                 while let Ok(mut tok) = rx.recv() {
                     let hop = tok.hops.pop_front().expect("token routed with a hop");
@@ -163,7 +193,7 @@ impl ThreadedExecutor {
             })
             .expect("spawning substrate worker");
         self.workers.insert(
-            substrate.to_string(),
+            substrate,
             Worker {
                 tx: tx.clone(),
                 handle: Some(handle),
@@ -178,10 +208,10 @@ impl ThreadedExecutor {
             // Nothing to replay (defensive): surface immediately.
             let seq = self.next_seq;
             self.next_seq += 1;
-            self.finished.push((seq, completion));
+            self.finished.push(Reverse(Finished(seq, completion)));
             return;
         }
-        let head = completion.spans[0].substrate.clone();
+        let head = completion.spans[0].substrate;
         // Submission-edge backpressure: block on completions until the
         // head substrate's backlog drops below the bound.
         while self.outstanding.get(&head).copied().unwrap_or(0) >= self.inflight_limit {
@@ -203,11 +233,11 @@ impl ThreadedExecutor {
             .collect();
         let mut route: VecDeque<mpsc::Sender<Token>> = VecDeque::new();
         for s in completion.spans.iter().skip(1) {
-            let tx = self.worker_tx(&s.substrate);
+            let tx = self.worker_tx(s.substrate);
             route.push_back(tx);
         }
-        let head_tx = self.worker_tx(&head);
-        *self.outstanding.entry(head.clone()).or_insert(0) += 1;
+        let head_tx = self.worker_tx(head);
+        *self.outstanding.entry(head).or_insert(0) += 1;
         self.inflight.insert(
             seq,
             Inflight {
@@ -226,7 +256,7 @@ impl ThreadedExecutor {
         let _ = head_tx.send(token);
     }
 
-    /// Move a wall-finished chain into the poll buffer.
+    /// Move a wall-finished chain into the poll heap (O(log n)).
     fn settle(&mut self, seq: u64) {
         if let Some(inf) = self.inflight.remove(&seq) {
             self.measured_batch_s
@@ -234,7 +264,7 @@ impl ThreadedExecutor {
             if let Some(n) = self.outstanding.get_mut(&inf.head) {
                 *n = n.saturating_sub(1);
             }
-            self.finished.push((seq, inf.completion));
+            self.finished.push(Reverse(Finished(seq, inf.completion)));
         }
     }
 }
@@ -259,13 +289,17 @@ impl Engine for ThreadedExecutor {
         Ok(())
     }
 
-    /// Completions whose wall replay finished, in submission order.
+    /// Completions whose wall replay finished, in submission order (the
+    /// heap pops by seq — no per-poll re-sort of the whole buffer).
     fn poll(&mut self) -> Vec<Completion> {
         while let Ok(seq) = self.rx_done.try_recv() {
             self.settle(seq);
         }
-        self.finished.sort_by_key(|(seq, _)| *seq);
-        self.finished.drain(..).map(|(_, c)| c).collect()
+        let mut out = Vec::with_capacity(self.finished.len());
+        while let Some(Reverse(Finished(_, c))) = self.finished.pop() {
+            out.push(c);
+        }
+        out
     }
 
     /// The *modeled* horizon — identical to the sim path by construction,
@@ -450,6 +484,41 @@ mod tests {
         let cs = e.poll();
         assert_eq!(cs.len(), 1);
         assert_eq!(cs[0].estimates.len(), 4);
+        assert!(e.poll().is_empty());
+    }
+
+    #[test]
+    fn out_of_order_settles_poll_in_submission_order() {
+        // ISSUE satellite regression: worker completions landing out of
+        // submission order (fast chain overtakes a slow one) must still
+        // surface from poll() in seq order — the finished buffer is a
+        // min-heap keyed by seq, not a re-sorted Vec.
+        use crate::coordinator::substrate::SubstrateId;
+        let mut e = ThreadedExecutor::new(Box::new(pool(vec![])), ServiceMode::Off);
+        let head = SubstrateId::intern("dpu-int8");
+        for seq in 0..3u64 {
+            e.inflight.insert(
+                seq,
+                Inflight {
+                    completion: Completion {
+                        tenant: seq as usize,
+                        estimates: vec![],
+                        t_captures: vec![],
+                        t_done: Duration::ZERO,
+                        spans: vec![],
+                    },
+                    head,
+                    dispatched: Instant::now(),
+                },
+            );
+        }
+        e.next_seq = 3;
+        // Chains finish 2, 0, 1 — poll must still hand back 0, 1, 2.
+        e.settle(2);
+        e.settle(0);
+        e.settle(1);
+        let tenants: Vec<usize> = e.poll().into_iter().map(|c| c.tenant).collect();
+        assert_eq!(tenants, vec![0, 1, 2]);
         assert!(e.poll().is_empty());
     }
 

@@ -15,6 +15,7 @@ pub mod policy;
 pub mod scheduler;
 pub mod server;
 pub mod sim;
+pub mod substrate;
 pub mod telemetry;
 
 pub use backend::PjrtBackend;
@@ -24,11 +25,15 @@ pub use config::{
     parse_tenant_file, Config, ExecutorKind, ManualStage, Mode, PartitionSpec, Workload,
 };
 pub use dispatcher::Dispatcher;
-pub use engine::{run_workloads, Completion, Engine, RunOutput, ServiceSpan};
+pub use engine::{
+    run_workloads, run_workloads_with_events, Completion, Engine, EventQueueKind, RunOutput,
+    ServiceSpan,
+};
 pub use executor::ThreadedExecutor;
 pub use pipeline::{build_plans, PipelinePlan, PipelinedDispatcher, StagePlan};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
 pub use server::{run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool};
 pub use sim::SimBackend;
+pub use substrate::SubstrateId;
 pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};

@@ -39,6 +39,7 @@ use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{
     decode_batch, prepare_batch, Backend, PoseEstimate, StageOutput,
 };
+use crate::coordinator::substrate::SubstrateId;
 use crate::coordinator::telemetry::{StageRecord, Telemetry};
 use crate::net::compiler::partition::{evaluate_partition, select_cut, Partition};
 use crate::net::graph::Graph;
@@ -164,8 +165,10 @@ impl MpaiPipeline {
 /// One stage of an executable pipeline plan.
 #[derive(Debug, Clone)]
 pub struct StagePlan {
-    /// Substrate name the pool binds a backend to ("dpu", "vpu", ...).
-    pub accel: String,
+    /// Interned substrate the pool binds a backend to ("dpu", "vpu", ...)
+    /// — a `Copy` key, so per-batch stage walks and span stamping never
+    /// clone a `String`.
+    pub accel: SubstrateId,
     /// First/last layer id of the stage (inclusive).
     pub layers: (usize, usize),
     /// Modeled per-batch stage service time on the simulated clock
@@ -206,7 +209,7 @@ impl PipelinePlan {
         let plan_stages = stages
             .iter()
             .map(|s| StagePlan {
-                accel: s.accel.clone(),
+                accel: SubstrateId::intern(&s.accel),
                 layers: (
                     *s.layers.first().expect("stage owns at least one layer"),
                     *s.layers.last().expect("stage owns at least one layer"),
@@ -224,8 +227,8 @@ impl PipelinePlan {
     }
 
     /// Substrates the plan engages, in stage order.
-    pub fn accels(&self) -> Vec<&str> {
-        self.stages.iter().map(|s| s.accel.as_str()).collect()
+    pub fn accels(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.accel.name()).collect()
     }
 }
 
@@ -401,7 +404,7 @@ struct StageSlot {
 /// unified [`Engine`] trait.
 pub struct PipelinedDispatcher {
     plans: Vec<PipelinePlan>,
-    slots: BTreeMap<String, StageSlot>,
+    slots: BTreeMap<SubstrateId, StageSlot>,
     batch: usize,
     net_h: usize,
     net_w: usize,
@@ -437,7 +440,7 @@ impl PipelinedDispatcher {
     /// Bind a backend to a substrate name referenced by the plans.
     pub fn add_stage_backend(&mut self, accel: &str, backend: Box<dyn Backend>) {
         self.slots.insert(
-            accel.to_string(),
+            SubstrateId::intern(accel),
             StageSlot {
                 backend,
                 free_until: Duration::ZERO,
@@ -462,7 +465,7 @@ impl PipelinedDispatcher {
                     bail!(
                         "plan {:?} references substrate {:?} with no backend bound",
                         p.label,
-                        s.accel
+                        s.accel.name()
                     );
                 }
             }
@@ -488,7 +491,7 @@ impl PipelinedDispatcher {
         let t_ready = batch.t_ready;
         self.clock.advance_to(t_ready);
 
-        let mut faulted: BTreeSet<String> = BTreeSet::new();
+        let mut faulted: BTreeSet<SubstrateId> = BTreeSet::new();
         let mut last_err: Option<anyhow::Error> = None;
         // Split the borrows: plans are read while slots/telemetry mutate.
         let Self {
@@ -524,7 +527,7 @@ impl PipelinedDispatcher {
                     }
                     Err(e) => {
                         slot.failures += 1;
-                        faulted.insert(st.accel.clone());
+                        faulted.insert(st.accel);
                         last_err = Some(e.context(format!(
                             "stage {k} ({}) of plan {:?} failed (failing over)",
                             st.accel, plan.label
@@ -558,7 +561,7 @@ impl PipelinedDispatcher {
                 slot.frames += batch.frames.len();
                 arrival = finish + transfer;
                 spans.push(ServiceSpan {
-                    substrate: st.accel.clone(),
+                    substrate: st.accel,
                     lead_in,
                     service,
                 });
@@ -602,14 +605,21 @@ impl PipelinedDispatcher {
             .values()
             .map(|s| s.free_until)
             .fold(self.clock.now(), Duration::max);
-        for (name, s) in &self.slots {
+        // Report in substrate-name order: slot iteration order is intern
+        // order (a process-wide accident of which code path interned a
+        // name first), while the pre-intern report always listed stages
+        // alphabetically.  Name resolution happens here, at report time —
+        // the dispatch path only ever carried the interned id.
+        let mut slots: Vec<_> = self.slots.iter().collect();
+        slots.sort_by_key(|(id, _)| id.name());
+        for (id, s) in slots {
             let occupancy = if window > Duration::ZERO {
                 s.busy.as_secs_f64() / window.as_secs_f64()
             } else {
                 0.0
             };
             self.telemetry.record_stage(StageRecord {
-                accel: name.clone(),
+                accel: id.name().to_string(),
                 mode: s.backend.mode().label(),
                 batches: s.batches,
                 frames: s.frames,
@@ -632,11 +642,11 @@ impl Engine for PipelinedDispatcher {
         let mode = if p.stages.len() > 1 {
             Mode::Mpai
         } else {
-            let accel = &p.stages[0].accel;
+            let accel = p.stages[0].accel;
             self.slots
-                .get(accel)
+                .get(&accel)
                 .map(|s| s.backend.mode())
-                .or_else(|| Mode::for_accel(accel))
+                .or_else(|| Mode::for_accel(accel.name()))
                 .unwrap_or(Mode::Mpai)
         };
         Ok(mode)
@@ -743,13 +753,13 @@ mod tests {
             label: "toy dpu|vpu".into(),
             stages: vec![
                 StagePlan {
-                    accel: "dpu".into(),
+                    accel: SubstrateId::intern("dpu"),
                     layers: (1, 10),
                     service: Duration::from_millis(10),
                     transfer: Duration::from_millis(1),
                 },
                 StagePlan {
-                    accel: "vpu".into(),
+                    accel: SubstrateId::intern("vpu"),
                     layers: (11, 17),
                     service: Duration::from_millis(4),
                     transfer: Duration::ZERO,
@@ -764,7 +774,7 @@ mod tests {
         PipelinePlan {
             label: "single vpu".into(),
             stages: vec![StagePlan {
-                accel: "vpu".into(),
+                accel: SubstrateId::intern("vpu"),
                 layers: (1, 17),
                 service: Duration::from_millis(20),
                 transfer: Duration::ZERO,
@@ -895,10 +905,10 @@ mod tests {
         // The replayable chain mirrors the plan: dpu 10 ms, then the 1 ms
         // hop leads into the vpu's 4 ms tail stage.
         assert_eq!(spans.len(), 2);
-        assert_eq!(spans[0].substrate, "dpu");
+        assert_eq!(spans[0].substrate.name(), "dpu");
         assert_eq!(spans[0].service, Duration::from_millis(10));
         assert_eq!(spans[0].lead_in, Duration::ZERO);
-        assert_eq!(spans[1].substrate, "vpu");
+        assert_eq!(spans[1].substrate.name(), "vpu");
         assert_eq!(spans[1].service, Duration::from_millis(4));
         assert_eq!(spans[1].lead_in, Duration::from_millis(1));
         let (est, t_done, _) = d.execute(&batch(&[2, 3], 0)).unwrap();
@@ -942,7 +952,7 @@ mod tests {
         assert_eq!(est.len(), 2);
         // The chain reflects the fallback plan, not the faulted primary.
         assert_eq!(spans.len(), 1);
-        assert_eq!(spans[0].substrate, "vpu");
+        assert_eq!(spans[0].substrate.name(), "vpu");
         d.finish();
         let dpu = d.telemetry.stages.iter().find(|s| s.accel == "dpu").unwrap();
         let vpu = d.telemetry.stages.iter().find(|s| s.accel == "vpu").unwrap();

@@ -40,7 +40,8 @@ pub trait Backend {
     /// The default maps the final stage onto whole-network [`Backend::infer`]
     /// and passes features through unchanged on earlier stages — correct
     /// for backends that only model accuracy (stage *timing* lives in the
-    /// pipeline plan, charged on the coordinator's simulated clock).
+    /// pipeline plan, charged on the coordinator's simulated clock).  The
+    /// passthrough `clone` is a shared-storage refcount bump, not a copy.
     fn infer_stage(
         &mut self,
         stage: usize,
@@ -172,7 +173,9 @@ pub fn prepare_batch(
         inputs.push(preprocess(&f.pixels, f.h, f.w, net_h, net_w));
         pre_times.push(t0.elapsed());
     }
-    // Pad to the artifact batch by repeating the last frame.
+    // Pad to the artifact batch by repeating the last frame (a
+    // shared-storage clone — no pixel copy until `stack` assembles the
+    // batched tensor).
     while inputs.len() < artifact_batch {
         inputs.push(inputs.last().unwrap().clone());
     }

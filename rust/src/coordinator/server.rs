@@ -220,7 +220,7 @@ fn build_pipeline_engine(
             } else {
                 bindings
                     .iter()
-                    .find(|(n, _)| n == &pl.stages[0].accel)
+                    .find(|(n, _)| n.as_str() == pl.stages[0].accel.name())
                     .map(|(_, m)| *m)
             };
             let p = mode.and_then(|m| profiles.get(&m))?;

@@ -217,6 +217,9 @@ impl Backend for SimBackend {
             let (loc, quat) = self.poses(features.shape[0], loce, orie)?;
             Ok(StageOutput::Poses(loc, quat))
         } else {
+            // Zero-copy passthrough: `Tensor::clone` bumps the shared
+            // storage refcount, so a non-final stage forwards features
+            // without a buffer copy (asserted below).
             Ok(StageOutput::Features(features.clone()))
         }
     }
@@ -302,9 +305,17 @@ mod tests {
         let ts = truths(2);
         b.observe_truths(&ts);
         let images = Tensor::zeros(vec![2, 6, 8, 3]);
-        // Stage 0 of 3: features pass through for the next engine.
+        // Stage 0 of 3: features pass through for the next engine —
+        // sharing the input's storage (ISSUE satellite: the Arc refactor
+        // makes the stage handoff a refcount bump, not a memcpy).
         match b.infer_stage(0, 3, &images).unwrap() {
-            StageOutput::Features(f) => assert_eq!(f.shape, images.shape),
+            StageOutput::Features(f) => {
+                assert_eq!(f.shape, images.shape);
+                assert!(
+                    f.shares_storage(&images),
+                    "stage passthrough must not copy the feature buffer"
+                );
+            }
             StageOutput::Poses(..) => panic!("non-final stage must emit features"),
         }
         // Final stage: poses carry the mode's error statistics.

@@ -1,0 +1,98 @@
+//! Interned substrate identifiers — the hot path's replacement for
+//! `String` substrate keys.
+//!
+//! Every layer that routes work to a substrate (the whole-frame
+//! [`Dispatcher`](crate::coordinator::dispatcher::Dispatcher), the
+//! [`PipelinedDispatcher`](crate::coordinator::pipeline::PipelinedDispatcher),
+//! the per-span replay in
+//! [`ThreadedExecutor`](crate::coordinator::executor::ThreadedExecutor))
+//! used to clone a `String` key per batch: one clone to stamp each
+//! [`ServiceSpan`](crate::coordinator::engine::ServiceSpan), another to
+//! charge the executor's per-substrate in-flight accounting.  Substrate
+//! names are a tiny closed set (mode labels plus accelerator names), so
+//! the serve loop now carries a [`SubstrateId`] — a `Copy` `u32` into a
+//! process-wide intern table — and telemetry resolves the human-readable
+//! name only when a report is built ([`SubstrateId::name`]).
+//!
+//! Interning happens at engine *construction* (backend/stage binding,
+//! plan building), never per batch; lookups on the dispatch path are
+//! integer map keys.  Interned names are leaked (`Box::leak`) so
+//! `name()` can hand out `&'static str` without holding the table lock —
+//! bounded by the number of distinct substrate names a process ever
+//! sees, which is a handful.
+
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+
+/// A process-wide interned substrate name ("dpu", "vpu-fp16", ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SubstrateId(u32);
+
+fn table() -> &'static Mutex<Vec<&'static str>> {
+    static TABLE: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+impl SubstrateId {
+    /// Intern `name`, returning its stable id.  Idempotent: the same name
+    /// always yields the same id for the lifetime of the process.  The
+    /// linear scan is fine — interning happens at engine construction,
+    /// not on the per-batch dispatch path.
+    pub fn intern(name: &str) -> SubstrateId {
+        let mut t = table().lock().expect("substrate intern table poisoned");
+        if let Some(i) = t.iter().position(|&n| n == name) {
+            return SubstrateId(i as u32);
+        }
+        t.push(Box::leak(name.to_string().into_boxed_str()));
+        SubstrateId((t.len() - 1) as u32)
+    }
+
+    /// Resolve the interned name (report-time only by convention).
+    pub fn name(self) -> &'static str {
+        table().lock().expect("substrate intern table poisoned")[self.0 as usize]
+    }
+}
+
+impl fmt::Display for SubstrateId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_names_resolve() {
+        let a = SubstrateId::intern("substrate-test-dpu");
+        let b = SubstrateId::intern("substrate-test-dpu");
+        let c = SubstrateId::intern("substrate-test-vpu");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.name(), "substrate-test-dpu");
+        assert_eq!(c.name(), "substrate-test-vpu");
+        assert_eq!(format!("{c}"), "substrate-test-vpu");
+    }
+
+    #[test]
+    fn ids_are_copy_and_ordered_for_map_keys() {
+        let a = SubstrateId::intern("substrate-test-a");
+        let copy = a; // Copy, not Clone — no allocation on the hot path
+        assert_eq!(a, copy);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(a, 1usize);
+        m.insert(SubstrateId::intern("substrate-test-b"), 2);
+        assert_eq!(m[&a], 1);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_interning_agrees() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| std::thread::spawn(|| SubstrateId::intern("substrate-test-race")))
+            .collect();
+        let ids: Vec<SubstrateId> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(ids.windows(2).all(|w| w[0] == w[1]), "{ids:?}");
+    }
+}

@@ -1,12 +1,25 @@
 //! Host tensor type bridging frames, features, and `xla::Literal`s.
+//!
+//! Storage is a shared `Arc<[f32]>` so `Tensor::clone` is a refcount
+//! bump, not a buffer copy: every stage handoff on the serve hot path
+//! (whole-frame `infer`, pipelined `infer_stage` feature forwarding,
+//! batch padding) forwards the same allocation.  Mutation goes through
+//! the copy-on-write [`Tensor::data_mut`] helper, which materializes a
+//! private buffer only when the storage is actually shared (an
+//! `Arc::make_mut` equivalent — the slice version of `Arc::make_mut`
+//! needs Rust 1.81, above this crate's 1.80 MSRV).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-/// A dense f32 tensor in row-major layout.
+/// A dense f32 tensor in row-major layout with shared storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    /// Shared storage: cloning a `Tensor` bumps a refcount.  Use
+    /// [`Tensor::data_mut`] to write (copy-on-write).
+    pub data: Arc<[f32]>,
 }
 
 impl Tensor {
@@ -15,19 +28,41 @@ impl Tensor {
         if numel != data.len() {
             bail!("shape {shape:?} needs {numel} elements, got {}", data.len());
         }
-        Ok(Tensor { shape, data })
+        Ok(Tensor {
+            shape,
+            data: data.into(),
+        })
     }
 
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let numel = shape.iter().product();
         Tensor {
             shape,
-            data: vec![0.0; numel],
+            data: vec![0.0; numel].into(),
         }
     }
 
     pub fn numel(&self) -> usize {
         self.data.len()
+    }
+
+    /// Mutable view of the storage, copy-on-write: a uniquely-owned
+    /// buffer is handed out as-is; shared storage is copied first so no
+    /// other `Tensor` observes the writes.  The serve path currently
+    /// builds tensors once and never mutates them in place — this is the
+    /// safety contract any future in-place mutator must go through now
+    /// that `clone` shares storage.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.data).is_none() {
+            self.data = Arc::from(&self.data[..]);
+        }
+        Arc::get_mut(&mut self.data).expect("storage uniquely owned after copy-on-write")
+    }
+
+    /// Whether two tensors share one storage allocation (zero-copy
+    /// handoff assertion — refcount bump, not memcpy).
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Convert to an `xla::Literal` of matching shape (PJRT builds only).
@@ -65,7 +100,10 @@ impl Tensor {
             }
             data.extend_from_slice(&s.data);
         }
-        Ok(Tensor { shape, data })
+        Ok(Tensor {
+            shape,
+            data: data.into(),
+        })
     }
 
     /// Split a batched tensor into per-sample tensors along axis 0.
@@ -76,7 +114,7 @@ impl Tensor {
         (0..n)
             .map(|i| Tensor {
                 shape: rest.clone(),
-                data: self.data[i * per..(i + 1) * per].to_vec(),
+                data: Arc::from(&self.data[i * per..(i + 1) * per]),
             })
             .collect()
     }
@@ -114,5 +152,50 @@ mod tests {
     fn row_access() {
         let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
         assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_refcount_bump() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = t.clone();
+        assert!(c.shares_storage(&t), "clone must share storage");
+        // Equality still compares contents, not identity.
+        let same = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(t, same);
+        assert!(!t.shares_storage(&same));
+    }
+
+    #[test]
+    fn row_indexes_into_the_shared_buffer() {
+        // ISSUE satellite: `row` on a clone reads the original allocation
+        // (same addresses, no private copy behind the access path).
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let c = t.clone();
+        assert!(std::ptr::eq(t.row(1).as_ptr(), c.row(1).as_ptr()));
+        assert_eq!(c.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn data_mut_copies_only_when_shared() {
+        let mut t = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        // Uniquely owned: writes happen in place (pointer is stable).
+        let before = t.data.as_ptr();
+        t.data_mut()[0] = 10.0;
+        assert!(std::ptr::eq(before, t.data.as_ptr()));
+
+        // Shared: the writer detaches, the reader's view is untouched.
+        let reader = t.clone();
+        t.data_mut()[1] = 20.0;
+        assert!(!t.shares_storage(&reader), "writer must detach");
+        assert_eq!(&reader.data[..], &[10.0, 2.0, 3.0]);
+        assert_eq!(&t.data[..], &[10.0, 20.0, 3.0]);
+    }
+
+    #[test]
+    fn unstack_detaches_samples() {
+        let s = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let parts = s.unstack();
+        assert!(!parts[0].shares_storage(&s));
+        assert_eq!(&parts[1].data[..], &[3.0, 4.0]);
     }
 }

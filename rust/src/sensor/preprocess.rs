@@ -50,7 +50,7 @@ pub fn preprocess(frame: &[u8], h: usize, w: usize, out_h: usize, out_w: usize) 
     }
     Tensor {
         shape: vec![out_h, out_w, 3],
-        data,
+        data: data.into(),
     }
 }
 
@@ -63,7 +63,7 @@ mod tests {
     fn constant_image_invariant() {
         let frame = vec![128u8; 24 * 32 * 3];
         let t = preprocess(&frame, 24, 32, 6, 8);
-        for &v in &t.data {
+        for &v in t.data.iter() {
             assert!((v - 128.0 / 255.0).abs() < 1e-6);
         }
     }
@@ -112,7 +112,7 @@ mod tests {
                 .map(|_| ctx.rng.below(256) as u8)
                 .collect();
             let t = preprocess(&frame, h, w, 6, 8);
-            for &v in &t.data {
+            for &v in t.data.iter() {
                 crate::prop_assert!((0.0..=1.0).contains(&v), "out of range {v}");
             }
             Ok(())

@@ -138,13 +138,13 @@ fn threaded_mpai_pipeline_matches_sequential() {
 
     assert_eq!((id0, id1), (0, 1));
     assert_eq!(loc0.shape, loc_ref.shape);
-    for (a, b) in loc0.data.iter().zip(&loc_ref.data) {
+    for (a, b) in loc0.data.iter().zip(loc_ref.data.iter()) {
         assert!((a - b).abs() < 1e-4, "pipelined loc diverges: {a} vs {b}");
     }
-    for (a, b) in quat0.data.iter().zip(&quat_ref.data) {
+    for (a, b) in quat0.data.iter().zip(quat_ref.data.iter()) {
         assert!((a - b).abs() < 1e-4, "pipelined quat diverges");
     }
-    for (a, b) in loc1.data.iter().zip(&loc0.data) {
+    for (a, b) in loc1.data.iter().zip(loc0.data.iter()) {
         assert!((a - b).abs() < 1e-6, "same input must give same output");
     }
 }
