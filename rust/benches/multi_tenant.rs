@@ -80,7 +80,7 @@ fn report(label: &str, out: &RunOutput) {
         println!(
             "  {:<4} ({:<10}) admitted {:>4}  completed {:>4}  shed {:>4}  \
              misses {:>3}  lat p50 {:>7.0} ms  p99 {:>7.0} ms",
-            t.name,
+            t.name(),
             t.qos,
             t.admitted,
             t.completed,

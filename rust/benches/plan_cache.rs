@@ -1,0 +1,164 @@
+//! Bench AB-PC: content-addressed plan-cache ablation — repeated-config
+//! tenant admission resolving partition plans through `plan_or_build_in`
+//! vs a fresh `select_cut` sweep per request (`build_plans`).
+//!
+//! 64 tenants cycle over 4 distinct (link, constraints) configurations,
+//! the shape multi-tenant serve produces when fleets share a handful of
+//! deployment templates.  The cached arm takes 4 misses + 60 hits; the
+//! fresh arm sweeps every topological cut 64 times.
+//!
+//! Gates (the ISSUE acceptance criteria):
+//!
+//! * amortized cached resolution is ≥ 10x faster than the fresh sweep;
+//! * every cache hit returns plans bit-identical to a fresh sweep for
+//!   the same request (labels, steady FPS bit patterns, stage layout).
+//!
+//! `MPAI_BENCH_SMOKE=1` shortens the measurement loop (CI smoke mode).
+
+use std::time::Instant;
+
+use mpai::accel::interconnect::links;
+use mpai::accel::Link;
+use mpai::coordinator::{
+    build_plans, plan_or_build_in, Constraints, PartitionSpec, PipelinePlan, PlanCache,
+};
+use mpai::net::compiler::compile;
+use mpai::net::models::ursonet;
+use mpai::net::Graph;
+use mpai::util::benchio;
+
+const TENANTS: usize = 64;
+
+/// The distinct deployment templates the 64 tenants cycle over.
+fn templates() -> Vec<(Link, Constraints)> {
+    vec![
+        (links::USB3, Constraints::default()),
+        (
+            links::AXI_HP,
+            Constraints {
+                max_total_ms: Some(250.0),
+                ..Constraints::default()
+            },
+        ),
+        (
+            links::PCIE_X1,
+            Constraints {
+                max_energy_j: Some(50.0),
+                ..Constraints::default()
+            },
+        ),
+        (
+            links::USB2,
+            Constraints {
+                max_total_ms: Some(400.0),
+                max_energy_j: Some(80.0),
+                ..Constraints::default()
+            },
+        ),
+    ]
+}
+
+fn fresh(graph: &Graph, names: &[String], link: &Link, c: &Constraints) -> Vec<PipelinePlan> {
+    build_plans(graph, names, link, c, 4, &PartitionSpec::Auto).expect("feasible fresh plans")
+}
+
+fn fingerprint(plans: &[PipelinePlan]) -> Vec<(String, u64, usize)> {
+    plans
+        .iter()
+        .map(|p| (p.label.clone(), p.steady_fps.to_bits(), p.stages.len()))
+        .collect()
+}
+
+fn main() {
+    println!("=== AB-PC: plan-cache ablation (64 repeated-config tenants) ===\n");
+    let smoke = std::env::var("MPAI_BENCH_SMOKE").is_ok();
+    let rounds: usize = if smoke { 2 } else { 8 };
+
+    let graph = compile(&ursonet::build_full());
+    let names: Vec<String> = vec!["dpu".into(), "vpu".into()];
+    let templates = templates();
+
+    // ---- Decision identity --------------------------------------------------
+    // Every template: miss-fill plus a hit, both bit-identical to a fresh
+    // sweep (the property test in coordinator::pipeline covers randomized
+    // draws; this is the paper-scale UrsoNet instance).
+    let mut cache = PlanCache::new(16);
+    for (link, c) in &templates {
+        let reference = fingerprint(&fresh(&graph, &names, link, c));
+        for _ in 0..2 {
+            let got = plan_or_build_in(&mut cache, &graph, &names, link, c, 4, &PartitionSpec::Auto, &[])
+                .expect("feasible cached plans");
+            assert_eq!(fingerprint(&got), reference, "cached plans diverged from fresh sweep");
+        }
+    }
+    let warm = cache.stats();
+    assert_eq!(
+        (warm.misses, warm.hits),
+        (templates.len() as u64, templates.len() as u64),
+        "unexpected warm-up cache profile: {warm:?}"
+    );
+
+    // ---- Timed arms ---------------------------------------------------------
+    // Both arms resolve the identical 64-tenant request sequence; the
+    // cached arm starts cold each round (misses included in its time).
+    let mut fresh_s = 0.0f64;
+    let mut cached_s = 0.0f64;
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for _ in 0..rounds {
+        let t0 = Instant::now();
+        for i in 0..TENANTS {
+            let (link, c) = &templates[i % templates.len()];
+            std::hint::black_box(fresh(&graph, &names, link, c));
+        }
+        fresh_s += t0.elapsed().as_secs_f64();
+
+        let mut cache = PlanCache::new(16);
+        let t1 = Instant::now();
+        for i in 0..TENANTS {
+            let (link, c) = &templates[i % templates.len()];
+            let plans =
+                plan_or_build_in(&mut cache, &graph, &names, link, c, 4, &PartitionSpec::Auto, &[])
+                    .expect("feasible cached plans");
+            std::hint::black_box(plans);
+        }
+        cached_s += t1.elapsed().as_secs_f64();
+        let s = cache.stats();
+        hits += s.hits;
+        misses += s.misses;
+    }
+
+    let requests = (rounds * TENANTS) as f64;
+    let fresh_ms = fresh_s / requests * 1e3;
+    let cached_ms = cached_s / requests * 1e3;
+    let speedup = fresh_s / cached_s;
+    println!("fresh sweep   : {fresh_ms:>9.4} ms/request  ({requests:.0} requests)");
+    println!(
+        "cached        : {cached_ms:>9.4} ms/request  ({hits} hits / {misses} misses across rounds)"
+    );
+    println!("amortized speedup: {speedup:.1}x");
+
+    // ---- Gates --------------------------------------------------------------
+    assert_eq!(
+        misses,
+        (rounds * templates.len()) as u64,
+        "each round must miss exactly once per template"
+    );
+    assert_eq!(hits + misses, rounds as u64 * TENANTS as u64, "lost requests");
+    assert!(
+        speedup >= 10.0,
+        "cached resolution must be ≥10x faster amortized over {TENANTS} \
+         repeated-config tenants, got {speedup:.1}x"
+    );
+
+    benchio::emit(
+        "plan_cache",
+        &[
+            ("cached_speedup", speedup),
+            ("fresh_sweep_ms", fresh_ms),
+            ("cached_lookup_ms", cached_ms),
+        ],
+    );
+
+    println!("\nplan-cache gates held: decisions bit-identical, ≥10x amortized speedup.");
+}

@@ -152,7 +152,7 @@ fn assert_equivalent(label: &str, new: &RunOutput, old: &RunOutput) {
             (a.admitted, a.completed, a.shed, a.deadline_misses),
             (b.admitted, b.completed, b.shed, b.deadline_misses),
             "{label}: tenant {} accounting diverged",
-            a.name
+            a.name()
         );
     }
     let new_ids: Vec<u64> = new.estimates.iter().map(|e| e.frame_id).collect();

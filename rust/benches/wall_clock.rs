@@ -204,14 +204,14 @@ fn main() {
         println!(
             "tenant {:<4} sim (admitted {}, completed {}, shed {}, misses {}) == threaded \
              (admitted {}, completed {}, shed {}, misses {})",
-            s.name, s.admitted, s.completed, s.shed, s.deadline_misses,
+            s.name(), s.admitted, s.completed, s.shed, s.deadline_misses,
             t.admitted, t.completed, t.shed, t.deadline_misses,
         );
         assert_eq!(
             (s.admitted, s.completed, s.shed, s.deadline_misses),
             (t.admitted, t.completed, t.shed, t.deadline_misses),
             "tenant {} accounting diverged across executors",
-            s.name
+            s.name()
         );
     }
     assert_eq!(

@@ -379,6 +379,11 @@ pub struct Config {
     /// Partition-aware pipelined serving: split the network across the
     /// pool's substrates per this spec (None = whole-frame dispatch).
     pub partition: Option<PartitionSpec>,
+    /// Resolve partition plans through the process-wide content-addressed
+    /// plan cache (`coordinator::plan_cache`).  On by default; disable
+    /// (`--no-plan-cache`) to force a fresh `select_cut` sweep per
+    /// request — decisions are bit-identical either way.
+    pub plan_cache: bool,
     /// Link carrying cross-stage boundary tensors.
     pub boundary_link: Link,
     /// Multi-tenant serving: N workloads sharing the substrate pool under
@@ -405,6 +410,7 @@ impl Default for Config {
             fail_every: None,
             constraints: Constraints::default(),
             partition: None,
+            plan_cache: true,
             boundary_link: links::USB3,
             workloads: Vec::new(),
             executor: ExecutorKind::Sim,

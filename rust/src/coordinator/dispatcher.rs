@@ -22,6 +22,10 @@
 //! Time is the coordinator's simulated clock (frame capture timestamps), so
 //! routing decisions are reproducible; host wall-clock is still measured
 //! and reported per frame, exactly as in the single-backend path.
+//!
+//! Whole-frame dispatch involves no partition sweep, so it never consults
+//! the content-addressed plan cache ([`super::pipeline::plan_or_build`]); runs that
+//! go through this dispatcher report `Telemetry::plan_cache = None`.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

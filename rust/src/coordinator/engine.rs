@@ -54,9 +54,11 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::clock::Clock;
 use crate::coordinator::config::{Config, Mode, Workload};
+use crate::coordinator::pipeline::plan_or_build;
+use crate::coordinator::plan_cache;
 use crate::coordinator::policy::QosClass;
 use crate::coordinator::scheduler::PoseEstimate;
-use crate::coordinator::substrate::SubstrateId;
+use crate::coordinator::substrate::{SubstrateId, TenantId};
 use crate::coordinator::telemetry::{Telemetry, TenantRecord};
 use crate::net::models;
 use crate::pose::EvalSet;
@@ -167,10 +169,17 @@ pub enum EventQueueKind {
 /// One tenant's live serving state inside [`run_workloads`].
 struct Tenant {
     w: Workload,
+    /// Interned tenant identity — the `Copy` key every record that
+    /// outlives the loop carries (names resolve at report time).
+    id: TenantId,
     batcher: Batcher,
     camera: Camera,
     /// Next not-yet-admitted frame (peek buffer over the camera).
     pending: Option<Frame>,
+    /// Primary pipeline plan this tenant's (net, constraints) resolve to
+    /// through the plan cache (report annotation only; `None` for
+    /// whole-frame runs or a disabled cache).
+    plan: Option<String>,
     id_base: u64,
     emitted: u64,
     shed: u64,
@@ -413,6 +422,32 @@ impl ReadyQueue {
     }
 }
 
+/// Accelerator substrate names behind the run's pool, deduplicated in
+/// pool order (order is content for plan keying).  `Mpai` expands to its
+/// DPU backbone + VPU head substrates; an empty pool falls back to the
+/// single configured mode.
+fn pool_accel_names(config: &Config) -> Vec<String> {
+    let modes: Vec<Mode> = if config.pool.is_empty() {
+        config.mode.into_iter().collect()
+    } else {
+        config.pool.clone()
+    };
+    let mut names: Vec<String> = Vec::new();
+    for m in modes {
+        let accels: Vec<&str> = match m.accel_name() {
+            Some(n) => vec![n],
+            // The MPAI composite engages the DPU backbone + VPU heads.
+            None => vec!["dpu", "vpu"],
+        };
+        for a in accels {
+            if !names.iter().any(|n| n == a) {
+                names.push(a.to_string());
+            }
+        }
+    }
+    names
+}
+
 fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
     let oldest = batch
         .frames
@@ -508,19 +543,42 @@ pub fn run_workloads_with_events(
     // Service-cost ratio: the tenant's network complexity relative to the
     // calibrated (paper-scale UrsoNet) network the mode profiles model.
     let base_macs = crate::net::models::ursonet::build_full().total_macs() as f64;
+    // Partitioned runs annotate each tenant with the primary plan its
+    // (net, constraints) resolve to.  The resolution goes through the
+    // content-addressed plan cache, so a fleet cycling a fixed set of
+    // configurations pays one `select_cut` sweep per distinct key; the
+    // per-run hit/miss delta lands on the telemetry below.
+    let cache_before = plan_cache::global_stats();
+    let pool_names = config.partition.as_ref().map(|_| pool_accel_names(config));
     let mut tenants: Vec<Tenant> = Vec::with_capacity(workloads.len());
     for (k, w) in workloads.iter().enumerate() {
         let net = models::by_name(&w.net).with_context(|| {
             format!("workload {:?}: unknown network {:?}", w.name, w.net)
         })?;
         let cost = (net.total_macs() as f64 / base_macs).max(0.01);
+        let plan = match (&config.partition, &pool_names) {
+            (Some(spec), Some(names)) if config.plan_cache => plan_or_build(
+                &crate::net::compiler::compile(&net),
+                names,
+                &config.boundary_link,
+                &w.constraints,
+                size,
+                spec,
+                &[],
+            )
+            .ok()
+            .and_then(|plans| plans.first().map(|p| p.label.clone())),
+            _ => None,
+        };
         let mut t = Tenant {
+            id: TenantId::intern(&w.name),
             batcher: Batcher::new(size, config.batch_timeout)
                 .with_cost(cost)
                 .with_tenant(k)
                 .with_constraints(w.constraints),
             camera: Camera::new(eval.clone(), w.rate_fps, w.frames),
             pending: None,
+            plan,
             id_base: (k as u64) << TENANT_ID_SHIFT,
             emitted: 0,
             shed: 0,
@@ -605,11 +663,22 @@ pub fn run_workloads_with_events(
     if let Some(d) = clock.wall_elapsed() {
         telemetry.measured_elapsed_s = Some(d.as_secs_f64());
     }
+    // Merge the admission layer's plan-cache activity with whatever the
+    // engine itself recorded (the pipelined serve builder stamps its own
+    // delta when it resolves plans through the cache).
+    if config.plan_cache && config.partition.is_some() {
+        let delta = plan_cache::global_stats().since(&cache_before);
+        telemetry.plan_cache = Some(match telemetry.plan_cache {
+            Some(existing) => existing.merged(&delta),
+            None => delta,
+        });
+    }
     for t in tenants {
         telemetry.record_tenant(TenantRecord {
-            name: t.w.name.clone(),
+            id: t.id,
             qos: t.w.qos.label(),
             net: t.w.net.clone(),
+            plan: t.plan,
             deadline: t.w.deadline,
             admitted: t.emitted - t.shed,
             completed: t.completed,
@@ -825,9 +894,9 @@ mod tests {
                 (a.admitted, a.completed, a.shed, a.deadline_misses),
                 (b.admitted, b.completed, b.shed, b.deadline_misses),
                 "tenant {} accounting diverged",
-                a.name
+                a.name()
             );
-            assert_eq!(a.latencies_s, b.latencies_s, "tenant {} latencies", a.name);
+            assert_eq!(a.latencies_s, b.latencies_s, "tenant {} latencies", a.name());
         }
     }
 

@@ -11,6 +11,7 @@ pub mod dispatcher;
 pub mod engine;
 pub mod executor;
 pub mod pipeline;
+pub mod plan_cache;
 pub mod policy;
 pub mod scheduler;
 pub mod server;
@@ -30,10 +31,13 @@ pub use engine::{
     ServiceSpan,
 };
 pub use executor::ThreadedExecutor;
-pub use pipeline::{build_plans, PipelinePlan, PipelinedDispatcher, StagePlan};
+pub use pipeline::{
+    build_plans, plan_or_build, plan_or_build_in, PipelinePlan, PipelinedDispatcher, StagePlan,
+};
+pub use plan_cache::{CacheKey, PlanCache, PlanCacheStats};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
 pub use server::{run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool};
 pub use sim::SimBackend;
-pub use substrate::SubstrateId;
+pub use substrate::{SubstrateId, TenantId};
 pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};

@@ -35,6 +35,7 @@ use crate::coordinator::batcher::Batch;
 use crate::coordinator::clock::SimClock;
 use crate::coordinator::config::{ManualStage, Mode, PartitionSpec};
 use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
+use crate::coordinator::plan_cache::{self, CacheKey, PlanCache};
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{
     decode_batch, prepare_batch, Backend, PoseEstimate, StageOutput,
@@ -381,6 +382,73 @@ pub fn build_plans(
     Ok(plans)
 }
 
+/// Cache-aware front door over [`build_plans`]: resolve the request
+/// against `cache` by content address and only sweep on a miss.  A hit
+/// returns a clone of the cached ranked list — **bit-identical** to a
+/// fresh sweep (same labels, stages, substrates, modeled times; property-
+/// tested below) — so callers post-process hits and misses identically.
+/// Build errors are never cached: a failing request re-evaluates every
+/// time (constraints may be relaxed between calls against mutable state
+/// like link tables in future revisions, and a cached error would mask
+/// the real message).
+///
+/// `pool_profiles` folds the caller's serving-numerics table into the
+/// [`CacheKey`] (pass `&[]` when no profile post-processing follows).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_or_build_in(
+    cache: &mut PlanCache,
+    graph: &Graph,
+    accel_names: &[String],
+    link: &Link,
+    constraints: &Constraints,
+    artifact_batch: usize,
+    spec: &PartitionSpec,
+    pool_profiles: &[ModeProfile],
+) -> Result<Vec<PipelinePlan>> {
+    let key = CacheKey::for_request(
+        graph,
+        accel_names,
+        link,
+        constraints,
+        artifact_batch,
+        spec,
+        pool_profiles,
+    );
+    if let Some(plans) = cache.lookup(&key) {
+        return Ok(plans);
+    }
+    let plans = build_plans(graph, accel_names, link, constraints, artifact_batch, spec)?;
+    cache.insert(key, plans.clone());
+    Ok(plans)
+}
+
+/// [`plan_or_build_in`] against the process-wide cache — the entry point
+/// the serve pumps use, so repeated configurations (daemon mode, tenant
+/// fleets cycling a fixed set of networks) amortize the sweep to an O(1)
+/// lookup.
+pub fn plan_or_build(
+    graph: &Graph,
+    accel_names: &[String],
+    link: &Link,
+    constraints: &Constraints,
+    artifact_batch: usize,
+    spec: &PartitionSpec,
+    pool_profiles: &[ModeProfile],
+) -> Result<Vec<PipelinePlan>> {
+    plan_cache::with_global(|cache| {
+        plan_or_build_in(
+            cache,
+            graph,
+            accel_names,
+            link,
+            constraints,
+            artifact_batch,
+            spec,
+            pool_profiles,
+        )
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Pipelined dispatcher
 // ---------------------------------------------------------------------------
@@ -435,6 +503,33 @@ impl PipelinedDispatcher {
             completed: Vec::new(),
             telemetry: Telemetry::new(),
         })
+    }
+
+    /// Build a dispatcher straight from a partition request, resolving
+    /// the ranked plan list through the content-addressed cache
+    /// ([`plan_or_build`]) — the daemon-mode path where repeated
+    /// configurations skip the sweep entirely.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_spec(
+        graph: &Graph,
+        accel_names: &[String],
+        link: &Link,
+        constraints: &Constraints,
+        artifact_batch: usize,
+        net_h: usize,
+        net_w: usize,
+        spec: &PartitionSpec,
+    ) -> Result<PipelinedDispatcher> {
+        let plans = plan_or_build(
+            graph,
+            accel_names,
+            link,
+            constraints,
+            artifact_batch,
+            spec,
+            &[],
+        )?;
+        PipelinedDispatcher::new(plans, artifact_batch, net_h, net_w)
     }
 
     /// Bind a backend to a substrate name referenced by the plans.
@@ -1034,6 +1129,182 @@ mod tests {
         d.drain().unwrap();
         let t = d.take_telemetry();
         assert_eq!(t.stages.len(), 2);
+    }
+
+    #[test]
+    fn plan_or_build_in_hits_after_first_miss_and_isolates_copies() {
+        let g = compile(&ursonet::build_lite());
+        let names = vec!["dpu".to_string(), "vpu".to_string()];
+        let mut cache = PlanCache::new(8);
+        let build = |cache: &mut PlanCache| {
+            plan_or_build_in(
+                cache,
+                &g,
+                &names,
+                &crate::accel::links::USB3,
+                &Constraints::default(),
+                4,
+                &PartitionSpec::Auto,
+                &[],
+            )
+            .unwrap()
+        };
+        let fresh = build(&mut cache);
+        let mut hit = build(&mut cache);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(fresh.len(), hit.len());
+        // Post-processing a hit (the serve builder stamps profiles) must
+        // not leak into the cached canonical copy.
+        hit[0].serving_profile = Some(profile(Mode::Mpai, 0.5));
+        let again = build(&mut cache);
+        assert!(again[0].serving_profile.is_none(), "cache copy aliased");
+
+        // A failing request is never cached: same error both times, no
+        // entry growth.
+        let entries_before = cache.stats().entries;
+        for _ in 0..2 {
+            let err = plan_or_build_in(
+                &mut cache,
+                &g,
+                &names,
+                &crate::accel::links::USB3,
+                &Constraints {
+                    max_total_ms: Some(1e-9),
+                    ..Default::default()
+                },
+                4,
+                &PartitionSpec::Auto,
+                &[],
+            )
+            .unwrap_err();
+            assert!(format!("{err:#}").contains("no feasible"), "{err:#}");
+        }
+        assert_eq!(cache.stats().entries, entries_before);
+    }
+
+    /// Two plan lists are bit-identical: same ranking, labels, stage
+    /// bindings, modeled times (exact `Duration`s), and modeled
+    /// throughput (exact f64 bits).
+    fn assert_plans_identical(a: &[PipelinePlan], b: &[PipelinePlan]) -> Result<(), String> {
+        crate::prop_assert!(a.len() == b.len(), "plan count {} != {}", a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            crate::prop_assert!(x.label == y.label, "label {:?} != {:?}", x.label, y.label);
+            crate::prop_assert!(
+                x.steady_fps.to_bits() == y.steady_fps.to_bits(),
+                "{}: fps {} != {}",
+                x.label,
+                x.steady_fps,
+                y.steady_fps
+            );
+            crate::prop_assert!(
+                x.stages.len() == y.stages.len(),
+                "{}: stage count diverged",
+                x.label
+            );
+            for (s, t) in x.stages.iter().zip(&y.stages) {
+                crate::prop_assert!(
+                    s.accel == t.accel
+                        && s.layers == t.layers
+                        && s.service == t.service
+                        && s.transfer == t.transfer,
+                    "{}: stage diverged ({s:?} vs {t:?})",
+                    x.label
+                );
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn property_cache_hit_plans_bit_identical_to_fresh_sweep() {
+        // THE tentpole acceptance: across randomized (net, constraints,
+        // pool, link) draws, a cache hit returns exactly what a fresh
+        // `build_plans` sweep computes — same ranked labels, same stage
+        // substrates and layer spans, same modeled service/transfer
+        // durations, same steady-state throughput to the bit.
+        let nets = ["ursonet_lite", "ursonet_full", "mobilenet_v2", "resnet50"];
+        let pools: [&[&str]; 4] = [
+            &["dpu", "vpu"],
+            &["vpu", "dpu"],
+            &["dpu", "vpu", "tpu"],
+            &["tpu", "vpu"],
+        ];
+        let links = [
+            crate::accel::links::USB3,
+            crate::accel::links::AXI_HP,
+            crate::accel::links::USB2,
+            crate::accel::links::PCIE_X1,
+        ];
+        check(
+            "plan_cache_bit_identity",
+            PropConfig {
+                cases: 24,
+                ..Default::default()
+            },
+            move |ctx| {
+                let g = compile(
+                    &crate::net::models::by_name(nets[ctx.rng.below(nets.len())])
+                        .expect("zoo net"),
+                );
+                let pool: Vec<String> = pools[ctx.rng.below(pools.len())]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                let link = links[ctx.rng.below(links.len())];
+                let constraints = Constraints {
+                    max_total_ms: if ctx.rng.bool(0.3) {
+                        Some(5.0 + ctx.rng.f64() * 500.0)
+                    } else {
+                        None
+                    },
+                    max_energy_j: if ctx.rng.bool(0.3) {
+                        Some(0.5 + ctx.rng.f64() * 10.0)
+                    } else {
+                        None
+                    },
+                    ..Default::default()
+                };
+                let batch = 1 + ctx.rng.below(8);
+
+                let fresh = build_plans(&g, &pool, &link, &constraints, batch, &PartitionSpec::Auto);
+                let mut cache = PlanCache::new(4);
+                let mut cached = |cache: &mut PlanCache| {
+                    plan_or_build_in(
+                        cache,
+                        &g,
+                        &pool,
+                        &link,
+                        &constraints,
+                        batch,
+                        &PartitionSpec::Auto,
+                        &[],
+                    )
+                };
+                match fresh {
+                    Err(e) => {
+                        // Infeasible draws fail identically through the
+                        // cache-aware path (errors are not cached).
+                        crate::prop_assert!(
+                            cached(&mut cache).is_err(),
+                            "fresh failed ({e:#}) but cached path succeeded"
+                        );
+                    }
+                    Ok(fresh) => {
+                        let miss = cached(&mut cache).map_err(|e| format!("{e:#}"))?;
+                        let hit = cached(&mut cache).map_err(|e| format!("{e:#}"))?;
+                        let s = cache.stats();
+                        crate::prop_assert!(
+                            (s.hits, s.misses) == (1, 1),
+                            "expected 1 hit / 1 miss, got {s:?}"
+                        );
+                        assert_plans_identical(&fresh, &miss)?;
+                        assert_plans_identical(&fresh, &hit)?;
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! Content-addressed plan cache: O(cuts) partition sweeps memoized into
+//! O(1) lookups (DESIGN.md §4.10).
+//!
+//! At serving scale tenants overwhelmingly repeat a handful of
+//! configurations — the paper's evaluation cycles a fixed set of networks
+//! over a fixed DPU/VPU/TPU pool — yet `build_plans` re-derives the full
+//! ranked plan list (an O(cuts) [`select_cut`] sweep per ordered substrate
+//! pair) for every request.  This module keys that work by a [`CacheKey`]:
+//! a SHA-256 over *canonical digests* of every input that can change the
+//! output — the net graph, the [`Constraints`], the substrate pool (names
+//! + [`ModeProfile`] numerics), the boundary [`Link`], the artifact batch,
+//! and the [`PartitionSpec`].  Identical content ⇒ identical key ⇒ the
+//! cached ranked plan list, cloned out so post-processing (the serve
+//! builder's accuracy filter) mutates a private copy.  A cache hit is
+//! **bit-identical** to a fresh sweep (property-tested in
+//! `coordinator::pipeline`).
+//!
+//! Floats are digested by their IEEE-754 bit pattern, never a decimal
+//! rendering, so keys are exact and platform-stable.  Eviction is FIFO
+//! with a fixed entry capacity; hit/miss/evict counters surface through
+//! [`Telemetry`](crate::coordinator::telemetry::Telemetry) and the serve
+//! report.
+//!
+//! [`select_cut`]: crate::net::compiler::partition::select_cut
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Mutex, OnceLock};
+
+use crate::accel::interconnect::Link;
+use crate::coordinator::config::PartitionSpec;
+use crate::coordinator::pipeline::PipelinePlan;
+use crate::coordinator::policy::{Constraints, ModeProfile};
+use crate::net::graph::Graph;
+use crate::util::hash::{sha256_hex, Sha256};
+
+/// Entries the process-wide cache holds before FIFO eviction.  Plan lists
+/// are small (a handful of plans, each a few stages), so the bound is
+/// about keeping the daemon-mode footprint predictable, not memory
+/// pressure.
+pub const DEFAULT_CAPACITY: usize = 64;
+
+/// Content address of one `build_plans` request: SHA-256 over the
+/// canonical digests of its inputs.  Equal content yields equal keys
+/// across processes and sessions (no pointer identity, no intern-order
+/// dependence — substrates are digested by *name*).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(String);
+
+impl CacheKey {
+    /// Derive the key for a plan request.  `pool_profiles` carries the
+    /// serving numerics the caller will attach to the plans (empty when
+    /// the caller does no profile-based post-processing) — folding them
+    /// in over-keys conservatively: a profile change can never serve a
+    /// stale plan list.
+    pub fn for_request(
+        graph: &Graph,
+        accel_names: &[String],
+        link: &Link,
+        constraints: &Constraints,
+        artifact_batch: usize,
+        spec: &PartitionSpec,
+        pool_profiles: &[ModeProfile],
+    ) -> CacheKey {
+        let mut h = Sha256::new();
+        for part in [
+            graph_digest(graph),
+            constraints_digest(constraints),
+            pool_digest(accel_names, pool_profiles),
+            link_digest(link),
+            spec_digest(spec),
+            format!("batch:{artifact_batch}"),
+        ] {
+            h.update(part.as_bytes());
+            h.update(b"\n");
+        }
+        CacheKey(crate::util::hash::to_hex(&h.finish()))
+    }
+
+    /// Full 64-hex-char digest.
+    pub fn hex(&self) -> &str {
+        &self.0
+    }
+
+    /// Leading 12 hex chars — the display form used in reports and logs.
+    pub fn short(&self) -> &str {
+        &self.0[..12]
+    }
+}
+
+impl std::fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// Exact, canonical rendering of a float for digesting: the IEEE-754 bit
+/// pattern (decimal renderings round; bits never do).
+fn fbits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn opt_fbits(v: Option<f64>) -> String {
+    match v {
+        None => "-".to_string(),
+        Some(x) => fbits(x),
+    }
+}
+
+/// Canonical digest of the net graph: name + every layer's name, op
+/// (derived `Debug` of [`Op`](crate::net::layers::Op) is deterministic
+/// and covers every field), wiring, and output shape.
+pub fn graph_digest(graph: &Graph) -> String {
+    let mut h = Sha256::new();
+    h.update(b"graph\x1f");
+    h.update(graph.name.as_bytes());
+    for l in &graph.layers {
+        h.update(b"\x1e");
+        h.update(l.name.as_bytes());
+        h.update(b"\x1f");
+        h.update(format!("{:?}", l.op).as_bytes());
+        h.update(b"\x1f");
+        h.update(format!("{:?}", l.inputs).as_bytes());
+        h.update(b"\x1f");
+        h.update(format!("{}x{}x{}", l.out.h, l.out.w, l.out.c).as_bytes());
+    }
+    crate::util::hash::to_hex(&h.finish())
+}
+
+/// Canonical digest of a constraint set (bit-exact bounds).
+pub fn constraints_digest(c: &Constraints) -> String {
+    sha256_hex(
+        format!(
+            "constraints\x1f{}\x1f{}\x1f{}\x1f{}",
+            opt_fbits(c.max_total_ms),
+            opt_fbits(c.max_loce_m),
+            opt_fbits(c.max_orie_deg),
+            opt_fbits(c.max_energy_j),
+        )
+        .as_bytes(),
+    )
+}
+
+/// Canonical digest of the substrate pool: names in request order (order
+/// shapes `build_plans`' candidate enumeration, so it is part of the
+/// content) plus the serving-numerics profiles the caller will attach.
+pub fn pool_digest(accel_names: &[String], profiles: &[ModeProfile]) -> String {
+    let mut h = Sha256::new();
+    h.update(b"pool");
+    for n in accel_names {
+        h.update(b"\x1e");
+        h.update(n.as_bytes());
+    }
+    for p in profiles {
+        h.update(b"\x1e");
+        h.update(p.mode.label().as_bytes());
+        for v in [p.inference_ms, p.total_ms, p.loce_m, p.orie_deg, p.energy_j] {
+            h.update(b"\x1f");
+            h.update(fbits(v).as_bytes());
+        }
+    }
+    crate::util::hash::to_hex(&h.finish())
+}
+
+/// Canonical digest of the boundary link model.
+pub fn link_digest(link: &Link) -> String {
+    sha256_hex(
+        format!(
+            "link\x1f{}\x1f{}\x1f{}",
+            link.name,
+            fbits(link.bandwidth_bps),
+            fbits(link.latency_s)
+        )
+        .as_bytes(),
+    )
+}
+
+fn spec_digest(spec: &PartitionSpec) -> String {
+    let body = match spec {
+        PartitionSpec::Auto => "auto".to_string(),
+        PartitionSpec::Manual(stages) => stages
+            .iter()
+            .map(|s| match &s.end_layer {
+                Some(l) => format!("{}@{l}", s.accel),
+                None => s.accel.clone(),
+            })
+            .collect::<Vec<_>>()
+            .join(","),
+    };
+    sha256_hex(format!("spec\x1f{body}").as_bytes())
+}
+
+/// Hit/miss/evict counters of a [`PlanCache`] — the block surfaced
+/// through [`Telemetry`](crate::coordinator::telemetry::Telemetry) and
+/// the serve report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    /// Counter delta since `earlier` (entries stays absolute — it is a
+    /// level, not a counter).  Used to report per-run activity against
+    /// the process-wide cache.
+    pub fn since(&self, earlier: &PlanCacheStats) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            entries: self.entries,
+        }
+    }
+
+    /// Merge two deltas (counters add; entries takes the later level).
+    pub fn merged(&self, other: &PlanCacheStats) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+            entries: self.entries.max(other.entries),
+        }
+    }
+}
+
+/// Content-addressed store of ranked plan lists with FIFO eviction.
+///
+/// Lookups hand out **clones**: `build_plans` consumers post-process
+/// their plan lists in place (the serve builder filters by accuracy and
+/// stamps `serving_profile`), so the cached canonical copy must never
+/// alias a served one.
+#[derive(Debug)]
+pub struct PlanCache {
+    entries: HashMap<CacheKey, Vec<PipelinePlan>>,
+    /// Insertion order — the FIFO eviction queue.
+    order: VecDeque<CacheKey>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    /// A cache bounded to `capacity` entries (at least 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Cached plan list for `key`, cloned out.  Counts a hit or a miss.
+    pub fn lookup(&mut self, key: &CacheKey) -> Option<Vec<PipelinePlan>> {
+        match self.entries.get(key) {
+            Some(plans) => {
+                self.hits += 1;
+                Some(plans.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store a freshly built plan list, evicting the oldest entry past
+    /// capacity.  Re-inserting an existing key refreshes the value
+    /// without growing the FIFO queue.
+    pub fn insert(&mut self, key: CacheKey, plans: Vec<PipelinePlan>) {
+        if self.entries.insert(key.clone(), plans).is_some() {
+            return;
+        }
+        self.order.push_back(key);
+        while self.entries.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                if self.entries.remove(&old).is_some() {
+                    self.evictions += 1;
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop every entry and reset the counters (tests, benches).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.order.clear();
+        self.hits = 0;
+        self.misses = 0;
+        self.evictions = 0;
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.entries.len(),
+        }
+    }
+}
+
+/// The process-wide cache behind
+/// [`plan_or_build`](crate::coordinator::pipeline::plan_or_build) — what
+/// lets repeated serve runs (daemon mode, the multi-tenant pump) amortize
+/// the sweep across requests.
+pub fn global() -> &'static Mutex<PlanCache> {
+    static CACHE: OnceLock<Mutex<PlanCache>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(PlanCache::default()))
+}
+
+/// Run `f` against the process-wide cache (poisoning is ignored: the
+/// cache holds plain data, valid regardless of a panicking holder).
+pub fn with_global<R>(f: impl FnOnce(&mut PlanCache) -> R) -> R {
+    let mut guard = global().lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut guard)
+}
+
+/// Counters of the process-wide cache.
+pub fn global_stats() -> PlanCacheStats {
+    with_global(|c| c.stats())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ManualStage;
+    use crate::net::compiler::compile;
+    use crate::net::models::ursonet;
+
+    fn names(ns: &[&str]) -> Vec<String> {
+        ns.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn key(pool: &[&str], c: &Constraints, batch: usize) -> CacheKey {
+        let g = compile(&ursonet::build_full());
+        CacheKey::for_request(
+            &g,
+            &names(pool),
+            &crate::accel::links::USB3,
+            c,
+            batch,
+            &PartitionSpec::Auto,
+            &[],
+        )
+    }
+
+    #[test]
+    fn identical_content_yields_identical_keys() {
+        let a = key(&["dpu", "vpu"], &Constraints::default(), 4);
+        let b = key(&["dpu", "vpu"], &Constraints::default(), 4);
+        assert_eq!(a, b);
+        assert_eq!(a.hex().len(), 64);
+        assert_eq!(a.short().len(), 12);
+    }
+
+    #[test]
+    fn every_input_perturbs_the_key() {
+        let base = key(&["dpu", "vpu"], &Constraints::default(), 4);
+        // Pool content and order are both content.
+        assert_ne!(base, key(&["dpu", "tpu"], &Constraints::default(), 4));
+        assert_ne!(base, key(&["vpu", "dpu"], &Constraints::default(), 4));
+        // Constraints.
+        let tight = Constraints {
+            max_loce_m: Some(0.7),
+            ..Default::default()
+        };
+        assert_ne!(base, key(&["dpu", "vpu"], &tight, 4));
+        // Batch.
+        assert_ne!(base, key(&["dpu", "vpu"], &Constraints::default(), 8));
+        // Graph.
+        let lite = compile(&ursonet::build_lite());
+        let k_lite = CacheKey::for_request(
+            &lite,
+            &names(&["dpu", "vpu"]),
+            &crate::accel::links::USB3,
+            &Constraints::default(),
+            4,
+            &PartitionSpec::Auto,
+            &[],
+        );
+        assert_ne!(base, k_lite);
+        // Link.
+        let g = compile(&ursonet::build_full());
+        let k_axi = CacheKey::for_request(
+            &g,
+            &names(&["dpu", "vpu"]),
+            &crate::accel::links::AXI_HP,
+            &Constraints::default(),
+            4,
+            &PartitionSpec::Auto,
+            &[],
+        );
+        assert_ne!(base, k_axi);
+        // Spec.
+        let manual = PartitionSpec::Manual(vec![
+            ManualStage {
+                accel: "dpu".into(),
+                end_layer: Some("gap".into()),
+            },
+            ManualStage {
+                accel: "vpu".into(),
+                end_layer: None,
+            },
+        ]);
+        let k_manual = CacheKey::for_request(
+            &g,
+            &names(&["dpu", "vpu"]),
+            &crate::accel::links::USB3,
+            &Constraints::default(),
+            4,
+            &manual,
+            &[],
+        );
+        assert_ne!(base, k_manual);
+    }
+
+    #[test]
+    fn profiles_fold_into_the_key() {
+        let g = compile(&ursonet::build_full());
+        let mk = |profiles: &[ModeProfile]| {
+            CacheKey::for_request(
+                &g,
+                &names(&["dpu", "vpu"]),
+                &crate::accel::links::USB3,
+                &Constraints::default(),
+                4,
+                &PartitionSpec::Auto,
+                profiles,
+            )
+        };
+        let p = ModeProfile {
+            mode: crate::coordinator::config::Mode::DpuInt8,
+            inference_ms: 7.0,
+            total_ms: 9.0,
+            loce_m: 0.96,
+            orie_deg: 9.29,
+            energy_j: 1.2,
+        };
+        let with = mk(&[p]);
+        assert_ne!(mk(&[]), with);
+        let mut p2 = p;
+        p2.loce_m = 0.95;
+        assert_ne!(with, mk(&[p2]));
+    }
+
+    fn plan(label: &str) -> Vec<PipelinePlan> {
+        vec![PipelinePlan {
+            label: label.to_string(),
+            stages: vec![],
+            steady_fps: 1.0,
+            serving_profile: None,
+        }]
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut c = PlanCache::new(4);
+        let k = key(&["dpu", "vpu"], &Constraints::default(), 4);
+        assert!(c.lookup(&k).is_none());
+        c.insert(k.clone(), plan("a"));
+        let got = c.lookup(&k).expect("hit");
+        assert_eq!(got[0].label, "a");
+        assert_eq!(
+            c.stats(),
+            PlanCacheStats {
+                hits: 1,
+                misses: 1,
+                evictions: 0,
+                entries: 1
+            }
+        );
+    }
+
+    #[test]
+    fn fifo_eviction_past_capacity() {
+        let mut c = PlanCache::new(2);
+        let keys: Vec<CacheKey> = (1..=3)
+            .map(|b| key(&["dpu", "vpu"], &Constraints::default(), b))
+            .collect();
+        for (i, k) in keys.iter().enumerate() {
+            c.insert(k.clone(), plan(&format!("p{i}")));
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+        // Oldest entry gone; the two newest survive.
+        assert!(c.lookup(&keys[0]).is_none());
+        assert!(c.lookup(&keys[1]).is_some());
+        assert!(c.lookup(&keys[2]).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_evicting() {
+        let mut c = PlanCache::new(2);
+        let k = key(&["dpu", "vpu"], &Constraints::default(), 4);
+        c.insert(k.clone(), plan("old"));
+        c.insert(k.clone(), plan("new"));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.lookup(&k).unwrap()[0].label, "new");
+    }
+
+    #[test]
+    fn stats_delta_and_merge() {
+        let a = PlanCacheStats {
+            hits: 10,
+            misses: 4,
+            evictions: 1,
+            entries: 3,
+        };
+        let b = PlanCacheStats {
+            hits: 16,
+            misses: 5,
+            evictions: 1,
+            entries: 4,
+        };
+        let d = b.since(&a);
+        assert_eq!((d.hits, d.misses, d.evictions, d.entries), (6, 1, 0, 4));
+        let m = d.merged(&PlanCacheStats {
+            hits: 1,
+            misses: 1,
+            evictions: 0,
+            entries: 2,
+        });
+        assert_eq!((m.hits, m.misses, m.entries), (7, 2, 4));
+    }
+}

@@ -21,7 +21,8 @@ use crate::coordinator::config::{Config, ExecutorKind, Mode, PartitionSpec};
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::engine::{run_workloads, Engine, RunOutput};
 use crate::coordinator::executor::ThreadedExecutor;
-use crate::coordinator::pipeline::{build_plans, PipelinedDispatcher};
+use crate::coordinator::pipeline::{build_plans, plan_or_build, PipelinedDispatcher};
+use crate::coordinator::plan_cache;
 use crate::coordinator::policy::profile_modes;
 use crate::coordinator::scheduler::{Backend, PoseEstimate};
 use crate::coordinator::sim::SimBackend;
@@ -193,16 +194,34 @@ fn build_pipeline_engine(
     let accel_names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
 
     // The partition splits the paper-scale network (what the analytic
-    // models are calibrated on).
+    // models are calibrated on).  Plans resolve through the
+    // content-addressed cache by default — the profile table folds into
+    // the key, so a manifest change can never serve a stale plan list —
+    // and the per-run hit/miss delta lands on the engine's telemetry.
+    let profiles = profile_modes(manifest);
     let graph = crate::net::compiler::compile(&crate::net::models::ursonet::build_full());
-    let plans = build_plans(
-        &graph,
-        &accel_names,
-        &config.boundary_link,
-        &config.constraints,
-        manifest.batch,
-        spec,
-    )?;
+    let cache_before = plan_cache::global_stats();
+    let plans = if config.plan_cache {
+        let profile_key: Vec<_> = profiles.values().copied().collect();
+        plan_or_build(
+            &graph,
+            &accel_names,
+            &config.boundary_link,
+            &config.constraints,
+            manifest.batch,
+            spec,
+            &profile_key,
+        )?
+    } else {
+        build_plans(
+            &graph,
+            &accel_names,
+            &config.boundary_link,
+            &config.constraints,
+            manifest.batch,
+            spec,
+        )?
+    };
 
     // Accuracy bounds gate plan admission here: build_plans covers the
     // analytic latency/energy feasibility, but accuracy is a property of
@@ -210,7 +229,6 @@ fn build_pipeline_engine(
     // plan, the engine's own row for a single-substrate fallback.  A
     // failover must never land on a plan violating --max-loce/--max-orie
     // (mirrors Constraints::admits in the whole-frame pool path).
-    let profiles = profile_modes(manifest);
     let within = |limit: Option<f64>, v: f64| limit.map_or(true, |max| v <= max);
     let plans: Vec<_> = plans
         .into_iter()
@@ -242,6 +260,9 @@ fn build_pipeline_engine(
 
     let (net_h, net_w, _) = manifest.net_input;
     let mut pipeline = PipelinedDispatcher::new(plans, manifest.batch, net_h, net_w)?;
+    if config.plan_cache {
+        pipeline.telemetry.plan_cache = Some(plan_cache::global_stats().since(&cache_before));
+    }
     for (i, (name, mode)) in bindings.iter().enumerate() {
         let p = profiles
             .get(mode)
@@ -603,6 +624,12 @@ mod tests {
         // The head stage emits boundary traffic; summaries are populated.
         assert!(out.telemetry.stage_transfer_summary().max() > 0.0);
         assert!(!out.telemetry.stage_occupancy_summary().is_empty());
+        // Plans resolved through the content-addressed cache: the run
+        // stamps its per-run delta (exact counts are a property of the
+        // process-wide cache shared across parallel tests, so only
+        // presence and internal consistency are asserted here).
+        let pc = out.telemetry.plan_cache.expect("plan-cache stats stamped");
+        assert!(pc.hits + pc.misses >= 1, "{pc:?}");
         // The pipelined path serves the composite MPAI numerics (Table I
         // mpai row), not the tail engine's whole-network row.
         let mpai = profile_modes(&Manifest::synthetic().unwrap())[&Mode::Mpai];
@@ -615,6 +642,34 @@ mod tests {
                 mpai.loce_m
             );
         }
+    }
+
+    #[test]
+    fn disabled_plan_cache_serves_identically_without_stats() {
+        // --no-plan-cache forces a fresh sweep per request; the serve
+        // decisions are bit-identical either way (the cache is an
+        // amortization, never a behavior change) and no stats block is
+        // stamped.
+        let mk = |plan_cache: bool| Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            partition: Some(PartitionSpec::Auto),
+            plan_cache,
+            frames: 8,
+            camera_fps: 100.0,
+            batch_timeout: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let cached = run(&mk(true)).unwrap();
+        let fresh = run(&mk(false)).unwrap();
+        assert!(cached.telemetry.plan_cache.is_some());
+        assert!(fresh.telemetry.plan_cache.is_none());
+        let ids = |o: &RunOutput| o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>();
+        assert_eq!(ids(&cached), ids(&fresh), "dispatch diverged");
+        let modes = |o: &RunOutput| {
+            o.telemetry.records.iter().map(|r| r.mode).collect::<Vec<_>>()
+        };
+        assert_eq!(modes(&cached), modes(&fresh), "serving modes diverged");
     }
 
     #[test]
@@ -857,7 +912,7 @@ mod tests {
                 (s.admitted, s.completed, s.shed, s.deadline_misses),
                 (t.admitted, t.completed, t.shed, t.deadline_misses),
                 "tenant {} accounting diverged",
-                s.name
+                s.name()
             );
         }
         // The mix exercises real QoS behavior: background sheds, realtime

@@ -59,6 +59,50 @@ impl fmt::Display for SubstrateId {
     }
 }
 
+/// A process-wide interned tenant (workload) name — the multi-tenant
+/// serve loop's `Copy` tenant key, mirroring [`SubstrateId`].
+///
+/// The admission hot path (event calendar, EDF ready heaps, completion
+/// accounting) indexes tenants positionally, but every record that
+/// outlives the loop used to clone the workload-name `String`.  Interning
+/// at admission makes tenant identity a `Copy` `u32` everywhere —
+/// [`TenantRecord`](crate::coordinator::telemetry::TenantRecord) carries
+/// the id and resolves the name only at report time — groundwork for the
+/// 10k-tenant scale item, where per-record name clones would dominate
+/// the accounting cost.  Tenant fleets cycle a bounded set of workload
+/// names, so the leaked-table bound holds here too.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(u32);
+
+fn tenant_table() -> &'static Mutex<Vec<&'static str>> {
+    static TABLE: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+impl TenantId {
+    /// Intern `name`, returning its stable id (idempotent; linear scan —
+    /// interning happens once per workload at admission, not per event).
+    pub fn intern(name: &str) -> TenantId {
+        let mut t = tenant_table().lock().expect("tenant intern table poisoned");
+        if let Some(i) = t.iter().position(|&n| n == name) {
+            return TenantId(i as u32);
+        }
+        t.push(Box::leak(name.to_string().into_boxed_str()));
+        TenantId((t.len() - 1) as u32)
+    }
+
+    /// Resolve the interned name (report-time only by convention).
+    pub fn name(self) -> &'static str {
+        tenant_table().lock().expect("tenant intern table poisoned")[self.0 as usize]
+    }
+}
+
+impl fmt::Display for TenantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +129,33 @@ mod tests {
         m.insert(SubstrateId::intern("substrate-test-b"), 2);
         assert_eq!(m[&a], 1);
         assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn tenant_ids_mirror_substrate_interning() {
+        let a = TenantId::intern("tenant-test-rt");
+        let b = TenantId::intern("tenant-test-rt");
+        let c = TenantId::intern("tenant-test-bg");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.name(), "tenant-test-rt");
+        assert_eq!(format!("{c}"), "tenant-test-bg");
+        // Copy keys in ordered maps — the EDF/accounting use case.
+        let copy = a;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(copy, 1usize);
+        m.insert(c, 2);
+        assert_eq!(m[&a], 1);
+    }
+
+    #[test]
+    fn tenant_and_substrate_tables_are_disjoint() {
+        // The same string interned into both tables must not collide
+        // semantically: ids live in separate namespaces (types), and
+        // each table resolves its own names.
+        let s = SubstrateId::intern("disjoint-test-name");
+        let t = TenantId::intern("disjoint-test-name");
+        assert_eq!(s.name(), t.name());
     }
 
     #[test]

@@ -3,6 +3,8 @@
 use std::fmt::Write as _;
 use std::time::Duration;
 
+use crate::coordinator::plan_cache::PlanCacheStats;
+use crate::coordinator::substrate::TenantId;
 use crate::util::stats::Summary;
 
 /// One frame's record.
@@ -64,11 +66,17 @@ pub struct StageRecord {
 /// engine's admission layer — one entry per workload, in workload order).
 #[derive(Debug, Clone)]
 pub struct TenantRecord {
-    pub name: String,
+    /// Interned tenant identity — a `Copy` key; the human-readable name
+    /// resolves only at report time ([`TenantRecord::name`]).
+    pub id: TenantId,
     /// QoS class label ("realtime" | "standard" | "background").
     pub qos: &'static str,
     /// Network the tenant serves (model-zoo name).
     pub net: String,
+    /// Primary pipeline plan the tenant's (net, constraints) resolve to
+    /// through the content-addressed plan cache (`None` for whole-frame
+    /// dispatch runs or when the plan cache is disabled).
+    pub plan: Option<String>,
     /// Per-frame completion deadline, measured from capture.
     pub deadline: Duration,
     /// Frames admitted into the engine (emitted minus shed).
@@ -86,6 +94,11 @@ pub struct TenantRecord {
 }
 
 impl TenantRecord {
+    /// Human-readable tenant name, resolved from the intern table.
+    pub fn name(&self) -> &'static str {
+        self.id.name()
+    }
+
     /// Summary over the simulated per-frame latencies.
     pub fn latency_summary(&self) -> Summary {
         Summary::from(&self.latencies_s)
@@ -129,6 +142,11 @@ pub struct Telemetry {
     /// and wall-clock paced runs only; the serve loop's clock measurement
     /// supersedes the executor's own when both exist).
     pub measured_elapsed_s: Option<f64>,
+    /// Content-addressed plan-cache activity attributable to this run
+    /// (hit/miss/evict deltas against the process-wide cache; `entries`
+    /// is the resident level).  `None` when no plan resolution ran
+    /// (whole-frame dispatch, cache disabled).
+    pub plan_cache: Option<PlanCacheStats>,
 }
 
 impl Telemetry {
@@ -337,6 +355,13 @@ impl Telemetry {
                 m.p99() * 1e3,
             );
         }
+        if let Some(pc) = &self.plan_cache {
+            let _ = write!(
+                s,
+                "\nplan cache: {} hits / {} misses / {} evictions ({} entries resident)",
+                pc.hits, pc.misses, pc.evictions, pc.entries,
+            );
+        }
         for t in &self.tenants {
             let lat = t.latency_summary();
             let _ = write!(
@@ -344,7 +369,7 @@ impl Telemetry {
                 "\ntenant {:<8} ({:<10} {:<12}) admitted {:>5}  completed {:>5}  \
                  shed {:>4}  misses {:>4}  lat p50 {:>7.1} ms  p99 {:>7.1} ms  \
                  deadline {:>6.0} ms",
-                t.name,
+                t.name(),
                 t.qos,
                 t.net,
                 t.admitted,
@@ -355,6 +380,9 @@ impl Telemetry {
                 lat.p99() * 1e3,
                 t.deadline.as_secs_f64() * 1e3,
             );
+            if let Some(plan) = &t.plan {
+                let _ = write!(s, "  plan {plan}");
+            }
         }
         s
     }
@@ -461,9 +489,10 @@ mod tests {
 
     fn tenant(name: &str, qos: &'static str, completed: u64, misses: u64, shed: u64) -> TenantRecord {
         TenantRecord {
-            name: name.to_string(),
+            id: TenantId::intern(name),
             qos,
             net: "ursonet_full".into(),
+            plan: None,
             deadline: Duration::from_millis(500),
             admitted: completed,
             completed,
@@ -500,6 +529,28 @@ mod tests {
         assert!(r.contains("tenant rt"), "{r}");
         assert!(r.contains("shed    2"), "{r}");
         assert!(r.contains("misses    1"), "{r}");
+    }
+
+    #[test]
+    fn report_covers_plan_cache_and_tenant_plan_labels() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        assert!(!t.report().contains("plan cache"), "no line without stats");
+        t.plan_cache = Some(PlanCacheStats {
+            hits: 63,
+            misses: 1,
+            evictions: 0,
+            entries: 1,
+        });
+        let mut rt = tenant("rt", "realtime", 3, 0, 0);
+        rt.plan = Some("dpu[0..=52]+vpu[53..=61]".to_string());
+        t.record_tenant(rt);
+        let r = t.report();
+        assert!(
+            r.contains("plan cache: 63 hits / 1 misses / 0 evictions (1 entries resident)"),
+            "{r}"
+        );
+        assert!(r.contains("plan dpu[0..=52]+vpu[53..=61]"), "{r}");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   policy    speed–accuracy–energy accelerator selection
 //!   inspect   model-zoo graph summaries
 //!   cuts      enumerate MPAI partition cut-points for a model
+//!   manifest  stamp / verify checksummed compact manifests
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -24,7 +25,7 @@ use mpai::coordinator::{
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
 use mpai::pose::EvalSet;
-use mpai::runtime::Manifest;
+use mpai::runtime::{CompactManifest, Manifest};
 use mpai::util::cli::{Args, Spec};
 
 fn main() {
@@ -52,6 +53,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "policy" => cmd_policy(rest),
         "inspect" => cmd_inspect(rest),
         "cuts" => cmd_cuts(rest),
+        "manifest" => cmd_manifest(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -69,7 +71,8 @@ fn print_usage() {
          serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] [--executor sim|threaded] run the coordinator\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
-         cuts   [--model NAME]        enumerate MPAI partition cut-points"
+         cuts   [--model NAME]        enumerate MPAI partition cut-points\n  \
+         manifest stamp|verify [--manifest PATH] [FILE ..]  checksummed compact manifests"
     );
 }
 
@@ -211,6 +214,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock workers)"),
             ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
             ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
+            (
+                "no-plan-cache",
+                "",
+                "bypass the content-addressed plan cache (fresh partition sweep per request)",
+            ),
             ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
             ("max-ms", "X", "constraint: max modeled total latency (ms)"),
             ("max-loce", "X", "constraint: max localization error (m)"),
@@ -281,6 +289,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         workloads,
         executor,
         time_scale: a.get_f64("time-scale", 0.01)?,
+        plan_cache: !a.flag("no-plan-cache"),
     };
     let engaged = if pool.is_empty() {
         format!("mode {}", mode.label())
@@ -483,4 +492,84 @@ fn cmd_cuts(argv: &[String]) -> Result<()> {
         deployed_latency(&cpu, &g).total_ms()
     );
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+/// `mpai manifest stamp|verify` — drive the checksummed compact-manifest
+/// layer (DESIGN.md §4.10).  `verify` recomputes every entry's sha256;
+/// `stamp` (re)checksums the named files (or, with no files, every entry
+/// already in the manifest) and rewrites the document.
+fn cmd_manifest(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai manifest",
+        about: "stamp / verify checksummed compact manifests",
+        options: vec![
+            (
+                "manifest",
+                "PATH",
+                "manifest file (default bench/MANIFEST.json); entry paths are relative to its directory",
+            ),
+            ("name", "NAME", "manifest name when creating (default: parent directory name)"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+    let path = PathBuf::from(a.get_or("manifest", "bench/MANIFEST.json"));
+    let root = path
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."));
+    let action = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("missing action: `mpai manifest stamp|verify [FILE ..]`")?;
+    match action {
+        "verify" => {
+            let m = CompactManifest::load(&path)?;
+            let n = m.verify(&root)?;
+            println!(
+                "manifest {path:?}: {n} entr{} verified OK",
+                if n == 1 { "y" } else { "ies" }
+            );
+            Ok(())
+        }
+        "stamp" => {
+            let mut m = if path.exists() {
+                CompactManifest::load(&path)?
+            } else {
+                let name = match a.get("name") {
+                    Some(n) => n.to_string(),
+                    None => root
+                        .file_name()
+                        .map(|n| n.to_string_lossy().into_owned())
+                        .unwrap_or_else(|| "manifest".to_string()),
+                };
+                CompactManifest::new(&name)
+            };
+            let rels: Vec<String> = if a.positional.len() > 1 {
+                a.positional[1..].to_vec()
+            } else {
+                m.entries.keys().cloned().collect()
+            };
+            if rels.is_empty() {
+                bail!("nothing to stamp: pass file paths relative to {root:?}");
+            }
+            for rel in &rels {
+                let e = m.stamp_file(&root, rel)?;
+                println!(
+                    "stamped {rel} ({}, {} B, sha256 {}…)",
+                    e.kind,
+                    e.size,
+                    &e.sha256[..12]
+                );
+            }
+            m.save(&path)?;
+            println!("wrote {path:?} ({} entries)", m.entries.len());
+            Ok(())
+        }
+        other => bail!("unknown manifest action {other:?} (stamp | verify)"),
+    }
 }

@@ -387,6 +387,12 @@ pub fn evaluate_cut(
 /// lower sequential latency, then the earlier cut, so selection is
 /// deterministic.  Returns `None` when no cut is feasible (or the two
 /// devices are the same engine — there is nothing to split).
+///
+/// The sweep is pure in its inputs, which is what lets
+/// `coordinator::pipeline::plan_or_build` memoize its result in the
+/// content-addressed plan cache: a cached plan is bit-identical to
+/// re-running this sweep for the same (graph, constraints, pool, link)
+/// request (DESIGN.md §4.10).
 pub fn select_cut(
     g: &Graph,
     head: &dyn Accelerator,

@@ -1,11 +1,29 @@
-//! Artifact manifest: the contract between `make artifacts` (python) and
-//! the Rust coordinator.  Parses `artifacts/manifest.json`.
+//! Artifact manifests: the typed, checksummed contract around everything
+//! the coordinator loads from disk.
+//!
+//! Two manifest layers live here:
+//!
+//! * [`Manifest`] — the AOT-artifact contract between `make artifacts`
+//!   (python) and the Rust coordinator (`artifacts/manifest.json`).
+//!   Parse failures are structured `anyhow` errors carrying the
+//!   offending file path and field — a corrupted manifest names exactly
+//!   what broke, never a bare "missing key".
+//! * [`CompactManifest`] — a versioned, sha256-summed index over *any*
+//!   set of files the repo treats as load-bearing inputs (compiled plan
+//!   fixtures, tenant workload files, `bench/baseline.json`).  Every
+//!   entry is typed ([`EntryKind`]) and checksummed; [`verify`] recomputes
+//!   digests and fails with the path + field of the first mismatch.
+//!   `mpai manifest stamp|verify` drives it from the CLI, and CI runs
+//!   `verify` over the committed fixtures (DESIGN.md §4.10).
+//!
+//! [`verify`]: CompactManifest::verify
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::hash::sha256_hex;
 use crate::util::json::{self, Json};
 
 /// I/O slot of an artifact (name + shape + dtype).
@@ -91,34 +109,72 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse a manifest document.  Every failure is wrapped with the file
+    /// path it came from (`{dir}/manifest.json`) and the per-field
+    /// contexts below name the offending field, so a corrupted manifest
+    /// reports e.g. `manifest "/data/art/manifest.json": field "batch"
+    /// must be a non-negative integer`.
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
-        let v = json::parse(text).context("parsing manifest.json")?;
+        let origin = dir.join("manifest.json");
+        Self::parse_fields(text, dir)
+            .with_context(|| format!("manifest {origin:?}"))
+    }
+
+    fn parse_fields(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text).context("document is not valid JSON")?;
         if v.req("version")?.as_usize() != Some(1) {
-            bail!("unsupported manifest version");
+            bail!("unsupported manifest version (field \"version\" must be 1)");
         }
-        let batch = v.req("batch")?.as_usize().context("batch")?;
+        let batch = v
+            .req("batch")?
+            .as_usize()
+            .context("field \"batch\" must be a non-negative integer")?;
 
         let mut artifacts = BTreeMap::new();
-        for (name, a) in v.req("artifacts")?.as_obj().context("artifacts")? {
+        for (name, a) in v
+            .req("artifacts")?
+            .as_obj()
+            .context("field \"artifacts\" must be an object")?
+        {
             artifacts.insert(
                 name.clone(),
                 ArtifactSpec {
                     name: name.clone(),
-                    file: dir.join(a.req("file")?.as_str().context("file")?),
-                    inputs: io_specs(a.req("inputs")?)?,
-                    outputs: io_specs(a.req("outputs")?)?,
-                    sha256: a.req("sha256")?.as_str().context("sha256")?.to_string(),
+                    file: dir.join(
+                        a.req("file")?
+                            .as_str()
+                            .with_context(|| format!("artifact {name:?}: field \"file\" must be a string"))?,
+                    ),
+                    inputs: io_specs(a.req("inputs")?)
+                        .with_context(|| format!("artifact {name:?}: field \"inputs\""))?,
+                    outputs: io_specs(a.req("outputs")?)
+                        .with_context(|| format!("artifact {name:?}: field \"outputs\""))?,
+                    sha256: a
+                        .req("sha256")?
+                        .as_str()
+                        .with_context(|| format!("artifact {name:?}: field \"sha256\" must be a string"))?
+                        .to_string(),
                 },
             );
         }
 
         let mut expected = BTreeMap::new();
-        for (name, m) in v.req("expected_metrics")?.as_obj().context("expected")? {
+        for (name, m) in v
+            .req("expected_metrics")?
+            .as_obj()
+            .context("field \"expected_metrics\" must be an object")?
+        {
             expected.insert(
                 name.clone(),
                 ExpectedMetrics {
-                    loce_m: m.req("loce_m")?.as_f64().context("loce_m")?,
-                    orie_deg: m.req("orie_deg")?.as_f64().context("orie_deg")?,
+                    loce_m: m
+                        .req("loce_m")?
+                        .as_f64()
+                        .with_context(|| format!("mode {name:?}: field \"loce_m\" must be a number"))?,
+                    orie_deg: m
+                        .req("orie_deg")?
+                        .as_f64()
+                        .with_context(|| format!("mode {name:?}: field \"orie_deg\" must be a number"))?,
                 },
             );
         }
@@ -128,7 +184,7 @@ impl Manifest {
             Ok(layers
                 .req(key)?
                 .as_arr()
-                .context("layer list")?
+                .with_context(|| format!("field \"layers.{key}\" must be an array"))?
                 .iter()
                 .filter_map(|s| s.as_str().map(String::from))
                 .collect())
@@ -138,15 +194,25 @@ impl Manifest {
         Ok(Manifest {
             dir: dir.to_path_buf(),
             batch,
-            net_input: triple(v.req("net_input")?)?,
-            camera: triple(v.req("camera")?)?,
+            net_input: triple(v.req("net_input")?).context("field \"net_input\"")?,
+            camera: triple(v.req("camera")?).context("field \"camera\"")?,
             artifacts,
-            eval_file: dir.join(eval.req("file")?.as_str().context("eval file")?),
-            eval_count: eval.req("count")?.as_usize().context("eval count")?,
+            eval_file: dir.join(
+                eval.req("file")?
+                    .as_str()
+                    .context("field \"eval.file\" must be a string")?,
+            ),
+            eval_count: eval
+                .req("count")?
+                .as_usize()
+                .context("field \"eval.count\" must be a non-negative integer")?,
             expected,
             backbone_layers: strings("backbone")?,
             head_layers: strings("head")?,
-            param_count: v.req("param_count")?.as_usize().context("param_count")?,
+            param_count: v
+                .req("param_count")?
+                .as_usize()
+                .context("field \"param_count\" must be a non-negative integer")?,
         })
     }
 
@@ -178,6 +244,229 @@ impl Manifest {
           "param_count": 0
         }"#;
         Manifest::parse(SYNTH, Path::new("artifacts-sim")).context("parsing synthetic manifest")
+    }
+}
+
+/// Schema version for [`CompactManifest`] documents.
+pub const COMPACT_MANIFEST_VERSION: usize = 1;
+
+/// What a checksummed [`ManifestEntry`] holds.  The kind is stored in the
+/// document (`"kind"`), so `verify` can report *what* was corrupted, not
+/// just which file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryKind {
+    /// A compiled / fixture partition plan.
+    Plan,
+    /// A tenant workload file (`--tenants`).
+    Workloads,
+    /// `bench/baseline.json` — the bench-gate regression reference.
+    BenchBaseline,
+    /// Anything else worth checksumming.
+    Blob,
+}
+
+impl EntryKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EntryKind::Plan => "plan",
+            EntryKind::Workloads => "workloads",
+            EntryKind::BenchBaseline => "bench-baseline",
+            EntryKind::Blob => "blob",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EntryKind> {
+        Some(match s {
+            "plan" => EntryKind::Plan,
+            "workloads" => EntryKind::Workloads,
+            "bench-baseline" => EntryKind::BenchBaseline,
+            "blob" => EntryKind::Blob,
+            _ => return None,
+        })
+    }
+
+    /// Infer a kind from a file name (used when stamping; override by
+    /// editing the manifest if the guess is wrong).
+    pub fn infer(name: &str) -> EntryKind {
+        if name.ends_with("baseline.json") {
+            EntryKind::BenchBaseline
+        } else if name.contains("tenant") || name.contains("workload") {
+            EntryKind::Workloads
+        } else if name.contains("plan") {
+            EntryKind::Plan
+        } else {
+            EntryKind::Blob
+        }
+    }
+}
+
+impl std::fmt::Display for EntryKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One checksummed file in a [`CompactManifest`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub kind: EntryKind,
+    /// Lower-hex sha256 of the file bytes.
+    pub sha256: String,
+    /// File size in bytes (cheap first-line-of-defence check).
+    pub size: u64,
+}
+
+/// A versioned, sha256-summed index over a set of files, keyed by path
+/// relative to the manifest's own directory.  Modeled on compact
+/// pack-manifest formats: small, sorted, append-friendly, and cheap to
+/// verify.  Serialized via `util::json` (sorted keys — byte-stable for a
+/// given content set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompactManifest {
+    pub name: String,
+    pub version: usize,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl CompactManifest {
+    pub fn new(name: &str) -> CompactManifest {
+        CompactManifest {
+            name: name.to_string(),
+            version: COMPACT_MANIFEST_VERSION,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Checksum `root/rel` and record (or refresh) its entry under `rel`.
+    /// The kind is inferred from the file name unless the entry already
+    /// exists, in which case its kind is preserved.
+    pub fn stamp_file(&mut self, root: &Path, rel: &str) -> Result<&ManifestEntry> {
+        let path = root.join(rel);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("manifest entry {rel:?}: reading {path:?}"))?;
+        let kind = self
+            .entries
+            .get(rel)
+            .map(|e| e.kind)
+            .unwrap_or_else(|| EntryKind::infer(rel));
+        let entry = ManifestEntry {
+            kind,
+            sha256: sha256_hex(&bytes),
+            size: bytes.len() as u64,
+        };
+        self.entries.insert(rel.to_string(), entry);
+        Ok(&self.entries[rel])
+    }
+
+    /// Recompute every entry's digest against the files under `root` and
+    /// return how many entries were verified.  Fails on the first missing
+    /// file, size drift, or checksum mismatch, naming the offending entry
+    /// path and field.
+    pub fn verify(&self, root: &Path) -> Result<usize> {
+        for (rel, entry) in &self.entries {
+            let path = root.join(rel);
+            let bytes = std::fs::read(&path).with_context(|| {
+                format!("manifest {:?}: entry {rel:?}: reading {path:?}", self.name)
+            })?;
+            if bytes.len() as u64 != entry.size {
+                bail!(
+                    "manifest {:?}: entry {rel:?}: field \"size\" mismatch (recorded {}, found {})",
+                    self.name,
+                    entry.size,
+                    bytes.len()
+                );
+            }
+            let actual = sha256_hex(&bytes);
+            if actual != entry.sha256 {
+                bail!(
+                    "manifest {:?}: entry {rel:?}: field \"sha256\" mismatch (recorded {}, found {actual})",
+                    self.name,
+                    entry.sha256
+                );
+            }
+        }
+        Ok(self.entries.len())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::obj();
+        for (rel, e) in &self.entries {
+            let mut entry = Json::obj();
+            entry.set("kind", e.kind.label().into());
+            entry.set("sha256", e.sha256.as_str().into());
+            entry.set("size", (e.size as usize).into());
+            entries.set(rel, entry);
+        }
+        let mut doc = Json::obj();
+        doc.set("name", self.name.as_str().into());
+        doc.set("version", self.version.into());
+        doc.set("entries", entries);
+        doc
+    }
+
+    /// Parse a compact-manifest document; `origin` labels every failure
+    /// with the file the text came from.
+    pub fn parse(text: &str, origin: &Path) -> Result<CompactManifest> {
+        Self::parse_fields(text).with_context(|| format!("manifest {origin:?}"))
+    }
+
+    fn parse_fields(text: &str) -> Result<CompactManifest> {
+        let v = json::parse(text).context("document is not valid JSON")?;
+        let version = v
+            .req("version")?
+            .as_usize()
+            .context("field \"version\" must be a non-negative integer")?;
+        if version != COMPACT_MANIFEST_VERSION {
+            bail!("unsupported manifest version (field \"version\" must be {COMPACT_MANIFEST_VERSION}, got {version})");
+        }
+        let name = v
+            .req("name")?
+            .as_str()
+            .context("field \"name\" must be a string")?
+            .to_string();
+        let mut entries = BTreeMap::new();
+        for (rel, e) in v
+            .req("entries")?
+            .as_obj()
+            .context("field \"entries\" must be an object")?
+        {
+            let kind_label = e
+                .req("kind")?
+                .as_str()
+                .with_context(|| format!("entry {rel:?}: field \"kind\" must be a string"))?;
+            let kind = EntryKind::parse(kind_label).with_context(|| {
+                format!("entry {rel:?}: field \"kind\" has unknown value {kind_label:?}")
+            })?;
+            let sha256 = e
+                .req("sha256")?
+                .as_str()
+                .with_context(|| format!("entry {rel:?}: field \"sha256\" must be a string"))?
+                .to_string();
+            if sha256.len() != 64 || !sha256.bytes().all(|b| b.is_ascii_hexdigit()) {
+                bail!("entry {rel:?}: field \"sha256\" must be 64 hex chars, got {sha256:?}");
+            }
+            let size = e
+                .req("size")?
+                .as_usize()
+                .with_context(|| format!("entry {rel:?}: field \"size\" must be a non-negative integer"))?
+                as u64;
+            entries.insert(rel.clone(), ManifestEntry { kind, sha256, size });
+        }
+        Ok(CompactManifest { name, version, entries })
+    }
+
+    /// Load `path`; entry paths are relative to `path`'s directory.
+    pub fn load(path: &Path) -> Result<CompactManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text, path)
+    }
+
+    /// Write the document to `path` (compact JSON + trailing newline).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string();
+        text.push('\n');
+        std::fs::write(path, text).with_context(|| format!("writing manifest {path:?}"))
     }
 }
 
@@ -235,5 +524,117 @@ mod tests {
     fn rejects_wrong_version() {
         let bad = MINI.replace("\"version\": 1", "\"version\": 9");
         assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn corrupted_manifest_error_names_path_and_field() {
+        // Satellite: a corrupted manifest must say *which file* and
+        // *which field* broke, not just "missing key".
+        let bad = MINI.replace("\"batch\": 4", "\"batch\": \"four\"");
+        let err = Manifest::parse(&bad, Path::new("/data/art")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("/data/art/manifest.json"), "{msg}");
+        assert!(msg.contains("\"batch\""), "{msg}");
+    }
+
+    #[test]
+    fn entry_kind_labels_round_trip_and_infer() {
+        for kind in [
+            EntryKind::Plan,
+            EntryKind::Workloads,
+            EntryKind::BenchBaseline,
+            EntryKind::Blob,
+        ] {
+            assert_eq!(EntryKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(EntryKind::parse("nope"), None);
+        assert_eq!(EntryKind::infer("baseline.json"), EntryKind::BenchBaseline);
+        assert_eq!(EntryKind::infer("tenants_ab.txt"), EntryKind::Workloads);
+        assert_eq!(EntryKind::infer("plan_fixture.json"), EntryKind::Plan);
+        assert_eq!(EntryKind::infer("eval_set.mpt"), EntryKind::Blob);
+    }
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mpai_cm_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn compact_manifest_stamp_save_load_verify_round_trip() {
+        let root = scratch_dir("roundtrip");
+        std::fs::write(root.join("baseline.json"), b"{\"bench\": 1}\n").unwrap();
+        std::fs::write(root.join("tenants.txt"), b"cam fps=10\n").unwrap();
+
+        let mut m = CompactManifest::new("bench");
+        m.stamp_file(&root, "baseline.json").unwrap();
+        m.stamp_file(&root, "tenants.txt").unwrap();
+        assert_eq!(m.entries["baseline.json"].kind, EntryKind::BenchBaseline);
+        assert_eq!(m.entries["tenants.txt"].kind, EntryKind::Workloads);
+        assert_eq!(m.entries["baseline.json"].size, 13);
+
+        let path = root.join("MANIFEST.json");
+        m.save(&path).unwrap();
+        let loaded = CompactManifest::load(&path).unwrap();
+        assert_eq!(loaded, m);
+        assert_eq!(loaded.verify(&root).unwrap(), 2);
+
+        // Re-stamping an unchanged file is a no-op (byte-stable digests).
+        let before = loaded.entries["baseline.json"].clone();
+        let mut restamped = loaded.clone();
+        restamped.stamp_file(&root, "baseline.json").unwrap();
+        assert_eq!(restamped.entries["baseline.json"], before);
+
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn compact_manifest_verify_flags_corruption_with_path_and_field() {
+        let root = scratch_dir("corrupt");
+        std::fs::write(root.join("baseline.json"), b"{\"bench\": 1}\n").unwrap();
+        let mut m = CompactManifest::new("bench");
+        m.stamp_file(&root, "baseline.json").unwrap();
+
+        // Same length, different bytes -> sha256 (not size) mismatch.
+        std::fs::write(root.join("baseline.json"), b"{\"bench\": 2}\n").unwrap();
+        let err = m.verify(&root).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("baseline.json"), "{msg}");
+        assert!(msg.contains("\"sha256\""), "{msg}");
+
+        // Different length -> size mismatch reported first.
+        std::fs::write(root.join("baseline.json"), b"{}\n").unwrap();
+        let msg = format!("{:#}", m.verify(&root).unwrap_err());
+        assert!(msg.contains("\"size\""), "{msg}");
+
+        // Missing file -> error carries the entry path.
+        std::fs::remove_file(root.join("baseline.json")).unwrap();
+        let msg = format!("{:#}", m.verify(&root).unwrap_err());
+        assert!(msg.contains("baseline.json"), "{msg}");
+
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn compact_manifest_parse_errors_name_origin_and_field() {
+        let doc = r#"{"name": "x", "version": 1,
+            "entries": {"a.json": {"kind": "gizmo", "sha256": "00", "size": 1}}}"#;
+        let err = CompactManifest::parse(doc, Path::new("/data/MANIFEST.json")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("/data/MANIFEST.json"), "{msg}");
+        assert!(msg.contains("\"kind\""), "{msg}");
+        assert!(msg.contains("gizmo"), "{msg}");
+
+        let bad_version = r#"{"name": "x", "version": 9, "entries": {}}"#;
+        let msg = format!(
+            "{:#}",
+            CompactManifest::parse(bad_version, Path::new("/m")).unwrap_err()
+        );
+        assert!(msg.contains("\"version\""), "{msg}");
+
+        let bad_sha = r#"{"name": "x", "version": 1,
+            "entries": {"a.json": {"kind": "blob", "sha256": "zz", "size": 1}}}"#;
+        assert!(CompactManifest::parse(bad_sha, Path::new("/m")).is_err());
     }
 }

@@ -4,6 +4,8 @@ pub mod artifacts;
 pub mod executor;
 pub mod tensor;
 
-pub use artifacts::{ArtifactSpec, ExpectedMetrics, IoSpec, Manifest};
+pub use artifacts::{
+    ArtifactSpec, CompactManifest, EntryKind, ExpectedMetrics, IoSpec, Manifest, ManifestEntry,
+};
 pub use executor::{Engine, Executable};
 pub use tensor::Tensor;

@@ -3,6 +3,7 @@
 
 pub mod benchio;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod mpt;
 pub mod prng;
