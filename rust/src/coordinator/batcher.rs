@@ -149,7 +149,12 @@ impl Batcher {
 
     fn take(&mut self, now: Option<Duration>) -> Option<Batch> {
         let frames: Vec<Frame> = self.pending.drain(..).collect();
-        let t_ready = now.unwrap_or_else(|| frames.last().unwrap().t_capture);
+        // An empty drain is `None`, never a panic: a churn-forced flush of
+        // an idle tenant's batcher must be a no-op (ISSUE 7 satellite —
+        // the old `frames.last().unwrap()` was reachable through `take`
+        // with no pending frames).
+        let newest = frames.last()?.t_capture;
+        let t_ready = now.unwrap_or(newest);
         Some(Batch {
             size: self.size,
             t_ready,
@@ -223,6 +228,20 @@ mod tests {
         let batch = b.flush(Duration::from_millis(5)).unwrap();
         assert_eq!(batch.real_count(), 1);
         assert!(b.flush(Duration::from_millis(6)).is_none());
+    }
+
+    #[test]
+    fn empty_take_returns_none_not_panic() {
+        // ISSUE 7 satellite: a churn-forced flush of an empty batcher must
+        // be `None` down every path — with and without an explicit `now`.
+        let mut b = Batcher::new(4, Duration::from_millis(50));
+        assert!(b.take(Some(Duration::from_millis(10))).is_none());
+        assert!(b.take(None).is_none());
+        assert!(b.flush(Duration::from_millis(10)).is_none());
+        assert!(b.poll(Duration::from_millis(10)).is_none());
+        // Still serviceable after the empty drain.
+        b.push(frame(0, 0));
+        assert_eq!(b.flush(Duration::from_millis(5)).unwrap().real_count(), 1);
     }
 
     #[test]

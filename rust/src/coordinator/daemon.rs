@@ -1,0 +1,976 @@
+//! Daemon mode: the long-horizon serve loop with a live admission-control
+//! plane and windowed steady-state telemetry.
+//!
+//! [`run_workloads`](crate::coordinator::engine::run_workloads) serves a
+//! *fixed* tenant set to the end of each tenant's frame budget and reports
+//! one aggregate at the end — the right shape for a bounded experiment,
+//! the wrong one for a service.  [`run_daemon`] extends the same event
+//! calendar with a third event class, **churn**: tenants join, leave, and
+//! re-rate mid-run, interleaved deterministically with arrivals and
+//! batcher deadlines.  Three contracts distinguish the daemon:
+//!
+//! * **Determinism** — arrivals come from [`TraceSource`] rate
+//!   integration (O(1) state, no RNG), churn from an explicit schedule;
+//!   on [`SimClock`](crate::coordinator::clock::SimClock) the same spec
+//!   replays to bit-identical windowed telemetry, property-tested below.
+//! * **Bounded memory** — no per-frame `Vec` grows with the horizon: the
+//!   pose-estimate stream is dropped after accounting, per-tenant
+//!   latencies live in a [`Streaming`] digest, and the engine's
+//!   per-frame records are capped ([`FRAME_RECORD_CAP`]).  State is
+//!   O(tenants + windows touched), not O(frames).
+//! * **Conservation under churn** — every admitted frame completes or is
+//!   counted shed; a `leave` flushes the tenant's partial batch rather
+//!   than dropping it; calendar entries that outlive a retired tenant
+//!   are validated-and-skipped and *counted* (`stale_events`), never a
+//!   panic and never silent.
+//!
+//! Event ordering at one instant is `Churn < Deadline < Arrival` (derived
+//! `Ord` on [`DaemonEvent`]), so a leave at `t` retires the tenant before
+//! its arrival at `t` — deliberately exercising the stale-arrival path
+//! that the old `.expect("arrival implies a pending frame")` panicked on.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::config::{Config, Mode, Workload};
+use crate::coordinator::engine::{
+    enqueue, Completion, Engine, EventQueueKind, ReadyQueue, TENANT_ID_SHIFT,
+};
+use crate::coordinator::substrate::TenantId;
+use crate::coordinator::telemetry::{Telemetry, TenantRecord};
+use crate::coordinator::trace::{ArrivalPattern, ChurnAction, ChurnEvent, TenantTrace, TraceSource};
+use crate::net::models;
+use crate::pose::EvalSet;
+use crate::sensor::{Camera, Frame};
+use crate::util::stats::Streaming;
+
+/// Per-frame records the engine retains in daemon mode.  Enough for
+/// constraint-routing inspection and CSV spot checks; past the cap the
+/// engine counts drops instead of growing (`Telemetry::records_dropped`).
+pub const FRAME_RECORD_CAP: usize = 4096;
+
+/// What the daemon serves: the telemetry window length, the tenant
+/// lifecycles, and any extra churn events layered on top (CLI `--churn`).
+#[derive(Debug, Clone)]
+pub struct DaemonSpec {
+    /// Steady-state telemetry window length (must be positive).
+    pub window: Duration,
+    /// Tenant lifecycles: workload + arrival pattern + join/rerate/leave
+    /// schedule each.
+    pub tenants: Vec<TenantTrace>,
+    /// Extra churn on top of the tenant lifecycles.
+    pub churn: Vec<ChurnEvent>,
+}
+
+impl DaemonSpec {
+    /// Flatten lifecycles + extra churn into one time-ordered schedule.
+    /// The sort is stable, so same-instant events keep spec order
+    /// (lifecycles first, extra churn after) — part of the determinism
+    /// contract.
+    fn schedule(&self) -> Vec<ChurnEvent> {
+        let mut out = Vec::new();
+        for t in &self.tenants {
+            out.push(ChurnEvent {
+                at: t.join_at,
+                action: ChurnAction::Join(Box::new(t.workload.clone()), t.pattern.clone()),
+            });
+            for &(at, rate_fps) in &t.rerates {
+                out.push(ChurnEvent {
+                    at,
+                    action: ChurnAction::Rerate {
+                        name: t.workload.name.clone(),
+                        rate_fps,
+                    },
+                });
+            }
+            if let Some(at) = t.leave_at {
+                out.push(ChurnEvent {
+                    at,
+                    action: ChurnAction::Leave(t.workload.name.clone()),
+                });
+            }
+        }
+        out.extend(self.churn.iter().cloned());
+        out.sort_by_key(|e| e.at);
+        out
+    }
+}
+
+/// Result of a daemon run: run-level telemetry plus the windowed
+/// steady-state records and churn-plane counters.
+pub struct DaemonOutput {
+    /// Primary mode (the engine's first backend / composite plan).
+    pub mode: Mode,
+    pub telemetry: Telemetry,
+    /// Non-empty telemetry windows in time order.
+    pub windows: Vec<WindowRecord>,
+    pub joins: u64,
+    pub leaves: u64,
+    pub rerates: u64,
+}
+
+/// One steady-state telemetry window (only windows something happened in
+/// are materialized — the window map is sparse by design).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowRecord {
+    /// Window ordinal: covers `[index * window, (index + 1) * window)`.
+    pub index: u64,
+    /// Window start on the simulated timeline.
+    pub start: Duration,
+    /// Per-tenant counters, in admission (slot) order.
+    pub tenants: Vec<WindowTenant>,
+}
+
+/// One tenant's counters inside one window.  `admitted` counts frames
+/// accepted into the tenant's batcher in this window; `completed`/
+/// `misses` land in the window of their completion instant; `shed`
+/// in the window of the shed decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowTenant {
+    pub id: TenantId,
+    pub admitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub misses: u64,
+    /// Window-local capture→completion quantiles, milliseconds.  `0.0`
+    /// when nothing completed: a finite sentinel keeps `PartialEq`
+    /// replay comparison exact (`NaN != NaN` would poison it).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Event classes on the daemon calendar.  Derived `Ord` makes churn win
+/// ties (control plane first), then deadlines, then arrivals — the
+/// deadline-before-arrival tie rule matching `run_workloads`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum DaemonEvent {
+    /// A scheduled churn action (index into the flattened schedule).
+    Churn,
+    /// A tenant's batcher timeout fires (index into the slot table).
+    Deadline,
+    /// A tenant's next frame arrives (index into the slot table).
+    Arrival,
+}
+
+/// One tenant's serving state.  Slots are never reused: a retired tenant
+/// keeps its slot as a tombstone (`live = false`) so positional indexing
+/// and the `slot << TENANT_ID_SHIFT` frame-id offset stay valid for the
+/// whole run, and a name can rejoin later in a *new* slot.
+struct Slot {
+    w: Workload,
+    id: TenantId,
+    batcher: Batcher,
+    camera: Camera,
+    trace: TraceSource,
+    pending: Option<Frame>,
+    live: bool,
+    id_base: u64,
+    emitted: u64,
+    shed: u64,
+    completed: u64,
+    misses: u64,
+    latency: Streaming,
+}
+
+impl Slot {
+    /// Pull the next trace-timed frame (or park: budget exhausted).
+    fn refill(&mut self) {
+        let t = self.trace.next_arrival();
+        self.pending = self.camera.capture_at(t).map(|mut f| {
+            f.id += self.id_base;
+            f
+        });
+    }
+}
+
+/// Per-tenant counters accumulating inside one window.
+#[derive(Default)]
+struct WindowCounts {
+    admitted: u64,
+    completed: u64,
+    shed: u64,
+    misses: u64,
+    latency: Streaming,
+}
+
+/// One window under accumulation: slot index → counters (`BTreeMap` so
+/// the rendered record lists tenants in admission order).
+#[derive(Default)]
+struct WindowAccum {
+    tenants: BTreeMap<usize, WindowCounts>,
+}
+
+/// `window * index` without the `Mul<u32>` truncation hazard.
+fn window_start(window: Duration, index: u64) -> Duration {
+    const NS: u128 = 1_000_000_000;
+    let ns = window.as_nanos() * index as u128;
+    Duration::new((ns / NS) as u64, (ns % NS) as u32)
+}
+
+/// Mutable loop state bundled so the event handlers can borrow slots,
+/// heaps, and window accumulators field-disjointly.
+struct DaemonLoop {
+    window: Duration,
+    size: usize,
+    timeout: Duration,
+    base_macs: f64,
+    eval: Arc<EvalSet>,
+    schedule: Vec<ChurnEvent>,
+    slots: Vec<Slot>,
+    heap: BinaryHeap<Reverse<(Duration, DaemonEvent, usize)>>,
+    ready: ReadyQueue,
+    /// Sparse window map: only windows something landed in exist.
+    windows: BTreeMap<u64, WindowAccum>,
+    stale: u64,
+    joins: u64,
+    leaves: u64,
+    rerates: u64,
+}
+
+impl DaemonLoop {
+    /// Re-arm slot `k`'s calendar entries after its state changed.
+    /// Superseded duplicates fail the liveness check on pop, exactly
+    /// like `EventQueue::tenant_changed`.
+    fn arm(&mut self, k: usize) {
+        let s = &self.slots[k];
+        if let Some(d) = s.batcher.deadline() {
+            self.heap.push(Reverse((d, DaemonEvent::Deadline, k)));
+        }
+        if let Some(f) = &s.pending {
+            self.heap.push(Reverse((f.t_capture, DaemonEvent::Arrival, k)));
+        }
+    }
+
+    /// Lazy-invalidation liveness, daemon flavor.  Churn entries are
+    /// pushed exactly once so they are always live; frame entries must
+    /// match the slot's current state.  A frame entry that outlived a
+    /// *retired* slot is the churn-vs-calendar race this PR is about:
+    /// counted in `stale`, never a panic.  Routine supersessions on live
+    /// slots stay silent, exactly like `run_workloads`.
+    fn live(&mut self, t: Duration, kind: DaemonEvent, k: usize) -> bool {
+        let ok = match kind {
+            DaemonEvent::Churn => true,
+            DaemonEvent::Deadline => self.slots[k].batcher.deadline() == Some(t),
+            DaemonEvent::Arrival => {
+                self.slots[k].pending.as_ref().map(|f| f.t_capture) == Some(t)
+            }
+        };
+        if !ok && !self.slots[k].live {
+            self.stale += 1;
+        }
+        ok
+    }
+
+    /// Next live event, or `None`: the run is over.
+    fn next(&mut self) -> Option<(Duration, DaemonEvent, usize)> {
+        while let Some(Reverse((t, kind, k))) = self.heap.pop() {
+            if self.live(t, kind, k) {
+                return Some((t, kind, k));
+            }
+        }
+        None
+    }
+
+    /// Next live event at or before `now` (same-instant cohort drain, so
+    /// class-priority + EDF arbitration sees batches that became ready
+    /// together).
+    fn next_until(&mut self, now: Duration) -> Option<(Duration, DaemonEvent, usize)> {
+        while let Some(&Reverse((t, kind, k))) = self.heap.peek() {
+            if t > now {
+                return None;
+            }
+            self.heap.pop();
+            if self.live(t, kind, k) {
+                return Some((t, kind, k));
+            }
+        }
+        None
+    }
+
+    /// The window accumulator covering instant `t`.
+    fn win(&mut self, t: Duration) -> &mut WindowAccum {
+        let idx = (t.as_nanos() / self.window.as_nanos()) as u64;
+        self.windows.entry(idx).or_default()
+    }
+
+    fn find_live(&self, name: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.live && s.w.name == name)
+    }
+
+    /// Apply one event.  Frame events re-arm their slot; churn arms any
+    /// slot it creates.
+    fn apply(
+        &mut self,
+        engine: &dyn Engine,
+        kind: DaemonEvent,
+        k: usize,
+        now: Duration,
+    ) -> Result<()> {
+        match kind {
+            DaemonEvent::Churn => {
+                let ev = self.schedule[k].clone();
+                match ev.action {
+                    ChurnAction::Join(w, pattern) => self.join(*w, pattern, now)?,
+                    ChurnAction::Leave(name) => self.leave(&name, now),
+                    ChurnAction::Rerate { name, rate_fps } => self.rerate(&name, rate_fps),
+                }
+            }
+            DaemonEvent::Deadline => {
+                self.deadline(k, now);
+                self.arm(k);
+            }
+            DaemonEvent::Arrival => {
+                let horizon = engine.ready_at();
+                self.arrival(k, now, horizon);
+                self.arm(k);
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit a tenant mid-run: fresh slot, trace-timed arrivals starting
+    /// at the join instant.  A duplicate live name is a spec error (the
+    /// schedule is static, so this fails fast rather than serving two
+    /// tenants under one name).
+    fn join(&mut self, w: Workload, pattern: ArrivalPattern, now: Duration) -> Result<()> {
+        if self.find_live(&w.name).is_some() {
+            bail!(
+                "daemon join at {:.3}s: tenant {:?} is already live",
+                now.as_secs_f64(),
+                w.name
+            );
+        }
+        let net = models::by_name(&w.net)
+            .with_context(|| format!("tenant {:?}: unknown network {:?}", w.name, w.net))?;
+        let cost = (net.total_macs() as f64 / self.base_macs).max(0.01);
+        let k = self.slots.len();
+        let mut slot = Slot {
+            id: TenantId::intern(&w.name),
+            batcher: Batcher::new(self.size, self.timeout)
+                .with_cost(cost)
+                .with_tenant(k)
+                .with_constraints(w.constraints),
+            camera: Camera::new(self.eval.clone(), w.rate_fps, w.frames),
+            trace: TraceSource::new(w.rate_fps, pattern, now),
+            pending: None,
+            live: true,
+            id_base: (k as u64) << TENANT_ID_SHIFT,
+            emitted: 0,
+            shed: 0,
+            completed: 0,
+            misses: 0,
+            latency: Streaming::new(),
+            w,
+        };
+        slot.refill();
+        self.slots.push(slot);
+        self.arm(k);
+        self.joins += 1;
+        Ok(())
+    }
+
+    /// Retire a tenant: its un-arrived frames stop (never emitted, so
+    /// conservation is unaffected), but the partial batch already
+    /// admitted into its batcher flushes and dispatches — admitted
+    /// frames are never dropped by churn.  An unknown name is stale
+    /// churn: counted, not fatal (the tenant may have drained its
+    /// budget before the scheduled leave).
+    fn leave(&mut self, name: &str, now: Duration) {
+        let Some(k) = self.find_live(name) else {
+            self.stale += 1;
+            return;
+        };
+        self.slots[k].live = false;
+        self.slots[k].pending = None;
+        if let Some(batch) = self.slots[k].batcher.flush(now) {
+            enqueue(&mut self.ready, &self.slots[k].w, batch);
+        }
+        self.leaves += 1;
+    }
+
+    /// Change a tenant's base arrival rate in place: future trace steps
+    /// use the new rate; the already-drawn pending arrival stands.
+    fn rerate(&mut self, name: &str, rate_fps: f64) {
+        let Some(k) = self.find_live(name) else {
+            self.stale += 1;
+            return;
+        };
+        self.slots[k].w.rate_fps = rate_fps;
+        self.slots[k].trace.set_rate(rate_fps);
+        self.rerates += 1;
+    }
+
+    /// A batcher timeout: dispatch the timed-out partial batch.
+    fn deadline(&mut self, k: usize, now: Duration) {
+        let s = &mut self.slots[k];
+        let due = match s.batcher.poll(now) {
+            Some(b) => Some(b),
+            // Unreachable by construction (the deadline is oldest +
+            // timeout); the forced flush guards against spinning.
+            None => s.batcher.flush(now),
+        };
+        if let Some(batch) = due {
+            enqueue(&mut self.ready, &s.w, batch);
+        }
+    }
+
+    /// A frame arrival: admit into the batcher or shed on backpressure,
+    /// mirroring `handle_event` — including the validated-and-skipped
+    /// stale path (churn can retire the supply between scheduling and
+    /// delivery).
+    fn arrival(&mut self, k: usize, now: Duration, horizon: Duration) {
+        let Some(frame) = self.slots[k].pending.take() else {
+            self.stale += 1;
+            return;
+        };
+        self.slots[k].refill();
+        self.slots[k].emitted += 1;
+        let (qos, deadline) = (self.slots[k].w.qos, self.slots[k].w.deadline);
+        if qos.sheddable() && horizon > frame.t_capture + deadline {
+            // Admission backpressure: the frame cannot even start before
+            // its deadline — shed it plus the tenant's pending (older)
+            // frames.  Counted, never silent.
+            let n = self.slots[k].batcher.shed().len() as u64 + 1;
+            self.slots[k].shed += n;
+            self.win(now).tenants.entry(k).or_default().shed += n;
+        } else {
+            self.win(now).tenants.entry(k).or_default().admitted += 1;
+            if let Some(batch) = self.slots[k].batcher.push(frame) {
+                enqueue(&mut self.ready, &self.slots[k].w, batch);
+            }
+        }
+    }
+
+    /// Dispatch every ready batch: strict class priority, EDF within a
+    /// class, dispatch-time shedding for saturated sheddable batches.
+    fn dispatch(&mut self, engine: &mut dyn Engine, now: Duration) -> Result<()> {
+        while let Some((deadline, batch)) = self.ready.pop() {
+            let start = engine.ready_at().max(now);
+            let k = batch.tenant;
+            if self.slots[k].w.qos.sheddable() && start > deadline {
+                let n = batch.real_count() as u64;
+                self.slots[k].shed += n;
+                self.win(now).tenants.entry(k).or_default().shed += n;
+                continue;
+            }
+            engine.submit(&batch)?;
+        }
+        Ok(())
+    }
+
+    /// Account one completion on the virtual timeline, into both the
+    /// run-level digest and the window of the completion instant.  The
+    /// pose estimates drop here by design: the daemon's product is
+    /// windowed telemetry, and an unbounded horizon must not grow a
+    /// per-frame `Vec`.
+    fn account(&mut self, c: Completion) {
+        let done = c.t_done;
+        let deadline = self.slots[c.tenant].w.deadline;
+        for t_cap in &c.t_captures {
+            let lat = done.saturating_sub(*t_cap);
+            let lat_s = lat.as_secs_f64();
+            self.slots[c.tenant].latency.add(lat_s);
+            let wt = self.win(done).tenants.entry(c.tenant).or_default();
+            wt.latency.add(lat_s);
+            if lat > deadline {
+                self.slots[c.tenant].misses += 1;
+                self.win(done).tenants.entry(c.tenant).or_default().misses += 1;
+            }
+        }
+        let n = c.estimates.len() as u64;
+        self.slots[c.tenant].completed += n;
+        self.win(done).tenants.entry(c.tenant).or_default().completed += n;
+    }
+
+    /// Materialize the sparse window map into time-ordered records.
+    fn render_windows(&self) -> Vec<WindowRecord> {
+        fn q_ms(d: &Streaming, f: fn(&Streaming) -> f64) -> f64 {
+            if d.is_empty() {
+                0.0
+            } else {
+                f(d) * 1e3
+            }
+        }
+        self.windows
+            .iter()
+            .map(|(&index, acc)| WindowRecord {
+                index,
+                start: window_start(self.window, index),
+                tenants: acc
+                    .tenants
+                    .iter()
+                    .map(|(&k, c)| WindowTenant {
+                        id: self.slots[k].id,
+                        admitted: c.admitted,
+                        completed: c.completed,
+                        shed: c.shed,
+                        misses: c.misses,
+                        p50_ms: q_ms(&c.latency, Streaming::p50),
+                        p99_ms: q_ms(&c.latency, Streaming::p99),
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// Run the daemon: serve the spec's tenant lifecycles plus extra churn on
+/// one shared engine until every trace ends (budgets drained or tenants
+/// retired).  Deterministic on the simulated clock; paced in real time on
+/// the wall clock (`Config::executor`), with identical virtual-timeline
+/// accounting either way.
+pub fn run_daemon(
+    config: &Config,
+    eval: Arc<EvalSet>,
+    engine: &mut dyn Engine,
+    spec: &DaemonSpec,
+) -> Result<DaemonOutput> {
+    if spec.window.is_zero() {
+        bail!("daemon telemetry window must be positive");
+    }
+    let schedule = spec.schedule();
+    if !schedule
+        .iter()
+        .any(|e| matches!(e.action, ChurnAction::Join(..)))
+    {
+        bail!("daemon needs at least one tenant lifecycle or join event");
+    }
+    let mode = engine.primary_mode()?;
+    engine.set_frame_record_cap(FRAME_RECORD_CAP);
+    let base_macs = models::ursonet::build_full().total_macs() as f64;
+    let mut d = DaemonLoop {
+        window: spec.window,
+        size: engine.artifact_batch(),
+        timeout: config.batch_timeout,
+        base_macs,
+        eval,
+        schedule,
+        slots: Vec::new(),
+        heap: BinaryHeap::new(),
+        ready: ReadyQueue::new(EventQueueKind::Calendar),
+        windows: BTreeMap::new(),
+        stale: 0,
+        joins: 0,
+        leaves: 0,
+        rerates: 0,
+    };
+    // The whole churn schedule goes on the calendar upfront: each entry
+    // is unique, so churn entries are always live when popped.
+    for (i, ev) in d.schedule.iter().enumerate() {
+        d.heap.push(Reverse((ev.at, DaemonEvent::Churn, i)));
+    }
+
+    let mut clock = config.clock();
+    loop {
+        let Some((now, kind, k)) = d.next() else {
+            break;
+        };
+        clock.wait_until(now);
+        d.apply(&*engine, kind, k, now)?;
+        while let Some((t, kind2, k2)) = d.next_until(now) {
+            d.apply(&*engine, kind2, k2, t)?;
+        }
+        d.dispatch(engine, now)?;
+        for c in engine.poll() {
+            d.account(c);
+        }
+    }
+    engine.drain()?;
+    for c in engine.poll() {
+        d.account(c);
+    }
+
+    let mut telemetry = engine.take_telemetry();
+    telemetry.stale_events = d.stale;
+    if let Some(w) = clock.wall_elapsed() {
+        telemetry.measured_elapsed_s = Some(w.as_secs_f64());
+    }
+    for s in &d.slots {
+        telemetry.record_tenant(TenantRecord {
+            id: s.id,
+            qos: s.w.qos.label(),
+            net: s.w.net.clone(),
+            // Plan annotation is a fixed-run nicety; daemon slots skip it
+            // (the pipelined engine still resolves plans per batch).
+            plan: None,
+            deadline: s.w.deadline,
+            admitted: s.emitted - s.shed,
+            completed: s.completed,
+            shed: s.shed,
+            deadline_misses: s.misses,
+            latency: s.latency.clone(),
+        });
+    }
+    Ok(DaemonOutput {
+        mode,
+        telemetry,
+        windows: d.render_windows(),
+        joins: d.joins,
+        leaves: d.leaves,
+        rerates: d.rerates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::policy::{profile_modes, Constraints, QosClass};
+    use crate::coordinator::sim::SimBackend;
+    use crate::runtime::artifacts::Manifest;
+    use crate::testkit::{check, Config as PropConfig};
+
+    fn pool(vpu_fail_at: Vec<usize>) -> Dispatcher {
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
+        let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+        d.add_backend(
+            Box::new(SimBackend::new(Mode::DpuInt8, &profiles[&Mode::DpuInt8], 31)),
+            Some(profiles[&Mode::DpuInt8]),
+        );
+        d.add_backend(
+            Box::new(
+                SimBackend::new(Mode::VpuFp16, &profiles[&Mode::VpuFp16], 32)
+                    .with_fail_at(vpu_fail_at),
+            ),
+            Some(profiles[&Mode::VpuFp16]),
+        );
+        d
+    }
+
+    fn tiny_eval() -> Arc<EvalSet> {
+        Arc::new(EvalSet::synthetic(6, 12, 16, 42))
+    }
+
+    fn cfg(timeout_ms: u64) -> Config {
+        Config {
+            sim: true,
+            batch_timeout: Duration::from_millis(timeout_ms),
+            ..Default::default()
+        }
+    }
+
+    fn workload(name: &str, qos: QosClass, deadline_ms: u64, rate: f64, frames: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos,
+            deadline: Duration::from_millis(deadline_ms),
+            rate_fps: rate,
+            frames,
+            constraints: Constraints::default(),
+        }
+    }
+
+    fn spec(tenants: Vec<TenantTrace>, churn: Vec<ChurnEvent>) -> DaemonSpec {
+        DaemonSpec {
+            window: Duration::from_secs(2),
+            tenants,
+            churn,
+        }
+    }
+
+    fn by_name<'a>(t: &'a Telemetry, name: &str) -> &'a TenantRecord {
+        t.tenants
+            .iter()
+            .find(|r| r.name() == name)
+            .unwrap_or_else(|| panic!("no tenant {name:?}"))
+    }
+
+    #[test]
+    fn empty_and_zero_window_specs_are_errors() {
+        let mut engine = pool(vec![]);
+        let r = run_daemon(&cfg(50), tiny_eval(), &mut engine, &spec(vec![], vec![]));
+        assert!(r.is_err(), "no tenants must be an error");
+        let mut engine = pool(vec![]);
+        let mut s = spec(
+            vec![TenantTrace::steady(workload(
+                "a",
+                QosClass::Standard,
+                5000,
+                10.0,
+                4,
+            ))],
+            vec![],
+        );
+        s.window = Duration::ZERO;
+        assert!(run_daemon(&cfg(50), tiny_eval(), &mut engine, &s).is_err());
+    }
+
+    #[test]
+    fn steady_tenants_serve_every_frame_with_windowed_telemetry() {
+        let s = spec(
+            vec![
+                TenantTrace::steady(workload("rt", QosClass::Realtime, 8000, 10.0, 23)),
+                TenantTrace::steady(workload("std", QosClass::Standard, 9000, 6.0, 11)),
+            ],
+            vec![],
+        );
+        let mut engine = pool(vec![]);
+        let out = run_daemon(&cfg(200), tiny_eval(), &mut engine, &s).unwrap();
+        assert_eq!((out.joins, out.leaves, out.rerates), (2, 0, 0));
+        let rt = by_name(&out.telemetry, "rt");
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (23, 23, 0));
+        let st = by_name(&out.telemetry, "std");
+        assert_eq!((st.admitted, st.completed, st.shed), (11, 11, 0));
+        // Windowed telemetry: the per-window counters tile the run totals.
+        assert!(!out.windows.is_empty());
+        let sum: u64 = out
+            .windows
+            .iter()
+            .flat_map(|w| &w.tenants)
+            .map(|t| t.completed)
+            .sum();
+        assert_eq!(sum, 34, "window completions must tile the run total");
+        // 10 fps for 23 frames = 2.2 s: at least two 2-s windows exist.
+        assert!(out.windows.len() >= 2, "{} windows", out.windows.len());
+    }
+
+    #[test]
+    fn churn_joins_leaves_and_rerates_mid_run() {
+        // "std" is present from the start; "probe" joins at 2 s and is
+        // forced out at 6 s with frames to spare; "std" re-rates at 4 s.
+        let mut probe = TenantTrace::steady(workload(
+            "probe",
+            QosClass::Background,
+            2000,
+            10.0,
+            1000,
+        ));
+        probe.join_at = Duration::from_secs(2);
+        probe.leave_at = Some(Duration::from_secs(6));
+        let mut std_t = TenantTrace::steady(workload("std", QosClass::Standard, 9000, 4.0, 40));
+        std_t.rerates = vec![(Duration::from_secs(4), 16.0)];
+        let s = spec(vec![std_t, probe], vec![]);
+        let mut engine = pool(vec![]);
+        let out = run_daemon(&cfg(300), tiny_eval(), &mut engine, &s).unwrap();
+        assert_eq!((out.joins, out.leaves, out.rerates), (2, 1, 1));
+        let probe = by_name(&out.telemetry, "probe");
+        // Retired early: nowhere near its 1000-frame budget, but every
+        // admitted frame still completed or was counted shed.
+        assert!(probe.admitted < 1000);
+        assert!(probe.admitted > 0, "probe never served");
+        assert_eq!(probe.completed, probe.admitted);
+        // The rerate quadruples std's rate mid-run, so 40 frames take
+        // well under the steady-rate 10 s.
+        let st = by_name(&out.telemetry, "std");
+        assert_eq!((st.admitted, st.completed), (40, 40));
+    }
+
+    #[test]
+    fn stale_churn_and_stale_arrivals_are_counted_not_fatal() {
+        // Leaving a name that never joined, re-rating a retired tenant,
+        // and the retired tenant's own in-flight calendar entries all
+        // land in `stale_events`.
+        let mut bg = TenantTrace::steady(workload("bg", QosClass::Background, 2000, 20.0, 500));
+        bg.leave_at = Some(Duration::from_secs(3));
+        let s = spec(
+            vec![bg],
+            vec![
+                ChurnEvent::parse("leave@1:ghost").unwrap(),
+                ChurnEvent::parse("rerate@5:bg=40").unwrap(),
+            ],
+        );
+        let mut engine = pool(vec![]);
+        let out = run_daemon(&cfg(100), tiny_eval(), &mut engine, &s).unwrap();
+        assert_eq!(out.leaves, 1, "only the real tenant leaves");
+        assert_eq!(out.rerates, 0, "rerate after leave is stale");
+        assert!(
+            out.telemetry.stale_events >= 2,
+            "ghost leave + post-leave rerate: {} stale",
+            out.telemetry.stale_events
+        );
+    }
+
+    #[test]
+    fn duplicate_live_join_is_an_error() {
+        let s = spec(
+            vec![
+                TenantTrace::steady(workload("dup", QosClass::Standard, 5000, 10.0, 50)),
+                TenantTrace::steady(workload("dup", QosClass::Standard, 5000, 10.0, 50)),
+            ],
+            vec![],
+        );
+        let mut engine = pool(vec![]);
+        let err = run_daemon(&cfg(100), tiny_eval(), &mut engine, &s).unwrap_err();
+        assert!(format!("{err:#}").contains("already live"), "{err:#}");
+    }
+
+    #[test]
+    fn replay_is_bit_identical_on_the_sim_clock() {
+        let mut flash = TenantTrace::steady(workload(
+            "flash",
+            QosClass::Background,
+            1500,
+            12.0,
+            300,
+        ));
+        flash.pattern = ArrivalPattern::parse("flash,factor=6,at_s=4,ramp_s=1,hold_s=3").unwrap();
+        flash.join_at = Duration::from_secs(1);
+        flash.leave_at = Some(Duration::from_secs(14));
+        let mut diurnal = TenantTrace::steady(workload("di", QosClass::Standard, 6000, 8.0, 80));
+        diurnal.pattern = ArrivalPattern::parse("diurnal,amplitude=0.5,period_s=8").unwrap();
+        diurnal.rerates = vec![(Duration::from_secs(6), 14.0)];
+        let s = spec(vec![diurnal, flash], vec![]);
+
+        let run = || {
+            let mut engine = pool(vec![5, 11]);
+            run_daemon(&cfg(250), tiny_eval(), &mut engine, &s).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.windows, b.windows, "windowed telemetry diverged");
+        assert_eq!(
+            (a.joins, a.leaves, a.rerates),
+            (b.joins, b.leaves, b.rerates)
+        );
+        assert_eq!(a.telemetry.stale_events, b.telemetry.stale_events);
+        for (x, y) in a.telemetry.tenants.iter().zip(&b.telemetry.tenants) {
+            assert_eq!(
+                (x.admitted, x.completed, x.shed, x.deadline_misses),
+                (y.admitted, y.completed, y.shed, y.deadline_misses),
+                "tenant {} accounting diverged",
+                x.name()
+            );
+            // Same event order ⇒ same digest insertion order ⇒ the
+            // streaming digests match bit for bit, P² markers included.
+            assert_eq!(x.latency_summary(), y.latency_summary());
+        }
+    }
+
+    #[test]
+    fn property_churn_conserves_every_admitted_frame() {
+        // THE daemon acceptance invariant: random tenant mixes with
+        // random join/leave/rerate schedules and backend faults never
+        // lose or duplicate an admitted frame, never shed a
+        // realtime/standard frame, tile run totals exactly into
+        // windows, and replay bit-identically.
+        let eval = tiny_eval();
+        check(
+            "daemon_churn_conservation",
+            PropConfig {
+                cases: 24,
+                ..Default::default()
+            },
+            move |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let mut tenants = Vec::new();
+                for k in 0..n_tenants {
+                    let qos = match ctx.rng.below(3) {
+                        0 => QosClass::Realtime,
+                        1 => QosClass::Standard,
+                        _ => QosClass::Background,
+                    };
+                    let mut t = TenantTrace::steady(workload(
+                        &format!("t{k}"),
+                        qos,
+                        50 + ctx.rng.below(3000) as u64,
+                        1.0 + ctx.rng.below(40) as f64,
+                        1 + ctx.rng.below(30) as u64,
+                    ));
+                    t.join_at = Duration::from_millis(ctx.rng.below(4000) as u64);
+                    if ctx.rng.below(2) == 1 {
+                        t.leave_at = Some(t.join_at + Duration::from_millis(1 + ctx.rng.below(5000) as u64));
+                    }
+                    if ctx.rng.below(2) == 1 {
+                        t.rerates = vec![(
+                            t.join_at + Duration::from_millis(ctx.rng.below(3000) as u64),
+                            1.0 + ctx.rng.below(60) as f64,
+                        )];
+                    }
+                    tenants.push(t);
+                }
+                let faults: Vec<usize> = {
+                    let mut s = std::collections::BTreeSet::new();
+                    for _ in 0..ctx.rng.below(16) {
+                        s.insert(1 + ctx.rng.below(40));
+                    }
+                    s.into_iter().collect()
+                };
+                let timeout = 1 + ctx.rng.below(600) as u64;
+                let s = DaemonSpec {
+                    window: Duration::from_millis(500 + ctx.rng.below(4000) as u64),
+                    tenants,
+                    churn: vec![],
+                };
+                let run = || -> Result<DaemonOutput, String> {
+                    let mut engine = pool(faults.clone());
+                    run_daemon(&cfg(timeout), eval.clone(), &mut engine, &s)
+                        .map_err(|e| format!("{e:#}"))
+                };
+                let out = run()?;
+
+                for t in &out.telemetry.tenants {
+                    crate::prop_assert!(
+                        t.completed == t.admitted,
+                        "tenant {}: completed {} != admitted {}",
+                        t.name(),
+                        t.completed,
+                        t.admitted
+                    );
+                    crate::prop_assert!(
+                        t.qos == "background" || t.shed == 0,
+                        "non-background tenant {} shed {}",
+                        t.name(),
+                        t.shed
+                    );
+                    crate::prop_assert!(
+                        t.latency_summary().len() as u64 == t.completed,
+                        "tenant {}: {} latencies for {} completions",
+                        t.name(),
+                        t.latency_summary().len(),
+                        t.completed
+                    );
+                    // Run totals tile exactly into the windows.
+                    let (mut wc, mut ws, mut wm) = (0u64, 0u64, 0u64);
+                    for w in &out.windows {
+                        for wt in w.tenants.iter().filter(|wt| wt.id == t.id) {
+                            wc += wt.completed;
+                            ws += wt.shed;
+                            wm += wt.misses;
+                        }
+                    }
+                    crate::prop_assert!(
+                        (wc, ws, wm) == (t.completed, t.shed, t.deadline_misses),
+                        "tenant {}: windows ({wc}, {ws}, {wm}) vs run ({}, {}, {})",
+                        t.name(),
+                        t.completed,
+                        t.shed,
+                        t.deadline_misses
+                    );
+                }
+                // Bit-identical replay.
+                let again = run()?;
+                crate::prop_assert!(
+                    out.windows == again.windows,
+                    "windowed telemetry diverged across replays"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn frame_records_are_capped_in_daemon_mode() {
+        // Run-level telemetry memory must not scale with the horizon:
+        // the engine's per-frame records stop at FRAME_RECORD_CAP (here
+        // trivially under it, but the cap must be installed).
+        let s = spec(
+            vec![TenantTrace::steady(workload(
+                "a",
+                QosClass::Standard,
+                5000,
+                20.0,
+                12,
+            ))],
+            vec![],
+        );
+        let mut engine = pool(vec![]);
+        let out = run_daemon(&cfg(100), tiny_eval(), &mut engine, &s).unwrap();
+        assert!(out.telemetry.records.len() <= FRAME_RECORD_CAP);
+        assert_eq!(out.telemetry.records_dropped, 0);
+    }
+}

@@ -315,6 +315,10 @@ impl Engine for Dispatcher {
     fn take_telemetry(&mut self) -> Telemetry {
         std::mem::take(&mut self.telemetry)
     }
+
+    fn set_frame_record_cap(&mut self, cap: usize) {
+        self.telemetry.frame_record_cap = Some(cap);
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,7 @@ use crate::coordinator::telemetry::{Telemetry, TenantRecord};
 use crate::net::models;
 use crate::pose::EvalSet;
 use crate::sensor::{Camera, Frame};
+use crate::util::stats::Streaming;
 
 /// Tenant frame ids are offset by `tenant << TENANT_ID_SHIFT` so ids stay
 /// unique across tenants (2^40 frames per tenant before collision).
@@ -144,6 +145,11 @@ pub trait Engine {
     fn drain(&mut self) -> Result<()>;
     /// Move the run telemetry out of the engine.
     fn take_telemetry(&mut self) -> Telemetry;
+    /// Bound the engine's per-frame record retention (daemon mode: an
+    /// unbounded horizon must not grow a per-frame `Vec`; overflow is
+    /// counted in `Telemetry::records_dropped`).  Default no-op for
+    /// engines without per-frame records.
+    fn set_frame_record_cap(&mut self, _cap: usize) {}
 }
 
 /// Which serve-loop scheduling implementation drives [`run_workloads`]:
@@ -185,7 +191,10 @@ struct Tenant {
     shed: u64,
     completed: u64,
     misses: u64,
-    latencies_s: Vec<f64>,
+    /// Bounded streaming latency digest (exact count/min/max, P² p50/p99)
+    /// — O(1) memory however many frames the tenant serves (ISSUE 7:
+    /// the per-frame `Vec<f64>` grew without bound on daemon horizons).
+    latency: Streaming,
 }
 
 impl Tenant {
@@ -356,7 +365,7 @@ impl Ord for ReadyEntry {
 /// one stable `(class, deadline)` sort per dispatch round for the scan
 /// reference — so the equivalence oracle covers the heap replacement,
 /// not just the event-source swap.
-struct ReadyQueue {
+pub(crate) struct ReadyQueue {
     kind: EventQueueKind,
     classes: [BinaryHeap<Reverse<ReadyEntry>>; 3],
     /// Scan reference only: pending entries, sorted (descending, popped
@@ -367,7 +376,7 @@ struct ReadyQueue {
 }
 
 impl ReadyQueue {
-    fn new(kind: EventQueueKind) -> ReadyQueue {
+    pub(crate) fn new(kind: EventQueueKind) -> ReadyQueue {
         ReadyQueue {
             kind,
             classes: [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()],
@@ -377,7 +386,7 @@ impl ReadyQueue {
         }
     }
 
-    fn push(&mut self, qos: QosClass, deadline: Duration, batch: Batch) {
+    pub(crate) fn push(&mut self, qos: QosClass, deadline: Duration, batch: Batch) {
         let seq = self.next_seq;
         self.next_seq += 1;
         let entry = ReadyEntry {
@@ -396,7 +405,7 @@ impl ReadyQueue {
 
     /// Highest-priority ready batch: classes in [`QosClass`] order, EDF
     /// (then enqueue order) within a class.
-    fn pop(&mut self) -> Option<(Duration, Batch)> {
+    pub(crate) fn pop(&mut self) -> Option<(Duration, Batch)> {
         match self.kind {
             EventQueueKind::Calendar => {
                 for class in &mut self.classes {
@@ -448,7 +457,7 @@ fn pool_accel_names(config: &Config) -> Vec<String> {
     names
 }
 
-fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
+pub(crate) fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
     let oldest = batch
         .frames
         .first()
@@ -459,6 +468,9 @@ fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
 
 /// Apply one event: move frames into the tenant's batcher (or shed on
 /// arrival backpressure) and enqueue any batch that became ready.
+/// A stale arrival — the event outlived its tenant's frame supply, which
+/// churn can force — is validated and skipped (counted in `stale`),
+/// consistent with the calendar's lazy-invalidation design: never a panic.
 fn handle_event(
     tenants: &mut [Tenant],
     engine: &dyn Engine,
@@ -466,6 +478,7 @@ fn handle_event(
     event: EventKind,
     k: usize,
     t_event: Duration,
+    stale: &mut u64,
 ) {
     match event {
         EventKind::Deadline => {
@@ -484,7 +497,10 @@ fn handle_event(
         EventKind::Arrival => {
             let horizon = engine.ready_at();
             let t = &mut tenants[k];
-            let frame = t.pending.take().expect("arrival implies a pending frame");
+            let Some(frame) = t.pending.take() else {
+                *stale += 1;
+                return;
+            };
             t.refill();
             t.emitted += 1;
             // Admission backpressure: a background frame that cannot
@@ -584,7 +600,7 @@ pub fn run_workloads_with_events(
             shed: 0,
             completed: 0,
             misses: 0,
-            latencies_s: Vec::new(),
+            latency: Streaming::new(),
             w: w.clone(),
         };
         t.refill();
@@ -599,7 +615,7 @@ pub fn run_workloads_with_events(
         let t = &mut tenants[c.tenant];
         for t_cap in &c.t_captures {
             let lat = c.t_done.saturating_sub(*t_cap);
-            t.latencies_s.push(lat.as_secs_f64());
+            t.latency.add(lat.as_secs_f64());
             if lat > t.w.deadline {
                 t.misses += 1;
             }
@@ -612,6 +628,7 @@ pub fn run_workloads_with_events(
     let mut estimates: Vec<PoseEstimate> = Vec::new();
     let mut ready = ReadyQueue::new(events);
     let mut queue = EventQueue::new(events, &tenants);
+    let mut stale = 0u64;
     loop {
         let Some((now, event, k)) = queue.next(&tenants) else {
             break;
@@ -619,14 +636,14 @@ pub fn run_workloads_with_events(
         // Pace the loop: free on the simulated clock, a real sleep on the
         // wall clock (in-flight threaded work services meanwhile).
         clock.wait_until(now);
-        handle_event(&mut tenants, &*engine, &mut ready, event, k, now);
+        handle_event(&mut tenants, &*engine, &mut ready, event, k, now, &mut stale);
         queue.tenant_changed(k, &tenants[k]);
         // Drain every event scheduled at the same simulated instant before
         // dispatching, so the class-priority + EDF arbitration below
         // actually sees batches that become ready together (events only
         // move forward in time, so this inner loop terminates).
         while let Some((t_next, ev, kn)) = queue.next_until(&tenants, now) {
-            handle_event(&mut tenants, &*engine, &mut ready, ev, kn, t_next);
+            handle_event(&mut tenants, &*engine, &mut ready, ev, kn, t_next, &mut stale);
             queue.tenant_changed(kn, &tenants[kn]);
         }
 
@@ -660,6 +677,7 @@ pub fn run_workloads_with_events(
     }
 
     let mut telemetry = engine.take_telemetry();
+    telemetry.stale_events = stale;
     if let Some(d) = clock.wall_elapsed() {
         telemetry.measured_elapsed_s = Some(d.as_secs_f64());
     }
@@ -684,7 +702,7 @@ pub fn run_workloads_with_events(
             completed: t.completed,
             shed: t.shed,
             deadline_misses: t.misses,
-            latencies_s: t.latencies_s,
+            latency: t.latency,
         });
     }
     Ok(RunOutput {
@@ -784,7 +802,7 @@ mod tests {
         assert_eq!(out.estimates.len(), 17);
         let t = &out.telemetry.tenants[0];
         assert_eq!((t.admitted, t.completed, t.shed), (17, 17, 0));
-        assert_eq!(t.latencies_s.len(), 17);
+        assert_eq!(t.latency_summary().len(), 17);
     }
 
     #[test]
@@ -896,7 +914,14 @@ mod tests {
                 "tenant {} accounting diverged",
                 a.name()
             );
-            assert_eq!(a.latencies_s, b.latencies_s, "tenant {} latencies", a.name());
+            // Same dispatch order ⇒ same insertion order ⇒ the streaming
+            // digests are bit-identical, P² markers included.
+            assert_eq!(
+                a.latency_summary(),
+                b.latency_summary(),
+                "tenant {} latency digest",
+                a.name()
+            );
         }
     }
 
@@ -973,8 +998,8 @@ mod tests {
                         b.deadline_misses
                     );
                     crate::prop_assert!(
-                        a.latencies_s == b.latencies_s,
-                        "tenant {k}: latency sequences diverge"
+                        a.latency_summary() == b.latency_summary(),
+                        "tenant {k}: latency digests diverge"
                     );
                 }
                 Ok(())
@@ -1033,9 +1058,9 @@ mod tests {
                         t.shed
                     );
                     crate::prop_assert!(
-                        t.latencies_s.len() as u64 == t.completed,
+                        t.latency_summary().len() as u64 == t.completed,
                         "tenant {k}: {} latencies for {} completions",
-                        t.latencies_s.len(),
+                        t.latency_summary().len(),
                         t.completed
                     );
                     total_completed += t.completed;

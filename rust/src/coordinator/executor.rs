@@ -332,6 +332,10 @@ impl Engine for ThreadedExecutor {
         t.measured_elapsed_s = self.measured_elapsed_s;
         t
     }
+
+    fn set_frame_record_cap(&mut self, cap: usize) {
+        self.inner.set_frame_record_cap(cap);
+    }
 }
 
 impl Drop for ThreadedExecutor {
@@ -586,13 +590,34 @@ mod tests {
                         tenant_counts(s),
                         tenant_counts(t)
                     );
-                    let mut ls = s.latencies_s.clone();
-                    let mut lt = t.latencies_s.clone();
-                    ls.sort_by(f64::total_cmp);
-                    lt.sort_by(f64::total_cmp);
+                    // The streaming digest is fed in completion-arrival
+                    // order, and the threaded executor surfaces
+                    // completions across polls in host-scheduling order —
+                    // so only the order-insensitive digest parts compare
+                    // exactly (count/min/max; mean to Welford rounding).
+                    // Quantile estimates are compared where insertion
+                    // order IS reproducible: calendar-vs-scan and daemon
+                    // replay determinism.
+                    let (ls, lt) = (s.latency_summary(), t.latency_summary());
+                    let agree = ls.len() == lt.len()
+                        && (ls.is_empty()
+                            || (ls.min() == lt.min()
+                                && ls.max() == lt.max()
+                                && (ls.mean() - lt.mean()).abs()
+                                    <= 1e-9 * ls.mean().abs().max(1.0)));
                     crate::prop_assert!(
-                        ls == lt,
-                        "tenant {k}: latency multisets diverge"
+                        agree,
+                        "tenant {k}: latency digests diverge \
+                         (sim n={} min={} max={} mean={}; \
+                         threaded n={} min={} max={} mean={})",
+                        ls.len(),
+                        ls.min(),
+                        ls.max(),
+                        ls.mean(),
+                        lt.len(),
+                        lt.min(),
+                        lt.max(),
+                        lt.mean()
                     );
                 }
                 crate::prop_assert!(
@@ -629,7 +654,7 @@ mod tests {
             ThreadedExecutor::new(Box::new(pool((1..=50).collect())), ServiceMode::Off);
         let thr = run_workloads(&cfg(300), tiny_eval(), &mut thr_engine, &ws).unwrap();
         for (s, t) in sim.telemetry.tenants.iter().zip(&thr.telemetry.tenants) {
-            assert_eq!(tenant_counts(s), tenant_counts(t), "tenant {}", s.name);
+            assert_eq!(tenant_counts(s), tenant_counts(t), "tenant {}", s.name());
         }
         assert_eq!(tenant_counts(&thr.telemetry.tenants[0]), (20, 20, 0, 0));
     }

@@ -7,6 +7,7 @@ pub mod backend;
 pub mod batcher;
 pub mod clock;
 pub mod config;
+pub mod daemon;
 pub mod dispatcher;
 pub mod engine;
 pub mod executor;
@@ -18,6 +19,7 @@ pub mod server;
 pub mod sim;
 pub mod substrate;
 pub mod telemetry;
+pub mod trace;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
@@ -25,6 +27,7 @@ pub use clock::{Clock, ServiceMode, SimClock, WallClock};
 pub use config::{
     parse_tenant_file, Config, ExecutorKind, ManualStage, Mode, PartitionSpec, Workload,
 };
+pub use daemon::{run_daemon, DaemonOutput, DaemonSpec, WindowRecord, WindowTenant};
 pub use dispatcher::Dispatcher;
 pub use engine::{
     run_workloads, run_workloads_with_events, Completion, Engine, EventQueueKind, RunOutput,
@@ -37,7 +40,12 @@ pub use pipeline::{
 pub use plan_cache::{CacheKey, PlanCache, PlanCacheStats};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
-pub use server::{run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool};
+pub use server::{
+    run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool, serve_daemon,
+};
 pub use sim::SimBackend;
 pub use substrate::{SubstrateId, TenantId};
 pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};
+pub use trace::{
+    parse_trace_file, ArrivalPattern, ChurnAction, ChurnEvent, TenantTrace, TraceSource,
+};

@@ -18,6 +18,7 @@ use crate::coordinator::backend::PjrtBackend;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::clock::{Clock as _, ServiceMode};
 use crate::coordinator::config::{Config, ExecutorKind, Mode, PartitionSpec};
+use crate::coordinator::daemon::{run_daemon, DaemonOutput, DaemonSpec};
 use crate::coordinator::dispatcher::Dispatcher;
 use crate::coordinator::engine::{run_workloads, Engine, RunOutput};
 use crate::coordinator::executor::ThreadedExecutor;
@@ -100,6 +101,40 @@ pub fn run(config: &Config) -> Result<RunOutput> {
     } else {
         run_workloads(config, eval, engine.as_mut(), &config.workloads)
     }
+}
+
+/// Build the serve engine from `config` and drive it through the daemon
+/// loop (`mpai daemon`): live tenant churn, trace-driven arrivals,
+/// windowed steady-state telemetry.  Daemon mode is simulation-only for
+/// the same reason multi-tenant serve is (per-network PJRT artifacts are
+/// not compiled); the threaded executor composes exactly as in [`run`].
+pub fn serve_daemon(config: &Config, spec: &DaemonSpec) -> Result<DaemonOutput> {
+    if !config.sim {
+        bail!(
+            "daemon mode requires --sim: tenant churn binds simulated \
+             engines (per-network PJRT artifacts are not compiled)"
+        );
+    }
+    let manifest = Manifest::synthetic()?;
+    let eval = Arc::new(EvalSet::synthetic(
+        manifest.eval_count,
+        manifest.camera.0,
+        manifest.camera.1,
+        42,
+    ));
+    let mut engine: Box<dyn Engine> = match &config.partition {
+        Some(part) => Box::new(build_pipeline_engine(config, part, &manifest)?),
+        None => Box::new(build_pool_engine(config, &manifest)?),
+    };
+    if config.executor == ExecutorKind::Threaded {
+        engine = Box::new(ThreadedExecutor::new(
+            engine,
+            ServiceMode::Sleep {
+                time_scale: config.time_scale,
+            },
+        ));
+    }
+    run_daemon(config, eval, engine.as_mut(), spec)
 }
 
 /// Build the whole-frame dispatch pool: one backend per engaged mode
@@ -972,5 +1007,70 @@ mod tests {
             ..base
         };
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn daemon_requires_sim_and_serves_churn_end_to_end() {
+        use crate::coordinator::trace::{ChurnEvent, TenantTrace};
+        let spec = DaemonSpec {
+            window: Duration::from_secs(2),
+            tenants: vec![TenantTrace::steady(
+                Workload::parse("rt:net=ursonet,qos=realtime,deadline_ms=8000,rate=10,frames=20")
+                    .unwrap(),
+            )],
+            churn: vec![
+                ChurnEvent::parse(
+                    "join@1:bg:net=resnet50,qos=background,deadline_ms=1500,rate=20,frames=200",
+                )
+                .unwrap(),
+                ChurnEvent::parse("leave@6:bg").unwrap(),
+            ],
+        };
+        assert!(
+            serve_daemon(&Config::default(), &spec).is_err(),
+            "daemon without --sim must be an error"
+        );
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            batch_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let out = serve_daemon(&cfg, &spec).unwrap();
+        assert_eq!((out.joins, out.leaves), (2, 1));
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (20, 20, 0));
+        let bg = &out.telemetry.tenants[1];
+        assert!(bg.admitted < 200, "leave at 6 s cuts the 10 s budget short");
+        assert_eq!(bg.completed, bg.admitted);
+        assert!(!out.windows.is_empty());
+    }
+
+    #[test]
+    fn daemon_composes_with_partition_and_threaded_executor() {
+        use crate::coordinator::trace::TenantTrace;
+        let spec = DaemonSpec {
+            window: Duration::from_secs(2),
+            tenants: vec![TenantTrace::steady(
+                Workload::parse("rt:net=ursonet,qos=realtime,deadline_ms=9000,rate=12,frames=16")
+                    .unwrap(),
+            )],
+            churn: vec![],
+        };
+        let cfg = Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            partition: Some(PartitionSpec::Auto),
+            executor: ExecutorKind::Threaded,
+            time_scale: 0.0,
+            batch_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let out = serve_daemon(&cfg, &spec).unwrap();
+        assert_eq!(out.mode, Mode::Mpai);
+        assert_eq!(out.telemetry.executor, Some("threaded"));
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (16, 16, 0));
+        assert_eq!(out.telemetry.stages.len(), 2, "both substrates engaged");
     }
 }

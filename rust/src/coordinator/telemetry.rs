@@ -5,7 +5,7 @@ use std::time::Duration;
 
 use crate::coordinator::plan_cache::PlanCacheStats;
 use crate::coordinator::substrate::TenantId;
-use crate::util::stats::Summary;
+use crate::util::stats::{Streaming, Summary};
 
 /// One frame's record.
 #[derive(Debug, Clone)]
@@ -89,8 +89,11 @@ pub struct TenantRecord {
     /// Completed frames whose capture→completion latency exceeded the
     /// deadline.
     pub deadline_misses: u64,
-    /// Simulated capture→completion latency per completed frame (s).
-    pub latencies_s: Vec<f64>,
+    /// Streaming digest of the simulated capture→completion latencies (s):
+    /// exact count/min/max/mean, P² p50/p99 — O(1) memory regardless of
+    /// how many frames completed (long daemon horizons must not grow a
+    /// per-frame `Vec`).
+    pub latency: Streaming,
 }
 
 impl TenantRecord {
@@ -99,9 +102,9 @@ impl TenantRecord {
         self.id.name()
     }
 
-    /// Summary over the simulated per-frame latencies.
-    pub fn latency_summary(&self) -> Summary {
-        Summary::from(&self.latencies_s)
+    /// Digest of the simulated per-frame latencies.
+    pub fn latency_summary(&self) -> &Streaming {
+        &self.latency
     }
 
     /// Deadline-miss rate over completed frames (0 when none completed).
@@ -142,11 +145,24 @@ pub struct Telemetry {
     /// and wall-clock paced runs only; the serve loop's clock measurement
     /// supersedes the executor's own when both exist).
     pub measured_elapsed_s: Option<f64>,
+    /// Calendar events that were validated-and-skipped because their
+    /// tenant state had moved on (e.g. an arrival whose frame supply was
+    /// retired by churn before delivery).  Lazy invalidation makes these
+    /// routine, but they are counted, never silent.
+    pub stale_events: u64,
     /// Content-addressed plan-cache activity attributable to this run
     /// (hit/miss/evict deltas against the process-wide cache; `entries`
     /// is the resident level).  `None` when no plan resolution ran
     /// (whole-frame dispatch, cache disabled).
     pub plan_cache: Option<PlanCacheStats>,
+    /// Cap on retained per-frame records (`None` = keep everything, the
+    /// fixed-horizon default).  Daemon runs bound this so telemetry
+    /// memory is O(cap) over an unbounded horizon; overflow lands in
+    /// `records_dropped` — counted, never silent.
+    pub frame_record_cap: Option<usize>,
+    /// Frame records dropped past `frame_record_cap` (aggregate stats
+    /// like accuracy then cover the retained prefix only).
+    pub records_dropped: u64,
 }
 
 impl Telemetry {
@@ -155,6 +171,13 @@ impl Telemetry {
     }
 
     pub fn record(&mut self, r: FrameRecord) {
+        if self
+            .frame_record_cap
+            .is_some_and(|cap| self.records.len() >= cap)
+        {
+            self.records_dropped += 1;
+            return;
+        }
         self.records.push(r);
     }
 
@@ -384,6 +407,21 @@ impl Telemetry {
                 let _ = write!(s, "  plan {plan}");
             }
         }
+        if self.stale_events > 0 {
+            let _ = write!(
+                s,
+                "\nstale calendar events skipped: {}",
+                self.stale_events
+            );
+        }
+        if self.records_dropped > 0 {
+            let _ = write!(
+                s,
+                "\nframe records capped: {} kept, {} dropped",
+                self.records.len(),
+                self.records_dropped
+            );
+        }
         s
     }
 }
@@ -498,7 +536,9 @@ mod tests {
             completed,
             shed,
             deadline_misses: misses,
-            latencies_s: (0..completed).map(|i| 0.1 + 0.01 * i as f64).collect(),
+            latency: Streaming::from(
+                &(0..completed).map(|i| 0.1 + 0.01 * i as f64).collect::<Vec<_>>(),
+            ),
         }
     }
 
@@ -529,6 +569,39 @@ mod tests {
         assert!(r.contains("tenant rt"), "{r}");
         assert!(r.contains("shed    2"), "{r}");
         assert!(r.contains("misses    1"), "{r}");
+    }
+
+    #[test]
+    fn report_counts_stale_events_only_when_present() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        assert!(!t.report().contains("stale"), "no line when none skipped");
+        t.stale_events = 3;
+        assert!(
+            t.report().contains("stale calendar events skipped: 3"),
+            "{}",
+            t.report()
+        );
+    }
+
+    #[test]
+    fn frame_record_cap_counts_overflow_instead_of_growing() {
+        let mut t = Telemetry::new();
+        t.frame_record_cap = Some(2);
+        for i in 0..5 {
+            t.record(rec(i, 10, 1.0));
+        }
+        assert_eq!(t.records.len(), 2, "retention stops at the cap");
+        assert_eq!(t.records_dropped, 3, "overflow is counted, not silent");
+        assert!(
+            t.report().contains("frame records capped: 2 kept, 3 dropped"),
+            "{}",
+            t.report()
+        );
+        // Uncapped telemetry never reports drops.
+        let mut u = Telemetry::new();
+        u.record(rec(0, 10, 1.0));
+        assert!(!u.report().contains("capped"));
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! Trace-driven arrival generation + tenant-churn vocabulary for the
+//! daemon serve loop (`coordinator::daemon`).
+//!
+//! A [`TraceSource`] turns a tenant's base rate and an [`ArrivalPattern`]
+//! (diurnal cycle, periodic bursts, a one-off flash crowd) into a
+//! deterministic stream of arrival instants by rate integration: the next
+//! arrival is the current one plus `1 / rate(now)`.  O(1) state, so a
+//! million-frame trace replays without materializing anything — the same
+//! sequence on every replay (the daemon's determinism contract).
+//!
+//! Churn — tenants joining, leaving, or re-rating mid-run — is expressed
+//! as [`ChurnEvent`]s, parsed from the CLI (`join@T:SPEC`, `leave@T:NAME`,
+//! `rerate@T:NAME=RATE`) or from the JSON trace file grammar
+//! ([`parse_trace_file`]), and interleaved with arrivals/deadlines on the
+//! daemon's event calendar.
+
+use std::time::Duration;
+
+use crate::coordinator::config::Workload;
+use crate::util::json::{self, Json};
+
+/// Bounded seconds → `Duration` (from_secs_f64 panics out of range).
+fn dur_s(v: f64, what: &str) -> Result<Duration, String> {
+    if !v.is_finite() || !(0.0..=1e9).contains(&v) {
+        return Err(format!("{what} must be seconds in [0, 1e9], got {v}"));
+    }
+    Ok(Duration::from_secs_f64(v))
+}
+
+/// Deterministic rate modulation over a tenant's base arrival rate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalPattern {
+    /// Constant base rate.
+    Steady,
+    /// Sinusoidal day/night cycle: `1 + amplitude * sin(2π t / period)`.
+    Diurnal { amplitude: f64, period: Duration },
+    /// Periodic bursts: `factor` for the first `len` of every `every`.
+    Bursts {
+        factor: f64,
+        every: Duration,
+        len: Duration,
+    },
+    /// One-off flash crowd: linear ramp to `factor` over `ramp` starting
+    /// at `at`, hold for `hold`, ramp back down over `ramp`.
+    FlashCrowd {
+        factor: f64,
+        at: Duration,
+        ramp: Duration,
+        hold: Duration,
+    },
+}
+
+impl ArrivalPattern {
+    /// Parse a CLI pattern spec:
+    /// `steady` | `diurnal[,amplitude=A,period_s=S]` |
+    /// `bursts[,factor=F,every_s=S,len_s=S]` |
+    /// `flash[,factor=F,at_s=S,ramp_s=S,hold_s=S]`.
+    pub fn parse(spec: &str) -> Result<ArrivalPattern, String> {
+        let mut parts = spec.split(',');
+        let kind = parts.next().unwrap_or("").trim();
+        let mut kv = std::collections::BTreeMap::new();
+        for part in parts {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("pattern {spec:?}: {part:?} is not key=value"))?;
+            let v: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("pattern {spec:?}: {part:?} is not numeric"))?;
+            kv.insert(k.trim().to_string(), v);
+        }
+        let mut take = |key: &str, default: f64| kv.remove(key).unwrap_or(default);
+        let p = match kind {
+            "steady" => ArrivalPattern::Steady,
+            "diurnal" => {
+                let amplitude = take("amplitude", 0.5);
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return Err(format!("pattern {spec:?}: amplitude must be in [0, 1]"));
+                }
+                ArrivalPattern::Diurnal {
+                    amplitude,
+                    period: dur_s(take("period_s", 60.0), "period_s")?,
+                }
+            }
+            "bursts" => ArrivalPattern::Bursts {
+                factor: factor_of(take("factor", 4.0), spec)?,
+                every: dur_s(take("every_s", 30.0), "every_s")?,
+                len: dur_s(take("len_s", 5.0), "len_s")?,
+            },
+            "flash" => ArrivalPattern::FlashCrowd {
+                factor: factor_of(take("factor", 8.0), spec)?,
+                at: dur_s(take("at_s", 60.0), "at_s")?,
+                ramp: dur_s(take("ramp_s", 5.0), "ramp_s")?,
+                hold: dur_s(take("hold_s", 20.0), "hold_s")?,
+            },
+            other => {
+                return Err(format!(
+                    "unknown arrival pattern {other:?} (steady, diurnal, bursts, flash)"
+                ))
+            }
+        };
+        drop(take);
+        if let Some(key) = kv.keys().next() {
+            return Err(format!("pattern {spec:?}: unknown key {key:?}"));
+        }
+        Ok(p)
+    }
+
+    /// Rate multiplier at instant `t` (≥ 0.05 so the inter-arrival step
+    /// stays bounded; the pattern never silences a tenant entirely —
+    /// that's what `leave` churn is for).
+    pub fn rate_multiplier(&self, t: Duration) -> f64 {
+        let m = match *self {
+            ArrivalPattern::Steady => 1.0,
+            ArrivalPattern::Diurnal { amplitude, period } => {
+                let phase = std::f64::consts::TAU * t.as_secs_f64() / period.as_secs_f64().max(1e-9);
+                1.0 + amplitude * phase.sin()
+            }
+            ArrivalPattern::Bursts { factor, every, len } => {
+                let phase = t.as_secs_f64() % every.as_secs_f64().max(1e-9);
+                if phase < len.as_secs_f64() {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+            ArrivalPattern::FlashCrowd {
+                factor,
+                at,
+                ramp,
+                hold,
+            } => {
+                let (t, at) = (t.as_secs_f64(), at.as_secs_f64());
+                let (ramp, hold) = (ramp.as_secs_f64().max(1e-9), hold.as_secs_f64());
+                if t < at || t > at + 2.0 * ramp + hold {
+                    1.0
+                } else if t < at + ramp {
+                    1.0 + (factor - 1.0) * (t - at) / ramp
+                } else if t <= at + ramp + hold {
+                    factor
+                } else {
+                    1.0 + (factor - 1.0) * (1.0 - (t - at - ramp - hold) / ramp)
+                }
+            }
+        };
+        m.max(0.05)
+    }
+}
+
+fn factor_of(v: f64, spec: &str) -> Result<f64, String> {
+    if !v.is_finite() || !(0.05..=1e6).contains(&v) {
+        return Err(format!("pattern {spec:?}: factor must be in [0.05, 1e6]"));
+    }
+    Ok(v)
+}
+
+/// Deterministic arrival-instant generator: base rate × pattern, advanced
+/// by rate integration.  O(1) memory; the same construction always yields
+/// the same sequence.
+#[derive(Debug, Clone)]
+pub struct TraceSource {
+    base_fps: f64,
+    pattern: ArrivalPattern,
+    cursor: Duration,
+    primed: bool,
+}
+
+impl TraceSource {
+    /// First arrival fires at `start` (a joining tenant's first frame
+    /// lands at its join instant, not one period later).
+    pub fn new(base_fps: f64, pattern: ArrivalPattern, start: Duration) -> TraceSource {
+        TraceSource {
+            base_fps,
+            pattern,
+            cursor: start,
+            primed: false,
+        }
+    }
+
+    /// Re-rate mid-run (churn): future steps use the new base rate;
+    /// already-generated instants are unaffected.
+    pub fn set_rate(&mut self, fps: f64) {
+        self.base_fps = fps;
+    }
+
+    /// Instantaneous arrival rate (frames/s) at `t`, clamped to the same
+    /// bounds `Workload::validate` enforces so `1/rate` is always a
+    /// representable `Duration`.
+    pub fn rate_at(&self, t: Duration) -> f64 {
+        (self.base_fps * self.pattern.rate_multiplier(t)).clamp(1e-3, 1e9)
+    }
+
+    /// Next arrival instant (monotone non-decreasing, strictly increasing
+    /// after the first).
+    pub fn next_arrival(&mut self) -> Duration {
+        if !self.primed {
+            self.primed = true;
+            return self.cursor;
+        }
+        let step = 1.0 / self.rate_at(self.cursor);
+        self.cursor += Duration::from_secs_f64(step);
+        self.cursor
+    }
+}
+
+/// Admission-control action applied to the live tenant set mid-run.
+#[derive(Debug, Clone)]
+pub enum ChurnAction {
+    /// Admit a new tenant serving `Workload`, arrivals shaped by the
+    /// pattern from the join instant on.
+    Join(Box<Workload>, ArrivalPattern),
+    /// Retire the named tenant: its partial batch flushes (admitted
+    /// frames are never dropped), its un-arrived frames stop.
+    Leave(String),
+    /// Change the named tenant's base arrival rate in place.
+    Rerate { name: String, rate_fps: f64 },
+}
+
+/// One scheduled churn event on the daemon's calendar.
+#[derive(Debug, Clone)]
+pub struct ChurnEvent {
+    pub at: Duration,
+    pub action: ChurnAction,
+}
+
+impl ChurnEvent {
+    /// Parse a CLI churn spec:
+    /// `join@T:WORKLOAD_SPEC` | `leave@T:NAME` | `rerate@T:NAME=RATE`
+    /// (T in seconds; WORKLOAD_SPEC is the `--workload` grammar).
+    pub fn parse(spec: &str) -> Result<ChurnEvent, String> {
+        let (kind, rest) = spec
+            .split_once('@')
+            .ok_or_else(|| format!("churn {spec:?}: expected KIND@T:ARG"))?;
+        let (at_s, arg) = rest
+            .split_once(':')
+            .ok_or_else(|| format!("churn {spec:?}: expected KIND@T:ARG"))?;
+        let at_s: f64 = at_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("churn {spec:?}: {at_s:?} is not seconds"))?;
+        let at = dur_s(at_s, "churn instant")?;
+        let action = match kind.trim() {
+            "join" => ChurnAction::Join(
+                Box::new(Workload::parse(arg)?),
+                ArrivalPattern::Steady,
+            ),
+            "leave" => ChurnAction::Leave(arg.trim().to_string()),
+            "rerate" => {
+                let (name, rate) = arg
+                    .split_once('=')
+                    .ok_or_else(|| format!("churn {spec:?}: expected rerate@T:NAME=RATE"))?;
+                let rate_fps: f64 = rate
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("churn {spec:?}: {rate:?} is not frames/s"))?;
+                if !rate_fps.is_finite() || !(1e-3..=1e9).contains(&rate_fps) {
+                    return Err(format!(
+                        "churn {spec:?}: rate must be in [0.001, 1e9] frames/s"
+                    ));
+                }
+                ChurnAction::Rerate {
+                    name: name.trim().to_string(),
+                    rate_fps,
+                }
+            }
+            other => {
+                return Err(format!(
+                    "unknown churn kind {other:?} (join, leave, rerate)"
+                ))
+            }
+        };
+        Ok(ChurnEvent { at, action })
+    }
+}
+
+/// One tenant's full lifecycle in a daemon trace: its workload, arrival
+/// pattern, and join / re-rate / leave schedule.
+#[derive(Debug, Clone)]
+pub struct TenantTrace {
+    pub workload: Workload,
+    pub pattern: ArrivalPattern,
+    /// Instant the tenant is admitted (ZERO = present from the start).
+    pub join_at: Duration,
+    /// Instant the tenant retires (`None` = serves until its frame budget
+    /// runs out).
+    pub leave_at: Option<Duration>,
+    /// Mid-run base-rate changes, `(instant, new frames/s)`.
+    pub rerates: Vec<(Duration, f64)>,
+}
+
+impl TenantTrace {
+    /// A present-from-start, steady-rate tenant (what plain `--workload`
+    /// flags produce; patterns/churn come from the trace file or CLI).
+    pub fn steady(workload: Workload) -> TenantTrace {
+        TenantTrace {
+            workload,
+            pattern: ArrivalPattern::Steady,
+            join_at: Duration::ZERO,
+            leave_at: None,
+            rerates: Vec::new(),
+        }
+    }
+
+    /// Build from a trace-file tenant object: the `--tenants` workload
+    /// keys plus `"pattern"` (the CLI pattern grammar as a string),
+    /// `"join_s"`, `"leave_s"`, and `"rerate": [{"at_s": T, "rate": R}]`.
+    pub fn from_json(v: &Json) -> Result<TenantTrace, String> {
+        let obj = v.as_obj().ok_or("trace tenant must be a JSON object")?;
+        let mut wmap = obj.clone();
+        let pattern = match wmap.remove("pattern") {
+            Some(Json::Str(s)) => ArrivalPattern::parse(&s)?,
+            Some(_) => return Err("\"pattern\" must be a pattern spec string".into()),
+            None => ArrivalPattern::Steady,
+        };
+        let sec = |v: Option<Json>, what: &str| -> Result<Option<Duration>, String> {
+            match v {
+                None => Ok(None),
+                Some(j) => {
+                    let s = j.as_f64().ok_or_else(|| format!("{what} must be seconds"))?;
+                    dur_s(s, what).map(Some)
+                }
+            }
+        };
+        let join_at = sec(wmap.remove("join_s"), "join_s")?.unwrap_or(Duration::ZERO);
+        let leave_at = sec(wmap.remove("leave_s"), "leave_s")?;
+        let mut rerates = Vec::new();
+        if let Some(rr) = wmap.remove("rerate") {
+            let arr = rr.as_arr().ok_or("\"rerate\" must be an array")?;
+            for entry in arr {
+                let at = entry
+                    .get("at_s")
+                    .and_then(Json::as_f64)
+                    .ok_or("rerate entry needs numeric \"at_s\"")?;
+                let rate = entry
+                    .get("rate")
+                    .and_then(Json::as_f64)
+                    .ok_or("rerate entry needs numeric \"rate\"")?;
+                if !rate.is_finite() || !(1e-3..=1e9).contains(&rate) {
+                    return Err("rerate rate must be in [0.001, 1e9] frames/s".into());
+                }
+                rerates.push((dur_s(at, "rerate at_s")?, rate));
+            }
+            rerates.sort_by_key(|&(at, _)| at);
+        }
+        // Everything left is the plain workload grammar.
+        let workload = Workload::from_json(&Json::Obj(wmap))?;
+        if let Some(leave) = leave_at {
+            if leave <= join_at {
+                return Err(format!(
+                    "tenant {:?}: leave_s must be after join_s",
+                    workload.name
+                ));
+            }
+        }
+        Ok(TenantTrace {
+            workload,
+            pattern,
+            join_at,
+            leave_at,
+            rerates,
+        })
+    }
+}
+
+/// Parse a daemon trace document: `{"window_s": N, "tenants": [...]}` or
+/// a bare JSON array of tenant objects.  Returns the optional telemetry
+/// window override and the tenant lifecycles.
+pub fn parse_trace_file(text: &str) -> Result<(Option<Duration>, Vec<TenantTrace>), String> {
+    let doc = json::parse(text).map_err(|e| e.to_string())?;
+    let window = match doc.get("window_s") {
+        Some(v) => {
+            let s = v.as_f64().ok_or("\"window_s\" must be seconds")?;
+            if s <= 0.0 {
+                return Err("\"window_s\" must be > 0".into());
+            }
+            Some(dur_s(s, "window_s")?)
+        }
+        None => None,
+    };
+    let arr = match doc.get("tenants") {
+        Some(v) => v.as_arr(),
+        None => doc.as_arr(),
+    }
+    .ok_or("trace file must be a JSON array or {\"tenants\": [...]}")?;
+    if arr.is_empty() {
+        return Err("trace file lists no tenants".into());
+    }
+    let tenants = arr
+        .iter()
+        .map(TenantTrace::from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok((window, tenants))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::QosClass;
+
+    #[test]
+    fn pattern_parse_covers_every_kind_and_rejects_unknown() {
+        assert_eq!(ArrivalPattern::parse("steady").unwrap(), ArrivalPattern::Steady);
+        assert_eq!(
+            ArrivalPattern::parse("diurnal,amplitude=0.25,period_s=120").unwrap(),
+            ArrivalPattern::Diurnal {
+                amplitude: 0.25,
+                period: Duration::from_secs(120)
+            }
+        );
+        assert_eq!(
+            ArrivalPattern::parse("bursts,factor=3,every_s=20,len_s=2").unwrap(),
+            ArrivalPattern::Bursts {
+                factor: 3.0,
+                every: Duration::from_secs(20),
+                len: Duration::from_secs(2)
+            }
+        );
+        assert!(matches!(
+            ArrivalPattern::parse("flash").unwrap(),
+            ArrivalPattern::FlashCrowd { .. }
+        ));
+        assert!(ArrivalPattern::parse("tidal").is_err());
+        assert!(ArrivalPattern::parse("diurnal,amplitude=2.0").is_err());
+        assert!(ArrivalPattern::parse("bursts,cadence=3").is_err(), "unknown key");
+    }
+
+    #[test]
+    fn rate_multiplier_shapes_are_right() {
+        let d = ArrivalPattern::parse("diurnal,amplitude=0.5,period_s=40").unwrap();
+        assert!((d.rate_multiplier(Duration::from_secs(10)) - 1.5).abs() < 1e-9, "peak");
+        assert!((d.rate_multiplier(Duration::from_secs(30)) - 0.5).abs() < 1e-9, "trough");
+        let b = ArrivalPattern::parse("bursts,factor=4,every_s=30,len_s=5").unwrap();
+        assert_eq!(b.rate_multiplier(Duration::from_secs(2)), 4.0);
+        assert_eq!(b.rate_multiplier(Duration::from_secs(10)), 1.0);
+        assert_eq!(b.rate_multiplier(Duration::from_secs(31)), 4.0);
+        let f = ArrivalPattern::parse("flash,factor=8,at_s=60,ramp_s=10,hold_s=20").unwrap();
+        assert_eq!(f.rate_multiplier(Duration::from_secs(0)), 1.0);
+        assert_eq!(f.rate_multiplier(Duration::from_secs(75)), 8.0, "hold");
+        assert!((f.rate_multiplier(Duration::from_secs(65)) - 4.5).abs() < 1e-9, "ramp");
+        assert_eq!(f.rate_multiplier(Duration::from_secs(200)), 1.0, "over");
+        // The floor keeps every multiplier strictly positive.
+        let deep = ArrivalPattern::Diurnal {
+            amplitude: 1.0,
+            period: Duration::from_secs(40),
+        };
+        assert_eq!(deep.rate_multiplier(Duration::from_secs(30)), 0.05);
+    }
+
+    #[test]
+    fn trace_source_is_deterministic_and_monotone() {
+        let pat = ArrivalPattern::parse("diurnal,amplitude=0.5,period_s=20").unwrap();
+        let mut a = TraceSource::new(10.0, pat.clone(), Duration::ZERO);
+        let mut b = TraceSource::new(10.0, pat, Duration::ZERO);
+        let mut prev = Duration::ZERO;
+        for i in 0..1000 {
+            let (ta, tb) = (a.next_arrival(), b.next_arrival());
+            assert_eq!(ta, tb, "replay diverged at arrival {i}");
+            assert!(ta >= prev, "time went backwards at arrival {i}");
+            prev = ta;
+        }
+        // Rate integration: ~10 fps average over the diurnal cycle means
+        // 1000 arrivals span roughly 100 s.
+        assert!(
+            (80.0..130.0).contains(&prev.as_secs_f64()),
+            "1000 arrivals at ~10 fps spanned {prev:?}"
+        );
+    }
+
+    #[test]
+    fn trace_source_starts_at_join_and_rerates() {
+        let mut s = TraceSource::new(10.0, ArrivalPattern::Steady, Duration::from_secs(5));
+        assert_eq!(s.next_arrival(), Duration::from_secs(5), "first at join");
+        let step = s.next_arrival() - Duration::from_secs(5);
+        assert!((step.as_secs_f64() - 0.1).abs() < 1e-9);
+        s.set_rate(100.0);
+        let before = s.next_arrival();
+        let step = s.next_arrival() - before;
+        assert!((step.as_secs_f64() - 0.01).abs() < 1e-9, "rerate applies");
+    }
+
+    #[test]
+    fn churn_specs_parse() {
+        let j = ChurnEvent::parse("join@30:probe:net=ursonet_full,qos=background,rate=20").unwrap();
+        assert_eq!(j.at, Duration::from_secs(30));
+        match j.action {
+            ChurnAction::Join(w, pat) => {
+                assert_eq!(w.name, "probe");
+                assert_eq!(w.qos, QosClass::Background);
+                assert_eq!(pat, ArrivalPattern::Steady);
+            }
+            other => panic!("expected join, got {other:?}"),
+        }
+        let l = ChurnEvent::parse("leave@45.5:probe").unwrap();
+        assert!(matches!(l.action, ChurnAction::Leave(ref n) if n == "probe"));
+        let r = ChurnEvent::parse("rerate@60:std=24").unwrap();
+        match r.action {
+            ChurnAction::Rerate { name, rate_fps } => {
+                assert_eq!((name.as_str(), rate_fps), ("std", 24.0));
+            }
+            other => panic!("expected rerate, got {other:?}"),
+        }
+        assert!(ChurnEvent::parse("join@x:bad").is_err());
+        assert!(ChurnEvent::parse("evict@3:who").is_err());
+        assert!(ChurnEvent::parse("rerate@3:std=1e99").is_err());
+    }
+
+    #[test]
+    fn trace_file_round_trips() {
+        let text = r#"{
+            "window_s": 5,
+            "tenants": [
+                {"name": "rt", "net": "ursonet_full", "qos": "realtime",
+                 "deadline_ms": 8000, "rate": 8, "frames": 100},
+                {"name": "bg", "qos": "background", "rate": 20, "frames": 200,
+                 "pattern": "bursts,factor=4,every_s=30,len_s=5",
+                 "join_s": 10, "leave_s": 40,
+                 "rerate": [{"at_s": 20, "rate": 40}]}
+            ]
+        }"#;
+        let (window, tenants) = parse_trace_file(text).unwrap();
+        assert_eq!(window, Some(Duration::from_secs(5)));
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].workload.name, "rt");
+        assert_eq!(tenants[0].pattern, ArrivalPattern::Steady);
+        assert_eq!(tenants[0].join_at, Duration::ZERO);
+        let bg = &tenants[1];
+        assert_eq!(bg.workload.qos, QosClass::Background);
+        assert_eq!(bg.join_at, Duration::from_secs(10));
+        assert_eq!(bg.leave_at, Some(Duration::from_secs(40)));
+        assert_eq!(bg.rerates, vec![(Duration::from_secs(20), 40.0)]);
+        assert!(matches!(bg.pattern, ArrivalPattern::Bursts { .. }));
+        // Errors surface with context.
+        assert!(parse_trace_file("[]").is_err());
+        assert!(parse_trace_file(r#"[{"name": "x", "leave_s": 1, "join_s": 2, "frames": 3}]"#).is_err());
+    }
+}

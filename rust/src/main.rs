@@ -4,6 +4,7 @@
 //!   fig2      reproduce Fig. 2 (accelerator throughput survey)
 //!   table1    reproduce Table I (pose-estimation accuracy + latency)
 //!   serve     run the end-to-end coordinator on the synthetic camera
+//!   daemon    long-horizon serve loop with live tenant churn + trace replay
 //!   policy    speed–accuracy–energy accelerator selection
 //!   inspect   model-zoo graph summaries
 //!   cuts      enumerate MPAI partition cut-points for a model
@@ -19,8 +20,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use mpai::accel::interconnect::links;
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
 use mpai::coordinator::{
-    self, parse_tenant_file, Config, Constraints, ExecutorKind, Mode, Objective, PartitionSpec,
-    Workload,
+    self, parse_tenant_file, parse_trace_file, ArrivalPattern, ChurnEvent, Config, Constraints,
+    DaemonSpec, ExecutorKind, Mode, Objective, PartitionSpec, TenantTrace, WindowRecord, Workload,
 };
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
@@ -50,6 +51,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "fig2" => cmd_fig2(),
         "table1" => cmd_table1(rest),
         "serve" => cmd_serve(rest),
+        "daemon" => cmd_daemon(rest),
         "policy" => cmd_policy(rest),
         "inspect" => cmd_inspect(rest),
         "cuts" => cmd_cuts(rest),
@@ -69,6 +71,7 @@ fn print_usage() {
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
          serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] [--executor sim|threaded] run the coordinator\n  \
+         daemon --sim [--trace FILE|--workload SPEC ..] [--pattern SPEC] [--churn SPEC ..] long-horizon serve with live tenant churn\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points\n  \
@@ -337,6 +340,196 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("telemetry csv -> {path}");
     }
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// daemon
+// ---------------------------------------------------------------------------
+
+fn cmd_daemon(argv: &[String]) -> Result<()> {
+    let spec = Spec {
+        name: "mpai daemon",
+        about: "long-horizon serve loop with live tenant churn and trace replay (sim)",
+        options: vec![
+            (
+                "trace",
+                "FILE",
+                "JSON trace: tenants with arrival patterns + join/rerate/leave lifecycles",
+            ),
+            (
+                "workload",
+                "SPEC",
+                "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=..,frames=.. — present-from-start tenant",
+            ),
+            (
+                "pattern",
+                "SPEC",
+                "arrival pattern for --workload tenants: steady | diurnal,amplitude=..,period_s=.. | bursts,.. | flash,..",
+            ),
+            (
+                "churn",
+                "SPEC",
+                "repeatable: join@T:WORKLOAD | leave@T:NAME | rerate@T:NAME=RATE (T in seconds)",
+            ),
+            ("window-s", "S", "steady-state telemetry window (default 10; trace file may set it)"),
+            ("windows", "N", "print the first and last N window records (default 3)"),
+            ("pool", "[MODES]", "multi-backend pool (default dpu-int8,vpu-fp16)"),
+            ("partition", "SPEC", "auto | accel@layer,..,accel — pipelined split"),
+            ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock pacing)"),
+            ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
+            ("sim", "", "simulated backends (required: churn binds sim engines)"),
+            ("fail-every", "N", "inject a fault every Nth infer on the first backend"),
+            ("timeout-ms", "MS", "batcher timeout (default 50)"),
+            ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
+            ("max-ms", "X", "constraint: max modeled total latency (ms)"),
+            ("max-loce", "X", "constraint: max localization error (m)"),
+            ("max-orie", "X", "constraint: max orientation error (deg)"),
+            ("max-energy", "X", "constraint: max energy per frame (J)"),
+            ("no-plan-cache", "", "bypass the content-addressed plan cache"),
+        ],
+    };
+    let a = spec.parse(argv)?;
+
+    // Tenant lifecycles: a trace file, plus any --workload steady tenants
+    // (with an optional shared --pattern), plus extra --churn events.
+    let mut window = None;
+    let mut tenants: Vec<TenantTrace> = Vec::new();
+    if let Some(path) = a.get("trace") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --trace file {path:?}"))?;
+        let (w, traced) =
+            parse_trace_file(&text).map_err(|e| anyhow!("bad --trace {path:?}: {e}"))?;
+        window = w;
+        tenants.extend(traced);
+    }
+    let pattern = match a.get("pattern") {
+        None => ArrivalPattern::Steady,
+        Some(s) => ArrivalPattern::parse(s).map_err(|e| anyhow!("bad --pattern: {e}"))?,
+    };
+    for spec in a.get_all("workload") {
+        let w = Workload::parse(spec).map_err(|e| anyhow!("bad --workload: {e}"))?;
+        let mut t = TenantTrace::steady(w);
+        t.pattern = pattern.clone();
+        tenants.push(t);
+    }
+    let churn = a
+        .get_all("churn")
+        .into_iter()
+        .map(|s| ChurnEvent::parse(s).map_err(|e| anyhow!("bad --churn: {e}")))
+        .collect::<Result<Vec<ChurnEvent>>>()?;
+    // Explicit --window-s beats the trace file's window, which beats 10 s.
+    let window = match a.get("window-s") {
+        Some(_) => {
+            let s = a.get_f64("window-s", 10.0)?;
+            if !s.is_finite() || s <= 0.0 {
+                bail!("bad --window-s {s}: expected a positive number of seconds");
+            }
+            Duration::from_secs_f64(s)
+        }
+        None => window.unwrap_or(Duration::from_secs(10)),
+    };
+    let dspec = DaemonSpec { window, tenants, churn };
+
+    let pool = match a.get("pool") {
+        None => vec![Mode::DpuInt8, Mode::VpuFp16],
+        Some(list) => list
+            .split(',')
+            .map(|m| {
+                Mode::from_label(m.trim())
+                    .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
+            })
+            .collect::<Result<Vec<Mode>>>()?,
+    };
+    let partition = match a.get("partition") {
+        None => None,
+        Some(s) => Some(PartitionSpec::parse(s).map_err(|e| anyhow!("bad --partition: {e}"))?),
+    };
+    let boundary_link = match a.get("link") {
+        None => links::USB3,
+        Some(n) => links::by_name(n)
+            .with_context(|| format!("bad --link {n:?} (usb3|usb2|axi-hp|pcie-x1|csi2)"))?,
+    };
+    let fail_every = match a.get("fail-every") {
+        Some(_) => Some(a.get_usize("fail-every", 0)?),
+        None => None,
+    };
+    let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
+        .context("bad --executor (sim | threaded)")?;
+    let cfg = Config {
+        batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
+        pool: pool.clone(),
+        sim: a.flag("sim"),
+        fail_every,
+        constraints: parse_constraints(&a)?,
+        partition,
+        boundary_link,
+        executor,
+        time_scale: a.get_f64("time-scale", 0.01)?,
+        plan_cache: !a.flag("no-plan-cache"),
+        ..Default::default()
+    };
+    println!(
+        "mpai daemon — pool [{}]{} window {:.1} s, {} tenant lifecycle{}, {} churn event{}, executor {}{}",
+        pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", "),
+        match &cfg.partition {
+            Some(PartitionSpec::Auto) => " partition auto".to_string(),
+            Some(PartitionSpec::Manual(stages)) => format!(
+                " partition {}",
+                stages.iter().map(|s| s.accel.as_str()).collect::<Vec<_>>().join("|")
+            ),
+            None => String::new(),
+        },
+        dspec.window.as_secs_f64(),
+        dspec.tenants.len(),
+        if dspec.tenants.len() == 1 { "" } else { "s" },
+        dspec.churn.len(),
+        if dspec.churn.len() == 1 { "" } else { "s" },
+        cfg.executor.label(),
+        if cfg.sim { " (simulated backends)" } else { "" }
+    );
+
+    let out = coordinator::serve_daemon(&cfg, &dspec)?;
+    println!("{}", out.telemetry.report());
+    println!(
+        "churn: {} join{}, {} leave{}, {} rerate{}",
+        out.joins,
+        if out.joins == 1 { "" } else { "s" },
+        out.leaves,
+        if out.leaves == 1 { "" } else { "s" },
+        out.rerates,
+        if out.rerates == 1 { "" } else { "s" },
+    );
+
+    // Windowed steady-state telemetry: the head and tail of the run.
+    let show = a.get_usize("windows", 3)?;
+    println!("windows: {} materialized", out.windows.len());
+    let total = out.windows.len();
+    for (i, w) in out.windows.iter().enumerate() {
+        if i == show && total > 2 * show {
+            println!("  … {} windows elided …", total - 2 * show);
+        }
+        if i >= show && i < total.saturating_sub(show) {
+            continue;
+        }
+        print_window(w);
+    }
+    Ok(())
+}
+
+fn print_window(w: &WindowRecord) {
+    println!("  window {:>4} @ {:>8.1} s", w.index, w.start.as_secs_f64());
+    for t in &w.tenants {
+        println!(
+            "    {:<12} admitted {:>7} completed {:>7} shed {:>6} miss {:>6}  p50 {:>8.2} ms  p99 {:>8.2} ms",
+            t.id.name(),
+            t.admitted,
+            t.completed,
+            t.shed,
+            t.misses,
+            t.p50_ms,
+            t.p99_ms
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

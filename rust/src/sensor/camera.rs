@@ -49,19 +49,35 @@ impl Camera {
     pub fn frame_period(&self) -> Duration {
         self.period
     }
-}
 
-impl Iterator for Camera {
-    type Item = Frame;
+    /// Nominal capture instant of frame `idx` in u128 nanoseconds.
+    ///
+    /// `Duration * u32` truncated the u64 frame counter, wrapping
+    /// timestamps after 2^32 frames and silently corrupting deadlines on
+    /// long trace replays (ISSUE 7 satellite); full-width nanosecond math
+    /// keeps the timeline exact for any index the counter can hold.
+    fn t_at(&self, idx: u64) -> Duration {
+        const NS: u128 = 1_000_000_000;
+        let ns = self.period.as_nanos() * idx as u128;
+        Duration::new((ns / NS) as u64, (ns % NS) as u32)
+    }
 
-    fn next(&mut self) -> Option<Frame> {
+    /// Jump the counter to `frame` (long-horizon tests; replay resume).
+    pub fn seek(&mut self, frame: u64) {
+        self.next = frame;
+    }
+
+    /// Emit the next frame stamped with an explicit capture instant —
+    /// the trace-driven arrival path, where timing comes from a
+    /// `TraceSource` rather than the camera's fixed period.
+    pub fn capture_at(&mut self, t_capture: Duration) -> Option<Frame> {
         if self.next >= self.count {
             return None;
         }
         let idx = (self.next as usize) % self.eval.len();
         let f = Frame {
             id: self.next,
-            t_capture: self.period * self.next as u32,
+            t_capture,
             pixels: self.eval.frame(idx).to_vec(),
             h: self.eval.frame_h,
             w: self.eval.frame_w,
@@ -69,6 +85,15 @@ impl Iterator for Camera {
         };
         self.next += 1;
         Some(f)
+    }
+}
+
+impl Iterator for Camera {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        let t = self.t_at(self.next);
+        self.capture_at(t)
     }
 }
 
@@ -132,5 +157,33 @@ mod tests {
         let cam = Camera::new(tiny_eval(&std::env::temp_dir()), 60.0, 5);
         let ids: Vec<u64> = cam.map(|f| f.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn timestamps_do_not_wrap_past_u32_frame_indices() {
+        // Regression (ISSUE 7): `period * next as u32` wrapped after 2^32
+        // frames — frame 2^32 + 5 got frame 5's timestamp.  10 fps gives
+        // an exact 100 ms period, so the expectation is exact integer math.
+        let mut cam = Camera::new(tiny_eval(&std::env::temp_dir()), 10.0, u64::MAX);
+        let idx = (1u64 << 32) + 5;
+        cam.seek(idx);
+        let f = cam.next().expect("frame at a >u32 index");
+        assert_eq!(f.id, idx);
+        assert_eq!(f.t_capture, Duration::from_nanos(100_000_000 * idx));
+        assert_ne!(
+            f.t_capture,
+            Duration::from_millis(500),
+            "u32 truncation would alias frame 2^32+5 onto frame 5"
+        );
+    }
+
+    #[test]
+    fn capture_at_stamps_explicit_instant() {
+        let mut cam = Camera::new(tiny_eval(&std::env::temp_dir()), 10.0, 2);
+        let f = cam.capture_at(Duration::from_millis(37)).unwrap();
+        assert_eq!((f.id, f.t_capture), (0, Duration::from_millis(37)));
+        let f = cam.capture_at(Duration::from_millis(91)).unwrap();
+        assert_eq!((f.id, f.t_capture), (1, Duration::from_millis(91)));
+        assert!(cam.capture_at(Duration::from_millis(120)).is_none());
     }
 }

@@ -1,5 +1,5 @@
 //! Infrastructure substrates built in-repo (the offline environment carries
-//! no serde/clap/criterion/proptest — DESIGN.md §4.11).
+//! no serde/clap/criterion/proptest — DESIGN.md §4.12).
 
 pub mod benchio;
 pub mod cli;

@@ -93,6 +93,225 @@ impl Summary {
     }
 }
 
+/// P² (piecewise-parabolic) single-quantile estimator (Jain & Chlamtac,
+/// CACM 1985): five markers track one running quantile in O(1) memory, no
+/// retained samples.  Below five observations the estimate interpolates
+/// the raw buffer exactly, matching [`Summary::percentile`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct P2 {
+    p: f64,
+    /// Marker heights (the first five raw samples until primed).
+    q: [f64; 5],
+    /// Actual marker positions (1-based, as in the paper).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired-position increment per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2 {
+    pub fn new(p: f64) -> P2 {
+        assert!((0.0..=1.0).contains(&p), "quantile must be in [0, 1]");
+        P2 {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.count += 1;
+        // Locate the cell holding x, growing the extreme markers in place.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            (1..4).find(|&i| x < self.q[i]).unwrap_or(4) - 1
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // Nudge interior markers toward their desired positions; parabolic
+        // prediction when it stays monotone, linear otherwise.
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let cand = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < cand && cand < self.q[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.n);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate: NaN when empty, exact (sorted-buffer interpolation)
+    /// below five samples, the middle marker once primed.
+    pub fn estimate(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            let mut buf = self.q;
+            let buf = &mut buf[..self.count as usize];
+            buf.sort_by(f64::total_cmp);
+            let rank = self.p * (buf.len() - 1) as f64;
+            let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+            if lo == hi {
+                return buf[lo];
+            }
+            let frac = rank - lo as f64;
+            return buf[lo] * (1.0 - frac) + buf[hi] * frac;
+        }
+        self.q[2]
+    }
+}
+
+/// Bounded streaming digest for long-horizon runs: exact count/min/max,
+/// Welford mean and variance, and P² estimates for p50/p99 — O(1) memory
+/// regardless of sample count.  Replaces the unbounded per-frame latency
+/// `Vec` in million-frame daemon runs.
+///
+/// Equality (`PartialEq`) is bit-exact over the internal state, which is
+/// deterministic for a fixed *insertion order*: replaying the same trace
+/// on `SimClock` produces identical digests.  A permutation of the same
+/// samples (threaded executors surface completions in host-scheduling
+/// order) may shift the quantile estimates — compare the order-insensitive
+/// parts (count, min, max, and mean to rounding) across executors instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Streaming {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    p50: P2,
+    p99: P2,
+}
+
+impl Default for Streaming {
+    fn default() -> Streaming {
+        Streaming::new()
+    }
+}
+
+impl Streaming {
+    pub fn new() -> Streaming {
+        Streaming {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: P2::new(0.5),
+            p99: P2::new(0.99),
+        }
+    }
+
+    pub fn from(samples: &[f64]) -> Streaming {
+        let mut s = Streaming::new();
+        for &x in samples {
+            s.add(x);
+        }
+        s
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.p50.add(x);
+        self.p99.add(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        (self.m2 / (self.count - 1) as f64).sqrt()
+    }
+
+    /// Same fold identities as [`Summary`]: +inf when empty.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Same fold identities as [`Summary`]: -inf when empty.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.estimate()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.p99.estimate()
+    }
+}
+
 /// Micro-bench: warmup then timed iterations; reports wall-clock percentiles.
 pub struct Bench {
     pub warmup_iters: usize,
@@ -238,6 +457,101 @@ mod tests {
         assert_eq!(s.p50(), 5.0);
         assert_eq!(s.percentile(0.0), 1.0);
         assert_eq!(s.percentile(100.0), 9.0);
+    }
+
+    #[test]
+    fn p2_below_five_samples_matches_exact_percentile() {
+        let samples = [9.0, 1.0, 5.0, 3.0];
+        for n in 1..=4 {
+            let exact = Summary::from(&samples[..n]);
+            for p in [0.5, 0.99] {
+                let mut est = P2::new(p);
+                for &x in &samples[..n] {
+                    est.add(x);
+                }
+                assert_eq!(
+                    est.estimate(),
+                    exact.percentile(p * 100.0),
+                    "n={n} p={p}"
+                );
+            }
+        }
+        assert!(P2::new(0.5).estimate().is_nan());
+    }
+
+    #[test]
+    fn p2_tracks_exact_quantiles_on_random_streams() {
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(0x4D50_4149);
+        // Bands are deliberately loose — this guards gross estimator bugs
+        // (wrong marker updates), not publication-grade accuracy.
+        for (dist, tol) in [("uniform", 0.05), ("exponential", 0.75)] {
+            let mut p50 = P2::new(0.5);
+            let mut p99 = P2::new(0.99);
+            let mut exact = Summary::new();
+            for _ in 0..10_000 {
+                let x = match dist {
+                    "uniform" => rng.f64(),
+                    _ => rng.exponential(1.0),
+                };
+                p50.add(x);
+                p99.add(x);
+                exact.add(x);
+            }
+            assert!(
+                (p50.estimate() - exact.p50()).abs() < tol,
+                "{dist} p50: est {} exact {}",
+                p50.estimate(),
+                exact.p50()
+            );
+            assert!(
+                (p99.estimate() - exact.p99()).abs() < tol,
+                "{dist} p99: est {} exact {}",
+                p99.estimate(),
+                exact.p99()
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_moments_match_summary() {
+        let samples: Vec<f64> = (0..200).map(|i| ((i * 7919) % 101) as f64).collect();
+        let s = Streaming::from(&samples);
+        let exact = Summary::from(&samples);
+        assert_eq!(s.len(), exact.len());
+        assert_eq!(s.min(), exact.min());
+        assert_eq!(s.max(), exact.max());
+        assert!((s.mean() - exact.mean()).abs() < 1e-12);
+        assert!((s.std() - exact.std()).abs() < 1e-9);
+        // Quantiles are estimates once past five samples: accuracy band only.
+        assert!((s.p50() - exact.p50()).abs() < 5.0);
+        assert!((s.p99() - exact.p99()).abs() < 5.0);
+    }
+
+    #[test]
+    fn streaming_is_order_deterministic_and_comparable() {
+        let samples = [0.4, 0.1, 0.9, 0.2, 0.7, 0.3, 0.8];
+        assert_eq!(Streaming::from(&samples), Streaming::from(&samples));
+        let mut reversed = samples;
+        reversed.reverse();
+        let (a, b) = (Streaming::from(&samples), Streaming::from(&reversed));
+        // Order-insensitive parts always agree (to rounding) ...
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.min(), b.min());
+        assert_eq!(a.max(), b.max());
+        assert!((a.mean() - b.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_empty_is_nan_with_fold_identities() {
+        let s = Streaming::new();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan() && s.p99().is_nan());
+        assert_eq!(s.min(), f64::INFINITY);
+        assert_eq!(s.max(), f64::NEG_INFINITY);
+        assert_eq!(s.std(), 0.0);
     }
 
     #[test]
