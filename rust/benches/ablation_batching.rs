@@ -22,7 +22,7 @@ fn frame(id: u64, t_ms: f64) -> Frame {
     Frame {
         id,
         t_capture: Duration::from_secs_f64(t_ms / 1e3),
-        pixels: Vec::new(), // batching ablation does not touch pixels
+        pixels: Vec::new().into(), // batching ablation does not touch pixels
         h: 0,
         w: 0,
         truth: Pose {

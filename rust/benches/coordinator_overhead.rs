@@ -22,7 +22,7 @@ fn mk_frame(id: u64) -> Frame {
     Frame {
         id,
         t_capture: Duration::from_millis(id),
-        pixels: vec![80u8; 240 * 320 * 3],
+        pixels: vec![80u8; 240 * 320 * 3].into(),
         h: 240,
         w: 320,
         truth: Pose {
@@ -38,7 +38,7 @@ fn mk_meta_frame(id: u64) -> Frame {
     Frame {
         id,
         t_capture: Duration::from_millis(id),
-        pixels: Vec::new(),
+        pixels: Vec::new().into(),
         h: 240,
         w: 320,
         truth: Pose {

@@ -21,6 +21,7 @@ use mpai::accel::interconnect::links;
 use mpai::accel::Link;
 use mpai::coordinator::{
     build_plans, plan_or_build_in, Constraints, PartitionSpec, PipelinePlan, PlanCache,
+    SubstrateId,
 };
 use mpai::net::compiler::compile;
 use mpai::net::models::ursonet;
@@ -58,8 +59,8 @@ fn templates() -> Vec<(Link, Constraints)> {
     ]
 }
 
-fn fresh(graph: &Graph, names: &[String], link: &Link, c: &Constraints) -> Vec<PipelinePlan> {
-    build_plans(graph, names, link, c, 4, &PartitionSpec::Auto).expect("feasible fresh plans")
+fn fresh(graph: &Graph, pool: &[SubstrateId], link: &Link, c: &Constraints) -> Vec<PipelinePlan> {
+    build_plans(graph, pool, link, c, 4, &PartitionSpec::Auto).expect("feasible fresh plans")
 }
 
 fn fingerprint(plans: &[PipelinePlan]) -> Vec<(String, u64, usize)> {
@@ -75,7 +76,7 @@ fn main() {
     let rounds: usize = if smoke { 2 } else { 8 };
 
     let graph = compile(&ursonet::build_full());
-    let names: Vec<String> = vec!["dpu".into(), "vpu".into()];
+    let names: Vec<SubstrateId> = vec![SubstrateId::intern("dpu"), SubstrateId::intern("vpu")];
     let templates = templates();
 
     // ---- Decision identity --------------------------------------------------

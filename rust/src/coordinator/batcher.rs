@@ -61,6 +61,10 @@ pub struct Batcher {
     size: usize,
     timeout: Duration,
     pending: Vec<Frame>,
+    /// Recycled frame buffer (see [`recycle`](Batcher::recycle)): `take`
+    /// swaps it in for `pending`, so a warm batcher emits batches without
+    /// allocating a fresh `Vec<Frame>` per batch (DESIGN.md §4.13).
+    spare: Vec<Frame>,
     cost: f64,
     tenant: usize,
     constraints: Constraints,
@@ -72,7 +76,8 @@ impl Batcher {
         Batcher {
             size,
             timeout,
-            pending: Vec::new(),
+            pending: Vec::with_capacity(size),
+            spare: Vec::with_capacity(size),
             cost: 1.0,
             tenant: 0,
             constraints: Constraints::default(),
@@ -125,10 +130,22 @@ impl Batcher {
     }
 
     /// Drop every pending frame without forming a batch (admission
-    /// backpressure).  Returns the shed frames so callers can count them —
-    /// shedding is never silent.
-    pub fn shed(&mut self) -> Vec<Frame> {
-        self.pending.drain(..).collect()
+    /// backpressure).  Returns the shed count so callers account for them
+    /// — shedding is never silent.  (Counting instead of returning the
+    /// frames keeps the hot path allocation-free; `clear` retains the
+    /// buffer's capacity.)
+    pub fn shed(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
+    }
+
+    /// Hand a dispatched (or shed) batch's frame buffer back for reuse:
+    /// the buffer is cleared and becomes the backing store of the next
+    /// emitted batch, closing the allocation loop on the serve hot path.
+    pub fn recycle(&mut self, mut frames: Vec<Frame>) {
+        frames.clear();
+        self.spare = frames;
     }
 
     pub fn pending_len(&self) -> usize {
@@ -148,11 +165,16 @@ impl Batcher {
     }
 
     fn take(&mut self, now: Option<Duration>) -> Option<Batch> {
-        let frames: Vec<Frame> = self.pending.drain(..).collect();
-        // An empty drain is `None`, never a panic: a churn-forced flush of
+        // An empty take is `None`, never a panic: a churn-forced flush of
         // an idle tenant's batcher must be a no-op (ISSUE 7 satellite —
         // the old `frames.last().unwrap()` was reachable through `take`
         // with no pending frames).
+        if self.pending.is_empty() {
+            return None;
+        }
+        // Swap the recycled buffer in: the emitted batch owns the filled
+        // `Vec` and the batcher keeps a cleared one to accumulate into.
+        let frames = std::mem::replace(&mut self.pending, std::mem::take(&mut self.spare));
         let newest = frames.last()?.t_capture;
         let t_ready = now.unwrap_or(newest);
         Some(Batch {
@@ -176,7 +198,7 @@ mod tests {
         Frame {
             id,
             t_capture: Duration::from_millis(ms),
-            pixels: vec![0; 12],
+            pixels: vec![0; 12].into(),
             h: 2,
             w: 2,
             truth: Pose {
@@ -245,15 +267,14 @@ mod tests {
     }
 
     #[test]
-    fn shed_drops_pending_and_reports_them() {
+    fn shed_drops_pending_and_reports_the_count() {
         let mut b = Batcher::new(4, Duration::from_millis(50));
         b.push(frame(0, 0));
         b.push(frame(1, 10));
-        let dropped = b.shed();
-        assert_eq!(dropped.iter().map(|f| f.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.shed(), 2);
         assert_eq!(b.pending_len(), 0);
         assert_eq!(b.deadline(), None);
-        assert!(b.shed().is_empty());
+        assert_eq!(b.shed(), 0);
     }
 
     #[test]
@@ -264,7 +285,7 @@ mod tests {
         b.push(frame(0, 0));
         b.push(frame(1, 5));
         b.push(frame(2, 10));
-        assert_eq!(b.shed().len(), 3);
+        assert_eq!(b.shed(), 3);
         b.push(frame(3, 20));
         b.push(frame(4, 25));
         let batch = b.flush(Duration::from_millis(30)).expect("pending flush");
@@ -295,6 +316,27 @@ mod tests {
         let plain = Batch::new(vec![frame(2, 10)], 4, Duration::from_millis(10));
         assert_eq!((plain.cost, plain.tenant), (1.0, 0));
         assert_eq!(plain.constraints.max_loce_m, None);
+    }
+
+    #[test]
+    fn recycle_reuses_the_dispatched_buffer() {
+        // Buffers ping-pong through `spare` with one batch of lag: the
+        // buffer recycled after batch 1 backs batch 3, and so on — a warm
+        // recycling caller allocates no frame `Vec` per batch.
+        let mut b = Batcher::new(2, Duration::from_millis(50));
+        let mut ptrs = Vec::new();
+        for round in 0..4u64 {
+            b.push(frame(round * 2, round * 20));
+            let batch = b.push(frame(round * 2 + 1, round * 20 + 5)).expect("full");
+            assert_eq!(
+                batch.frames.iter().map(|f| f.id).collect::<Vec<_>>(),
+                vec![round * 2, round * 2 + 1]
+            );
+            ptrs.push(batch.frames.as_ptr());
+            b.recycle(batch.frames);
+        }
+        assert_eq!(ptrs[0], ptrs[2], "batch 1's buffer must back batch 3");
+        assert_eq!(ptrs[1], ptrs[3], "batch 2's buffer must back batch 4");
     }
 
     #[test]

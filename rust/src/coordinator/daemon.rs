@@ -198,11 +198,25 @@ struct WindowCounts {
     latency: Streaming,
 }
 
-/// One window under accumulation: slot index → counters (`BTreeMap` so
-/// the rendered record lists tenants in admission order).
+/// One window under accumulation: slot-indexed counters.  A dense
+/// `Vec<Option<_>>` sized to the slot high-water mark replaces the old
+/// per-window `BTreeMap` — indexing a hot counter is a bounds check, not
+/// a tree walk, and the vector is pre-sized at window creation so the
+/// steady state allocates nothing.  Rendering keeps admission (slot)
+/// order by construction.
 #[derive(Default)]
 struct WindowAccum {
-    tenants: BTreeMap<usize, WindowCounts>,
+    tenants: Vec<Option<WindowCounts>>,
+}
+
+impl WindowAccum {
+    /// The counter cell for slot `k`, materialized on first touch.
+    fn wt(&mut self, k: usize) -> &mut WindowCounts {
+        if self.tenants.len() <= k {
+            self.tenants.resize_with(k + 1, || None);
+        }
+        self.tenants[k].get_or_insert_with(WindowCounts::default)
+    }
 }
 
 /// `window * index` without the `Mul<u32>` truncation hazard.
@@ -292,10 +306,40 @@ impl DaemonLoop {
         None
     }
 
-    /// The window accumulator covering instant `t`.
+    /// The window accumulator covering instant `t`, pre-sized to the
+    /// current slot high-water mark so counter touches never grow it.
     fn win(&mut self, t: Duration) -> &mut WindowAccum {
         let idx = (t.as_nanos() / self.window.as_nanos()) as u64;
-        self.windows.entry(idx).or_default()
+        let cap = self.slots.len();
+        self.windows.entry(idx).or_insert_with(|| WindowAccum {
+            tenants: Vec::with_capacity(cap),
+        })
+    }
+
+    /// Compact the daemon calendar when churned-out tenants have left it
+    /// mostly dead entries.  The liveness predicate is exactly the
+    /// pop-time check, and a dead entry can never come back to life
+    /// (per-tenant deadlines and arrival instants are strictly
+    /// increasing), so removal is invisible to scheduling.  Dead entries
+    /// of *retired* slots are counted into `stale` here — exactly what
+    /// the pop path would have done when they surfaced.
+    fn maybe_compact(&mut self) {
+        if self.heap.len() < 256 || self.heap.len() <= 8 * self.slots.len().max(1) {
+            return;
+        }
+        let slots = &self.slots;
+        let stale = &mut self.stale;
+        self.heap.retain(|&Reverse((t, kind, k))| {
+            let ok = match kind {
+                DaemonEvent::Churn => true,
+                DaemonEvent::Deadline => slots[k].batcher.deadline() == Some(t),
+                DaemonEvent::Arrival => slots[k].pending.as_ref().map(|f| f.t_capture) == Some(t),
+            };
+            if !ok && !slots[k].live {
+                *stale += 1;
+            }
+            ok
+        });
     }
 
     fn find_live(&self, name: &str) -> Option<usize> {
@@ -435,11 +479,11 @@ impl DaemonLoop {
             // Admission backpressure: the frame cannot even start before
             // its deadline — shed it plus the tenant's pending (older)
             // frames.  Counted, never silent.
-            let n = self.slots[k].batcher.shed().len() as u64 + 1;
+            let n = self.slots[k].batcher.shed() as u64 + 1;
             self.slots[k].shed += n;
-            self.win(now).tenants.entry(k).or_default().shed += n;
+            self.win(now).wt(k).shed += n;
         } else {
-            self.win(now).tenants.entry(k).or_default().admitted += 1;
+            self.win(now).wt(k).admitted += 1;
             if let Some(batch) = self.slots[k].batcher.push(frame) {
                 enqueue(&mut self.ready, &self.slots[k].w, batch);
             }
@@ -455,10 +499,14 @@ impl DaemonLoop {
             if self.slots[k].w.qos.sheddable() && start > deadline {
                 let n = batch.real_count() as u64;
                 self.slots[k].shed += n;
-                self.win(now).tenants.entry(k).or_default().shed += n;
+                self.win(now).wt(k).shed += n;
+                self.slots[k].batcher.recycle(batch.frames);
                 continue;
             }
             engine.submit(&batch)?;
+            // The engine cloned what outlives the submit; the frame
+            // buffer goes back to the tenant's batcher for reuse.
+            self.slots[k].batcher.recycle(batch.frames);
         }
         Ok(())
     }
@@ -474,17 +522,20 @@ impl DaemonLoop {
         for t_cap in &c.t_captures {
             let lat = done.saturating_sub(*t_cap);
             let lat_s = lat.as_secs_f64();
+            let missed = lat > deadline;
             self.slots[c.tenant].latency.add(lat_s);
-            let wt = self.win(done).tenants.entry(c.tenant).or_default();
-            wt.latency.add(lat_s);
-            if lat > deadline {
+            if missed {
                 self.slots[c.tenant].misses += 1;
-                self.win(done).tenants.entry(c.tenant).or_default().misses += 1;
+            }
+            let wt = self.win(done).wt(c.tenant);
+            wt.latency.add(lat_s);
+            if missed {
+                wt.misses += 1;
             }
         }
         let n = c.estimates.len() as u64;
         self.slots[c.tenant].completed += n;
-        self.win(done).tenants.entry(c.tenant).or_default().completed += n;
+        self.win(done).wt(c.tenant).completed += n;
     }
 
     /// Materialize the sparse window map into time-ordered records.
@@ -504,14 +555,17 @@ impl DaemonLoop {
                 tenants: acc
                     .tenants
                     .iter()
-                    .map(|(&k, c)| WindowTenant {
-                        id: self.slots[k].id,
-                        admitted: c.admitted,
-                        completed: c.completed,
-                        shed: c.shed,
-                        misses: c.misses,
-                        p50_ms: q_ms(&c.latency, Streaming::p50),
-                        p99_ms: q_ms(&c.latency, Streaming::p99),
+                    .enumerate()
+                    .filter_map(|(k, c)| {
+                        c.as_ref().map(|c| WindowTenant {
+                            id: self.slots[k].id,
+                            admitted: c.admitted,
+                            completed: c.completed,
+                            shed: c.shed,
+                            misses: c.misses,
+                            p50_ms: q_ms(&c.latency, Streaming::p50),
+                            p99_ms: q_ms(&c.latency, Streaming::p99),
+                        })
                     })
                     .collect(),
             })
@@ -530,6 +584,20 @@ pub fn run_daemon(
     engine: &mut dyn Engine,
     spec: &DaemonSpec,
 ) -> Result<DaemonOutput> {
+    run_daemon_with_ready(config, eval, engine, spec, EventQueueKind::default())
+}
+
+/// [`run_daemon`] with an explicit ready-queue arm.  Windowed telemetry,
+/// churn counters, and stale accounting are bit-identical across the
+/// sharded and unsharded queues (property-tested below); the parameter
+/// exists for that oracle and for the AB-TS bench's reference arm.
+pub fn run_daemon_with_ready(
+    config: &Config,
+    eval: Arc<EvalSet>,
+    engine: &mut dyn Engine,
+    spec: &DaemonSpec,
+    ready_kind: EventQueueKind,
+) -> Result<DaemonOutput> {
     if spec.window.is_zero() {
         bail!("daemon telemetry window must be positive");
     }
@@ -543,21 +611,28 @@ pub fn run_daemon(
     let mode = engine.primary_mode()?;
     engine.set_frame_record_cap(FRAME_RECORD_CAP);
     let base_macs = models::ursonet::build_full().total_macs() as f64;
+    // The join count bounds the slot high-water mark (slots are never
+    // reused), so every per-tenant structure pre-sizes from it: the
+    // steady state indexes, it does not grow.
+    let n_joins = schedule
+        .iter()
+        .filter(|e| matches!(e.action, ChurnAction::Join(..)))
+        .count();
     let mut d = DaemonLoop {
         window: spec.window,
         size: engine.artifact_batch(),
         timeout: config.batch_timeout,
         base_macs,
         eval,
-        schedule,
-        slots: Vec::new(),
-        heap: BinaryHeap::new(),
-        ready: ReadyQueue::new(EventQueueKind::Calendar),
+        slots: Vec::with_capacity(n_joins),
+        heap: BinaryHeap::with_capacity(schedule.len() + 4 * n_joins + 64),
+        ready: ReadyQueue::with_tenants(ready_kind, n_joins),
         windows: BTreeMap::new(),
         stale: 0,
         joins: 0,
         leaves: 0,
         rerates: 0,
+        schedule,
     };
     // The whole churn schedule goes on the calendar upfront: each entry
     // is unique, so churn entries are always live when popped.
@@ -579,6 +654,7 @@ pub fn run_daemon(
         for c in engine.poll() {
             d.account(c);
         }
+        d.maybe_compact();
     }
     engine.drain()?;
     for c in engine.poll() {
@@ -948,6 +1024,97 @@ mod tests {
                     out.windows == again.windows,
                     "windowed telemetry diverged across replays"
                 );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_sharded_ready_queue_matches_calendar_in_daemon() {
+        // The sharded ready queue (slab-parked batches, tenant-hash
+        // shards) must be decision-invisible under live churn too:
+        // random join/leave/rerate schedules with backend faults give
+        // bit-identical windowed telemetry, churn counters, per-tenant
+        // accounting, and stale counts across the queue arms.
+        let eval = tiny_eval();
+        check(
+            "daemon_sharded_ready_equivalence",
+            PropConfig {
+                cases: 16,
+                ..Default::default()
+            },
+            move |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let mut tenants = Vec::new();
+                for k in 0..n_tenants {
+                    let qos = match ctx.rng.below(3) {
+                        0 => QosClass::Realtime,
+                        1 => QosClass::Standard,
+                        _ => QosClass::Background,
+                    };
+                    let mut t = TenantTrace::steady(workload(
+                        &format!("t{k}"),
+                        qos,
+                        50 + ctx.rng.below(3000) as u64,
+                        1.0 + ctx.rng.below(40) as f64,
+                        1 + ctx.rng.below(30) as u64,
+                    ));
+                    t.join_at = Duration::from_millis(ctx.rng.below(4000) as u64);
+                    if ctx.rng.below(2) == 1 {
+                        t.leave_at =
+                            Some(t.join_at + Duration::from_millis(1 + ctx.rng.below(5000) as u64));
+                    }
+                    tenants.push(t);
+                }
+                let faults: Vec<usize> = {
+                    let mut s = std::collections::BTreeSet::new();
+                    for _ in 0..ctx.rng.below(16) {
+                        s.insert(1 + ctx.rng.below(40));
+                    }
+                    s.into_iter().collect()
+                };
+                let timeout = 1 + ctx.rng.below(600) as u64;
+                let s = DaemonSpec {
+                    window: Duration::from_millis(500 + ctx.rng.below(4000) as u64),
+                    tenants,
+                    churn: vec![],
+                };
+                let run = |kind: EventQueueKind| -> Result<DaemonOutput, String> {
+                    let mut engine = pool(faults.clone());
+                    run_daemon_with_ready(&cfg(timeout), eval.clone(), &mut engine, &s, kind)
+                        .map_err(|e| format!("{kind:?}: {e:#}"))
+                };
+                let sharded = run(EventQueueKind::Sharded)?;
+                let cal = run(EventQueueKind::Calendar)?;
+
+                crate::prop_assert!(
+                    sharded.windows == cal.windows,
+                    "windowed telemetry diverged between queue arms"
+                );
+                crate::prop_assert!(
+                    (sharded.joins, sharded.leaves, sharded.rerates)
+                        == (cal.joins, cal.leaves, cal.rerates),
+                    "churn counters diverged"
+                );
+                crate::prop_assert!(
+                    sharded.telemetry.stale_events == cal.telemetry.stale_events,
+                    "stale counts diverged: {} vs {}",
+                    sharded.telemetry.stale_events,
+                    cal.telemetry.stale_events
+                );
+                for (a, b) in sharded.telemetry.tenants.iter().zip(&cal.telemetry.tenants) {
+                    crate::prop_assert!(
+                        (a.admitted, a.completed, a.shed, a.deadline_misses)
+                            == (b.admitted, b.completed, b.shed, b.deadline_misses),
+                        "tenant {} accounting diverged",
+                        a.name()
+                    );
+                    crate::prop_assert!(
+                        a.latency_summary() == b.latency_summary(),
+                        "tenant {} latency digests diverged",
+                        a.name()
+                    );
+                }
                 Ok(())
             },
         );

@@ -333,7 +333,7 @@ mod tests {
         Frame {
             id,
             t_capture: Duration::from_millis(ms),
-            pixels: vec![100; 8 * 12 * 3],
+            pixels: vec![100; 8 * 12 * 3].into(),
             h: 8,
             w: 12,
             truth: Pose {

@@ -33,10 +33,21 @@
 //! against live tenant state when popped (stale entries are dropped), so
 //! each event costs O(log n).  Batches that became ready together are
 //! dispatched from per-QoS-class EDF heaps keyed `(deadline, seq)` — the
-//! monotone `seq` reproduces the old stable sort exactly.  Both queues
-//! are **bit-identical in dispatch order** to the pre-calendar scan
-//! loop, which is kept as [`EventQueueKind::Scan`] and property-tested
-//! against the calendar (`event_order_equivalence`).
+//! monotone `seq` reproduces the old stable sort exactly.
+//!
+//! At 10k+ tenants the per-class heaps themselves become the cost
+//! (DESIGN.md §4.13), so the default ready queue is **sharded**: each
+//! class splits into power-of-two tenant-hash shards popped by
+//! tournament over the shard heads — `(deadline, seq)` is a strict total
+//! order (seq is unique), so the tournament minimum is exactly the
+//! global-heap minimum and dispatch order is unchanged.  Batch payloads
+//! park in a generation-stamped slab ([`crate::util::slab`]) between
+//! push and pop, so heap entries are small `Copy` tuples and steady-state
+//! serving recycles slots instead of allocating.  All three ready-queue
+//! arms — [`EventQueueKind::Sharded`] (default), the unsharded
+//! [`EventQueueKind::Calendar`], and the full-scan
+//! [`EventQueueKind::Scan`] reference — are **bit-identical in dispatch
+//! order**, property-tested three ways (`event_order_equivalence`).
 //!
 //! Per-tenant constraints ride on each [`Batch`] and gate admission in
 //! both engines: the whole-frame pool checks them per substrate at
@@ -63,6 +74,7 @@ use crate::coordinator::telemetry::{Telemetry, TenantRecord};
 use crate::net::models;
 use crate::pose::EvalSet;
 use crate::sensor::{Camera, Frame};
+use crate::util::slab::{Slab, SlabKey};
 use crate::util::stats::Streaming;
 
 /// Tenant frame ids are offset by `tenant << TENANT_ID_SHIFT` so ids stay
@@ -155,16 +167,23 @@ pub trait Engine {
 /// Which serve-loop scheduling implementation drives [`run_workloads`]:
 /// both the admission-event source AND the ready-batch ordering.
 ///
-/// Both produce **bit-identical** dispatch orders and accounting; the
-/// scan is the full pre-change reference (tenant scan per event + `Vec`
-/// with a stable sort per dispatch round) kept as the equivalence
-/// oracle (property-tested below) and as the AB-HP bench's "before"
-/// arm.
+/// All three produce **bit-identical** dispatch orders and accounting;
+/// the unsharded calendar is the PR-5 implementation kept as the
+/// direct reference for the sharded path, and the scan is the full
+/// pre-calendar reference (tenant scan per event + `Vec` with a stable
+/// sort per dispatch round).  The equivalence is property-tested below
+/// and re-checked at every scale by the AB-TS bench.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EventQueueKind {
-    /// Lazily-invalidated binary-heap event calendar + per-QoS-class
-    /// EDF heaps — O(log n) per event.  The default.
+    /// Heap event calendar + tenant-hash-**sharded** per-QoS-class EDF
+    /// heaps with slab-parked batch payloads — O(log(n/shards)) per
+    /// ready-queue operation, zero steady-state allocation.  The
+    /// default (DESIGN.md §4.13).
     #[default]
+    Sharded,
+    /// Heap event calendar + one global EDF heap per QoS class — the
+    /// unsharded PR-5 path, kept as the sharding equivalence reference
+    /// and the AB-TS bench's "before" arm.
     Calendar,
     /// Full scan of every tenant per event — O(n) per event — plus the
     /// old sort-per-dispatch ready vector (the pre-calendar reference
@@ -252,8 +271,13 @@ impl EventQueue {
     fn new(kind: EventQueueKind, tenants: &[Tenant]) -> EventQueue {
         match kind {
             EventQueueKind::Scan => EventQueue::Scan,
-            EventQueueKind::Calendar => {
-                let mut q = EventQueue::Calendar(BinaryHeap::with_capacity(tenants.len() * 2));
+            // Sharding applies to the *ready queue*; both heap kinds share
+            // the same event calendar.  Pre-sized from the tenant count:
+            // each tenant carries at most one arrival + one deadline entry
+            // plus a small lazy-invalidation surplus.
+            EventQueueKind::Calendar | EventQueueKind::Sharded => {
+                let mut q =
+                    EventQueue::Calendar(BinaryHeap::with_capacity(tenants.len() * 2 + 64));
                 for (k, t) in tenants.iter().enumerate() {
                     q.tenant_changed(k, t);
                 }
@@ -327,6 +351,20 @@ impl EventQueue {
             }
         }
     }
+
+    /// Compact the calendar when lazy invalidation has let dead entries
+    /// dominate (heavy tenant churn leaves entries whose tenants will
+    /// never fire them).  A dead entry can never surface from `next`, so
+    /// dropping them is invisible to scheduling — compaction only bounds
+    /// heap memory and pop-scan cost.  The live check is exactly the
+    /// pop-time check, so an entry's fate is identical either way.
+    fn maybe_compact(&mut self, tenants: &[Tenant]) {
+        if let EventQueue::Calendar(heap) = self {
+            if heap.len() >= 256 && heap.len() > 8 * tenants.len().max(1) {
+                heap.retain(|&Reverse((t, kind, k))| Self::live(tenants, t, kind, k));
+            }
+        }
+    }
 }
 
 /// A ready batch awaiting dispatch inside one EDF heap: ordered by
@@ -359,15 +397,42 @@ impl Ord for ReadyEntry {
     }
 }
 
-/// Ready-batch ordering: per-QoS-class EDF heaps (strict class priority
-/// across heaps, earliest-deadline-first within one, enqueue order on
-/// ties via `seq`) for the calendar path, or the pre-change `Vec` with
-/// one stable `(class, deadline)` sort per dispatch round for the scan
-/// reference — so the equivalence oracle covers the heap replacement,
-/// not just the event-source swap.
+/// A sharded EDF entry: `(deadline, seq, key)`.  Ordering is decided by
+/// `(deadline, seq)` — `seq` is unique, so the trailing slab key never
+/// participates in a comparison; it only rides along to the payload.
+type ShardEntry = (Duration, u64, SlabKey);
+
+/// Shards for `n` tenants: one per 64 tenants, power of two for mask
+/// indexing, capped so the tournament scan over shard heads stays cheap.
+fn shard_count_for(tenants: usize) -> usize {
+    (tenants / 64).next_power_of_two().clamp(1, 64)
+}
+
+/// Ready-batch ordering behind [`run_workloads`]; three arms (see
+/// [`EventQueueKind`]):
+///
+/// * **Sharded** (default): per QoS class, tenant-hash-sharded EDF heaps
+///   of small `Copy` [`ShardEntry`] tuples, popped by tournament over
+///   the shard heads.  `(deadline, seq)` is a strict total order (`seq`
+///   is unique), so the tournament minimum equals the global-heap
+///   minimum — dispatch order is bit-identical to the unsharded heap —
+///   while each push/pop costs O(log(n/shards)).  Batch payloads park
+///   in a generation-stamped [`Slab`] between push and pop, so
+///   steady-state serving recycles slots instead of allocating.
+/// * **Calendar**: one global EDF heap per class (strict class priority
+///   across heaps, earliest-deadline-first within one, enqueue order on
+///   ties via `seq`) — the unsharded PR-5 path.
+/// * **Scan**: the pre-change `Vec` with one stable `(class, deadline)`
+///   sort per dispatch round — so the equivalence oracle covers the
+///   heap replacement end to end, not just the event-source swap.
 pub(crate) struct ReadyQueue {
     kind: EventQueueKind,
     classes: [BinaryHeap<Reverse<ReadyEntry>>; 3],
+    /// Sharded arm: per-class, per-shard EDF heaps over slab keys.
+    shards: [Vec<BinaryHeap<Reverse<ShardEntry>>>; 3],
+    shard_mask: usize,
+    /// Batch payloads parked between push and pop (sharded arm only).
+    slab: Slab<Batch>,
     /// Scan reference only: pending entries, sorted (descending, popped
     /// from the back) on the first pop after a push.
     scan: Vec<(QosClass, ReadyEntry)>,
@@ -377,27 +442,74 @@ pub(crate) struct ReadyQueue {
 
 impl ReadyQueue {
     pub(crate) fn new(kind: EventQueueKind) -> ReadyQueue {
+        ReadyQueue::with_tenants(kind, 0)
+    }
+
+    /// Pre-sized constructor: shard count, per-shard heap capacity, and
+    /// the slab are all sized from the tenant count so a steady-state
+    /// run never grows them.
+    pub(crate) fn with_tenants(kind: EventQueueKind, tenants: usize) -> ReadyQueue {
+        let shard_count = match kind {
+            EventQueueKind::Sharded => shard_count_for(tenants),
+            _ => 0,
+        };
+        let classes_cap = match kind {
+            EventQueueKind::Calendar => (tenants + 4).min(4096),
+            _ => 0,
+        };
+        let shard_cap = tenants / shard_count.max(1) + 8;
+        let slab_cap = match shard_count {
+            0 => 0,
+            _ => (tenants + 8).min(8192),
+        };
+        let mk_class = || BinaryHeap::with_capacity(classes_cap);
+        let mk_shards = || {
+            (0..shard_count)
+                .map(|_| BinaryHeap::with_capacity(shard_cap))
+                .collect::<Vec<_>>()
+        };
         ReadyQueue {
             kind,
-            classes: [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()],
+            classes: [mk_class(), mk_class(), mk_class()],
+            shards: [mk_shards(), mk_shards(), mk_shards()],
+            shard_mask: shard_count.saturating_sub(1),
+            slab: Slab::with_capacity(slab_cap),
             scan: Vec::new(),
             scan_sorted: false,
             next_seq: 0,
         }
     }
 
+    /// Fibonacci-hash a tenant index onto a shard: multiplicative
+    /// scrambling spreads the sequential tenant ids evenly over the
+    /// power-of-two shard count (a plain mask would stripe them).
+    fn shard_for(&self, tenant: usize) -> usize {
+        ((tenant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & self.shard_mask
+    }
+
     pub(crate) fn push(&mut self, qos: QosClass, deadline: Duration, batch: Batch) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let entry = ReadyEntry {
-            deadline,
-            seq,
-            batch,
-        };
         match self.kind {
-            EventQueueKind::Calendar => self.classes[qos as usize].push(Reverse(entry)),
+            EventQueueKind::Sharded => {
+                let shard = self.shard_for(batch.tenant);
+                let key = self.slab.insert(batch);
+                self.shards[qos as usize][shard].push(Reverse((deadline, seq, key)));
+            }
+            EventQueueKind::Calendar => self.classes[qos as usize].push(Reverse(ReadyEntry {
+                deadline,
+                seq,
+                batch,
+            })),
             EventQueueKind::Scan => {
-                self.scan.push((qos, entry));
+                self.scan.push((
+                    qos,
+                    ReadyEntry {
+                        deadline,
+                        seq,
+                        batch,
+                    },
+                ));
                 self.scan_sorted = false;
             }
         }
@@ -407,6 +519,31 @@ impl ReadyQueue {
     /// (then enqueue order) within a class.
     pub(crate) fn pop(&mut self) -> Option<(Duration, Batch)> {
         match self.kind {
+            EventQueueKind::Sharded => {
+                for class in &mut self.shards {
+                    // Tournament over the shard heads: (deadline, seq) is
+                    // a strict total order, so the minimum head is THE
+                    // class minimum — identical to one global heap.
+                    let mut best: Option<(Duration, u64, usize)> = None;
+                    for (i, shard) in class.iter().enumerate() {
+                        if let Some(&Reverse((d, s, _))) = shard.peek() {
+                            let wins = match best {
+                                None => true,
+                                Some((bd, bs, _)) => (d, s) < (bd, bs),
+                            };
+                            if wins {
+                                best = Some((d, s, i));
+                            }
+                        }
+                    }
+                    if let Some((deadline, _, i)) = best {
+                        let Reverse((_, _, key)) = class[i].pop().expect("peeked shard head");
+                        let batch = self.slab.remove(key).expect("slab entry for ready batch");
+                        return Some((deadline, batch));
+                    }
+                }
+                None
+            }
             EventQueueKind::Calendar => {
                 for class in &mut self.classes {
                     if let Some(Reverse(e)) = class.pop() {
@@ -431,17 +568,20 @@ impl ReadyQueue {
     }
 }
 
-/// Accelerator substrate names behind the run's pool, deduplicated in
-/// pool order (order is content for plan keying).  `Mpai` expands to its
-/// DPU backbone + VPU head substrates; an empty pool falls back to the
-/// single configured mode.
-fn pool_accel_names(config: &Config) -> Vec<String> {
+/// Accelerator substrates behind the run's pool as interned
+/// [`SubstrateId`]s, deduplicated in pool order (order is content for
+/// plan keying).  `Mpai` expands to its DPU backbone + VPU head
+/// substrates; an empty pool falls back to the single configured mode.
+/// Interning once here means every downstream consumer (plan keys, the
+/// per-tenant resolution loop) compares `Copy` ids instead of cloning
+/// `String`s per call.
+pub(crate) fn pool_accel_ids(config: &Config) -> Vec<SubstrateId> {
     let modes: Vec<Mode> = if config.pool.is_empty() {
         config.mode.into_iter().collect()
     } else {
         config.pool.clone()
     };
-    let mut names: Vec<String> = Vec::new();
+    let mut ids: Vec<SubstrateId> = Vec::new();
     for m in modes {
         let accels: Vec<&str> = match m.accel_name() {
             Some(n) => vec![n],
@@ -449,12 +589,13 @@ fn pool_accel_names(config: &Config) -> Vec<String> {
             None => vec!["dpu", "vpu"],
         };
         for a in accels {
-            if !names.iter().any(|n| n == a) {
-                names.push(a.to_string());
+            let id = SubstrateId::intern(a);
+            if !ids.contains(&id) {
+                ids.push(id);
             }
         }
     }
-    names
+    ids
 }
 
 pub(crate) fn enqueue(ready: &mut ReadyQueue, w: &Workload, batch: Batch) {
@@ -508,7 +649,7 @@ fn handle_event(
             // with the tenant's pending frames (older, so even more
             // hopeless).  Counted, never silent.
             if t.w.qos.sheddable() && horizon > frame.t_capture + t.w.deadline {
-                t.shed += t.batcher.shed().len() as u64 + 1;
+                t.shed += t.batcher.shed() as u64 + 1;
             } else if let Some(batch) = t.batcher.push(frame) {
                 enqueue(ready, &t.w, batch);
             }
@@ -529,15 +670,16 @@ fn handle_event(
 /// timeline, so the two clocks report identical per-tenant counts for the
 /// same schedule (property-tested in `coordinator::executor`).
 ///
-/// Events come from the heap calendar; [`run_workloads_with_events`]
-/// selects the scan reference instead (tests and the AB-HP bench).
+/// Events come from the heap calendar with the sharded ready queue;
+/// [`run_workloads_with_events`] selects the unsharded or scan
+/// reference instead (tests and the AB-HP / AB-TS benches).
 pub fn run_workloads(
     config: &Config,
     eval: Arc<EvalSet>,
     engine: &mut dyn Engine,
     workloads: &[Workload],
 ) -> Result<RunOutput> {
-    run_workloads_with_events(config, eval, engine, workloads, EventQueueKind::Calendar)
+    run_workloads_with_events(config, eval, engine, workloads, EventQueueKind::default())
 }
 
 /// [`run_workloads`] with an explicit admission-event source.  Dispatch
@@ -565,17 +707,17 @@ pub fn run_workloads_with_events(
     // configurations pays one `select_cut` sweep per distinct key; the
     // per-run hit/miss delta lands on the telemetry below.
     let cache_before = plan_cache::global_stats();
-    let pool_names = config.partition.as_ref().map(|_| pool_accel_names(config));
+    let pool_ids = config.partition.as_ref().map(|_| pool_accel_ids(config));
     let mut tenants: Vec<Tenant> = Vec::with_capacity(workloads.len());
     for (k, w) in workloads.iter().enumerate() {
         let net = models::by_name(&w.net).with_context(|| {
             format!("workload {:?}: unknown network {:?}", w.name, w.net)
         })?;
         let cost = (net.total_macs() as f64 / base_macs).max(0.01);
-        let plan = match (&config.partition, &pool_names) {
-            (Some(spec), Some(names)) if config.plan_cache => plan_or_build(
+        let plan = match (&config.partition, &pool_ids) {
+            (Some(spec), Some(ids)) if config.plan_cache => plan_or_build(
                 &crate::net::compiler::compile(&net),
-                names,
+                ids,
                 &config.boundary_link,
                 &w.constraints,
                 size,
@@ -626,7 +768,7 @@ pub fn run_workloads_with_events(
 
     let mut clock = config.clock();
     let mut estimates: Vec<PoseEstimate> = Vec::new();
-    let mut ready = ReadyQueue::new(events);
+    let mut ready = ReadyQueue::with_tenants(events, tenants.len());
     let mut queue = EventQueue::new(events, &tenants);
     let mut stale = 0u64;
     loop {
@@ -648,7 +790,10 @@ pub fn run_workloads_with_events(
         }
 
         // Dispatch everything that became ready: strict class priority
-        // (realtime > standard > background), EDF within a class.
+        // (realtime > standard > background), EDF within a class.  Frame
+        // buffers flow back to their tenant's batcher after dispatch
+        // (the engine clones what outlives the submit), closing the
+        // allocation loop: steady state recycles one buffer per batch.
         while let Some((deadline, batch)) = ready.pop() {
             let start = engine.ready_at().max(now);
             let t = &mut tenants[batch.tenant];
@@ -656,10 +801,13 @@ pub fn run_workloads_with_events(
                 // Saturated: the batch cannot start before its deadline —
                 // shed it and record the drop.
                 t.shed += batch.real_count() as u64;
+                t.batcher.recycle(batch.frames);
                 continue;
             }
             engine.submit(&batch)?;
+            tenants[batch.tenant].batcher.recycle(batch.frames);
         }
+        queue.maybe_compact(&tenants);
 
         // Account completions on the virtual timeline (t_done is modeled,
         // so accounting is identical whether the completion surfaces here
@@ -879,49 +1027,41 @@ mod tests {
     }
 
     #[test]
-    fn scan_reference_serves_identically_on_a_fixed_mix() {
-        // Deterministic spot-check of the two event sources (the property
+    fn reference_queues_serve_identically_on_a_fixed_mix() {
+        // Deterministic spot-check of all three queue arms (the property
         // test below covers random mixes): same mix, same fault schedule,
         // identical estimate stream and tenant accounting.
         let ws = vec![
             workload("rt", QosClass::Realtime, 8000, 12.0, 24),
             workload("bg", QosClass::Background, 250, 60.0, 80),
         ];
-        let mut cal_engine = pool(vec![3, 7]);
-        let cal = run_workloads_with_events(
-            &cfg(200),
-            tiny_eval(),
-            &mut cal_engine,
-            &ws,
-            EventQueueKind::Calendar,
-        )
-        .unwrap();
-        let mut scan_engine = pool(vec![3, 7]);
-        let scan = run_workloads_with_events(
-            &cfg(200),
-            tiny_eval(),
-            &mut scan_engine,
-            &ws,
-            EventQueueKind::Scan,
-        )
-        .unwrap();
+        let run = |kind| {
+            let mut engine = pool(vec![3, 7]);
+            run_workloads_with_events(&cfg(200), tiny_eval(), &mut engine, &ws, kind).unwrap()
+        };
+        let sharded = run(EventQueueKind::Sharded);
+        let cal = run(EventQueueKind::Calendar);
+        let scan = run(EventQueueKind::Scan);
         let ids = |o: &RunOutput| o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>();
-        assert_eq!(ids(&cal), ids(&scan), "dispatch order diverged");
-        for (a, b) in cal.telemetry.tenants.iter().zip(&scan.telemetry.tenants) {
-            assert_eq!(
-                (a.admitted, a.completed, a.shed, a.deadline_misses),
-                (b.admitted, b.completed, b.shed, b.deadline_misses),
-                "tenant {} accounting diverged",
-                a.name()
-            );
-            // Same dispatch order ⇒ same insertion order ⇒ the streaming
-            // digests are bit-identical, P² markers included.
-            assert_eq!(
-                a.latency_summary(),
-                b.latency_summary(),
-                "tenant {} latency digest",
-                a.name()
-            );
+        assert_eq!(ids(&sharded), ids(&cal), "sharded vs calendar order diverged");
+        assert_eq!(ids(&cal), ids(&scan), "calendar vs scan order diverged");
+        for arm in [&cal, &scan] {
+            for (a, b) in sharded.telemetry.tenants.iter().zip(&arm.telemetry.tenants) {
+                assert_eq!(
+                    (a.admitted, a.completed, a.shed, a.deadline_misses),
+                    (b.admitted, b.completed, b.shed, b.deadline_misses),
+                    "tenant {} accounting diverged",
+                    a.name()
+                );
+                // Same dispatch order ⇒ same insertion order ⇒ the
+                // streaming digests are bit-identical, P² markers included.
+                assert_eq!(
+                    a.latency_summary(),
+                    b.latency_summary(),
+                    "tenant {} latency digest",
+                    a.name()
+                );
+            }
         }
     }
 
@@ -929,11 +1069,12 @@ mod tests {
     fn property_event_calendar_matches_scan_reference_bit_for_bit() {
         // THE tentpole equivalence (ISSUE acceptance): for random tenant
         // mixes, arrival rates, deadlines, batcher timeouts, and fault
-        // schedules, the heap event calendar + per-class EDF heaps
-        // produce the *same dispatch order* (estimate stream compared in
-        // order, not as a set), the same per-tenant
-        // admitted/completed/shed/miss counts, and the same latency
-        // sequences as the pre-calendar full-scan reference.
+        // schedules, the sharded ready queue (tenant-hash shards + slab
+        // recycling), the unsharded heap calendar, and the pre-calendar
+        // full-scan reference all produce the *same dispatch order*
+        // (estimate stream compared in order, not as a set), the same
+        // per-tenant admitted/completed/shed/miss counts, and the same
+        // latency sequences.
         let eval = tiny_eval();
         check(
             "event_order_equivalence",
@@ -952,55 +1093,50 @@ mod tests {
                 };
                 let timeout = 1 + ctx.rng.below(600) as u64;
 
-                let mut cal_engine = pool(faults.clone());
-                let cal = run_workloads_with_events(
-                    &cfg(timeout),
-                    eval.clone(),
-                    &mut cal_engine,
-                    &ws,
-                    EventQueueKind::Calendar,
-                )
-                .map_err(|e| format!("calendar: {e:#}"))?;
-                let mut scan_engine = pool(faults);
-                let scan = run_workloads_with_events(
-                    &cfg(timeout),
-                    eval.clone(),
-                    &mut scan_engine,
-                    &ws,
-                    EventQueueKind::Scan,
-                )
-                .map_err(|e| format!("scan: {e:#}"))?;
+                let run = |kind: EventQueueKind| {
+                    let mut engine = pool(faults.clone());
+                    run_workloads_with_events(&cfg(timeout), eval.clone(), &mut engine, &ws, kind)
+                        .map_err(|e| format!("{kind:?}: {e:#}"))
+                };
+                let sharded = run(EventQueueKind::Sharded)?;
+                let cal = run(EventQueueKind::Calendar)?;
+                let scan = run(EventQueueKind::Scan)?;
 
-                let cal_ids: Vec<u64> = cal.estimates.iter().map(|e| e.frame_id).collect();
-                let scan_ids: Vec<u64> = scan.estimates.iter().map(|e| e.frame_id).collect();
-                crate::prop_assert!(
-                    cal_ids == scan_ids,
-                    "dispatch order diverged: calendar {cal_ids:?} vs scan {scan_ids:?}"
-                );
-                for (k, (a, b)) in cal
-                    .telemetry
-                    .tenants
-                    .iter()
-                    .zip(&scan.telemetry.tenants)
-                    .enumerate()
-                {
+                let ids = |o: &RunOutput| -> Vec<u64> {
+                    o.estimates.iter().map(|e| e.frame_id).collect()
+                };
+                let sharded_ids = ids(&sharded);
+                for (label, arm) in [("calendar", &cal), ("scan", &scan)] {
+                    let arm_ids = ids(arm);
                     crate::prop_assert!(
-                        (a.admitted, a.completed, a.shed, a.deadline_misses)
-                            == (b.admitted, b.completed, b.shed, b.deadline_misses),
-                        "tenant {k}: calendar ({}, {}, {}, {}) vs scan ({}, {}, {}, {})",
-                        a.admitted,
-                        a.completed,
-                        a.shed,
-                        a.deadline_misses,
-                        b.admitted,
-                        b.completed,
-                        b.shed,
-                        b.deadline_misses
+                        sharded_ids == arm_ids,
+                        "dispatch order diverged: sharded {sharded_ids:?} vs {label} {arm_ids:?}"
                     );
-                    crate::prop_assert!(
-                        a.latency_summary() == b.latency_summary(),
-                        "tenant {k}: latency digests diverge"
-                    );
+                    for (k, (a, b)) in sharded
+                        .telemetry
+                        .tenants
+                        .iter()
+                        .zip(&arm.telemetry.tenants)
+                        .enumerate()
+                    {
+                        crate::prop_assert!(
+                            (a.admitted, a.completed, a.shed, a.deadline_misses)
+                                == (b.admitted, b.completed, b.shed, b.deadline_misses),
+                            "tenant {k}: sharded ({}, {}, {}, {}) vs {label} ({}, {}, {}, {})",
+                            a.admitted,
+                            a.completed,
+                            a.shed,
+                            a.deadline_misses,
+                            b.admitted,
+                            b.completed,
+                            b.shed,
+                            b.deadline_misses
+                        );
+                        crate::prop_assert!(
+                            a.latency_summary() == b.latency_summary(),
+                            "tenant {k}: latency digests diverge vs {label}"
+                        );
+                    }
                 }
                 Ok(())
             },

@@ -13,10 +13,14 @@
 //! [`ServiceSpan`](crate::coordinator::engine::ServiceSpan) chain (one
 //! span per serving substrate, in stage order) is replayed on that
 //! substrate's own worker thread, occupying host time per the configured
-//! [`ServiceMode`].  Chains hop worker-to-worker over `mpsc` channels,
-//! so stage k of batch i runs concurrently with stage k-1 of batch i+1 —
-//! the paper's DPU/VPU co-processing overlap, measured instead of
-//! replayed on one simulated timeline.
+//! [`ServiceMode`].  Chains hop worker-to-worker over batched ring
+//! channels ([`crate::util::ring`]), so stage k of batch i runs
+//! concurrently with stage k-1 of batch i+1 — the paper's DPU/VPU
+//! co-processing overlap, measured instead of replayed on one simulated
+//! timeline.  Completion notifications travel as *whole batches* per
+//! wakeup (one lock round moves everything a worker finished), which is
+//! what keeps the executor off the hot path at 10k-tenant fan-in
+//! (DESIGN.md §4.13).
 //!
 //! This split is what makes the **determinism equivalence** hold (and is
 //! property-tested below): for the same arrival/fault schedule, a
@@ -39,11 +43,10 @@
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
-use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::clock::ServiceMode;
@@ -51,6 +54,7 @@ use crate::coordinator::config::Mode;
 use crate::coordinator::engine::{Completion, Engine};
 use crate::coordinator::substrate::SubstrateId;
 use crate::coordinator::telemetry::Telemetry;
+use crate::util::ring;
 
 /// Default per-substrate bound on outstanding replay chains.
 pub const DEFAULT_INFLIGHT_LIMIT: usize = 8;
@@ -63,18 +67,18 @@ struct Hop {
 }
 
 /// A batch's replay token, forwarded worker-to-worker along its chain.
+/// Chain-complete notifications go through the `done` sender each worker
+/// holds (cloned at spawn), batched per inbox drain.
 struct Token {
     seq: u64,
     /// Remaining hops; the receiving worker owns the front.
     hops: VecDeque<Hop>,
     /// Inboxes of the workers executing `hops[1..]`, in order.
-    route: VecDeque<mpsc::Sender<Token>>,
-    /// Chain-complete notifications back to the executor.
-    done: mpsc::Sender<u64>,
+    route: VecDeque<ring::Sender<Token>>,
 }
 
 struct Worker {
-    tx: mpsc::Sender<Token>,
+    tx: ring::Sender<Token>,
     handle: Option<thread::JoinHandle<()>>,
 }
 
@@ -119,8 +123,10 @@ pub struct ThreadedExecutor {
     service: ServiceMode,
     inflight_limit: usize,
     workers: BTreeMap<SubstrateId, Worker>,
-    tx_done: mpsc::Sender<u64>,
-    rx_done: mpsc::Receiver<u64>,
+    tx_done: ring::Sender<u64>,
+    rx_done: ring::Receiver<u64>,
+    /// Recycled drain buffer for `rx_done` batches (no per-poll alloc).
+    done_buf: Vec<u64>,
     inflight: BTreeMap<u64, Inflight>,
     /// Outstanding chains per head substrate (submission-edge bound).
     outstanding: BTreeMap<SubstrateId, usize>,
@@ -142,7 +148,7 @@ impl ThreadedExecutor {
     /// span (`ServiceMode::Off` replays chains without sleeping — the
     /// threading structure alone, for tests and unpaced runs).
     pub fn new(inner: Box<dyn Engine>, service: ServiceMode) -> ThreadedExecutor {
-        let (tx_done, rx_done) = mpsc::channel();
+        let (tx_done, rx_done) = ring::channel();
         ThreadedExecutor {
             inner,
             service,
@@ -150,6 +156,7 @@ impl ThreadedExecutor {
             workers: BTreeMap::new(),
             tx_done,
             rx_done,
+            done_buf: Vec::new(),
             inflight: BTreeMap::new(),
             outstanding: BTreeMap::new(),
             finished: BinaryHeap::new(),
@@ -168,27 +175,33 @@ impl ThreadedExecutor {
 
     /// Inbox of the worker thread bound to `substrate` (spawned lazily on
     /// first use — substrate ids only surface with the first span).
-    fn worker_tx(&mut self, substrate: SubstrateId) -> mpsc::Sender<Token> {
+    fn worker_tx(&mut self, substrate: SubstrateId) -> ring::Sender<Token> {
         if let Some(w) = self.workers.get(&substrate) {
             return w.tx.clone();
         }
-        let (tx, rx) = mpsc::channel::<Token>();
+        let (tx, rx) = ring::channel::<Token>();
         let service = self.service;
+        let done = self.tx_done.clone();
         let handle = thread::Builder::new()
             .name(format!("mpai-substrate-{}", substrate.name()))
             .spawn(move || {
-                while let Ok(mut tok) = rx.recv() {
-                    let hop = tok.hops.pop_front().expect("token routed with a hop");
-                    service.serve(hop.lead_in + hop.service);
-                    match tok.route.pop_front() {
-                        Some(next) => {
-                            // Receiver gone only during teardown.
-                            let _ = next.send(tok);
-                        }
-                        None => {
-                            let _ = tok.done.send(tok.seq);
+                let mut inbox: Vec<Token> = Vec::new();
+                let mut done_batch: Vec<u64> = Vec::new();
+                while rx.recv_batch(&mut inbox) > 0 {
+                    for mut tok in inbox.drain(..) {
+                        let hop = tok.hops.pop_front().expect("token routed with a hop");
+                        service.serve(hop.lead_in + hop.service);
+                        match tok.route.pop_front() {
+                            Some(next) => {
+                                // Receiver gone only during teardown.
+                                let _ = next.send(tok);
+                            }
+                            None => done_batch.push(tok.seq),
                         }
                     }
+                    // Whole-batch completion notify: one lock round and at
+                    // most one wakeup for everything this drain finished.
+                    let _ = done.send_batch(&mut done_batch);
                 }
             })
             .expect("spawning substrate worker");
@@ -212,13 +225,13 @@ impl ThreadedExecutor {
             return;
         }
         let head = completion.spans[0].substrate;
-        // Submission-edge backpressure: block on completions until the
-        // head substrate's backlog drops below the bound.
+        // Submission-edge backpressure: block on completion batches until
+        // the head substrate's backlog drops below the bound.
         while self.outstanding.get(&head).copied().unwrap_or(0) >= self.inflight_limit {
-            match self.rx_done.recv() {
-                Ok(seq) => self.settle(seq),
-                Err(_) => break, // workers gone; nothing left to wait for
+            if self.rx_done.recv_batch(&mut self.done_buf) == 0 {
+                break; // workers gone; nothing left to wait for
             }
+            self.settle_drained();
         }
 
         let seq = self.next_seq;
@@ -231,7 +244,7 @@ impl ThreadedExecutor {
                 service: s.service,
             })
             .collect();
-        let mut route: VecDeque<mpsc::Sender<Token>> = VecDeque::new();
+        let mut route: VecDeque<ring::Sender<Token>> = VecDeque::new();
         for s in completion.spans.iter().skip(1) {
             let tx = self.worker_tx(s.substrate);
             route.push_back(tx);
@@ -246,14 +259,19 @@ impl ThreadedExecutor {
                 dispatched: Instant::now(),
             },
         );
-        let token = Token {
-            seq,
-            hops,
-            route,
-            done: self.tx_done.clone(),
-        };
+        let token = Token { seq, hops, route };
         // Receiver alive: the worker was just (re)fetched above.
         let _ = head_tx.send(token);
+    }
+
+    /// Settle every seq drained into `done_buf`, then clear it for the
+    /// next drain (the buffer is recycled, never reallocated).
+    fn settle_drained(&mut self) {
+        for i in 0..self.done_buf.len() {
+            let seq = self.done_buf[i];
+            self.settle(seq);
+        }
+        self.done_buf.clear();
     }
 
     /// Move a wall-finished chain into the poll heap (O(log n)).
@@ -292,9 +310,8 @@ impl Engine for ThreadedExecutor {
     /// Completions whose wall replay finished, in submission order (the
     /// heap pops by seq — no per-poll re-sort of the whole buffer).
     fn poll(&mut self) -> Vec<Completion> {
-        while let Ok(seq) = self.rx_done.try_recv() {
-            self.settle(seq);
-        }
+        self.rx_done.try_recv_batch(&mut self.done_buf);
+        self.settle_drained();
         let mut out = Vec::with_capacity(self.finished.len());
         while let Some(Reverse(Finished(_, c))) = self.finished.pop() {
             out.push(c);
@@ -315,11 +332,10 @@ impl Engine for ThreadedExecutor {
     /// Wait for every in-flight chain, then close the inner accounting.
     fn drain(&mut self) -> Result<()> {
         while !self.inflight.is_empty() {
-            let seq = self
-                .rx_done
-                .recv()
-                .context("substrate workers exited with chains in flight")?;
-            self.settle(seq);
+            if self.rx_done.recv_batch(&mut self.done_buf) == 0 {
+                bail!("substrate workers exited with chains in flight");
+            }
+            self.settle_drained();
         }
         self.measured_elapsed_s = Some(self.epoch.elapsed().as_secs_f64());
         self.inner.drain()
@@ -345,7 +361,7 @@ impl Drop for ThreadedExecutor {
         // after the chains queued to it have been forwarded — chains move
         // strictly forward, so every join terminates.
         for w in self.workers.values_mut() {
-            drop(std::mem::replace(&mut w.tx, mpsc::channel().0));
+            drop(std::mem::replace(&mut w.tx, ring::channel().0));
         }
         for w in self.workers.values_mut() {
             if let Some(h) = w.handle.take() {
@@ -462,7 +478,7 @@ mod tests {
         crate::sensor::Frame {
             id,
             t_capture: Duration::from_millis(ms),
-            pixels: vec![100; 8 * 12 * 3],
+            pixels: vec![100; 8 * 12 * 3].into(),
             h: 8,
             w: 12,
             truth: crate::pose::Pose {

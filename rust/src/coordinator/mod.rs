@@ -27,7 +27,9 @@ pub use clock::{Clock, ServiceMode, SimClock, WallClock};
 pub use config::{
     parse_tenant_file, Config, ExecutorKind, ManualStage, Mode, PartitionSpec, Workload,
 };
-pub use daemon::{run_daemon, DaemonOutput, DaemonSpec, WindowRecord, WindowTenant};
+pub use daemon::{
+    run_daemon, run_daemon_with_ready, DaemonOutput, DaemonSpec, WindowRecord, WindowTenant,
+};
 pub use dispatcher::Dispatcher;
 pub use engine::{
     run_workloads, run_workloads_with_events, Completion, Engine, EventQueueKind, RunOutput,

@@ -273,17 +273,18 @@ fn manual_partition(graph: &Graph, stages: &[ManualStage]) -> Result<Partition> 
 /// faults, the dispatcher drops to the next plan avoiding that substrate.
 pub fn build_plans(
     graph: &Graph,
-    accel_names: &[String],
+    accel_ids: &[SubstrateId],
     link: &Link,
     constraints: &Constraints,
     artifact_batch: usize,
     spec: &PartitionSpec,
 ) -> Result<Vec<PipelinePlan>> {
     let mut owned: Vec<(String, Box<dyn Accelerator>)> = Vec::new();
-    for n in accel_names {
+    for id in accel_ids {
+        let n = id.name();
         let a = crate::accel::by_name(n)
             .with_context(|| format!("unknown accelerator {n:?} in pool"))?;
-        owned.push((n.clone(), a));
+        owned.push((n.to_string(), a));
     }
     let accels: BTreeMap<String, &dyn Accelerator> = owned
         .iter()
@@ -376,7 +377,11 @@ pub fn build_plans(
     if plans.is_empty() {
         bail!(
             "no feasible pipeline plan for pool [{}] under the constraints",
-            accel_names.join(", ")
+            accel_ids
+                .iter()
+                .map(|id| id.name())
+                .collect::<Vec<_>>()
+                .join(", ")
         );
     }
     Ok(plans)
@@ -398,7 +403,7 @@ pub fn build_plans(
 pub fn plan_or_build_in(
     cache: &mut PlanCache,
     graph: &Graph,
-    accel_names: &[String],
+    accel_ids: &[SubstrateId],
     link: &Link,
     constraints: &Constraints,
     artifact_batch: usize,
@@ -407,7 +412,7 @@ pub fn plan_or_build_in(
 ) -> Result<Vec<PipelinePlan>> {
     let key = CacheKey::for_request(
         graph,
-        accel_names,
+        accel_ids,
         link,
         constraints,
         artifact_batch,
@@ -417,7 +422,7 @@ pub fn plan_or_build_in(
     if let Some(plans) = cache.lookup(&key) {
         return Ok(plans);
     }
-    let plans = build_plans(graph, accel_names, link, constraints, artifact_batch, spec)?;
+    let plans = build_plans(graph, accel_ids, link, constraints, artifact_batch, spec)?;
     cache.insert(key, plans.clone());
     Ok(plans)
 }
@@ -428,7 +433,7 @@ pub fn plan_or_build_in(
 /// lookup.
 pub fn plan_or_build(
     graph: &Graph,
-    accel_names: &[String],
+    accel_ids: &[SubstrateId],
     link: &Link,
     constraints: &Constraints,
     artifact_batch: usize,
@@ -439,7 +444,7 @@ pub fn plan_or_build(
         plan_or_build_in(
             cache,
             graph,
-            accel_names,
+            accel_ids,
             link,
             constraints,
             artifact_batch,
@@ -512,7 +517,7 @@ impl PipelinedDispatcher {
     #[allow(clippy::too_many_arguments)]
     pub fn from_spec(
         graph: &Graph,
-        accel_names: &[String],
+        accel_ids: &[SubstrateId],
         link: &Link,
         constraints: &Constraints,
         artifact_batch: usize,
@@ -522,7 +527,7 @@ impl PipelinedDispatcher {
     ) -> Result<PipelinedDispatcher> {
         let plans = plan_or_build(
             graph,
-            accel_names,
+            accel_ids,
             link,
             constraints,
             artifact_batch,
@@ -804,11 +809,15 @@ mod tests {
     use crate::sensor::Frame;
     use crate::testkit::{check, Config as PropConfig};
 
+    fn ids(ns: &[&str]) -> Vec<SubstrateId> {
+        ns.iter().map(|n| SubstrateId::intern(n)).collect()
+    }
+
     fn frame(id: u64, ms: u64) -> Frame {
         Frame {
             id,
             t_capture: Duration::from_millis(ms),
-            pixels: vec![100; 8 * 12 * 3],
+            pixels: vec![100; 8 * 12 * 3].into(),
             h: 8,
             w: 12,
             truth: Pose {
@@ -886,10 +895,10 @@ mod tests {
     #[test]
     fn build_plans_auto_ranks_two_stage_cut_first() {
         let g = compile(&ursonet::build_full());
-        let names = vec!["dpu".to_string(), "vpu".to_string()];
+        let pool = ids(&["dpu", "vpu"]);
         let plans = build_plans(
             &g,
-            &names,
+            &pool,
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,
@@ -925,7 +934,7 @@ mod tests {
     #[test]
     fn build_plans_manual_stays_primary_and_bad_layers_error() {
         let g = compile(&ursonet::build_full());
-        let names = vec!["dpu".to_string(), "vpu".to_string()];
+        let pool = ids(&["dpu", "vpu"]);
         let spec = PartitionSpec::Manual(vec![
             ManualStage {
                 accel: "dpu".into(),
@@ -938,7 +947,7 @@ mod tests {
         ]);
         let plans = build_plans(
             &g,
-            &names,
+            &pool,
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,
@@ -960,7 +969,7 @@ mod tests {
         ]);
         let err = build_plans(
             &g,
-            &names,
+            &pool,
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,
@@ -973,7 +982,7 @@ mod tests {
         // same feasibility gate every auto candidate passes through.
         let err = build_plans(
             &g,
-            &names,
+            &pool,
             &crate::accel::links::USB3,
             &Constraints {
                 max_total_ms: Some(1e-4),
@@ -1138,13 +1147,13 @@ mod tests {
     #[test]
     fn plan_or_build_in_hits_after_first_miss_and_isolates_copies() {
         let g = compile(&ursonet::build_lite());
-        let names = vec!["dpu".to_string(), "vpu".to_string()];
+        let pool = ids(&["dpu", "vpu"]);
         let mut cache = PlanCache::new(8);
         let build = |cache: &mut PlanCache| {
             plan_or_build_in(
                 cache,
                 &g,
-                &names,
+                &pool,
                 &crate::accel::links::USB3,
                 &Constraints::default(),
                 4,
@@ -1171,7 +1180,7 @@ mod tests {
             let err = plan_or_build_in(
                 &mut cache,
                 &g,
-                &names,
+                &pool,
                 &crate::accel::links::USB3,
                 &Constraints {
                     max_total_ms: Some(1e-9),
@@ -1251,10 +1260,7 @@ mod tests {
                     &crate::net::models::by_name(nets[ctx.rng.below(nets.len())])
                         .expect("zoo net"),
                 );
-                let pool: Vec<String> = pools[ctx.rng.below(pools.len())]
-                    .iter()
-                    .map(|s| s.to_string())
-                    .collect();
+                let pool = ids(pools[ctx.rng.below(pools.len())]);
                 let link = links[ctx.rng.below(links.len())];
                 let constraints = Constraints {
                     max_total_ms: if ctx.rng.bool(0.3) {
@@ -1319,10 +1325,9 @@ mod tests {
         // extended to pipelined execution (one substrate stays reliable;
         // all-substrates-fail aborts the run like the pool dispatcher).
         let g = compile(&ursonet::build_lite());
-        let names = vec!["dpu".to_string(), "vpu".to_string()];
         let plans = build_plans(
             &g,
-            &names,
+            &ids(&["dpu", "vpu"]),
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,

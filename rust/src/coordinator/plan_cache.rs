@@ -30,6 +30,7 @@ use crate::accel::interconnect::Link;
 use crate::coordinator::config::PartitionSpec;
 use crate::coordinator::pipeline::PipelinePlan;
 use crate::coordinator::policy::{Constraints, ModeProfile};
+use crate::coordinator::substrate::SubstrateId;
 use crate::net::graph::Graph;
 use crate::util::hash::{sha256_hex, Sha256};
 
@@ -54,7 +55,7 @@ impl CacheKey {
     /// stale plan list.
     pub fn for_request(
         graph: &Graph,
-        accel_names: &[String],
+        accel_ids: &[SubstrateId],
         link: &Link,
         constraints: &Constraints,
         artifact_batch: usize,
@@ -65,7 +66,7 @@ impl CacheKey {
         for part in [
             graph_digest(graph),
             constraints_digest(constraints),
-            pool_digest(accel_names, pool_profiles),
+            pool_digest(accel_ids, pool_profiles),
             link_digest(link),
             spec_digest(spec),
             format!("batch:{artifact_batch}"),
@@ -143,12 +144,12 @@ pub fn constraints_digest(c: &Constraints) -> String {
 /// Canonical digest of the substrate pool: names in request order (order
 /// shapes `build_plans`' candidate enumeration, so it is part of the
 /// content) plus the serving-numerics profiles the caller will attach.
-pub fn pool_digest(accel_names: &[String], profiles: &[ModeProfile]) -> String {
+pub fn pool_digest(accel_ids: &[SubstrateId], profiles: &[ModeProfile]) -> String {
     let mut h = Sha256::new();
     h.update(b"pool");
-    for n in accel_names {
+    for id in accel_ids {
         h.update(b"\x1e");
-        h.update(n.as_bytes());
+        h.update(id.name().as_bytes());
     }
     for p in profiles {
         h.update(b"\x1e");
@@ -349,15 +350,15 @@ mod tests {
     use crate::net::compiler::compile;
     use crate::net::models::ursonet;
 
-    fn names(ns: &[&str]) -> Vec<String> {
-        ns.iter().map(|s| s.to_string()).collect()
+    fn ids(ns: &[&str]) -> Vec<SubstrateId> {
+        ns.iter().map(|n| SubstrateId::intern(n)).collect()
     }
 
     fn key(pool: &[&str], c: &Constraints, batch: usize) -> CacheKey {
         let g = compile(&ursonet::build_full());
         CacheKey::for_request(
             &g,
-            &names(pool),
+            &ids(pool),
             &crate::accel::links::USB3,
             c,
             batch,
@@ -393,7 +394,7 @@ mod tests {
         let lite = compile(&ursonet::build_lite());
         let k_lite = CacheKey::for_request(
             &lite,
-            &names(&["dpu", "vpu"]),
+            &ids(&["dpu", "vpu"]),
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,
@@ -405,7 +406,7 @@ mod tests {
         let g = compile(&ursonet::build_full());
         let k_axi = CacheKey::for_request(
             &g,
-            &names(&["dpu", "vpu"]),
+            &ids(&["dpu", "vpu"]),
             &crate::accel::links::AXI_HP,
             &Constraints::default(),
             4,
@@ -426,7 +427,7 @@ mod tests {
         ]);
         let k_manual = CacheKey::for_request(
             &g,
-            &names(&["dpu", "vpu"]),
+            &ids(&["dpu", "vpu"]),
             &crate::accel::links::USB3,
             &Constraints::default(),
             4,
@@ -442,7 +443,7 @@ mod tests {
         let mk = |profiles: &[ModeProfile]| {
             CacheKey::for_request(
                 &g,
-                &names(&["dpu", "vpu"]),
+                &ids(&["dpu", "vpu"]),
                 &crate::accel::links::USB3,
                 &Constraints::default(),
                 4,

@@ -284,7 +284,7 @@ mod tests {
         Frame {
             id,
             t_capture: Duration::from_millis(id * 10),
-            pixels: vec![100; 8 * 12 * 3],
+            pixels: vec![100; 8 * 12 * 3].into(),
             h: 8,
             w: 12,
             truth: Pose {

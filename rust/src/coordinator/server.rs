@@ -27,6 +27,7 @@ use crate::coordinator::plan_cache;
 use crate::coordinator::policy::profile_modes;
 use crate::coordinator::scheduler::{Backend, PoseEstimate};
 use crate::coordinator::sim::SimBackend;
+use crate::coordinator::substrate::SubstrateId;
 use crate::pose::EvalSet;
 use crate::runtime::artifacts::Manifest;
 use crate::sensor::Camera;
@@ -226,7 +227,8 @@ fn build_pipeline_engine(
             }
         }
     }
-    let accel_names: Vec<String> = bindings.iter().map(|(n, _)| n.clone()).collect();
+    let accel_ids: Vec<SubstrateId> =
+        bindings.iter().map(|(n, _)| SubstrateId::intern(n)).collect();
 
     // The partition splits the paper-scale network (what the analytic
     // models are calibrated on).  Plans resolve through the
@@ -240,7 +242,7 @@ fn build_pipeline_engine(
         let profile_key: Vec<_> = profiles.values().copied().collect();
         plan_or_build(
             &graph,
-            &accel_names,
+            &accel_ids,
             &config.boundary_link,
             &config.constraints,
             manifest.batch,
@@ -250,7 +252,7 @@ fn build_pipeline_engine(
     } else {
         build_plans(
             &graph,
-            &accel_names,
+            &accel_ids,
             &config.boundary_link,
             &config.constraints,
             manifest.batch,

@@ -4,6 +4,7 @@ pub mod metrics;
 pub mod quaternion;
 
 use std::path::Path;
+use std::sync::{Arc, OnceLock};
 
 use crate::util::mpt::{self, MptError};
 
@@ -27,6 +28,10 @@ pub struct EvalSet {
     /// Golden preprocessed frame 0 (H_net, W_net, 3) f32 — preprocess parity.
     pub golden_pre0: Vec<f32>,
     pub golden_shape: Vec<usize>,
+    /// Lazily built shared per-frame pixel buffers behind
+    /// [`frame_shared`](EvalSet::frame_shared): after the first capture a
+    /// camera frame is an `Arc` refcount bump, not a `to_vec` copy.
+    frame_arcs: OnceLock<Vec<Arc<[u8]>>>,
 }
 
 #[derive(Debug)]
@@ -126,6 +131,7 @@ impl EvalSet {
                 .ok_or_else(|| EvalSetError::Format("golden_pre0 must be f32".into()))?
                 .to_vec(),
             golden_shape: golden.shape.clone(),
+            frame_arcs: OnceLock::new(),
         })
     }
 
@@ -189,6 +195,7 @@ impl EvalSet {
             poses,
             golden_pre0: vec![0.0; 3],
             golden_shape: vec![1, 1, 3],
+            frame_arcs: OnceLock::new(),
         }
     }
 
@@ -204,6 +211,17 @@ impl EvalSet {
     pub fn frame(&self, i: usize) -> &[u8] {
         let sz = self.frame_h * self.frame_w * 3;
         &self.frames[i * sz..(i + 1) * sz]
+    }
+
+    /// Frame `i` as a shared buffer: the per-frame `Arc<[u8]>` table is
+    /// built once on first use, after which every camera capture of this
+    /// eval set is a refcount bump (the multi-tenant arrival path at
+    /// 10k+ tenants allocates nothing per frame — DESIGN.md §4.13).
+    pub fn frame_shared(&self, i: usize) -> Arc<[u8]> {
+        let arcs = self
+            .frame_arcs
+            .get_or_init(|| (0..self.len()).map(|k| Arc::from(self.frame(k))).collect());
+        Arc::clone(&arcs[i])
     }
 }
 
@@ -274,6 +292,16 @@ mod tests {
         // Deterministic.
         assert_eq!(EvalSet::synthetic(6, 24, 32, 7).frames, es.frames);
         assert_ne!(EvalSet::synthetic(6, 24, 32, 8).frames, es.frames);
+    }
+
+    #[test]
+    fn frame_shared_matches_borrowed_frame_and_shares_storage() {
+        let es = EvalSet::synthetic(3, 8, 10, 11);
+        for i in 0..es.len() {
+            assert_eq!(&es.frame_shared(i)[..], es.frame(i));
+        }
+        // Two captures of the same frame share one buffer.
+        assert!(Arc::ptr_eq(&es.frame_shared(1), &es.frame_shared(1)));
     }
 
     #[test]

@@ -16,8 +16,10 @@ pub struct Frame {
     pub id: u64,
     /// Capture timestamp on the simulated clock.
     pub t_capture: Duration,
-    /// Raw (h, w, 3) u8 pixels.
-    pub pixels: Vec<u8>,
+    /// Raw (h, w, 3) u8 pixels, shared: captures of the same eval frame
+    /// are refcount bumps on one buffer, so the arrival hot path copies
+    /// no pixel data (DESIGN.md §4.13).  `clone()` stays cheap too.
+    pub pixels: Arc<[u8]>,
     pub h: usize,
     pub w: usize,
     /// Ground truth (available because the camera is synthetic; used for
@@ -78,7 +80,7 @@ impl Camera {
         let f = Frame {
             id: self.next,
             t_capture,
-            pixels: self.eval.frame(idx).to_vec(),
+            pixels: self.eval.frame_shared(idx),
             h: self.eval.frame_h,
             w: self.eval.frame_w,
             truth: self.eval.poses[idx],

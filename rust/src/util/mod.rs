@@ -7,6 +7,8 @@ pub mod hash;
 pub mod json;
 pub mod mpt;
 pub mod prng;
+pub mod ring;
+pub mod slab;
 pub mod stats;
 
 /// Format a byte count human-readably (telemetry, artifact inspection).

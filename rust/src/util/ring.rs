@@ -1,0 +1,238 @@
+//! Batched MPSC ring channel, std-only (DESIGN.md §4.13): a
+//! `Mutex<VecDeque>` + `Condvar` pair whose send and receive sides move
+//! *whole batches* per lock round.
+//!
+//! `std::mpsc` pays one rendezvous (lock + wakeup) per token, which
+//! dominates the threaded executor at high fan-in.  Here a sender can
+//! publish a full completion batch in one `send_batch`, and the receiver
+//! drains *everything queued* into a caller-owned buffer per
+//! `recv_batch` — so the number of wakeups scales with batches, not
+//! tokens, and the receive buffer is recycled by the caller (zero
+//! steady-state allocation).
+//!
+//! Close semantics mirror `mpsc`: dropping every [`Sender`] wakes the
+//! receiver with an empty drain (`recv_batch` returns 0); dropping the
+//! [`Receiver`] turns subsequent sends into counted no-ops (`false`).
+//! Lock poisoning is ignored — the queue holds plain data, valid
+//! regardless of a panicking holder.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+}
+
+impl<T> Shared<T> {
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Producer half; clone freely (the channel is multi-producer).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer half (single consumer: batched drains share one cursor).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// A fresh channel pair.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            receiver_alive: true,
+        }),
+        available: Condvar::new(),
+    });
+    (
+        Sender {
+            shared: Arc::clone(&shared),
+        },
+        Receiver { shared },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Queue one item; `false` when the receiver is gone (item dropped).
+    pub fn send(&self, item: T) -> bool {
+        let mut st = self.shared.lock();
+        if !st.receiver_alive {
+            return false;
+        }
+        st.queue.push_back(item);
+        drop(st);
+        self.shared.available.notify_one();
+        true
+    }
+
+    /// Queue a whole batch in one lock round, draining `batch` (the
+    /// caller keeps the emptied buffer for reuse); `false` when the
+    /// receiver is gone (the batch is dropped).
+    pub fn send_batch(&self, batch: &mut Vec<T>) -> bool {
+        if batch.is_empty() {
+            return true;
+        }
+        let mut st = self.shared.lock();
+        if !st.receiver_alive {
+            batch.clear();
+            return false;
+        }
+        st.queue.extend(batch.drain(..));
+        drop(st);
+        self.shared.available.notify_one();
+        true
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Sender<T> {
+        self.shared.lock().senders += 1;
+        Sender {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.lock();
+        st.senders -= 1;
+        let last = st.senders == 0;
+        drop(st);
+        if last {
+            // Wake a blocked receiver so it observes the close.
+            self.shared.available.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until items are queued, then drain *all* of them into
+    /// `out` (appended).  Returns the number drained; 0 means every
+    /// sender is gone and the queue is empty (channel closed).
+    pub fn recv_batch(&self, out: &mut Vec<T>) -> usize {
+        let mut st = self.shared.lock();
+        loop {
+            if !st.queue.is_empty() {
+                let n = st.queue.len();
+                out.extend(st.queue.drain(..));
+                return n;
+            }
+            if st.senders == 0 {
+                return 0;
+            }
+            st = self
+                .shared
+                .available
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Drain whatever is queued right now without blocking (appended to
+    /// `out`); returns the number drained.
+    pub fn try_recv_batch(&self, out: &mut Vec<T>) -> usize {
+        let mut st = self.shared.lock();
+        let n = st.queue.len();
+        out.extend(st.queue.drain(..));
+        n
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.shared.lock().receiver_alive = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn batch_roundtrip_single_thread() {
+        let (tx, rx) = channel::<u32>();
+        let mut batch = vec![1, 2, 3];
+        assert!(tx.send_batch(&mut batch));
+        assert!(batch.is_empty(), "send_batch drains the caller's buffer");
+        assert!(tx.send(4));
+        let mut out = Vec::new();
+        assert_eq!(rx.try_recv_batch(&mut out), 4);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert_eq!(rx.try_recv_batch(&mut out), 0);
+    }
+
+    #[test]
+    fn recv_blocks_until_sender_publishes() {
+        let (tx, rx) = channel::<u64>();
+        let sender = thread::spawn(move || {
+            let mut b = vec![7, 8];
+            assert!(tx.send_batch(&mut b));
+        });
+        let mut out = Vec::new();
+        assert_eq!(rx.recv_batch(&mut out), 2);
+        assert_eq!(out, vec![7, 8]);
+        sender.join().unwrap();
+        // All senders gone + empty queue = closed.
+        assert_eq!(rx.recv_batch(&mut out), 0);
+    }
+
+    #[test]
+    fn close_on_last_sender_drop_wakes_receiver() {
+        let (tx, rx) = channel::<u8>();
+        let tx2 = tx.clone();
+        drop(tx);
+        let closer = thread::spawn(move || {
+            drop(tx2);
+        });
+        let mut out = Vec::new();
+        assert_eq!(rx.recv_batch(&mut out), 0);
+        closer.join().unwrap();
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_reports_false() {
+        let (tx, rx) = channel::<u8>();
+        drop(rx);
+        assert!(!tx.send(1));
+        let mut b = vec![2, 3];
+        assert!(!tx.send_batch(&mut b));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn cross_thread_order_is_preserved_per_sender() {
+        let (tx, rx) = channel::<u64>();
+        let producer = thread::spawn(move || {
+            for chunk in 0..100u64 {
+                let mut b = (chunk * 10..chunk * 10 + 10).collect();
+                assert!(tx.send_batch(&mut b));
+            }
+        });
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            if rx.recv_batch(&mut buf) == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf);
+        }
+        producer.join().unwrap();
+        let want: Vec<u64> = (0..1000).collect();
+        assert_eq!(got, want);
+    }
+}
