@@ -69,7 +69,15 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode)?;
-        let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)?;
+        let (net_h, net_w, _) = manifest.net_input;
+        let mut pool =
+            coordinator::Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+        pool.add_backend(Box::new(backend), None);
+        let out = coordinator::EngineBuilder::new(&cfg)
+            .engine(&mut pool)
+            .eval(eval.clone())
+            .build()?
+            .run()?;
         let (loce, orie) = out.telemetry.accuracy();
         println!("  {:<9} LOCE {:.3} m  ORIE {:.2} deg", mode.label(), loce, orie);
     }

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use mpai::coordinator::{self, Config, Constraints, Mode};
+use mpai::coordinator::{Config, Constraints, EngineBuilder, Mode};
 
 fn main() -> Result<()> {
     let cfg = Config {
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         cfg.camera_fps,
         cfg.frames
     );
-    let out = coordinator::run(&cfg)?;
+    let out = EngineBuilder::new(&cfg).build()?.run()?;
     println!("{}\n", out.telemetry.report());
     assert_eq!(out.estimates.len() as u64, cfg.frames, "frames lost!");
 
@@ -44,7 +44,7 @@ fn main() -> Result<()> {
         ..cfg
     };
     println!("same pool, constrained to LOCE <= 0.70 m:\n");
-    let out = coordinator::run(&constrained)?;
+    let out = EngineBuilder::new(&constrained).build()?.run()?;
     println!("{}", out.telemetry.report());
     let dpu = out
         .telemetry

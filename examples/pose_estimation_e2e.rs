@@ -45,8 +45,16 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode)?;
+        let (net_h, net_w, _) = manifest.net_input;
+        let mut pool =
+            coordinator::Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+        pool.add_backend(Box::new(backend), None);
         let t0 = Instant::now();
-        let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)?;
+        let out = coordinator::EngineBuilder::new(&cfg)
+            .engine(&mut pool)
+            .eval(eval.clone())
+            .build()?
+            .run()?;
         let wall = t0.elapsed();
 
         let (loce, orie) = out.telemetry.accuracy();

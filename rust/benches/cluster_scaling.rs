@@ -1,0 +1,271 @@
+//! Bench AB-CL: constellation cluster scaling — the [`Cluster`] layer
+//! over 1, 4, and 16 whole-frame nodes (DESIGN.md §4.14).
+//!
+//! Every scale offers the same **per-node** load (6 tenants per node at
+//! a fixed rate), so aggregate simulated throughput should grow linearly
+//! with node count when placement spreads the fleet.  Each tenant gets a
+//! distinct constraint bound, so every tenant has its own plan-cache
+//! affinity key and placement is pure least-load — the curve measures
+//! node capacity, not affinity pile-up.
+//!
+//! Gates:
+//!
+//! * conservation at every scale: each tenant's `completed + shed ==
+//!   admitted`, and the estimate stream carries every completed frame;
+//! * spread: every node serves frames at every scale;
+//! * the scaling curve: aggregate simulated events/sec at 4 and 16 nodes
+//!   at least `0.8x` linear over the single-node baseline;
+//! * failover: killing one node of four mid-run loses **zero** admitted
+//!   realtime frames (retained batches resubmit on the survivors);
+//! * replay determinism: two identical kill runs produce bit-identical
+//!   per-tenant accounting and estimate streams.
+//!
+//! `MPAI_BENCH_SMOKE=1` shortens the runs; `MPAI_BENCH_JSON=dir` emits
+//! `BENCH_cluster_scaling.json` for the CI gate.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpai::coordinator::{
+    profile_modes, run_workloads_with_events, Cluster, Config, Constraints, Dispatcher, Engine,
+    EventQueueKind, Mode, NodeKill, QosClass, RunOutput, SimBackend, Workload,
+};
+use mpai::pose::EvalSet;
+use mpai::runtime::Manifest;
+use mpai::util::benchio;
+
+/// Node counts swept by the scaling gate.
+const SCALES: [usize; 3] = [1, 4, 16];
+
+/// Tenants routed to each node; constant across scales so per-node load
+/// is constant and aggregate throughput should scale with node count.
+const TENANTS_PER_NODE: usize = 6;
+
+/// Per-tenant frame rate.  6 tenants x 10 FPS offers ~15 batches/s per
+/// node against ~28 batches/s of modeled pool capacity, so nodes run hot
+/// but unsaturated and the simulated window stays emission-bound at
+/// every scale.
+const RATE_FPS: f64 = 10.0;
+
+/// One cluster node: a whole-frame mixed-substrate pool (DPU+VPU+TPU)
+/// over the synthetic manifest's modeled Table I service times.
+fn node(seed: u64) -> Box<dyn Engine> {
+    let profiles = profile_modes(&Manifest::synthetic().expect("synthetic manifest"));
+    let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+    for (j, mode) in [Mode::DpuInt8, Mode::VpuFp16, Mode::TpuInt8]
+        .into_iter()
+        .enumerate()
+    {
+        d.add_backend(
+            Box::new(SimBackend::new(mode, &profiles[&mode], seed + j as u64)),
+            Some(profiles[&mode]),
+        );
+    }
+    Box::new(d)
+}
+
+fn cluster_of(n: usize, kills: Vec<NodeKill>) -> Cluster {
+    let nodes = (0..n).map(|i| node(0xAB00 + 31 * i as u64)).collect();
+    Cluster::new(nodes).expect("cluster").with_kills(kills)
+}
+
+/// `nodes * TENANTS_PER_NODE` tenants cycling realtime/standard/background.
+fn cluster_workloads(nodes: usize, frames: u64) -> Vec<Workload> {
+    (0..nodes * TENANTS_PER_NODE)
+        .map(|k| Workload {
+            name: format!("c{k:04}"),
+            net: "ursonet_lite".into(),
+            qos: match k % 3 {
+                0 => QosClass::Realtime,
+                1 => QosClass::Standard,
+                _ => QosClass::Background,
+            },
+            deadline: Duration::from_millis(800 + 40 * (k as u64 % 5)),
+            rate_fps: RATE_FPS,
+            frames,
+            // A distinct bound per tenant gives each its own affinity
+            // key (pure least-load spread); the value sits far above
+            // every modeled service time, so admission never cuts.
+            constraints: Constraints {
+                max_total_ms: Some(5_000.0 + k as f64),
+                ..Default::default()
+            },
+        })
+        .collect()
+}
+
+fn run_cluster(cluster: &mut Cluster, workloads: &[Workload]) -> (RunOutput, f64) {
+    let config = Config {
+        sim: true,
+        batch_timeout: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let eval = Arc::new(EvalSet::synthetic(24, 12, 16, 7));
+    let t0 = Instant::now();
+    let out = run_workloads_with_events(&config, eval, cluster, workloads, EventQueueKind::Sharded)
+        .expect("cluster run");
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Simulated run window (s), recovered from busy/utilization accounting
+/// across every node's backends.
+fn sim_window_s(out: &RunOutput) -> f64 {
+    out.telemetry
+        .backends
+        .iter()
+        .filter(|b| b.utilization > 0.0)
+        .map(|b| b.busy.as_secs_f64() / b.utilization)
+        .fold(0.0, f64::max)
+}
+
+/// Serve-loop events: every emitted frame (admitted or shed) plus every
+/// completion.
+fn events(out: &RunOutput) -> u64 {
+    out.telemetry
+        .tenants
+        .iter()
+        .map(|t| t.admitted + t.shed + t.completed)
+        .sum()
+}
+
+/// Per-tenant books must balance and the estimate stream must carry
+/// every completed frame.
+fn assert_conserved(label: &str, out: &RunOutput) {
+    let mut completed = 0;
+    for t in &out.telemetry.tenants {
+        assert_eq!(
+            t.completed + t.shed,
+            t.admitted,
+            "{label}: tenant {} leaked frames",
+            t.name()
+        );
+        completed += t.completed;
+    }
+    assert_eq!(
+        out.estimates.len() as u64,
+        completed,
+        "{label}: estimate stream out of step with tenant books"
+    );
+}
+
+/// Replay identity: same per-tenant accounting, same estimate stream in
+/// the same order.
+fn assert_equivalent(label: &str, new: &RunOutput, old: &RunOutput) {
+    for (a, b) in new.telemetry.tenants.iter().zip(&old.telemetry.tenants) {
+        assert_eq!(
+            (a.admitted, a.completed, a.shed, a.deadline_misses),
+            (b.admitted, b.completed, b.shed, b.deadline_misses),
+            "{label}: tenant {} accounting diverged",
+            a.name()
+        );
+    }
+    let new_ids: Vec<u64> = new.estimates.iter().map(|e| e.frame_id).collect();
+    let ref_ids: Vec<u64> = old.estimates.iter().map(|e| e.frame_id).collect();
+    assert_eq!(new_ids, ref_ids, "{label}: dispatch order diverged");
+}
+
+fn main() {
+    let smoke = std::env::var("MPAI_BENCH_SMOKE").is_ok();
+    let frames: u64 = if smoke { 12 } else { 40 };
+
+    println!("=== AB-CL: constellation cluster scaling ===");
+    println!(
+        "{TENANTS_PER_NODE} tenants/node at {RATE_FPS} FPS, {frames} frames each, \
+         mixed DPU+VPU+TPU nodes\n"
+    );
+
+    // ---- Scaling sweep: constant per-node load, growing fleet -------------
+    let mut eps_by_scale = Vec::new();
+    for &n in &SCALES {
+        let workloads = cluster_workloads(n, frames);
+        let mut cluster = cluster_of(n, Vec::new());
+        let (out, wall) = run_cluster(&mut cluster, &workloads);
+        assert_conserved(&format!("{n}-node"), &out);
+
+        let served = cluster.node_frames();
+        assert!(
+            served.iter().all(|&f| f > 0),
+            "{n}-node: placement left a node idle ({served:?})"
+        );
+
+        let window = sim_window_s(&out);
+        let eps = events(&out) as f64 / window;
+        let vfps = out.estimates.len() as f64 / window;
+        println!(
+            "{n:>3} nodes | {:>4} tenants | {eps:>9.1} sim events/s | {vfps:>8.1} sim FPS \
+             | window {window:>5.2} sim s | wall {wall:>5.2} s",
+            workloads.len()
+        );
+        eps_by_scale.push((n, eps, vfps));
+    }
+
+    let (_, eps_1, vfps_1) = eps_by_scale[0];
+    for &(n, eps, _) in &eps_by_scale[1..] {
+        let linear = eps_1 * n as f64;
+        println!(
+            "scaling 1 -> {n}: {:.2}x of linear ({eps:.1} vs {linear:.1} sim events/s)",
+            eps / linear
+        );
+        assert!(
+            eps >= 0.8 * linear,
+            "{n}-node aggregate {eps:.1} sim events/s fell below 0.8x linear ({linear:.1})"
+        );
+    }
+
+    // ---- Failover: kill one node of four mid-run --------------------------
+    let kill_n = 4;
+    let kill_at = Duration::from_millis(if smoke { 480 } else { 1600 });
+    let kills = vec![NodeKill {
+        node: 1,
+        at: kill_at,
+    }];
+    let workloads = cluster_workloads(kill_n, frames);
+    let mut killed = cluster_of(kill_n, kills.clone());
+    let (kill_out, _) = run_cluster(&mut killed, &workloads);
+    assert_conserved("node-kill", &kill_out);
+    assert_eq!(
+        killed.alive_count(),
+        kill_n - 1,
+        "the scheduled node kill never fired"
+    );
+    assert!(
+        killed.failovers() >= 1,
+        "node died with no in-flight work failed over"
+    );
+    for t in &kill_out.telemetry.tenants {
+        if t.qos == "realtime" {
+            assert_eq!(
+                t.completed, t.admitted,
+                "realtime tenant {} lost admitted frames across the kill",
+                t.name()
+            );
+            assert_eq!(t.shed, 0, "realtime tenant {} shed frames", t.name());
+        }
+    }
+    println!(
+        "\nnode kill at {:.2}s: {} failover(s), {} migration(s), zero realtime loss",
+        kill_at.as_secs_f64(),
+        killed.failovers(),
+        killed.migrations()
+    );
+
+    // ---- Replay determinism over the kill scenario ------------------------
+    let mut replay = cluster_of(kill_n, kills);
+    let (replay_out, _) = run_cluster(&mut replay, &workloads);
+    assert_equivalent("kill replay", &replay_out, &kill_out);
+    println!("replay run is bit-identical (per-tenant books + estimate stream).");
+
+    benchio::emit(
+        "cluster_scaling",
+        &[
+            ("eps_1_node", eps_1),
+            ("eps_4_node", eps_by_scale[1].1),
+            ("eps_16_node", eps_by_scale[2].1),
+            ("vfps_1_node", vfps_1),
+            ("vfps_16_node", eps_by_scale[2].2),
+            ("kill_failovers", killed.failovers() as f64),
+        ],
+    );
+
+    println!("\ncluster gates held (linear scaling, zero-loss failover, replay identity).");
+}

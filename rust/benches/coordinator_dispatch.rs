@@ -1,6 +1,6 @@
 //! Bench AB-D: dispatch ablation — policy-routed pool vs single backend.
 //!
-//! Drives the synthetic camera through `run_with_pool` with simulated
+//! Drives the synthetic camera through a caller-built pool with simulated
 //! backends (modeled Table I service times, no artifacts needed) and
 //! compares simulated steady-state throughput:
 //!
@@ -15,7 +15,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use mpai::coordinator::{
-    profile_modes, run_with_pool, Config, Constraints, Dispatcher, Mode, RunOutput, SimBackend,
+    profile_modes, Config, Constraints, Dispatcher, EngineBuilder, Mode, RunOutput, SimBackend,
 };
 use mpai::pose::EvalSet;
 use mpai::runtime::Manifest;
@@ -51,7 +51,12 @@ fn run_modes(modes: &[Mode], fail_every: Option<usize>) -> RunOutput {
         sim: true,
         ..Default::default()
     };
-    run_with_pool(&cfg, eval, pool).expect("pool run")
+    EngineBuilder::new(&cfg)
+        .engine(&mut pool)
+        .eval(eval)
+        .build()
+        .and_then(|mut s| s.run())
+        .expect("pool run")
 }
 
 /// Simulated run window (s), recovered from busy/utilization accounting.

@@ -80,7 +80,10 @@ fn run(scale: u64) -> DaemonOutput {
         batch_timeout: Duration::from_millis(400),
         ..Default::default()
     };
-    coordinator::serve_daemon(&cfg, &trace(scale)).expect("daemon sim run")
+    coordinator::EngineBuilder::new(&cfg)
+        .build()
+        .and_then(|mut s| s.run_daemon(&trace(scale)))
+        .expect("daemon sim run")
 }
 
 fn tenant<'a>(out: &'a DaemonOutput, name: &str) -> &'a mpai::coordinator::TenantRecord {

@@ -56,7 +56,10 @@ fn run_mix(pool: Vec<Mode>, workloads: Vec<Workload>, fail_every: Option<usize>)
         batch_timeout: Duration::from_millis(400),
         ..Default::default()
     };
-    coordinator::run(&cfg).expect("multi-tenant sim run")
+    coordinator::EngineBuilder::new(&cfg)
+        .build()
+        .and_then(|mut s| s.run())
+        .expect("multi-tenant sim run")
 }
 
 /// Simulated run window (s), recovered from busy/utilization accounting.

@@ -36,7 +36,10 @@ fn run_pipeline(frames: u64, fail_every: Option<usize>) -> RunOutput {
         batch_timeout: Duration::from_millis(40),
         ..Default::default()
     };
-    coordinator::run(&cfg).expect("pipelined sim run")
+    coordinator::EngineBuilder::new(&cfg)
+        .build()
+        .and_then(|mut s| s.run())
+        .expect("pipelined sim run")
 }
 
 /// Simulated run window (s), recovered from stage busy/occupancy.

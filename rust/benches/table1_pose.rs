@@ -55,7 +55,15 @@ fn main() {
             ..Default::default()
         };
         let backend = coordinator::PjrtBackend::new(&manifest, mode).expect("backend");
-        let out = coordinator::run_with_backend(&cfg, &manifest, eval.clone(), backend)
+        let (net_h, net_w, _) = manifest.net_input;
+        let mut pool =
+            coordinator::Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+        pool.add_backend(Box::new(backend), None);
+        let out = coordinator::EngineBuilder::new(&cfg)
+            .engine(&mut pool)
+            .eval(eval.clone())
+            .build()
+            .and_then(|mut s| s.run())
             .expect("run");
         let (loce, orie) = out.telemetry.accuracy();
         let prof = profiles[&mode];

@@ -196,7 +196,10 @@ fn main() {
             time_scale: 0.01,
             ..Default::default()
         };
-        coordinator::run(&cfg).expect("multi-tenant serve")
+        coordinator::EngineBuilder::new(&cfg)
+            .build()
+            .and_then(|mut s| s.run())
+            .expect("multi-tenant serve")
     };
     let sim_mt = serve(ExecutorKind::Sim);
     let thr_mt = serve(ExecutorKind::Threaded);

@@ -8,11 +8,11 @@
 
 use std::time::Duration;
 
-use crate::coordinator::policy::Constraints;
+use crate::coordinator::policy::{Constraints, QosClass};
 use crate::sensor::Frame;
 
 /// A dispatchable batch of frames.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Batch {
     /// Real frames (<= size).
     pub frames: Vec<Frame>,
@@ -30,6 +30,11 @@ pub struct Batch {
     /// Per-batch constraints (the submitting tenant's), combined with the
     /// engine-level constraints at admission.
     pub constraints: Constraints,
+    /// QoS class of the submitting tenant (`Standard` for single-workload
+    /// runs).  Carried on the batch so engines that route across nodes
+    /// (the cluster layer) can tell never-migrate realtime traffic from
+    /// migratable standard/background traffic without a side channel.
+    pub qos: QosClass,
 }
 
 impl Batch {
@@ -43,6 +48,7 @@ impl Batch {
             cost: 1.0,
             tenant: 0,
             constraints: Constraints::default(),
+            qos: QosClass::Standard,
         }
     }
 
@@ -68,6 +74,7 @@ pub struct Batcher {
     cost: f64,
     tenant: usize,
     constraints: Constraints,
+    qos: QosClass,
 }
 
 impl Batcher {
@@ -81,6 +88,7 @@ impl Batcher {
             cost: 1.0,
             tenant: 0,
             constraints: Constraints::default(),
+            qos: QosClass::Standard,
         }
     }
 
@@ -99,6 +107,12 @@ impl Batcher {
     /// Builder: per-batch constraints stamped on every emitted batch.
     pub fn with_constraints(mut self, constraints: Constraints) -> Batcher {
         self.constraints = constraints;
+        self
+    }
+
+    /// Builder: QoS class stamped on every emitted batch.
+    pub fn with_qos(mut self, qos: QosClass) -> Batcher {
+        self.qos = qos;
         self
     }
 
@@ -184,6 +198,7 @@ impl Batcher {
             cost: self.cost,
             tenant: self.tenant,
             constraints: self.constraints,
+            qos: self.qos,
         })
     }
 }
@@ -299,23 +314,26 @@ mod tests {
 
     #[test]
     fn batch_metadata_stamped_by_builders() {
-        use crate::coordinator::policy::Constraints;
+        use crate::coordinator::policy::{Constraints, QosClass};
         let mut b = Batcher::new(2, Duration::from_millis(50))
             .with_cost(1.5)
             .with_tenant(3)
             .with_constraints(Constraints {
                 max_loce_m: Some(0.7),
                 ..Default::default()
-            });
+            })
+            .with_qos(QosClass::Realtime);
         b.push(frame(0, 0));
         let batch = b.push(frame(1, 5)).expect("full batch");
         assert_eq!(batch.cost, 1.5);
         assert_eq!(batch.tenant, 3);
         assert_eq!(batch.constraints.max_loce_m, Some(0.7));
+        assert_eq!(batch.qos, QosClass::Realtime);
         // The plain constructor defaults the metadata.
         let plain = Batch::new(vec![frame(2, 10)], 4, Duration::from_millis(10));
         assert_eq!((plain.cost, plain.tenant), (1.0, 0));
         assert_eq!(plain.constraints.max_loce_m, None);
+        assert_eq!(plain.qos, QosClass::Standard);
     }
 
     #[test]

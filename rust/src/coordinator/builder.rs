@@ -1,0 +1,522 @@
+//! The public serving API: one builder, one session, every composition.
+//!
+//! Historically each serving shape had its own free function — `run`,
+//! `run_with_pool`, `run_with_pipeline`, `run_with_backend`,
+//! `run_workloads`, `serve_daemon` — and every new axis (executor,
+//! event queue, plan cache, clusters) multiplied the surface.
+//! [`EngineBuilder`] collapses them: pick an engine **source** (the
+//! config-driven pool/pipeline, a [`Cluster`] fleet, or a caller-built
+//! engine), optionally override the clock scale / executor / event
+//! queue / plan-cache policy / frame-record cap, and [`build`] a
+//! [`ServeSession`] that can [`run`] the configured workloads or
+//! [`run_daemon`] a churn trace.  The legacy free functions survive as
+//! thin deprecated shims over this builder (or over the shared pump
+//! they always wrapped), so existing callers keep compiling.
+//!
+//! ```no_run
+//! use mpai::coordinator::{Config, EngineBuilder};
+//! # fn main() -> anyhow::Result<()> {
+//! let config = Config { sim: true, ..Default::default() };
+//! let out = EngineBuilder::new(&config).build()?.run()?;
+//! println!("{} estimates", out.estimates.len());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`build`]: EngineBuilder::build
+//! [`run`]: ServeSession::run
+//! [`run_daemon`]: ServeSession::run_daemon
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::clock::ServiceMode;
+use crate::coordinator::cluster::{Cluster, ClusterSpec};
+use crate::coordinator::config::{Config, ExecutorKind};
+use crate::coordinator::daemon::{run_daemon_with_ready, DaemonOutput, DaemonSpec};
+use crate::coordinator::engine::{run_workloads_with_events, Engine, EventQueueKind, RunOutput};
+use crate::coordinator::executor::ThreadedExecutor;
+use crate::coordinator::server::{build_pipeline_engine, build_pool_engine, run_with_engine};
+use crate::pose::EvalSet;
+use crate::runtime::artifacts::Manifest;
+
+/// Where the session's engine comes from.
+enum EngineSource<'e> {
+    /// Built from the config: the partition-aware pipeline when
+    /// `Config::partition` is set, the whole-frame pool otherwise.
+    Auto,
+    /// A [`Cluster`] of per-node pool engines built from the spec.
+    Cluster(ClusterSpec),
+    /// A caller-built engine (mock backends, custom pools).  The
+    /// executor setting does not wrap borrowed engines — matching the
+    /// legacy `run_with_*` entry points, which never wrapped either.
+    Custom(&'e mut dyn Engine),
+}
+
+/// Builder for a [`ServeSession`] — see the module docs.
+pub struct EngineBuilder<'e> {
+    config: Config,
+    source: EngineSource<'e>,
+    eval: Option<Arc<EvalSet>>,
+    frame_record_cap: Option<usize>,
+}
+
+impl<'e> EngineBuilder<'e> {
+    /// Start from a config (cloned: the builder owns its settings).
+    pub fn new(config: &Config) -> EngineBuilder<'e> {
+        EngineBuilder {
+            config: config.clone(),
+            source: EngineSource::Auto,
+            eval: None,
+            frame_record_cap: None,
+        }
+    }
+
+    /// Serve over a cluster of nodes instead of one engine (sim only).
+    pub fn cluster(mut self, spec: ClusterSpec) -> Self {
+        self.source = EngineSource::Cluster(spec);
+        self
+    }
+
+    /// Serve over a caller-built engine (the `run_with_pool` /
+    /// `run_with_backend` migration path).
+    pub fn engine(mut self, engine: &'e mut dyn Engine) -> Self {
+        self.source = EngineSource::Custom(engine);
+        self
+    }
+
+    /// Override the eval set (otherwise resolved from the manifest:
+    /// synthetic under `--sim`, loaded from the artifacts dir else).
+    pub fn eval(mut self, eval: Arc<EvalSet>) -> Self {
+        self.eval = Some(eval);
+        self
+    }
+
+    /// Override the executor kind (`Config::executor`).
+    pub fn executor(mut self, kind: ExecutorKind) -> Self {
+        self.config.executor = kind;
+        self
+    }
+
+    /// Override the wall-clock scale (`Config::time_scale`).
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.config.time_scale = scale;
+        self
+    }
+
+    /// Override the admission event-queue arm (`Config::events`).
+    pub fn events(mut self, kind: EventQueueKind) -> Self {
+        self.config.events = kind;
+        self
+    }
+
+    /// Enable/disable the content-addressed plan cache
+    /// (`Config::plan_cache`).
+    pub fn plan_cache(mut self, enabled: bool) -> Self {
+        self.config.plan_cache = enabled;
+        self
+    }
+
+    /// Cap per-frame telemetry rows on the built engine.  (Daemon runs
+    /// impose their own steady-state cap on top, as they always have.)
+    pub fn frame_record_cap(mut self, cap: usize) -> Self {
+        self.frame_record_cap = Some(cap);
+        self
+    }
+
+    /// Validate the configuration, resolve manifest + eval set, build
+    /// the engine (wrapped in the threaded executor when configured),
+    /// and return the runnable session.
+    pub fn build(self) -> Result<ServeSession<'e>> {
+        let config = self.config;
+        if config.partition.is_some() && !config.sim {
+            bail!(
+                "--partition requires --sim: stage execution binds simulated \
+                 engines (per-stage PJRT artifacts are not compiled)"
+            );
+        }
+        if !config.workloads.is_empty() && !config.sim {
+            bail!(
+                "--workload/--tenants requires --sim: multi-tenant serving \
+                 binds simulated engines (per-network PJRT artifacts are not \
+                 compiled)"
+            );
+        }
+        if config.executor == ExecutorKind::Threaded && !config.sim {
+            bail!(
+                "--executor threaded requires --sim: the wall-clock replay \
+                 services modeled spans (PJRT artifacts execute inline)"
+            );
+        }
+
+        let engine = match self.source {
+            EngineSource::Custom(engine) => {
+                let eval = match self.eval {
+                    Some(eval) => eval,
+                    None => resolve_manifest_eval(&config, None)?.1,
+                };
+                let mut session = ServeSession {
+                    config,
+                    eval,
+                    engine: Held::Borrowed(engine),
+                };
+                if let Some(cap) = self.frame_record_cap {
+                    session.engine.get().set_frame_record_cap(cap);
+                }
+                return Ok(session);
+            }
+            EngineSource::Cluster(spec) => {
+                if !config.sim {
+                    bail!(
+                        "--nodes requires --sim: cluster nodes bind simulated \
+                         engines (per-node PJRT pools are not provisioned)"
+                    );
+                }
+                if config.partition.is_some() {
+                    bail!(
+                        "--partition is not supported with --nodes: cluster \
+                         nodes are whole-frame substrate pools"
+                    );
+                }
+                Some(spec)
+            }
+            EngineSource::Auto => None,
+        };
+
+        let (manifest, eval) = resolve_manifest_eval(&config, self.eval)?;
+        let mut engine: Box<dyn Engine> = match engine {
+            Some(spec) => {
+                let mut nodes: Vec<Box<dyn Engine>> = Vec::with_capacity(spec.nodes.len());
+                for pool in &spec.nodes {
+                    let mut node_cfg = config.clone();
+                    node_cfg.pool = pool.clone();
+                    nodes.push(Box::new(build_pool_engine(&node_cfg, &manifest)?));
+                }
+                Box::new(Cluster::new(nodes)?.with_kills(spec.kills.clone()))
+            }
+            None => match &config.partition {
+                Some(part) => Box::new(build_pipeline_engine(&config, part, &manifest)?),
+                None => Box::new(build_pool_engine(&config, &manifest)?),
+            },
+        };
+        if config.executor == ExecutorKind::Threaded {
+            engine = Box::new(ThreadedExecutor::new(
+                engine,
+                ServiceMode::Sleep {
+                    time_scale: config.time_scale,
+                },
+            ));
+        }
+        if let Some(cap) = self.frame_record_cap {
+            engine.set_frame_record_cap(cap);
+        }
+        Ok(ServeSession {
+            config,
+            eval,
+            engine: Held::Owned(engine),
+        })
+    }
+}
+
+/// Manifest + eval resolution shared by every owned-engine source (and
+/// the custom source when no eval override is given): synthetic under
+/// `--sim`, loaded from the artifacts dir otherwise.
+fn resolve_manifest_eval(
+    config: &Config,
+    eval: Option<Arc<EvalSet>>,
+) -> Result<(Manifest, Arc<EvalSet>)> {
+    if config.sim {
+        let manifest = Manifest::synthetic()?;
+        let eval = match eval {
+            Some(e) => e,
+            None => Arc::new(EvalSet::synthetic(
+                manifest.eval_count,
+                manifest.camera.0,
+                manifest.camera.1,
+                42,
+            )),
+        };
+        Ok((manifest, eval))
+    } else {
+        let manifest = Manifest::load(&config.artifacts_dir)?;
+        let eval = match eval {
+            Some(e) => e,
+            None => Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?),
+        };
+        Ok((manifest, eval))
+    }
+}
+
+/// Engine ownership inside a session: built engines are owned, custom
+/// engines stay borrowed so the caller can inspect them afterwards.
+enum Held<'e> {
+    Owned(Box<dyn Engine>),
+    Borrowed(&'e mut dyn Engine),
+}
+
+impl Held<'_> {
+    fn get(&mut self) -> &mut dyn Engine {
+        match self {
+            Held::Owned(b) => b.as_mut(),
+            Held::Borrowed(e) => &mut **e,
+        }
+    }
+}
+
+/// A built, runnable serving session — drive it through [`run`] (the
+/// configured workloads, or the single-camera pump when none are set)
+/// or [`run_daemon`] (live churn over a [`DaemonSpec`]).
+///
+/// [`run`]: ServeSession::run
+/// [`run_daemon`]: ServeSession::run_daemon
+pub struct ServeSession<'e> {
+    config: Config,
+    eval: Arc<EvalSet>,
+    engine: Held<'e>,
+}
+
+impl ServeSession<'_> {
+    /// Serve to completion: the multi-tenant QoS loop over
+    /// `Config::workloads` when tenants are configured, the
+    /// single-workload camera pump otherwise.  The admission event
+    /// queue follows `Config::events`.
+    pub fn run(&mut self) -> Result<RunOutput> {
+        let ServeSession {
+            config,
+            eval,
+            engine,
+        } = self;
+        let engine = engine.get();
+        if config.workloads.is_empty() {
+            run_with_engine(config, eval.clone(), engine)
+        } else {
+            let (workloads, events) = (&config.workloads, config.events);
+            run_workloads_with_events(config, eval.clone(), engine, workloads, events)
+        }
+    }
+
+    /// Drive the session's engine through the daemon loop: live tenant
+    /// churn, trace-driven arrivals, windowed steady-state telemetry.
+    pub fn run_daemon(&mut self, spec: &DaemonSpec) -> Result<DaemonOutput> {
+        if !self.config.sim {
+            bail!(
+                "daemon mode requires --sim: tenant churn binds simulated \
+                 engines (per-network PJRT artifacts are not compiled)"
+            );
+        }
+        let ServeSession {
+            config,
+            eval,
+            engine,
+        } = self;
+        run_daemon_with_ready(config, eval.clone(), engine.get(), spec, config.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::coordinator::cluster::NodeKill;
+    use crate::coordinator::config::{Mode, PartitionSpec, Workload};
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::policy::{profile_modes, Constraints, QosClass};
+    use crate::coordinator::sim::SimBackend;
+    use crate::testkit::{check, Config as PropConfig};
+
+    fn workload(name: &str, qos: QosClass, deadline_ms: u64, rate: f64, frames: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos,
+            deadline: Duration::from_millis(deadline_ms),
+            rate_fps: rate,
+            frames,
+            constraints: Constraints::default(),
+        }
+    }
+
+    fn base_cfg() -> Config {
+        Config {
+            sim: true,
+            pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+            batch_timeout: Duration::from_millis(40),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_runs_the_single_workload_pump() {
+        let cfg = Config {
+            frames: 12,
+            camera_fps: 100.0,
+            ..base_cfg()
+        };
+        let out = EngineBuilder::new(&cfg).build().unwrap().run().unwrap();
+        assert_eq!(out.estimates.len(), 12);
+        let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn builder_validation_matches_legacy_precedence() {
+        // The same three bails as legacy `run`, plus the cluster rules.
+        let threaded = Config {
+            sim: false,
+            executor: ExecutorKind::Threaded,
+            ..Default::default()
+        };
+        assert!(EngineBuilder::new(&threaded).build().is_err());
+        let part = Config {
+            sim: false,
+            partition: Some(PartitionSpec::Auto),
+            ..Default::default()
+        };
+        assert!(EngineBuilder::new(&part).build().is_err());
+        let cl = ClusterSpec::from_cli(2, None, &[]).unwrap();
+        let no_sim = Config::default();
+        assert!(EngineBuilder::new(&no_sim).cluster(cl.clone()).build().is_err());
+        let part_cluster = Config {
+            sim: true,
+            partition: Some(PartitionSpec::Auto),
+            ..Default::default()
+        };
+        assert!(EngineBuilder::new(&part_cluster).cluster(cl).build().is_err());
+    }
+
+    #[test]
+    fn builder_custom_engine_matches_config_built_pool() {
+        // The `run_with_pool` migration path: a caller-built pool must
+        // serve decision-identically to the config-built one.
+        let cfg = Config {
+            frames: 16,
+            camera_fps: 100.0,
+            ..base_cfg()
+        };
+        let auto = EngineBuilder::new(&cfg).build().unwrap().run().unwrap();
+
+        let manifest = Manifest::synthetic().unwrap();
+        let profiles = profile_modes(&manifest);
+        let (net_h, net_w, _) = manifest.net_input;
+        let mut pool = Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+        for (i, mode) in [Mode::DpuInt8, Mode::VpuFp16].into_iter().enumerate() {
+            pool.add_backend(
+                Box::new(SimBackend::new(mode, &profiles[&mode], 0xC0FF_EE00 + i as u64)),
+                Some(profiles[&mode]),
+            );
+        }
+        let custom = EngineBuilder::new(&cfg).engine(&mut pool).build().unwrap().run().unwrap();
+        let ids = |o: &RunOutput| o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>();
+        assert_eq!(ids(&auto), ids(&custom));
+        // The borrowed pool is still inspectable after the session ends.
+        assert_eq!(pool.fault_count(), 0);
+    }
+
+    #[test]
+    fn builder_cluster_source_serves_and_survives_a_kill() {
+        let cfg = Config {
+            workloads: vec![
+                workload("rt", QosClass::Realtime, 8000, 10.0, 30),
+                workload("std", QosClass::Standard, 9000, 6.0, 20),
+                workload("bg", QosClass::Background, 9000, 8.0, 20),
+            ],
+            ..base_cfg()
+        };
+        let spec = ClusterSpec::from_cli(3, None, &[]).unwrap();
+        let spec = ClusterSpec {
+            kills: vec![NodeKill {
+                node: 1,
+                at: Duration::from_millis(1000),
+            }],
+            ..spec
+        };
+        let out = EngineBuilder::new(&cfg).cluster(spec).build().unwrap().run().unwrap();
+        assert_eq!(out.telemetry.tenants.len(), 3);
+        for t in &out.telemetry.tenants {
+            assert_eq!(
+                t.completed + t.shed,
+                t.admitted,
+                "tenant {} leaked frames across the node kill",
+                t.name()
+            );
+        }
+        let rt = &out.telemetry.tenants[0];
+        assert_eq!((rt.admitted, rt.completed, rt.shed), (30, 30, 0), "realtime loss");
+    }
+
+    #[test]
+    fn event_queue_arms_are_bit_identical_through_the_builder() {
+        let mk = |events: EventQueueKind| Config {
+            workloads: vec![
+                workload("rt", QosClass::Realtime, 8000, 10.0, 24),
+                workload("bg", QosClass::Background, 6000, 14.0, 30),
+            ],
+            events,
+            ..base_cfg()
+        };
+        let ids = |cfg: &Config| {
+            let out = EngineBuilder::new(cfg).build().unwrap().run().unwrap();
+            out.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>()
+        };
+        let sharded = ids(&mk(EventQueueKind::Sharded));
+        assert_eq!(sharded, ids(&mk(EventQueueKind::Calendar)));
+        assert_eq!(sharded, ids(&mk(EventQueueKind::Scan)));
+    }
+
+    /// THE satellite gate: for a random (workloads, faults, clock) draw,
+    /// the builder session and each legacy shim must make bit-identical
+    /// decisions — same estimate stream, same per-tenant books.
+    #[test]
+    fn property_builder_is_decision_identical_to_legacy_shims() {
+        #[allow(deprecated)]
+        fn legacy(cfg: &Config) -> Result<RunOutput> {
+            crate::coordinator::server::run(cfg)
+        }
+        check(
+            "builder_legacy_identity",
+            PropConfig { cases: 24, ..Default::default() },
+            |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let workloads: Vec<Workload> = (0..n_tenants)
+                    .map(|k| {
+                        let qos = [QosClass::Realtime, QosClass::Standard, QosClass::Background]
+                            [ctx.rng.below(3)];
+                        workload(
+                            &format!("t{k}"),
+                            qos,
+                            2000 + ctx.rng.below(8000) as u64,
+                            2.0 + ctx.rng.below(12) as f64,
+                            4 + ctx.rng.below(24) as u64,
+                        )
+                    })
+                    .collect();
+                let cfg = Config {
+                    workloads,
+                    fail_every: (ctx.rng.below(2) == 1).then(|| 2 + ctx.rng.below(4)),
+                    batch_timeout: Duration::from_millis(10 + ctx.rng.below(80) as u64),
+                    ..base_cfg()
+                };
+                let a = legacy(&cfg).map_err(|e| e.to_string())?;
+                let b = EngineBuilder::new(&cfg)
+                    .build()
+                    .and_then(|mut s| s.run())
+                    .map_err(|e| e.to_string())?;
+                let ids = |o: &RunOutput| {
+                    o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>()
+                };
+                crate::prop_assert!(ids(&a) == ids(&b), "estimate streams diverged");
+                let books = |o: &RunOutput| {
+                    o.telemetry
+                        .tenants
+                        .iter()
+                        .map(|t| (t.id, t.admitted, t.completed, t.shed, t.deadline_misses))
+                        .collect::<Vec<_>>()
+                };
+                crate::prop_assert!(books(&a) == books(&b), "per-tenant books diverged");
+                Ok(())
+            },
+        );
+    }
+}

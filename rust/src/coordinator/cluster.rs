@@ -1,0 +1,881 @@
+//! Constellation-scale cluster serving: N heterogeneous engine nodes
+//! behind one [`Engine`].
+//!
+//! A [`Cluster`] owns a fleet of node engines (each typically a
+//! [`super::dispatcher::Dispatcher`] over its own substrate pool — a
+//! dpu-heavy, vpu-heavy, or tpu-heavy mix per [`ClusterSpec`]) and
+//! implements [`Engine`] itself, so the serve loops, daemon mode, the
+//! threaded executor, and trace replay all compose over a cluster
+//! unchanged:
+//!
+//! * **Placement** — each tenant's batches route to one node chosen by
+//!   [`Placement`]: least modeled load with plan-cache-key affinity, so
+//!   repeated configurations co-locate and keep one node's plan cache
+//!   hot (see [`super::placement`]).
+//! * **Hotspot rebalance** — per-node frame counts over fixed virtual
+//!   windows; when the hottest node served ≥2× the coldest (by at least
+//!   one artifact batch), its lowest-indexed non-realtime tenant
+//!   migrates to the coldest node.  Realtime tenants never migrate.
+//! * **Node-level fault injection** — a [`NodeKill`] takes a node down
+//!   at a virtual instant.  Work that finished before the kill
+//!   survives; every in-flight batch (a retained clone keyed by tenant
+//!   + first frame id) is resubmitted to a surviving node, so admitted
+//!   frames — realtime above all — are never lost to a node death.
+//! * **Determinism** — virtual time is the max batch-ready instant seen
+//!   on submit; kills fire lazily when time passes them; completions
+//!   buffer until virtual time reaches their `t_done` and release in
+//!   `(t_done, submit sequence)` order.  Every decision is a pure
+//!   function of the submit stream: replay is bit-identical.
+//!
+//! Wrapping a cluster in the threaded executor shares per-substrate
+//! worker threads across nodes (substrate ids are interned process-wide
+//! by label), which models co-scheduled accelerators rather than
+//! physically disjoint racks — acceptable for the wall-clock replay
+//! path, and the simulated timeline is per-node exact either way.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batcher::Batch;
+use crate::coordinator::config::Mode;
+use crate::coordinator::engine::{Completion, Engine};
+use crate::coordinator::placement::{AffinityKey, Placement};
+use crate::coordinator::policy::QosClass;
+use crate::coordinator::telemetry::Telemetry;
+
+/// Default hotspot-detection window on the virtual timeline.
+pub const DEFAULT_REBALANCE_WINDOW: Duration = Duration::from_secs(1);
+
+/// Node classes the CLI accepts by name (`--node-pool dpu-heavy;...`).
+/// Duplicated modes are deliberate: a "heavy" node has twice the
+/// capacity on its lead substrate.
+pub const NODE_CLASSES: [(&str, &[Mode]); 4] = [
+    ("dpu-heavy", &[Mode::DpuInt8, Mode::DpuInt8, Mode::VpuFp16]),
+    ("vpu-heavy", &[Mode::VpuFp16, Mode::VpuFp16, Mode::DpuInt8]),
+    ("tpu-heavy", &[Mode::TpuInt8, Mode::TpuInt8, Mode::DpuInt8]),
+    ("mixed", &[Mode::DpuInt8, Mode::VpuFp16, Mode::TpuInt8]),
+];
+
+/// Node-level fault injection: the node stops serving at a virtual
+/// instant, in-flight work fails over to survivors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeKill {
+    pub node: usize,
+    pub at: Duration,
+}
+
+impl NodeKill {
+    /// Parse the CLI spelling `NODE@SECONDS`, e.g. `--kill-node 2@3.5`.
+    pub fn parse(s: &str) -> Result<NodeKill> {
+        let (node, at) = s
+            .split_once('@')
+            .with_context(|| format!("kill {s:?}: expected NODE@SECONDS"))?;
+        let node: usize = node
+            .trim()
+            .parse()
+            .with_context(|| format!("kill {s:?}: bad node index"))?;
+        let at: f64 = at
+            .trim()
+            .parse()
+            .with_context(|| format!("kill {s:?}: bad instant"))?;
+        if !at.is_finite() || at < 0.0 {
+            bail!("kill {s:?}: instant must be finite and non-negative");
+        }
+        Ok(NodeKill {
+            node,
+            at: Duration::from_secs_f64(at),
+        })
+    }
+}
+
+/// Shape of a cluster: one substrate pool per node plus the fault
+/// schedule.  The spec is pure data — node engines are built from it by
+/// the serving layer (`EngineBuilder`), which owns manifests/profiles.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSpec {
+    /// Per-node substrate pools (the node class mixes).
+    pub nodes: Vec<Vec<Mode>>,
+    /// Node-level fault injections.
+    pub kills: Vec<NodeKill>,
+}
+
+impl ClusterSpec {
+    /// `n` identical nodes over one pool.
+    pub fn uniform(n: usize, pool: Vec<Mode>) -> ClusterSpec {
+        ClusterSpec {
+            nodes: vec![pool; n],
+            kills: Vec::new(),
+        }
+    }
+
+    /// Resolve a named node class to its pool.
+    pub fn node_class(name: &str) -> Option<Vec<Mode>> {
+        NODE_CLASSES
+            .iter()
+            .find(|(class, _)| *class == name)
+            .map(|(_, pool)| pool.to_vec())
+    }
+
+    /// Build a spec from the CLI surface: `--nodes N`, an optional
+    /// `--node-pool` spec (`;`-separated entries, each a named class or
+    /// a comma-separated mode list, cycled across the N nodes), and
+    /// repeated `--kill-node NODE@SECONDS` flags.  With no pool spec the
+    /// heterogeneous default cycles dpu-heavy / vpu-heavy / tpu-heavy.
+    pub fn from_cli(nodes: usize, pool_spec: Option<&str>, kills: &[&str]) -> Result<ClusterSpec> {
+        if nodes == 0 {
+            bail!("--nodes must be at least 1");
+        }
+        let classes: Vec<Vec<Mode>> = match pool_spec {
+            None => vec![
+                ClusterSpec::node_class("dpu-heavy").unwrap(),
+                ClusterSpec::node_class("vpu-heavy").unwrap(),
+                ClusterSpec::node_class("tpu-heavy").unwrap(),
+            ],
+            Some(spec) => spec
+                .split(';')
+                .map(|entry| {
+                    let entry = entry.trim();
+                    if let Some(pool) = ClusterSpec::node_class(entry) {
+                        return Ok(pool);
+                    }
+                    entry
+                        .split(',')
+                        .map(|m| {
+                            let m = m.trim();
+                            Mode::from_label(m)
+                                .with_context(|| format!("--node-pool: unknown mode {m:?}"))
+                        })
+                        .collect()
+                })
+                .collect::<Result<_>>()?,
+        };
+        if classes.is_empty() || classes.iter().any(|c| c.is_empty()) {
+            bail!("--node-pool needs at least one mode per node entry");
+        }
+        let pools = (0..nodes).map(|i| classes[i % classes.len()].clone()).collect();
+        let kills = kills.iter().map(|k| NodeKill::parse(k)).collect::<Result<Vec<_>>>()?;
+        for k in &kills {
+            if k.node >= nodes {
+                bail!("--kill-node {}@...: only {} nodes", k.node, nodes);
+            }
+        }
+        Ok(ClusterSpec { nodes: pools, kills })
+    }
+}
+
+/// One fleet member.
+struct Node {
+    engine: Box<dyn Engine>,
+    alive: bool,
+    /// Books closed (killed nodes drain early; `Cluster::drain` skips them).
+    drained: bool,
+    /// Frames routed here in the current rebalance window.
+    window_frames: u64,
+    /// Frames routed here over the whole run (scaling diagnostics).
+    total_frames: u64,
+}
+
+/// Retained clone of a submitted batch, held until its completion is
+/// *released* — the failover currency.
+struct Inflight {
+    batch: Batch,
+    node: usize,
+    seq: u64,
+}
+
+/// A completion a node has produced but virtual time has not reached
+/// yet.  Buffering these is what makes node kills honest: a node dying
+/// at `t` takes down everything it would have finished after `t`, even
+/// though the simulated engine computed it eagerly.
+struct PendingDone {
+    key: (usize, u64),
+    node: usize,
+    seq: u64,
+    t_done: Duration,
+    completion: Completion,
+}
+
+/// N node engines behind one [`Engine`] — see the module docs.
+pub struct Cluster {
+    nodes: Vec<Node>,
+    placement: Placement,
+    /// Common artifact batch (construction verifies the fleet agrees).
+    batch: usize,
+    /// Virtual now: latest batch-ready instant seen on submit.
+    now: Duration,
+    /// Pending fault injections, ascending by instant; drained as fired.
+    kills: Vec<NodeKill>,
+    /// Retained batches keyed by (tenant, first real frame id).
+    inflight: BTreeMap<(usize, u64), Inflight>,
+    /// Completions awaiting release (virtual time or final drain).
+    pending: Vec<PendingDone>,
+    /// Global submit sequence — the deterministic merge tiebreak.
+    next_seq: u64,
+    /// Latest QoS class seen per tenant (realtime never migrates).
+    qos: BTreeMap<usize, QosClass>,
+    window: Duration,
+    window_idx: u64,
+    failovers: usize,
+    migrations: u64,
+    record_cap: Option<usize>,
+    drained: bool,
+}
+
+impl Cluster {
+    /// Assemble a cluster over pre-built node engines.  Every node must
+    /// agree on the artifact batch size (tenant batchers are sized once,
+    /// against the cluster, not per node).
+    pub fn new(nodes: Vec<Box<dyn Engine>>) -> Result<Cluster> {
+        if nodes.is_empty() {
+            bail!("cluster needs at least one node");
+        }
+        let batch = nodes[0].artifact_batch();
+        for (i, n) in nodes.iter().enumerate() {
+            if n.artifact_batch() != batch {
+                bail!(
+                    "cluster nodes disagree on artifact batch: node {i} has {}, node 0 has {batch}",
+                    n.artifact_batch()
+                );
+            }
+        }
+        let count = nodes.len();
+        Ok(Cluster {
+            nodes: nodes
+                .into_iter()
+                .map(|engine| Node {
+                    engine,
+                    alive: true,
+                    drained: false,
+                    window_frames: 0,
+                    total_frames: 0,
+                })
+                .collect(),
+            placement: Placement::new(count),
+            batch,
+            now: Duration::ZERO,
+            kills: Vec::new(),
+            inflight: BTreeMap::new(),
+            pending: Vec::new(),
+            next_seq: 0,
+            qos: BTreeMap::new(),
+            window: DEFAULT_REBALANCE_WINDOW,
+            window_idx: 0,
+            failovers: 0,
+            migrations: 0,
+            record_cap: None,
+            drained: false,
+        })
+    }
+
+    /// Install the fault schedule (sorted internally; fires lazily as
+    /// submits advance virtual time past each instant).
+    pub fn with_kills(mut self, mut kills: Vec<NodeKill>) -> Cluster {
+        kills.sort_by_key(|k| (k.at, k.node));
+        self.kills = kills;
+        self
+    }
+
+    /// Override the hotspot-detection window.
+    pub fn with_rebalance_window(mut self, window: Duration) -> Cluster {
+        self.window = window.max(Duration::from_millis(1));
+        self
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    /// Batches resubmitted to survivors after node deaths.
+    pub fn failovers(&self) -> usize {
+        self.failovers
+    }
+
+    /// Tenant migrations performed by hotspot rebalancing.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Total frames routed to each node (failovers count on both the
+    /// dead and the surviving node — both really served the submit).
+    pub fn node_frames(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.total_frames).collect()
+    }
+
+    fn key_of(batch: &Batch) -> (usize, u64) {
+        let first = batch.frames.first().map(|f| f.id).unwrap_or(u64::MAX);
+        (batch.tenant, first)
+    }
+
+    /// Move every completion a node has queued into the pending buffer,
+    /// tagged with its submit sequence for the deterministic merge.
+    fn pull_node(&mut self, i: usize) {
+        for c in self.nodes[i].engine.poll() {
+            let first = c.estimates.first().map(|e| e.frame_id).unwrap_or(u64::MAX);
+            let key = (c.tenant, first);
+            let seq = self.inflight.get(&key).map(|f| f.seq).unwrap_or(u64::MAX);
+            self.pending.push(PendingDone {
+                key,
+                node: i,
+                seq,
+                t_done: c.t_done,
+                completion: c,
+            });
+        }
+    }
+
+    fn pull_alive(&mut self) {
+        for i in 0..self.nodes.len() {
+            if self.nodes[i].alive {
+                self.pull_node(i);
+            }
+        }
+    }
+
+    /// Fire every kill whose instant virtual time has reached.
+    fn fire_due_kills(&mut self) -> Result<()> {
+        while let Some(&k) = self.kills.first() {
+            if k.at > self.now {
+                break;
+            }
+            self.kills.remove(0);
+            self.kill(k)?;
+        }
+        Ok(())
+    }
+
+    /// Take a node down: close its books, keep what it finished before
+    /// the kill instant, fail everything else over to survivors.
+    fn kill(&mut self, k: NodeKill) -> Result<()> {
+        let i = k.node;
+        if i >= self.nodes.len() || !self.nodes[i].alive {
+            return Ok(());
+        }
+        self.pull_node(i);
+        self.nodes[i].engine.drain()?;
+        self.nodes[i].drained = true;
+        self.pull_node(i);
+        self.nodes[i].alive = false;
+        self.placement.fail_node(i);
+        // Completions the node reached after the kill instant die with it.
+        self.pending.retain(|p| !(p.node == i && p.t_done > k.at));
+        // Anything in flight on the node without a surviving completion
+        // — the casualties just dropped plus work that never surfaced —
+        // resubmits to a surviving node, in deterministic key order.
+        let surviving: BTreeSet<(usize, u64)> = self
+            .pending
+            .iter()
+            .filter(|p| p.node == i)
+            .map(|p| p.key)
+            .collect();
+        let lost: Vec<(usize, u64)> = self
+            .inflight
+            .iter()
+            .filter(|(key, f)| f.node == i && !surviving.contains(key))
+            .map(|(&key, _)| key)
+            .collect();
+        for key in lost {
+            let f = self.inflight.remove(&key).expect("lost key present");
+            let node = self.route(&f.batch)?;
+            self.failovers += 1;
+            self.submit_to(node, f.batch)?;
+        }
+        Ok(())
+    }
+
+    /// Current route for a batch's tenant (placing it if new or its
+    /// node died).  Errors only when the whole fleet is dead.
+    fn route(&mut self, batch: &Batch) -> Result<usize> {
+        let alive: Vec<bool> = self.nodes.iter().map(|n| n.alive).collect();
+        let key = AffinityKey::of(batch.cost, &batch.constraints);
+        self.placement
+            .place(batch.tenant, key, batch.cost, &alive)
+            .with_context(|| format!("all {} cluster nodes are dead", self.nodes.len()))
+    }
+
+    fn submit_to(&mut self, node: usize, batch: Batch) -> Result<()> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.nodes[node].engine.submit(&batch)?;
+        self.nodes[node].window_frames += batch.frames.len() as u64;
+        self.nodes[node].total_frames += batch.frames.len() as u64;
+        self.inflight.insert(Cluster::key_of(&batch), Inflight { batch, node, seq });
+        Ok(())
+    }
+
+    /// On a window boundary, run one hotspot check over the closed
+    /// window and reset the counters.
+    fn maybe_rebalance(&mut self) {
+        let idx = (self.now.as_nanos() / self.window.as_nanos()) as u64;
+        if idx == self.window_idx {
+            return;
+        }
+        self.window_idx = idx;
+        self.rebalance();
+        for n in &mut self.nodes {
+            n.window_frames = 0;
+        }
+    }
+
+    /// Hotspot rule: hottest alive node served ≥2× the coldest, by at
+    /// least one artifact batch → migrate its lowest-indexed
+    /// non-realtime tenant to the coldest node.  Pure routing update;
+    /// in-flight work is untouched.
+    fn rebalance(&mut self) {
+        let alive: Vec<usize> = (0..self.nodes.len()).filter(|&i| self.nodes[i].alive).collect();
+        if alive.len() < 2 {
+            return;
+        }
+        let hot = *alive
+            .iter()
+            .max_by_key(|&&i| (self.nodes[i].window_frames, std::cmp::Reverse(i)))
+            .expect("non-empty");
+        let cold = *alive
+            .iter()
+            .min_by_key(|&&i| (self.nodes[i].window_frames, i))
+            .expect("non-empty");
+        let (hot_frames, cold_frames) =
+            (self.nodes[hot].window_frames, self.nodes[cold].window_frames);
+        if hot == cold
+            || hot_frames < 2 * cold_frames.max(1)
+            || hot_frames - cold_frames < self.batch as u64
+        {
+            return;
+        }
+        let tenant = self
+            .placement
+            .tenants_on(hot)
+            .into_iter()
+            .find(|t| self.qos.get(t) != Some(&QosClass::Realtime));
+        if let Some(t) = tenant {
+            self.placement.migrate(t, cold);
+            self.migrations += 1;
+        }
+    }
+}
+
+impl Engine for Cluster {
+    fn primary_mode(&self) -> Result<Mode> {
+        self.nodes[0].engine.primary_mode()
+    }
+
+    fn artifact_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn submit(&mut self, batch: &Batch) -> Result<()> {
+        if batch.t_ready > self.now {
+            self.now = batch.t_ready;
+        }
+        self.fire_due_kills()?;
+        self.maybe_rebalance();
+        self.qos.insert(batch.tenant, batch.qos);
+        let node = self.route(batch)?;
+        self.submit_to(node, batch.clone())
+    }
+
+    /// Release every buffered completion virtual time has reached (all
+    /// of them once drained), merged across nodes in `(t_done, submit
+    /// sequence)` order — bit-identical on replay.
+    fn poll(&mut self) -> Vec<Completion> {
+        self.pull_alive();
+        let horizon = if self.drained { None } else { Some(self.now) };
+        let mut due: Vec<PendingDone> = Vec::new();
+        let mut later: Vec<PendingDone> = Vec::new();
+        for p in self.pending.drain(..) {
+            match horizon {
+                Some(h) if p.t_done > h => later.push(p),
+                _ => due.push(p),
+            }
+        }
+        self.pending = later;
+        due.sort_by_key(|p| (p.t_done, p.seq));
+        due.into_iter()
+            .map(|p| {
+                self.inflight.remove(&p.key);
+                p.completion
+            })
+            .collect()
+    }
+
+    /// Horizon of the least-backlogged alive node — the admission
+    /// loop's shed decision sees the fleet's best case.
+    fn ready_at(&self) -> Duration {
+        self.nodes
+            .iter()
+            .filter(|n| n.alive)
+            .map(|n| n.engine.ready_at())
+            .min()
+            .unwrap_or(Duration::MAX)
+    }
+
+    /// Backend-level faults across the fleet plus node-death failovers.
+    fn fault_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.engine.fault_count()).sum::<usize>() + self.failovers
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        for node in &mut self.nodes {
+            if node.alive && !node.drained {
+                node.engine.drain()?;
+                node.drained = true;
+            }
+        }
+        self.drained = true;
+        Ok(())
+    }
+
+    fn take_telemetry(&mut self) -> Telemetry {
+        let mut out = Telemetry::new();
+        out.frame_record_cap = self.record_cap;
+        for node in &mut self.nodes {
+            let t = node.engine.take_telemetry();
+            for r in t.records {
+                out.record(r);
+            }
+            out.backends.extend(t.backends);
+            out.stages.extend(t.stages);
+            out.measured_batch_s.extend(t.measured_batch_s);
+            out.records_dropped += t.records_dropped;
+            out.stale_events += t.stale_events;
+            if let Some(pc) = t.plan_cache {
+                out.plan_cache = Some(match out.plan_cache.take() {
+                    Some(merged) => merged.merged(&pc),
+                    None => pc,
+                });
+            }
+        }
+        out
+    }
+
+    fn set_frame_record_cap(&mut self, cap: usize) {
+        self.record_cap = Some(cap);
+        for node in &mut self.nodes {
+            node.engine.set_frame_record_cap(cap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::coordinator::config::{Config, Workload};
+    use crate::coordinator::daemon::{run_daemon, DaemonSpec};
+    use crate::coordinator::dispatcher::Dispatcher;
+    use crate::coordinator::engine::run_workloads;
+    use crate::coordinator::policy::{profile_modes, Constraints};
+    use crate::coordinator::sim::SimBackend;
+    use crate::coordinator::trace::{ChurnAction, ChurnEvent, TenantTrace};
+    use crate::pose::EvalSet;
+    use crate::runtime::Manifest;
+    use crate::testkit::{check, Config as PropConfig};
+
+    fn node(modes: &[Mode], seed: u64) -> Box<dyn Engine> {
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
+        let mut d = Dispatcher::new(4, 6, 8, Constraints::default());
+        for (i, &m) in modes.iter().enumerate() {
+            d.add_backend(
+                Box::new(SimBackend::new(m, &profiles[&m], seed + i as u64)),
+                Some(profiles[&m]),
+            );
+        }
+        Box::new(d)
+    }
+
+    fn cluster(n: usize) -> Cluster {
+        let pools = ClusterSpec::from_cli(n, None, &[]).unwrap().nodes;
+        Cluster::new(
+            pools
+                .iter()
+                .enumerate()
+                .map(|(i, p)| node(p, 0xC1A0 + 8 * i as u64))
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    fn tiny_eval() -> Arc<EvalSet> {
+        Arc::new(EvalSet::synthetic(6, 12, 16, 42))
+    }
+
+    fn cfg(timeout_ms: u64) -> Config {
+        Config {
+            sim: true,
+            batch_timeout: Duration::from_millis(timeout_ms),
+            ..Default::default()
+        }
+    }
+
+    fn workload(name: &str, qos: QosClass, deadline_ms: u64, rate: f64, frames: u64) -> Workload {
+        Workload {
+            name: name.to_string(),
+            net: "ursonet_full".into(),
+            qos,
+            deadline: Duration::from_millis(deadline_ms),
+            rate_fps: rate,
+            frames,
+            constraints: Constraints::default(),
+        }
+    }
+
+    fn mix(tenants: usize, frames: u64) -> Vec<Workload> {
+        (0..tenants)
+            .map(|k| {
+                let qos = [QosClass::Realtime, QosClass::Standard, QosClass::Background][k % 3];
+                workload(&format!("t{k}"), qos, 8000, 4.0 + k as f64, frames)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spec_from_cli_cycles_classes_and_parses_kills() {
+        let spec = ClusterSpec::from_cli(4, None, &["1@2.5"]).unwrap();
+        assert_eq!(spec.nodes.len(), 4);
+        // Default heterogeneous cycle wraps: node 3 repeats node 0's class.
+        assert_eq!(spec.nodes[3], spec.nodes[0]);
+        assert_ne!(spec.nodes[0], spec.nodes[1]);
+        assert_eq!(spec.kills, vec![NodeKill { node: 1, at: Duration::from_millis(2500) }]);
+
+        let spec = ClusterSpec::from_cli(3, Some("dpu-heavy;vpu-fp16,tpu-int8"), &[]).unwrap();
+        assert_eq!(spec.nodes[0], ClusterSpec::node_class("dpu-heavy").unwrap());
+        assert_eq!(spec.nodes[1], vec![Mode::VpuFp16, Mode::TpuInt8]);
+        assert_eq!(spec.nodes[2], spec.nodes[0]);
+
+        assert!(ClusterSpec::from_cli(0, None, &[]).is_err());
+        assert!(ClusterSpec::from_cli(2, Some("warp-drive"), &[]).is_err());
+        assert!(ClusterSpec::from_cli(2, None, &["7@1"]).is_err(), "kill beyond fleet");
+        assert!(NodeKill::parse("1@-3").is_err());
+        assert!(NodeKill::parse("nope").is_err());
+    }
+
+    #[test]
+    fn nodes_must_agree_on_artifact_batch() {
+        let profiles = profile_modes(&Manifest::synthetic().unwrap());
+        let mut small = Dispatcher::new(2, 6, 8, Constraints::default());
+        small.add_backend(
+            Box::new(SimBackend::new(Mode::DpuInt8, &profiles[&Mode::DpuInt8], 1)),
+            Some(profiles[&Mode::DpuInt8]),
+        );
+        let err = Cluster::new(vec![node(&[Mode::DpuInt8], 2), Box::new(small)]);
+        assert!(err.is_err());
+        assert!(Cluster::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn serves_multi_tenant_mix_and_spreads_load() {
+        let mut c = cluster(3);
+        let out = run_workloads(&cfg(40), tiny_eval(), &mut c, &mix(6, 24)).unwrap();
+        let served: Vec<u64> = c.node_frames();
+        assert!(
+            served.iter().filter(|&&f| f > 0).count() >= 2,
+            "placement kept the whole fleet idle but one node: {served:?}"
+        );
+        for t in &out.telemetry.tenants {
+            assert_eq!(
+                t.completed, t.admitted,
+                "tenant {} lost frames: {} of {}",
+                t.name(),
+                t.completed,
+                t.admitted
+            );
+            assert_eq!(t.shed, 0);
+        }
+        // The merged fleet telemetry kept per-backend books.
+        assert!(!out.telemetry.backends.is_empty());
+    }
+
+    #[test]
+    fn node_kill_fails_over_without_losing_admitted_frames() {
+        let mut c = cluster(3).with_kills(vec![NodeKill {
+            node: 0,
+            at: Duration::from_millis(900),
+        }]);
+        let out = run_workloads(&cfg(40), tiny_eval(), &mut c, &mix(6, 40)).unwrap();
+        assert_eq!(c.alive_count(), 2, "the kill must have fired");
+        for t in &out.telemetry.tenants {
+            assert_eq!(
+                t.completed, t.admitted,
+                "tenant {} lost frames across the node kill",
+                t.name()
+            );
+        }
+        assert_eq!(out.telemetry.shed_total(), 0, "underloaded fleet must not shed");
+        // The kill caught work mid-flight: the fault ledger shows the
+        // resubmissions that kept the books whole.
+        assert!(c.failovers() > 0, "kill at 900 ms should catch in-flight batches");
+        assert!(c.fault_count() >= c.failovers());
+    }
+
+    #[test]
+    fn killing_the_last_node_is_an_error_not_a_panic() {
+        let mut c = cluster(1).with_kills(vec![NodeKill { node: 0, at: Duration::ZERO }]);
+        let err = run_workloads(&cfg(40), tiny_eval(), &mut c, &mix(2, 12));
+        assert!(err.is_err(), "a fully dead fleet must surface an error");
+    }
+
+    fn frame(id: u64, ms: u64) -> crate::sensor::Frame {
+        crate::sensor::Frame {
+            id,
+            t_capture: Duration::from_millis(ms),
+            pixels: vec![100; 8 * 12 * 3].into(),
+            h: 8,
+            w: 12,
+            truth: crate::pose::Pose {
+                loc: [0.0, 0.0, 5.0],
+                quat: [1.0, 0.0, 0.0, 0.0],
+            },
+        }
+    }
+
+    fn raw_batch(tenant: usize, ids: &[u64], t_ready_ms: u64, qos: QosClass) -> Batch {
+        let mut b = Batch::new(
+            ids.iter().map(|&i| frame(i, t_ready_ms)).collect(),
+            4,
+            Duration::from_millis(t_ready_ms),
+        );
+        b.tenant = tenant;
+        b.qos = qos;
+        b
+    }
+
+    #[test]
+    fn hotspot_migrates_lowest_indexed_non_realtime_tenant() {
+        let mut c = cluster(2).with_rebalance_window(Duration::from_millis(100));
+        // Pin three tenants onto node 0 so the first window is lopsided
+        // (12 frames vs 0 — over the 2× bar by ≥ one artifact batch).
+        let alive = [true, true];
+        let k = AffinityKey::of(1.0, &Constraints::default());
+        for t in 0..3 {
+            c.placement.place(t, k, 1.0, &alive);
+            c.placement.migrate(t, 0);
+        }
+        c.submit(&raw_batch(0, &[0, 1, 2, 3], 10, QosClass::Realtime)).unwrap();
+        c.submit(&raw_batch(1, &[10, 11, 12, 13], 20, QosClass::Standard)).unwrap();
+        c.submit(&raw_batch(2, &[20, 21, 22, 23], 30, QosClass::Standard)).unwrap();
+        assert_eq!(c.migrations(), 0, "no window boundary crossed yet");
+        // Crossing into the next window triggers the hotspot check: the
+        // lowest-indexed *non-realtime* tenant (1) moves to the cold node.
+        c.submit(&raw_batch(1, &[14, 15, 16, 17], 150, QosClass::Standard)).unwrap();
+        assert_eq!(c.migrations(), 1);
+        assert_eq!(c.placement.node_of(0), Some(0), "realtime tenants never migrate");
+        assert_eq!(c.placement.node_of(1), Some(1));
+        assert_eq!(c.placement.node_of(2), Some(0));
+        // Everything still completes exactly once across the split fleet.
+        c.drain().unwrap();
+        let done: usize = c.poll().iter().map(|d| d.estimates.len()).sum();
+        assert_eq!(done, 16);
+    }
+
+    #[test]
+    fn rebalanced_run_conserves_every_tenant() {
+        let mut c = cluster(2).with_rebalance_window(Duration::from_millis(200));
+        let wl: Vec<Workload> = (0..4)
+            .map(|k| workload(&format!("t{k}"), QosClass::Standard, 8000, 12.0, 48))
+            .collect();
+        let out = run_workloads(&cfg(30), tiny_eval(), &mut c, &wl).unwrap();
+        for t in &out.telemetry.tenants {
+            assert_eq!(t.completed, t.admitted, "migration lost frames for {}", t.name());
+        }
+    }
+
+    #[test]
+    fn replay_is_bit_identical() {
+        let run = || {
+            let mut c = cluster(3).with_kills(vec![NodeKill {
+                node: 1,
+                at: Duration::from_millis(700),
+            }]);
+            run_workloads(&cfg(40), tiny_eval(), &mut c, &mix(5, 32)).unwrap()
+        };
+        let (a, b) = (run(), run());
+        let ids = |o: &crate::coordinator::engine::RunOutput| {
+            o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&a), ids(&b), "estimate stream must replay bit-identically");
+        let books = |o: &crate::coordinator::engine::RunOutput| {
+            o.telemetry
+                .tenants
+                .iter()
+                .map(|t| (t.id, t.admitted, t.completed, t.shed, t.deadline_misses))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(books(&a), books(&b), "per-tenant accounting must replay bit-identically");
+    }
+
+    #[test]
+    fn daemon_churn_over_cluster_conserves_admitted_frames() {
+        // The satellite gate: tenants join/leave mid-run while a node
+        // dies — completed == admitted for every tenant that ever served.
+        let mut c = cluster(3).with_kills(vec![NodeKill {
+            node: 2,
+            at: Duration::from_millis(1500),
+        }]);
+        let spec = DaemonSpec {
+            window: Duration::from_secs(5),
+            tenants: vec![
+                TenantTrace::steady(workload("rt", QosClass::Realtime, 8000, 10.0, 30)),
+                TenantTrace::steady(workload("std", QosClass::Standard, 9000, 6.0, 20)),
+            ],
+            churn: vec![
+                ChurnEvent {
+                    at: Duration::from_millis(800),
+                    action: ChurnAction::Join(
+                        Box::new(workload("late", QosClass::Background, 9000, 8.0, 16)),
+                        crate::coordinator::trace::ArrivalPattern::Steady,
+                    ),
+                },
+                ChurnEvent {
+                    at: Duration::from_millis(2600),
+                    action: ChurnAction::Leave("std".into()),
+                },
+            ],
+        };
+        let out = run_daemon(&cfg(40), tiny_eval(), &mut c, &spec).unwrap();
+        assert_eq!(out.joins, 3);
+        assert_eq!(out.leaves, 1);
+        assert_eq!(c.alive_count(), 2);
+        for t in &out.telemetry.tenants {
+            assert_eq!(
+                t.completed + t.shed,
+                t.admitted,
+                "daemon tenant {} leaked frames across churn + node kill",
+                t.name()
+            );
+        }
+    }
+
+    #[test]
+    fn property_cluster_conserves_frames_under_kills_and_sizes() {
+        check("cluster_conservation", PropConfig { cases: 16, ..Default::default() }, |ctx| {
+            let n = 1 + ctx.rng.below(4);
+            let tenants = 1 + ctx.rng.below(5);
+            let frames = 8 + ctx.rng.below(24) as u64;
+            let mut c = cluster(n);
+            if n > 1 && ctx.rng.below(2) == 1 {
+                let at = Duration::from_millis(200 + ctx.rng.below(1500) as u64);
+                c = c.with_kills(vec![NodeKill { node: ctx.rng.below(n), at }]);
+            }
+            let config = cfg(10 + ctx.rng.below(50) as u64);
+            let out = run_workloads(&config, tiny_eval(), &mut c, &mix(tenants, frames))
+                .map_err(|e| e.to_string())?;
+            for t in &out.telemetry.tenants {
+                crate::prop_assert!(
+                    t.completed + t.shed == t.admitted,
+                    "tenant {} leaked: completed {} + shed {} != admitted {}",
+                    t.name(),
+                    t.completed,
+                    t.shed,
+                    t.admitted
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use crate::accel::interconnect::{links, Link};
 use crate::coordinator::clock::{Clock, SimClock, WallClock};
+use crate::coordinator::engine::EventQueueKind;
 use crate::coordinator::policy::{Constraints, QosClass};
 use crate::util::json::{self, Json};
 
@@ -395,6 +396,10 @@ pub struct Config {
     /// and scales the workers' service replay (0 = unpaced replay that
     /// still exercises the threading structure).
     pub time_scale: f64,
+    /// Serve-loop scheduling arm (`--events sharded|calendar|scan`): the
+    /// sharded default or one of the bit-identical reference queues
+    /// (equivalence oracles and benches).
+    pub events: EventQueueKind,
 }
 
 impl Default for Config {
@@ -415,6 +420,7 @@ impl Default for Config {
             workloads: Vec::new(),
             executor: ExecutorKind::Sim,
             time_scale: 0.01,
+            events: EventQueueKind::default(),
         }
     }
 }
@@ -567,6 +573,15 @@ mod tests {
         // The default config replays on the simulated clock.
         assert_eq!(Config::default().executor, ExecutorKind::Sim);
         assert_eq!(Config::default().clock().now(), Duration::ZERO);
+    }
+
+    #[test]
+    fn event_queue_kind_parses_and_labels() {
+        for k in EventQueueKind::ALL {
+            assert_eq!(EventQueueKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(EventQueueKind::parse("btree"), None);
+        assert_eq!(Config::default().events, EventQueueKind::Sharded);
     }
 
     #[test]

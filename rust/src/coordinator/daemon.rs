@@ -398,7 +398,8 @@ impl DaemonLoop {
             batcher: Batcher::new(self.size, self.timeout)
                 .with_cost(cost)
                 .with_tenant(k)
-                .with_constraints(w.constraints),
+                .with_constraints(w.constraints)
+                .with_qos(w.qos),
             camera: Camera::new(self.eval.clone(), w.rate_fps, w.frames),
             trace: TraceSource::new(w.rate_fps, pattern, now),
             pending: None,

@@ -191,6 +191,27 @@ pub enum EventQueueKind {
     Scan,
 }
 
+impl EventQueueKind {
+    pub const ALL: [EventQueueKind; 3] = [
+        EventQueueKind::Sharded,
+        EventQueueKind::Calendar,
+        EventQueueKind::Scan,
+    ];
+
+    /// Parse the CLI spelling (`--events sharded|calendar|scan`).
+    pub fn parse(s: &str) -> Option<EventQueueKind> {
+        EventQueueKind::ALL.into_iter().find(|k| k.label() == s)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            EventQueueKind::Sharded => "sharded",
+            EventQueueKind::Calendar => "calendar",
+            EventQueueKind::Scan => "scan",
+        }
+    }
+}
+
 /// One tenant's live serving state inside [`run_workloads`].
 struct Tenant {
     w: Workload,
@@ -733,7 +754,8 @@ pub fn run_workloads_with_events(
             batcher: Batcher::new(size, config.batch_timeout)
                 .with_cost(cost)
                 .with_tenant(k)
-                .with_constraints(w.constraints),
+                .with_constraints(w.constraints)
+                .with_qos(w.qos),
             camera: Camera::new(eval.clone(), w.rate_fps, w.frames),
             pending: None,
             plan,

@@ -5,13 +5,16 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod builder;
 pub mod clock;
+pub mod cluster;
 pub mod config;
 pub mod daemon;
 pub mod dispatcher;
 pub mod engine;
 pub mod executor;
 pub mod pipeline;
+pub mod placement;
 pub mod plan_cache;
 pub mod policy;
 pub mod scheduler;
@@ -23,7 +26,9 @@ pub mod trace;
 
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
+pub use builder::{EngineBuilder, ServeSession};
 pub use clock::{Clock, ServiceMode, SimClock, WallClock};
+pub use cluster::{Cluster, ClusterSpec, NodeKill, DEFAULT_REBALANCE_WINDOW, NODE_CLASSES};
 pub use config::{
     parse_tenant_file, Config, ExecutorKind, ManualStage, Mode, PartitionSpec, Workload,
 };
@@ -39,12 +44,15 @@ pub use executor::ThreadedExecutor;
 pub use pipeline::{
     build_plans, plan_or_build, plan_or_build_in, PipelinePlan, PipelinedDispatcher, StagePlan,
 };
+pub use placement::{AffinityKey, Placement, DEFAULT_AFFINITY_SLACK};
 pub use plan_cache::{CacheKey, PlanCache, PlanCacheStats};
 pub use policy::{profile_modes, select, Constraints, ModeProfile, Objective, QosClass};
 pub use scheduler::{Backend, PoseEstimate, Scheduler, StageOutput};
-pub use server::{
-    run, run_with_backend, run_with_engine, run_with_pipeline, run_with_pool, serve_daemon,
-};
+pub use server::run_with_engine;
+// Deprecated shims, re-exported so legacy `coordinator::run(...)` callers
+// keep compiling (with the deprecation warning pointing at the builder).
+#[allow(deprecated)]
+pub use server::{run, run_with_backend, run_with_pipeline, run_with_pool, serve_daemon};
 pub use sim::SimBackend;
 pub use substrate::{SubstrateId, TenantId};
 pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};

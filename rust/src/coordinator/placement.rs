@@ -1,0 +1,268 @@
+//! Tenant → node placement for the cluster layer.
+//!
+//! The [`Placement`] map answers one question deterministically: *which
+//! node serves this tenant's batches?*  The policy is **least load with
+//! plan-cache affinity**:
+//!
+//! * **Least load** — a new tenant lands on the alive node with the
+//!   smallest modeled load (the sum of its tenants' service-cost
+//!   multipliers), ties broken by lowest node index.
+//! * **Affinity** — tenants whose batches would resolve to the same
+//!   content-addressed plan-cache key (same service cost, same
+//!   constraint bounds) are co-located while the affinity node's load
+//!   stays within `slack` of the least-loaded node, so repeated
+//!   configurations keep **one** node's plan cache hot instead of
+//!   warming a cold copy per node.
+//!
+//! Everything here is a pure function of the submit stream: no clocks,
+//! no randomness, `BTreeMap` iteration everywhere — replaying the same
+//! event stream replays the same placements bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::policy::Constraints;
+
+/// Load head-room (in service-cost units) an affinity node may carry
+/// over the least-loaded node and still win placement.  One standard
+/// tenant's cost: affinity never skews any node by more than about one
+/// tenant relative to pure least-load.
+pub const DEFAULT_AFFINITY_SLACK: f64 = 1.0;
+
+/// Digest of a tenant's placement-relevant configuration — the same
+/// inputs that drive the content-addressed plan-cache key (network
+/// service cost and constraint bounds).  Tenants with equal keys reuse
+/// one cached plan, so the placer co-locates them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AffinityKey(u64);
+
+impl AffinityKey {
+    /// Key a batch's configuration.  FNV-1a over the exact bit patterns
+    /// (a set bound hashes its `f64` bits behind a presence tag), so the
+    /// key is bit-stable across replays and across processes.
+    pub fn of(cost: f64, constraints: &Constraints) -> AffinityKey {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(PRIME);
+        };
+        mix(cost.to_bits());
+        for bound in [
+            constraints.max_total_ms,
+            constraints.max_loce_m,
+            constraints.max_orie_deg,
+            constraints.max_energy_j,
+        ] {
+            match bound {
+                Some(v) => {
+                    mix(1);
+                    mix(v.to_bits());
+                }
+                None => mix(0),
+            }
+        }
+        AffinityKey(h)
+    }
+}
+
+/// Deterministic tenant → node routing map with modeled per-node load.
+#[derive(Debug)]
+pub struct Placement {
+    slack: f64,
+    /// Modeled load per node: Σ routed tenants' service-cost multipliers.
+    load: Vec<f64>,
+    /// Current route of every placed tenant.
+    route: BTreeMap<usize, usize>,
+    /// Cost each tenant contributes (to move its load on migrate/fail).
+    cost: BTreeMap<usize, f64>,
+    /// Node last chosen for each affinity key.
+    affinity: BTreeMap<AffinityKey, usize>,
+}
+
+impl Placement {
+    pub fn new(nodes: usize) -> Placement {
+        Placement::with_slack(nodes, DEFAULT_AFFINITY_SLACK)
+    }
+
+    pub fn with_slack(nodes: usize, slack: f64) -> Placement {
+        Placement {
+            slack,
+            load: vec![0.0; nodes],
+            route: BTreeMap::new(),
+            cost: BTreeMap::new(),
+            affinity: BTreeMap::new(),
+        }
+    }
+
+    /// Current route of a tenant, if placed.
+    pub fn node_of(&self, tenant: usize) -> Option<usize> {
+        self.route.get(&tenant).copied()
+    }
+
+    /// Modeled load of a node.
+    pub fn load_of(&self, node: usize) -> f64 {
+        self.load[node]
+    }
+
+    /// Tenants currently routed to a node, in ascending tenant order.
+    pub fn tenants_on(&self, node: usize) -> Vec<usize> {
+        self.route
+            .iter()
+            .filter(|&(_, &n)| n == node)
+            .map(|(&t, _)| t)
+            .collect()
+    }
+
+    /// Route a tenant: an existing route to an alive node is sticky;
+    /// otherwise choose least-load-with-affinity over `alive` nodes.
+    /// Returns `None` only when no node is alive.
+    pub fn place(
+        &mut self,
+        tenant: usize,
+        key: AffinityKey,
+        cost: f64,
+        alive: &[bool],
+    ) -> Option<usize> {
+        if let Some(&n) = self.route.get(&tenant) {
+            if alive[n] {
+                return Some(n);
+            }
+        }
+        // `min_by` keeps the *last* of equal minima, so break ties by
+        // index explicitly to keep the lowest-index rule.
+        let least = (0..self.load.len())
+            .filter(|&n| alive[n])
+            .min_by(|&a, &b| self.load[a].total_cmp(&self.load[b]).then(a.cmp(&b)))?;
+        let chosen = match self.affinity.get(&key) {
+            Some(&a) if alive[a] && self.load[a] <= self.load[least] + self.slack => a,
+            _ => least,
+        };
+        self.route.insert(tenant, chosen);
+        self.cost.insert(tenant, cost);
+        self.load[chosen] += cost;
+        self.affinity.insert(key, chosen);
+        Some(chosen)
+    }
+
+    /// Move a placed tenant's route (and modeled load) to another node.
+    /// In-flight work is untouched — routing only affects future batches.
+    pub fn migrate(&mut self, tenant: usize, to: usize) {
+        if let Some(&from) = self.route.get(&tenant) {
+            if from == to {
+                return;
+            }
+            let cost = self.cost.get(&tenant).copied().unwrap_or(0.0);
+            self.load[from] -= cost;
+            self.load[to] += cost;
+            self.route.insert(tenant, to);
+        }
+    }
+
+    /// Forget every route to a dead node so its tenants re-place on
+    /// their next batch.  Affinity entries pointing at the node are
+    /// dropped too — a dead node must never attract co-location.
+    pub fn fail_node(&mut self, node: usize) {
+        self.route.retain(|_, &mut n| n != node);
+        self.affinity.retain(|_, &mut n| n != node);
+        self.load[node] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: u64) -> AffinityKey {
+        // Distinct costs give distinct keys; the tag keeps tests legible.
+        AffinityKey::of(100.0 + tag as f64, &Constraints::default())
+    }
+
+    #[test]
+    fn affinity_key_is_stable_and_separates_configs() {
+        let c = Constraints::default();
+        assert_eq!(AffinityKey::of(1.0, &c), AffinityKey::of(1.0, &c));
+        assert_ne!(AffinityKey::of(1.0, &c), AffinityKey::of(2.0, &c));
+        let bounded = Constraints {
+            max_total_ms: Some(120.0),
+            ..Default::default()
+        };
+        assert_ne!(AffinityKey::of(1.0, &c), AffinityKey::of(1.0, &bounded));
+        // A set bound is distinguishable from an unset one even when the
+        // surrounding fields collide.
+        let zero = Constraints {
+            max_total_ms: Some(0.0),
+            ..Default::default()
+        };
+        assert_ne!(AffinityKey::of(1.0, &c), AffinityKey::of(1.0, &zero));
+    }
+
+    #[test]
+    fn least_load_spreads_distinct_tenants() {
+        let mut p = Placement::new(3);
+        let alive = [true, true, true];
+        for t in 0..6 {
+            let n = p.place(t, key(t as u64), 1.0, &alive).unwrap();
+            assert_eq!(n, t % 3, "tenant {t} should round-robin by least load");
+        }
+        for n in 0..3 {
+            assert_eq!(p.load_of(n), 2.0);
+        }
+        assert_eq!(p.tenants_on(1), vec![1, 4]);
+    }
+
+    #[test]
+    fn routes_are_sticky() {
+        let mut p = Placement::new(2);
+        let alive = [true, true];
+        let n0 = p.place(7, key(0), 1.0, &alive).unwrap();
+        for _ in 0..4 {
+            assert_eq!(p.place(7, key(0), 1.0, &alive), Some(n0));
+        }
+        assert_eq!(p.load_of(n0), 1.0, "re-placing must not re-count load");
+    }
+
+    #[test]
+    fn affinity_colocates_within_slack_then_spills() {
+        let mut p = Placement::new(4);
+        let alive = [true, true, true, true];
+        let k = key(9);
+        assert_eq!(p.place(0, k, 1.0, &alive), Some(0));
+        // Same key: node 0 carries one extra cost unit — within slack.
+        assert_eq!(p.place(1, k, 1.0, &alive), Some(0));
+        // Now node 0 is 2.0 over the idle nodes: affinity loses.
+        assert_eq!(p.place(2, k, 1.0, &alive), Some(1));
+        // The key's affinity follows the spill, so the next one co-locates
+        // with the freshest copy of the hot plan.
+        assert_eq!(p.place(3, k, 1.0, &alive), Some(1));
+    }
+
+    #[test]
+    fn dead_nodes_are_skipped_and_failover_reroutes() {
+        let mut p = Placement::new(2);
+        let alive = [true, true];
+        assert_eq!(p.place(0, key(0), 1.0, &alive), Some(0));
+        assert_eq!(p.place(1, key(1), 1.0, &alive), Some(1));
+        p.fail_node(0);
+        assert_eq!(p.node_of(0), None, "routes to a dead node are forgotten");
+        let alive = [false, true];
+        assert_eq!(p.place(0, key(0), 1.0, &alive), Some(1));
+        assert_eq!(p.load_of(1), 2.0);
+        // No node alive at all: placement reports it rather than panicking.
+        assert_eq!(p.place(9, key(9), 1.0, &[false, false]), None);
+    }
+
+    #[test]
+    fn migrate_moves_load_and_future_routing_only() {
+        let mut p = Placement::new(2);
+        let alive = [true, true];
+        p.place(0, key(0), 2.0, &alive);
+        assert_eq!(p.load_of(0), 2.0);
+        p.migrate(0, 1);
+        assert_eq!(p.node_of(0), Some(1));
+        assert_eq!((p.load_of(0), p.load_of(1)), (0.0, 2.0));
+        // Sticky route now points at the migration target.
+        assert_eq!(p.place(0, key(0), 2.0, &alive), Some(1));
+        assert_eq!(p.load_of(1), 2.0);
+    }
+}

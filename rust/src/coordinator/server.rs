@@ -7,8 +7,15 @@
 //! one) or, with `Config::partition` set, the partition-aware
 //! [`PipelinedDispatcher`] — and drives it through the unified
 //! submit/poll/drain surface: the single-workload pump
-//! ([`run_with_engine`]) or the multi-tenant QoS serve loop
-//! ([`run_workloads`]) when `Config::workloads` names tenants.
+//! ([`run_with_engine`]) or the multi-tenant QoS serve loop when
+//! `Config::workloads` names tenants.
+//!
+//! The historical free functions (`run`, `serve_daemon`, `run_with_*`)
+//! are now thin deprecated shims: new code composes the same pieces
+//! through [`crate::coordinator::builder::EngineBuilder`], which owns
+//! validation, manifest/eval resolution, and engine construction.  The
+//! engine builders ([`build_pool_engine`] / [`build_pipeline_engine`])
+//! and the shared pump ([`run_with_engine`]) live here and serve both.
 
 use std::sync::Arc;
 
@@ -16,12 +23,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::backend::PjrtBackend;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::clock::{Clock as _, ServiceMode};
-use crate::coordinator::config::{Config, ExecutorKind, Mode, PartitionSpec};
-use crate::coordinator::daemon::{run_daemon, DaemonOutput, DaemonSpec};
+use crate::coordinator::builder::EngineBuilder;
+use crate::coordinator::clock::Clock as _;
+use crate::coordinator::config::{Config, Mode, PartitionSpec};
+use crate::coordinator::daemon::{DaemonOutput, DaemonSpec};
 use crate::coordinator::dispatcher::Dispatcher;
-use crate::coordinator::engine::{run_workloads, Engine, RunOutput};
-use crate::coordinator::executor::ThreadedExecutor;
+use crate::coordinator::engine::{Engine, RunOutput};
 use crate::coordinator::pipeline::{build_plans, plan_or_build, PipelinedDispatcher};
 use crate::coordinator::plan_cache;
 use crate::coordinator::policy::profile_modes;
@@ -48,60 +55,9 @@ fn engaged_modes(config: &Config) -> Result<Vec<Mode>> {
 /// selects the partition-aware pipelined engine instead of whole-frame
 /// dispatch; `Config::workloads` selects the multi-tenant serve loop over
 /// whichever engine was built — both compose through the [`Engine`] trait.
+#[deprecated(note = "use coordinator::EngineBuilder")]
 pub fn run(config: &Config) -> Result<RunOutput> {
-    if config.partition.is_some() && !config.sim {
-        bail!(
-            "--partition requires --sim: stage execution binds simulated \
-             engines (per-stage PJRT artifacts are not compiled)"
-        );
-    }
-    if !config.workloads.is_empty() && !config.sim {
-        bail!(
-            "--workload/--tenants requires --sim: multi-tenant serving \
-             binds simulated engines (per-network PJRT artifacts are not \
-             compiled)"
-        );
-    }
-    if config.executor == ExecutorKind::Threaded && !config.sim {
-        bail!(
-            "--executor threaded requires --sim: the wall-clock replay \
-             services modeled spans (PJRT artifacts execute inline)"
-        );
-    }
-    let (manifest, eval) = if config.sim {
-        let manifest = Manifest::synthetic()?;
-        let eval = Arc::new(EvalSet::synthetic(
-            manifest.eval_count,
-            manifest.camera.0,
-            manifest.camera.1,
-            42,
-        ));
-        (manifest, eval)
-    } else {
-        let manifest = Manifest::load(&config.artifacts_dir)?;
-        let eval = Arc::new(EvalSet::load(&manifest.eval_file).context("loading eval set")?);
-        (manifest, eval)
-    };
-    let mut engine: Box<dyn Engine> = match &config.partition {
-        Some(spec) => Box::new(build_pipeline_engine(config, spec, &manifest)?),
-        None => Box::new(build_pool_engine(config, &manifest)?),
-    };
-    // The threaded executor wraps whichever engine was built: decisions
-    // stay in the inner engine on the virtual timeline; worker threads
-    // replay each batch's service chain in (scaled) wall time.
-    if config.executor == ExecutorKind::Threaded {
-        engine = Box::new(ThreadedExecutor::new(
-            engine,
-            ServiceMode::Sleep {
-                time_scale: config.time_scale,
-            },
-        ));
-    }
-    if config.workloads.is_empty() {
-        run_with_engine(config, eval, engine.as_mut())
-    } else {
-        run_workloads(config, eval, engine.as_mut(), &config.workloads)
-    }
+    EngineBuilder::new(config).build()?.run()
 }
 
 /// Build the serve engine from `config` and drive it through the daemon
@@ -109,38 +65,22 @@ pub fn run(config: &Config) -> Result<RunOutput> {
 /// windowed steady-state telemetry.  Daemon mode is simulation-only for
 /// the same reason multi-tenant serve is (per-network PJRT artifacts are
 /// not compiled); the threaded executor composes exactly as in [`run`].
+#[deprecated(note = "use coordinator::EngineBuilder")]
 pub fn serve_daemon(config: &Config, spec: &DaemonSpec) -> Result<DaemonOutput> {
+    // The sim gate stays here so a non-sim config fails with this
+    // message before the builder tries to load on-disk artifacts.
     if !config.sim {
         bail!(
             "daemon mode requires --sim: tenant churn binds simulated \
              engines (per-network PJRT artifacts are not compiled)"
         );
     }
-    let manifest = Manifest::synthetic()?;
-    let eval = Arc::new(EvalSet::synthetic(
-        manifest.eval_count,
-        manifest.camera.0,
-        manifest.camera.1,
-        42,
-    ));
-    let mut engine: Box<dyn Engine> = match &config.partition {
-        Some(part) => Box::new(build_pipeline_engine(config, part, &manifest)?),
-        None => Box::new(build_pool_engine(config, &manifest)?),
-    };
-    if config.executor == ExecutorKind::Threaded {
-        engine = Box::new(ThreadedExecutor::new(
-            engine,
-            ServiceMode::Sleep {
-                time_scale: config.time_scale,
-            },
-        ));
-    }
-    run_daemon(config, eval, engine.as_mut(), spec)
+    EngineBuilder::new(config).build()?.run_daemon(spec)
 }
 
 /// Build the whole-frame dispatch pool: one backend per engaged mode
 /// (simulated or PJRT), profiles driving routing and admission.
-fn build_pool_engine(config: &Config, manifest: &Manifest) -> Result<Dispatcher> {
+pub(crate) fn build_pool_engine(config: &Config, manifest: &Manifest) -> Result<Dispatcher> {
     let modes = engaged_modes(config)?;
     let profiles = profile_modes(manifest);
     let (net_h, net_w, _) = manifest.net_input;
@@ -166,6 +106,7 @@ fn build_pool_engine(config: &Config, manifest: &Manifest) -> Result<Dispatcher>
 
 /// Run with any single backend (mock in tests, PJRT in production) — a
 /// pool of one, kept for callers that build their own backend.
+#[deprecated(note = "build a one-backend Dispatcher and use coordinator::EngineBuilder::engine")]
 pub fn run_with_backend<B: Backend + 'static>(
     config: &Config,
     manifest: &Manifest,
@@ -181,7 +122,7 @@ pub fn run_with_backend<B: Backend + 'static>(
 /// Build the pipelined serve engine: substrates from the engaged modes (or
 /// the manual spec), ranked plans from the partition spec, one simulated
 /// backend per substrate.
-fn build_pipeline_engine(
+pub(crate) fn build_pipeline_engine(
     config: &Config,
     spec: &PartitionSpec,
     manifest: &Manifest,
@@ -385,6 +326,7 @@ pub fn run_with_engine(
 }
 
 /// Drive the camera through the batcher into a backend pool.
+#[deprecated(note = "use coordinator::EngineBuilder::engine with the pool")]
 pub fn run_with_pool(
     config: &Config,
     eval: Arc<EvalSet>,
@@ -394,6 +336,7 @@ pub fn run_with_pool(
 }
 
 /// Drive the camera through the partition-aware pipelined dispatcher.
+#[deprecated(note = "use coordinator::EngineBuilder::engine with the pipeline")]
 pub fn run_with_pipeline(
     config: &Config,
     eval: Arc<EvalSet>,
@@ -403,6 +346,8 @@ pub fn run_with_pipeline(
 }
 
 #[cfg(test)]
+// The legacy entry points stay under test through their shims.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::config::Workload;
@@ -1063,7 +1008,7 @@ mod tests {
             sim: true,
             pool: vec![Mode::DpuInt8, Mode::VpuFp16],
             partition: Some(PartitionSpec::Auto),
-            executor: ExecutorKind::Threaded,
+            executor: crate::coordinator::config::ExecutorKind::Threaded,
             time_scale: 0.0,
             batch_timeout: Duration::from_millis(200),
             ..Default::default()

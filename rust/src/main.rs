@@ -17,11 +17,12 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use mpai::accel::interconnect::links;
+use mpai::accel::interconnect::{links, Link};
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
 use mpai::coordinator::{
-    self, parse_tenant_file, parse_trace_file, ArrivalPattern, ChurnEvent, Config, Constraints,
-    DaemonSpec, ExecutorKind, Mode, Objective, PartitionSpec, TenantTrace, WindowRecord, Workload,
+    self, parse_tenant_file, parse_trace_file, ArrivalPattern, ChurnEvent, ClusterSpec, Config,
+    Constraints, DaemonSpec, EngineBuilder, EventQueueKind, ExecutorKind, Mode, Objective,
+    PartitionSpec, TenantTrace, WindowRecord, Workload,
 };
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
@@ -70,8 +71,8 @@ fn print_usage() {
          commands:\n  \
          fig2                         Fig. 2: TPU vs VPU throughput survey\n  \
          table1 [--artifacts DIR]     Table I: accuracy (measured) + latency (modeled)\n  \
-         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--workload SPEC ..] [--executor sim|threaded] run the coordinator\n  \
-         daemon --sim [--trace FILE|--workload SPEC ..] [--pattern SPEC] [--churn SPEC ..] long-horizon serve with live tenant churn\n  \
+         serve  [--mode M|--pool [M,..]] [--sim] [--partition auto] [--nodes N] [--workload SPEC ..] [--executor sim|threaded] run the coordinator\n  \
+         daemon --sim [--trace FILE|--workload SPEC ..] [--pattern SPEC] [--churn SPEC ..] [--nodes N] long-horizon serve with live tenant churn\n  \
          policy [--max-ms X] [...]    accelerator selection under constraints\n  \
          inspect [--model NAME]       model-zoo graph summaries\n  \
          cuts   [--model NAME]        enumerate MPAI partition cut-points\n  \
@@ -93,6 +94,173 @@ fn parse_constraints(a: &Args) -> Result<Constraints> {
         max_orie_deg: opt("max-orie")?,
         max_energy_j: opt("max-energy")?,
     })
+}
+
+// ---------------------------------------------------------------------------
+// shared engine options (serve + daemon)
+// ---------------------------------------------------------------------------
+
+/// Spec rows for the engine-composition options `serve` and `daemon`
+/// share — one list, so `--executor`, `--time-scale`, `--events`,
+/// `--no-plan-cache`, `--nodes`, … parse identically in both.
+fn engine_options() -> Vec<(&'static str, &'static str, &'static str)> {
+    vec![
+        ("pool", "[MODES]", "multi-backend pool; bare flag = dpu-int8,vpu-fp16"),
+        ("partition", "SPEC", "auto | accel@layer,..,accel — N-stage pipelined split (sim)"),
+        ("nodes", "N", "cluster serve over N engine nodes (sim)"),
+        (
+            "node-pool",
+            "SPEC",
+            "';'-separated per-node pools, cycled: class (dpu-heavy|vpu-heavy|tpu-heavy|mixed) or mode list",
+        ),
+        ("kill-node", "SPEC", "repeatable: IDX@SECONDS — node fault injection (needs --nodes)"),
+        ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
+        ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock workers)"),
+        ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
+        ("events", "KIND", "admission event queue: sharded | calendar | scan (default sharded)"),
+        ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
+        (
+            "no-plan-cache",
+            "",
+            "bypass the content-addressed plan cache (fresh partition sweep per request)",
+        ),
+        ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
+        ("timeout-ms", "MS", "batcher timeout (default 50)"),
+        ("max-ms", "X", "constraint: max modeled total latency (ms)"),
+        ("max-loce", "X", "constraint: max localization error (m)"),
+        ("max-orie", "X", "constraint: max orientation error (deg)"),
+        ("max-energy", "X", "constraint: max energy per frame (J)"),
+    ]
+}
+
+/// Engine-composition options parsed from the shared [`engine_options`]
+/// rows: everything that decides *what serves* (pool/partition/cluster,
+/// executor, event queue, plan cache, faults), as opposed to what is
+/// served (workloads, traces, frames — per-command).
+struct EngineArgs {
+    pool: Vec<Mode>,
+    partition: Option<PartitionSpec>,
+    cluster: Option<ClusterSpec>,
+    boundary_link: Link,
+    fail_every: Option<usize>,
+    executor: ExecutorKind,
+    time_scale: f64,
+    events: EventQueueKind,
+    plan_cache: bool,
+    sim: bool,
+    batch_timeout: Duration,
+    constraints: Constraints,
+}
+
+impl EngineArgs {
+    /// `default_pool` differs per command: `serve` defaults to the single
+    /// `--mode` (empty pool), `daemon` to the canonical MPAI pair.
+    fn parse(a: &Args, default_pool: &[Mode]) -> Result<EngineArgs> {
+        let pool = if a.flag("pool") {
+            // Bare `--pool`: the canonical MPAI pair.
+            vec![Mode::DpuInt8, Mode::VpuFp16]
+        } else {
+            match a.get("pool") {
+                None => default_pool.to_vec(),
+                Some(list) => list
+                    .split(',')
+                    .map(|m| {
+                        Mode::from_label(m.trim())
+                            .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
+                    })
+                    .collect::<Result<Vec<Mode>>>()?,
+            }
+        };
+        let partition = match a.get("partition") {
+            None => None,
+            Some(s) => Some(PartitionSpec::parse(s).map_err(|e| anyhow!("bad --partition: {e}"))?),
+        };
+        let cluster = match a.get("nodes") {
+            None => {
+                if a.get("node-pool").is_some() || !a.get_all("kill-node").is_empty() {
+                    bail!("--node-pool/--kill-node need --nodes N");
+                }
+                None
+            }
+            Some(_) => {
+                let n = a.get_usize("nodes", 0)?;
+                Some(ClusterSpec::from_cli(n, a.get("node-pool"), &a.get_all("kill-node"))?)
+            }
+        };
+        let boundary_link = match a.get("link") {
+            None => links::USB3,
+            Some(n) => links::by_name(n)
+                .with_context(|| format!("bad --link {n:?} (usb3|usb2|axi-hp|pcie-x1|csi2)"))?,
+        };
+        let fail_every = match a.get("fail-every") {
+            Some(_) => Some(a.get_usize("fail-every", 0)?),
+            None => None,
+        };
+        let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
+            .context("bad --executor (sim | threaded)")?;
+        let events = EventQueueKind::parse(a.get_or("events", "sharded"))
+            .context("bad --events (sharded | calendar | scan)")?;
+        Ok(EngineArgs {
+            pool,
+            partition,
+            cluster,
+            boundary_link,
+            fail_every,
+            executor,
+            time_scale: a.get_f64("time-scale", 0.01)?,
+            events,
+            plan_cache: !a.flag("no-plan-cache"),
+            sim: a.flag("sim"),
+            batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
+            constraints: parse_constraints(a)?,
+        })
+    }
+
+    /// Base config for these engine options; per-command fields (mode,
+    /// frames, workloads, artifacts dir, …) layer on via struct update.
+    fn config(&self) -> Config {
+        Config {
+            batch_timeout: self.batch_timeout,
+            pool: self.pool.clone(),
+            sim: self.sim,
+            fail_every: self.fail_every,
+            constraints: self.constraints,
+            partition: self.partition.clone(),
+            boundary_link: self.boundary_link,
+            executor: self.executor,
+            time_scale: self.time_scale,
+            events: self.events,
+            plan_cache: self.plan_cache,
+            ..Default::default()
+        }
+    }
+
+    /// Builder over this engine composition (attaches the cluster spec).
+    fn builder<'e>(&self, cfg: &Config) -> EngineBuilder<'e> {
+        let b = EngineBuilder::new(cfg);
+        match &self.cluster {
+            Some(spec) => b.cluster(spec.clone()),
+            None => b,
+        }
+    }
+
+    /// Human-readable engine summary fragments for the banner line.
+    fn describe(&self) -> String {
+        let split = match &self.partition {
+            Some(PartitionSpec::Auto) => " partition auto".to_string(),
+            Some(PartitionSpec::Manual(stages)) => format!(
+                " partition {}",
+                stages.iter().map(|s| s.accel.as_str()).collect::<Vec<_>>().join("|")
+            ),
+            None => String::new(),
+        };
+        let nodes = match &self.cluster {
+            Some(c) if c.kills.is_empty() => format!(" nodes {}", c.nodes.len()),
+            Some(c) => format!(" nodes {} ({} kill(s))", c.nodes.len(), c.kills.len()),
+            None => String::new(),
+        };
+        format!("{split}{nodes}")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -188,7 +356,12 @@ fn measure_mode(
     };
     let backend = coordinator::PjrtBackend::new(manifest, mode)
         .with_context(|| format!("building backend for {}", mode.label()))?;
-    let out = coordinator::run_with_backend(&cfg, manifest, eval, backend)?;
+    // A pool of one PJRT backend, served through the builder (the legacy
+    // `run_with_backend` path, spelled out).
+    let (net_h, net_w, _) = manifest.net_input;
+    let mut pool = coordinator::Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+    pool.add_backend(Box::new(backend), None);
+    let out = EngineBuilder::new(&cfg).engine(&mut pool).eval(eval).build()?.run()?;
     let (loce, orie) = out.telemetry.accuracy();
     let host_ms = out.telemetry.inference_summary().mean() * 1e3;
     Ok((loce, orie, host_ms))
@@ -199,71 +372,29 @@ fn measure_mode(
 // ---------------------------------------------------------------------------
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    let mut options = vec![
+        ("artifacts", "DIR", "artifacts directory (default artifacts)"),
+        ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
+        (
+            "workload",
+            "SPEC",
+            "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=.. — multi-tenant serve (sim)",
+        ),
+        ("tenants", "FILE", "JSON workload list ([{...}] or {\"workloads\": [...]})"),
+        ("fps", "HZ", "camera frame rate (default 10)"),
+        ("frames", "N", "frames to process (default 64)"),
+        ("csv", "PATH", "write per-frame telemetry CSV"),
+    ];
+    options.extend(engine_options());
     let spec = Spec {
         name: "mpai serve",
         about: "run the end-to-end coordinator",
-        options: vec![
-            ("artifacts", "DIR", "artifacts directory (default artifacts)"),
-            ("mode", "MODE", "cpu-fp32|cpu-fp16|vpu-fp16|tpu-int8|dpu-int8|mpai"),
-            ("pool", "[MODES]", "multi-backend pool; bare flag = dpu-int8,vpu-fp16"),
-            ("partition", "SPEC", "auto | accel@layer,..,accel — N-stage pipelined split (sim)"),
-            (
-                "workload",
-                "SPEC",
-                "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=.. — multi-tenant serve (sim)",
-            ),
-            ("tenants", "FILE", "JSON workload list ([{...}] or {\"workloads\": [...]})"),
-            ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
-            ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock workers)"),
-            ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
-            ("sim", "", "simulated backends (no artifacts / PJRT binding needed)"),
-            (
-                "no-plan-cache",
-                "",
-                "bypass the content-addressed plan cache (fresh partition sweep per request)",
-            ),
-            ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
-            ("max-ms", "X", "constraint: max modeled total latency (ms)"),
-            ("max-loce", "X", "constraint: max localization error (m)"),
-            ("max-orie", "X", "constraint: max orientation error (deg)"),
-            ("max-energy", "X", "constraint: max energy per frame (J)"),
-            ("fps", "HZ", "camera frame rate (default 10)"),
-            ("frames", "N", "frames to process (default 64)"),
-            ("timeout-ms", "MS", "batcher timeout (default 50)"),
-            ("csv", "PATH", "write per-frame telemetry CSV"),
-        ],
+        options,
     };
     let a = spec.parse(argv)?;
+    let eng = EngineArgs::parse(&a, &[])?;
     let mode = Mode::from_label(a.get_or("mode", "mpai"))
         .context("bad --mode (see `mpai help`)")?;
-    let pool = if a.flag("pool") {
-        // Bare `--pool`: the canonical MPAI pair.
-        vec![Mode::DpuInt8, Mode::VpuFp16]
-    } else {
-        match a.get("pool") {
-            None => Vec::new(),
-            Some(list) => list
-                .split(',')
-                .map(|m| {
-                    Mode::from_label(m.trim())
-                        .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
-                })
-                .collect::<Result<Vec<Mode>>>()?,
-        }
-    };
-    let partition = match a.get("partition") {
-        None => None,
-        Some(s) => Some(PartitionSpec::parse(s).map_err(|e| anyhow!("bad --partition: {e}"))?),
-    };
-    let boundary_link = match a.get("link") {
-        None => links::USB3,
-        Some(n) => links::by_name(n)
-            .with_context(|| format!("bad --link {n:?} (usb3|usb2|axi-hp|pcie-x1|csi2)"))?,
-    };
-    let fail_every = match a.get("fail-every") {
-        Some(_) => Some(a.get_usize("fail-every", 0)?),
-        None => None,
-    };
     let mut workloads: Vec<Workload> = Vec::new();
     if let Some(path) = a.get("tenants") {
         let text = std::fs::read_to_string(path)
@@ -275,31 +406,20 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     for spec in a.get_all("workload") {
         workloads.push(Workload::parse(spec).map_err(|e| anyhow!("bad --workload: {e}"))?);
     }
-    let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
-        .context("bad --executor (sim | threaded)")?;
     let cfg = Config {
         artifacts_dir: PathBuf::from(a.get_or("artifacts", "artifacts")),
         mode: Some(mode),
-        batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
         camera_fps: a.get_f64("fps", 10.0)?,
         frames: a.get_usize("frames", 64)? as u64,
-        pool: pool.clone(),
-        sim: a.flag("sim"),
-        fail_every,
-        constraints: parse_constraints(&a)?,
-        partition,
-        boundary_link,
         workloads,
-        executor,
-        time_scale: a.get_f64("time-scale", 0.01)?,
-        plan_cache: !a.flag("no-plan-cache"),
+        ..eng.config()
     };
-    let engaged = if pool.is_empty() {
+    let engaged = if eng.pool.is_empty() {
         format!("mode {}", mode.label())
     } else {
         format!(
             "pool [{}]",
-            pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", ")
+            eng.pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", ")
         )
     };
     let tenants_note = if cfg.workloads.is_empty() {
@@ -314,26 +434,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 .join(", ")
         )
     };
-    let split = match &cfg.partition {
-        Some(PartitionSpec::Auto) => " partition auto".to_string(),
-        Some(PartitionSpec::Manual(stages)) => format!(
-            " partition {}",
-            stages
-                .iter()
-                .map(|s| s.accel.as_str())
-                .collect::<Vec<_>>()
-                .join("|")
-        ),
-        None => String::new(),
-    };
     println!(
-        "mpai serve — {engaged}{split}{tenants_note} fps {} frames {} executor {}{}",
+        "mpai serve — {engaged}{}{tenants_note} fps {} frames {} executor {}{}",
+        eng.describe(),
         cfg.camera_fps,
         cfg.frames,
         cfg.executor.label(),
         if cfg.sim { " (simulated backends)" } else { "" }
     );
-    let out = coordinator::run(&cfg)?;
+    let out = eng.builder(&cfg).build()?.run()?;
     println!("{}", out.telemetry.report());
     if let Some(path) = a.get("csv") {
         std::fs::write(path, out.telemetry.to_csv())?;
@@ -347,48 +456,38 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 fn cmd_daemon(argv: &[String]) -> Result<()> {
+    let mut options = vec![
+        (
+            "trace",
+            "FILE",
+            "JSON trace: tenants with arrival patterns + join/rerate/leave lifecycles",
+        ),
+        (
+            "workload",
+            "SPEC",
+            "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=..,frames=.. — present-from-start tenant",
+        ),
+        (
+            "pattern",
+            "SPEC",
+            "arrival pattern for --workload tenants: steady | diurnal,amplitude=..,period_s=.. | bursts,.. | flash,..",
+        ),
+        (
+            "churn",
+            "SPEC",
+            "repeatable: join@T:WORKLOAD | leave@T:NAME | rerate@T:NAME=RATE (T in seconds)",
+        ),
+        ("window-s", "S", "steady-state telemetry window (default 10; trace file may set it)"),
+        ("windows", "N", "print the first and last N window records (default 3)"),
+    ];
+    options.extend(engine_options());
     let spec = Spec {
         name: "mpai daemon",
         about: "long-horizon serve loop with live tenant churn and trace replay (sim)",
-        options: vec![
-            (
-                "trace",
-                "FILE",
-                "JSON trace: tenants with arrival patterns + join/rerate/leave lifecycles",
-            ),
-            (
-                "workload",
-                "SPEC",
-                "repeatable: NAME:net=..,qos=..,deadline_ms=..,rate=..,frames=.. — present-from-start tenant",
-            ),
-            (
-                "pattern",
-                "SPEC",
-                "arrival pattern for --workload tenants: steady | diurnal,amplitude=..,period_s=.. | bursts,.. | flash,..",
-            ),
-            (
-                "churn",
-                "SPEC",
-                "repeatable: join@T:WORKLOAD | leave@T:NAME | rerate@T:NAME=RATE (T in seconds)",
-            ),
-            ("window-s", "S", "steady-state telemetry window (default 10; trace file may set it)"),
-            ("windows", "N", "print the first and last N window records (default 3)"),
-            ("pool", "[MODES]", "multi-backend pool (default dpu-int8,vpu-fp16)"),
-            ("partition", "SPEC", "auto | accel@layer,..,accel — pipelined split"),
-            ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock pacing)"),
-            ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
-            ("sim", "", "simulated backends (required: churn binds sim engines)"),
-            ("fail-every", "N", "inject a fault every Nth infer on the first backend"),
-            ("timeout-ms", "MS", "batcher timeout (default 50)"),
-            ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
-            ("max-ms", "X", "constraint: max modeled total latency (ms)"),
-            ("max-loce", "X", "constraint: max localization error (m)"),
-            ("max-orie", "X", "constraint: max orientation error (deg)"),
-            ("max-energy", "X", "constraint: max energy per frame (J)"),
-            ("no-plan-cache", "", "bypass the content-addressed plan cache"),
-        ],
+        options,
     };
     let a = spec.parse(argv)?;
+    let eng = EngineArgs::parse(&a, &[Mode::DpuInt8, Mode::VpuFp16])?;
 
     // Tenant lifecycles: a trace file, plus any --workload steady tenants
     // (with an optional shared --pattern), plus extra --churn events.
@@ -430,55 +529,11 @@ fn cmd_daemon(argv: &[String]) -> Result<()> {
     };
     let dspec = DaemonSpec { window, tenants, churn };
 
-    let pool = match a.get("pool") {
-        None => vec![Mode::DpuInt8, Mode::VpuFp16],
-        Some(list) => list
-            .split(',')
-            .map(|m| {
-                Mode::from_label(m.trim())
-                    .with_context(|| format!("bad mode {m:?} in --pool (see `mpai help`)"))
-            })
-            .collect::<Result<Vec<Mode>>>()?,
-    };
-    let partition = match a.get("partition") {
-        None => None,
-        Some(s) => Some(PartitionSpec::parse(s).map_err(|e| anyhow!("bad --partition: {e}"))?),
-    };
-    let boundary_link = match a.get("link") {
-        None => links::USB3,
-        Some(n) => links::by_name(n)
-            .with_context(|| format!("bad --link {n:?} (usb3|usb2|axi-hp|pcie-x1|csi2)"))?,
-    };
-    let fail_every = match a.get("fail-every") {
-        Some(_) => Some(a.get_usize("fail-every", 0)?),
-        None => None,
-    };
-    let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
-        .context("bad --executor (sim | threaded)")?;
-    let cfg = Config {
-        batch_timeout: Duration::from_millis(a.get_usize("timeout-ms", 50)? as u64),
-        pool: pool.clone(),
-        sim: a.flag("sim"),
-        fail_every,
-        constraints: parse_constraints(&a)?,
-        partition,
-        boundary_link,
-        executor,
-        time_scale: a.get_f64("time-scale", 0.01)?,
-        plan_cache: !a.flag("no-plan-cache"),
-        ..Default::default()
-    };
+    let cfg = eng.config();
     println!(
         "mpai daemon — pool [{}]{} window {:.1} s, {} tenant lifecycle{}, {} churn event{}, executor {}{}",
-        pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", "),
-        match &cfg.partition {
-            Some(PartitionSpec::Auto) => " partition auto".to_string(),
-            Some(PartitionSpec::Manual(stages)) => format!(
-                " partition {}",
-                stages.iter().map(|s| s.accel.as_str()).collect::<Vec<_>>().join("|")
-            ),
-            None => String::new(),
-        },
+        eng.pool.iter().map(|m| m.label()).collect::<Vec<_>>().join(", "),
+        eng.describe(),
         dspec.window.as_secs_f64(),
         dspec.tenants.len(),
         if dspec.tenants.len() == 1 { "" } else { "s" },
@@ -488,7 +543,7 @@ fn cmd_daemon(argv: &[String]) -> Result<()> {
         if cfg.sim { " (simulated backends)" } else { "" }
     );
 
-    let out = coordinator::serve_daemon(&cfg, &dspec)?;
+    let out = eng.builder(&cfg).build()?.run_daemon(&dspec)?;
     println!("{}", out.telemetry.report());
     println!(
         "churn: {} join{}, {} leave{}, {} rerate{}",

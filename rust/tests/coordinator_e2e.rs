@@ -43,7 +43,15 @@ fn run_mode(dir: &Path, mode: Mode, frames: u64) -> coordinator::RunOutput {
         ..Default::default()
     };
     let backend = coordinator::PjrtBackend::new(&manifest, mode).unwrap();
-    coordinator::run_with_backend(&cfg, &manifest, eval, backend).unwrap()
+    let (net_h, net_w, _) = manifest.net_input;
+    let mut pool = coordinator::Dispatcher::new(manifest.batch, net_h, net_w, cfg.constraints);
+    pool.add_backend(Box::new(backend), None);
+    coordinator::EngineBuilder::new(&cfg)
+        .engine(&mut pool)
+        .eval(eval)
+        .build()
+        .and_then(|mut s| s.run())
+        .unwrap()
 }
 
 #[test]
@@ -163,7 +171,7 @@ fn sim_pool_serves_and_fails_over_without_artifacts() {
         batch_timeout: Duration::from_millis(20),
         ..Default::default()
     };
-    let out = coordinator::run(&cfg).unwrap();
+    let out = coordinator::EngineBuilder::new(&cfg).build().and_then(|mut s| s.run()).unwrap();
     assert_eq!(out.estimates.len(), 20);
     let ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
     assert_eq!(ids, (0..20).collect::<Vec<u64>>());
@@ -192,12 +200,36 @@ fn sim_pool_constraints_route_around_inaccurate_backend() {
         },
         ..Default::default()
     };
-    let out = coordinator::run(&cfg).unwrap();
+    let out = coordinator::EngineBuilder::new(&cfg).build().and_then(|mut s| s.run()).unwrap();
     assert_eq!(out.estimates.len(), 12);
     // DPU INT8 (LOCE 0.96 in the synthetic manifest) is inadmissible.
     for r in &out.telemetry.records {
         assert_eq!(r.mode, "vpu-fp16", "constrained batch served by {}", r.mode);
     }
+}
+
+#[test]
+fn sim_cluster_serves_through_builder_and_survives_a_node_kill() {
+    let cfg = Config {
+        sim: true,
+        pool: vec![Mode::DpuInt8, Mode::VpuFp16],
+        frames: 24,
+        camera_fps: 100.0,
+        batch_timeout: Duration::from_millis(20),
+        ..Default::default()
+    };
+    // Three heterogeneous nodes; kill node 0 (where the single camera's
+    // tenant lands) mid-run — failover must resubmit, losing nothing.
+    let spec = mpai::coordinator::ClusterSpec::from_cli(3, None, &["0@0.12"]).unwrap();
+    let out = coordinator::EngineBuilder::new(&cfg)
+        .cluster(spec)
+        .build()
+        .and_then(|mut s| s.run())
+        .unwrap();
+    assert_eq!(out.estimates.len(), 24, "node kill lost frames");
+    let mut ids: Vec<u64> = out.estimates.iter().map(|e| e.frame_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..24).collect::<Vec<u64>>());
 }
 
 #[test]
