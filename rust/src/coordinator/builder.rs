@@ -187,13 +187,29 @@ impl<'e> EngineBuilder<'e> {
         let (manifest, eval) = resolve_manifest_eval(&config, self.eval)?;
         let mut engine: Box<dyn Engine> = match engine {
             Some(spec) => {
+                for (node, _) in config.campaign.node_faults() {
+                    if node >= spec.nodes.len() {
+                        bail!(
+                            "--storm node{node}@...: only {} nodes",
+                            spec.nodes.len()
+                        );
+                    }
+                }
                 let mut nodes: Vec<Box<dyn Engine>> = Vec::with_capacity(spec.nodes.len());
                 for pool in &spec.nodes {
                     let mut node_cfg = config.clone();
                     node_cfg.pool = pool.clone();
+                    // Substrate storms and drift ride into every node;
+                    // the eclipse watt budget is fleet-wide, enforced by
+                    // the cluster over the summed node draws.
+                    node_cfg.campaign = config.campaign.for_cluster_node();
                     nodes.push(Box::new(build_pool_engine(&node_cfg, &manifest)?));
                 }
-                Box::new(Cluster::new(nodes)?.with_kills(spec.kills.clone()))
+                Box::new(
+                    Cluster::new(nodes)?
+                        .with_kills(spec.kills.clone())
+                        .with_campaign(&config.campaign),
+                )
             }
             None => match &config.partition {
                 Some(part) => Box::new(build_pipeline_engine(&config, part, &manifest)?),
@@ -463,6 +479,146 @@ mod tests {
         let sharded = ids(&mk(EventQueueKind::Sharded));
         assert_eq!(sharded, ids(&mk(EventQueueKind::Calendar)));
         assert_eq!(sharded, ids(&mk(EventQueueKind::Scan)));
+    }
+
+    /// THE tentpole gate (DESIGN.md §4.16): random space-environment
+    /// campaigns — correlated fault storms, eclipse watt budgets, drift
+    /// with online recalibration — composed over random engine shapes
+    /// (pool, partitioned pipeline, cluster) through the one builder.
+    /// No admitted realtime frame is ever lost, every tenant's books
+    /// conserve exactly (`completed == admitted`, sheds counted), and
+    /// the whole run replays bit-identically on the sim clock.
+    #[test]
+    fn property_campaign_never_loses_admitted_realtime_frames() {
+        use crate::coordinator::campaign::{
+            CampaignSpec, DriftSpec, FaultSpec, PowerSchedule, RecalSpec,
+        };
+        check(
+            "campaign_storm_eclipse_drift",
+            PropConfig { cases: 18, ..Default::default() },
+            |ctx| {
+                let n_tenants = 1 + ctx.rng.below(3);
+                let mut workloads: Vec<Workload> = (0..n_tenants)
+                    .map(|k| {
+                        let qos = [QosClass::Realtime, QosClass::Standard, QosClass::Background]
+                            [ctx.rng.below(3)];
+                        workload(
+                            &format!("t{k}"),
+                            qos,
+                            3000 + ctx.rng.below(8000) as u64,
+                            2.0 + ctx.rng.below(10) as f64,
+                            4 + ctx.rng.below(20) as u64,
+                        )
+                    })
+                    .collect();
+                // At least one realtime tenant: the class the invariant
+                // is about.
+                workloads[0].qos = QosClass::Realtime;
+
+                // 0 = whole-frame pool, 1 = partitioned pipeline,
+                // 2 = cluster fleet.
+                let shape = ctx.rng.below(3);
+                let n_nodes = 2 + ctx.rng.below(2);
+
+                // Random campaign: correlated storms (multi-substrate at
+                // one instant, transient or permanent; node storms on the
+                // cluster shape), an optional eclipse budget, optional
+                // drift + recalibration — every axis through the same
+                // parsers the CLI uses.
+                let mut campaign = CampaignSpec::default();
+                for _ in 0..ctx.rng.below(3) {
+                    let target = ["dpu", "vpu", "dpu+vpu"][ctx.rng.below(3)];
+                    let at_s = ctx.rng.below(3000) as f64 / 1e3;
+                    let spec = if ctx.rng.below(2) == 1 {
+                        format!("{target}@{at_s}")
+                    } else {
+                        format!("{target}@{at_s}:recover={}", 1 + ctx.rng.below(3))
+                    };
+                    campaign
+                        .faults
+                        .extend(FaultSpec::parse(&spec).map_err(|e| e.to_string())?);
+                }
+                if shape == 2 && ctx.rng.below(2) == 1 {
+                    let spec = format!("node{}@{}", ctx.rng.below(n_nodes), 1 + ctx.rng.below(3));
+                    campaign
+                        .faults
+                        .extend(FaultSpec::parse(&spec).map_err(|e| e.to_string())?);
+                }
+                if ctx.rng.below(2) == 1 {
+                    // A deep eclipse (5 W) forces power shedding; a wide
+                    // budget (5 kW) exercises the bookkeeping only.
+                    let w = [5.0, 40.0, 5000.0][ctx.rng.below(3)];
+                    campaign.power = PowerSchedule::parse(&format!("{w}"))
+                        .map_err(|e| e.to_string())?;
+                }
+                if ctx.rng.below(2) == 1 {
+                    campaign.drift.push(DriftSpec {
+                        substrate: "dpu".into(),
+                        rate: 0.1 + ctx.rng.below(10) as f64 / 10.0,
+                        cap: 2.0 + ctx.rng.below(4) as f64,
+                    });
+                    if ctx.rng.below(2) == 1 {
+                        campaign.recal = Some(RecalSpec::default());
+                    }
+                }
+
+                let cfg = Config {
+                    workloads,
+                    campaign,
+                    partition: (shape == 1).then_some(PartitionSpec::Auto),
+                    batch_timeout: Duration::from_millis(10 + ctx.rng.below(80) as u64),
+                    ..base_cfg()
+                };
+                let run = || -> Result<RunOutput, String> {
+                    let b = EngineBuilder::new(&cfg);
+                    let b = if shape == 2 {
+                        b.cluster(ClusterSpec::from_cli(n_nodes, None, &[]).map_err(|e| e.to_string())?)
+                    } else {
+                        b
+                    };
+                    b.build().and_then(|mut s| s.run()).map_err(|e| format!("{e:#}"))
+                };
+                let out = run()?;
+
+                for t in &out.telemetry.tenants {
+                    crate::prop_assert!(
+                        t.completed == t.admitted,
+                        "tenant {}: completed {} != admitted {} (shape {shape})",
+                        t.name(),
+                        t.completed,
+                        t.admitted
+                    );
+                    crate::prop_assert!(
+                        t.qos != "realtime" || t.shed == 0,
+                        "realtime tenant {} shed {} frames (shape {shape})",
+                        t.name(),
+                        t.shed
+                    );
+                }
+                // Bit-identical replay: the campaign is schedule-driven
+                // state, not entropy.
+                let again = run()?;
+                let ids = |o: &RunOutput| {
+                    o.estimates.iter().map(|e| e.frame_id).collect::<Vec<_>>()
+                };
+                crate::prop_assert!(ids(&out) == ids(&again), "estimate streams diverged on replay");
+                let books = |o: &RunOutput| {
+                    o.telemetry
+                        .tenants
+                        .iter()
+                        .map(|t| (t.id, t.admitted, t.completed, t.shed, t.deadline_misses))
+                        .collect::<Vec<_>>()
+                };
+                crate::prop_assert!(books(&out) == books(&again), "per-tenant books diverged on replay");
+                crate::prop_assert!(
+                    out.telemetry.power_shed == again.telemetry.power_shed
+                        && out.telemetry.storm_excluded == again.telemetry.storm_excluded
+                        && out.telemetry.recalibrations == again.telemetry.recalibrations,
+                    "campaign counters diverged on replay"
+                );
+                Ok(())
+            },
+        );
     }
 
     /// THE satellite gate: for a random (workloads, faults, clock) draw,

@@ -1,0 +1,703 @@
+//! Space-environment campaign layer (DESIGN.md §4.16): a deterministic,
+//! schedule-driven model of the orbital environment the MPAI paper
+//! targets — SEU-prone accelerators under a tight, eclipse-shaped power
+//! envelope.
+//!
+//! A [`CampaignSpec`] composes three axes, each parsed from the CLI
+//! (`--storm`, `--power`, `--recal`, `--drift`) or a `--campaign FILE`
+//! JSON document mirroring the trace-file grammar:
+//!
+//! * **Correlated fault storms** — [`FaultSpec`]s place transient
+//!   (`recover=S`) or permanent faults on substrates or cluster nodes at
+//!   scheduled instants.  `dpu+vpu@3:recover=2` is one storm hitting two
+//!   substrates at the same instant (the correlated-SEU case).  Engines
+//!   consult a [`FaultCalendar`] — a pure function of simulated time —
+//!   so storm routing replays bit-identically.
+//! * **Eclipse power budget** — a piecewise-constant watt schedule
+//!   ([`PowerSchedule`], `0=10,5=4,12=10`).  The router steers toward
+//!   modes whose modeled draw fits the instant's budget, and the serve
+//!   pump sheds background (then standard) work while the modeled
+//!   rolling power overruns — every action counted, never silent.
+//! * **Online recalibration** — [`RecalSpec`] enables an EWMA over each
+//!   substrate's *observed* service time; when it diverges from the
+//!   frozen [`ModeProfile`](crate::coordinator::policy::ModeProfile)
+//!   past `threshold`, the profile is rewritten, affected plan-cache
+//!   entries are invalidated, and routing follows the degraded hardware
+//!   instead of the stale model.  [`DriftSpec`] configures the simulated
+//!   degradation (`SimBackend::with_drift`) that recalibration chases.
+//!
+//! The headline invariant, property-tested across randomized schedules ×
+//! engine shapes: **no admitted realtime frame is ever lost, every shed
+//! or degraded frame is counted**, and any campaign replays
+//! bit-identically on `SimClock`.
+
+use std::time::Duration;
+
+use crate::coordinator::config::Mode;
+use crate::util::json::{self, Json};
+
+/// Degradation order under an eclipse budget (DESIGN.md §4.16):
+/// background work power-sheds at *any* modeled overage (rolling >
+/// budget); standard work only past this deeper deficit (rolling >
+/// budget × factor); realtime never power-sheds.  Background therefore
+/// always sheds first — the priority order the paper's QoS classes imply.
+pub const STANDARD_SHED_OVERAGE: f64 = 1.5;
+
+/// Bounded seconds → `Duration` (`from_secs_f64` panics out of range).
+fn dur_s(v: f64, what: &str) -> Result<Duration, String> {
+    if !v.is_finite() || !(0.0..=1e9).contains(&v) {
+        return Err(format!("{what} must be seconds in [0, 1e9], got {v}"));
+    }
+    Ok(Duration::from_secs_f64(v))
+}
+
+/// How a scheduled fault behaves after it strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The target recovers after `recover_after` (SEU-style upset: the
+    /// substrate is routed around during the window, restored after).
+    Transient { recover_after: Duration },
+    /// The target never recovers (latch-up / hard failure).
+    Permanent,
+}
+
+/// What a scheduled fault strikes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// An accelerator substrate, named by its partition vocabulary
+    /// ("dpu", "vpu", "tpu", "cpu") or a full mode label ("dpu-int8").
+    Substrate(String),
+    /// A whole cluster node (by index) — consumed through the PR-9
+    /// failover path.  Node faults are permanent only.
+    Node(usize),
+}
+
+/// One scheduled environmental fault — the unified grammar behind the
+/// historical `--fail-every` / `with_fail_at` / `--kill-node` surfaces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub target: FaultTarget,
+    /// Instant the fault strikes (simulated time).
+    pub at: Duration,
+    pub kind: FaultKind,
+}
+
+impl FaultSpec {
+    /// Parse one `--storm` spec: `TARGET[+TARGET...]@T[:recover=S]`.
+    /// `+`-joined targets fault at the same instant — one correlated
+    /// storm, one `FaultSpec` per target.  `nodeN` targets are cluster
+    /// nodes and must be permanent (node recovery is not modeled; the
+    /// failover path treats a dead node as gone).
+    pub fn parse(spec: &str) -> Result<Vec<FaultSpec>, String> {
+        let (targets, rest) = spec
+            .split_once('@')
+            .ok_or_else(|| format!("storm {spec:?}: expected TARGET[+TARGET...]@T[:recover=S]"))?;
+        let (at_s, kind) = match rest.split_once(':') {
+            None => (rest, FaultKind::Permanent),
+            Some((at_s, opt)) => {
+                let recover = opt
+                    .trim()
+                    .strip_prefix("recover=")
+                    .ok_or_else(|| format!("storm {spec:?}: unknown option {opt:?} (recover=S)"))?;
+                let s: f64 = recover
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("storm {spec:?}: {recover:?} is not seconds"))?;
+                let recover_after = dur_s(s, "storm recovery")?;
+                if recover_after.is_zero() {
+                    return Err(format!("storm {spec:?}: recovery must be > 0 s"));
+                }
+                (at_s, FaultKind::Transient { recover_after })
+            }
+        };
+        let at_s: f64 = at_s
+            .trim()
+            .parse()
+            .map_err(|_| format!("storm {spec:?}: {at_s:?} is not seconds"))?;
+        let at = dur_s(at_s, "storm instant")?;
+
+        let mut out = Vec::new();
+        for raw in targets.split('+') {
+            let name = raw.trim();
+            if name.is_empty() {
+                return Err(format!("storm {spec:?}: empty target"));
+            }
+            let target = match name.strip_prefix("node") {
+                Some(idx) if !idx.is_empty() && idx.bytes().all(|b| b.is_ascii_digit()) => {
+                    if matches!(kind, FaultKind::Transient { .. }) {
+                        return Err(format!(
+                            "storm {spec:?}: node faults are permanent (drop :recover=)"
+                        ));
+                    }
+                    FaultTarget::Node(idx.parse().map_err(|_| {
+                        format!("storm {spec:?}: node index {idx:?} out of range")
+                    })?)
+                }
+                _ => FaultTarget::Substrate(name.to_string()),
+            };
+            out.push(FaultSpec { target, at, kind });
+        }
+        Ok(out)
+    }
+
+    /// End of the fault window (`None` = permanent).
+    pub fn until(&self) -> Option<Duration> {
+        match self.kind {
+            FaultKind::Transient { recover_after } => Some(self.at + recover_after),
+            FaultKind::Permanent => None,
+        }
+    }
+
+    /// Whether the fault is in force at simulated instant `t`.
+    pub fn active_at(&self, t: Duration) -> bool {
+        self.at <= t && self.until().map_or(true, |u| t < u)
+    }
+}
+
+/// Whether a storm target names a given substrate.  A target in the
+/// partition vocabulary ("dpu") matches both the bare accelerator name
+/// (pipeline stages) and any mode label running on it ("dpu-int8",
+/// whole-frame pool entries); a full mode-label target matches the same
+/// pair in reverse.
+pub fn target_matches(target: &str, substrate: &str) -> bool {
+    if target == substrate {
+        return true;
+    }
+    if let Some(mode) = Mode::from_label(substrate) {
+        if mode.accel_name() == Some(target) {
+            return true;
+        }
+    }
+    if let Some(mode) = Mode::from_label(target) {
+        if mode.accel_name() == Some(substrate) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Per-substrate fault windows resolved from a campaign — the pure
+/// time-indexed oracle engines route around.  Node faults are excluded
+/// (they merge into the cluster's kill schedule instead).
+#[derive(Debug, Clone, Default)]
+pub struct FaultCalendar {
+    /// `(target name, strike, recovery)`; `None` recovery = permanent.
+    windows: Vec<(String, Duration, Option<Duration>)>,
+}
+
+impl FaultCalendar {
+    pub fn from_faults(faults: &[FaultSpec]) -> FaultCalendar {
+        FaultCalendar {
+            windows: faults
+                .iter()
+                .filter_map(|f| match &f.target {
+                    FaultTarget::Substrate(name) => Some((name.clone(), f.at, f.until())),
+                    FaultTarget::Node(_) => None,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Whether `substrate` sits inside any matching fault window at `t`.
+    pub fn faulted(&self, substrate: &str, t: Duration) -> bool {
+        self.windows.iter().any(|(target, at, until)| {
+            *at <= t && until.map_or(true, |u| t < u) && target_matches(target, substrate)
+        })
+    }
+}
+
+/// One step of the piecewise power budget: `watts` from `from` until the
+/// next window begins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerWindow {
+    pub from: Duration,
+    pub watts: f64,
+}
+
+/// The eclipse power envelope: a piecewise-constant watt budget over the
+/// run, strictly increasing in `from`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PowerSchedule {
+    windows: Vec<PowerWindow>,
+}
+
+impl PowerSchedule {
+    /// Parse `--power`: `T=W[,T=W...]` (seconds = watts, e.g.
+    /// `0=10,5=4,12=10` — full sun, eclipse at 5 s, sun again at 12 s)
+    /// or a bare `W` for a constant budget from t = 0.
+    pub fn parse(spec: &str) -> Result<PowerSchedule, String> {
+        let mut windows = Vec::new();
+        for part in spec.split(',') {
+            let (from, watts) = match part.split_once('=') {
+                Some((t, w)) => {
+                    let t: f64 = t
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("power {spec:?}: {t:?} is not seconds"))?;
+                    (dur_s(t, "power window start")?, w)
+                }
+                None => (Duration::ZERO, part),
+            };
+            let watts: f64 = watts
+                .trim()
+                .parse()
+                .map_err(|_| format!("power {spec:?}: {watts:?} is not watts"))?;
+            if !watts.is_finite() || watts <= 0.0 {
+                return Err(format!("power {spec:?}: budget must be finite watts > 0"));
+            }
+            windows.push(PowerWindow { from, watts });
+        }
+        if windows.is_empty() {
+            return Err(format!("power {spec:?}: empty schedule"));
+        }
+        if windows.windows(2).any(|w| w[1].from <= w[0].from) {
+            return Err(format!(
+                "power {spec:?}: window starts must be strictly increasing"
+            ));
+        }
+        Ok(PowerSchedule { windows })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[PowerWindow] {
+        &self.windows
+    }
+
+    /// Budget in force at `t`: the last window starting at or before `t`
+    /// (`None` before the first window — unbudgeted, and also when the
+    /// schedule is empty).
+    pub fn budget_at(&self, t: Duration) -> Option<f64> {
+        self.windows
+            .iter()
+            .rev()
+            .find(|w| w.from <= t)
+            .map(|w| w.watts)
+    }
+
+    /// Index of the window in force at `t` (for per-window accounting).
+    pub fn window_index_at(&self, t: Duration) -> Option<usize> {
+        self.windows.iter().rposition(|w| w.from <= t)
+    }
+}
+
+/// Online-recalibration configuration: EWMA smoothing over observed
+/// per-frame service and the modeled-vs-observed divergence that
+/// triggers a profile rewrite + plan-cache invalidation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecalSpec {
+    /// EWMA weight on the newest observation, in (0, 1].
+    pub alpha: f64,
+    /// Relative divergence (|ewma - modeled| / modeled) past which the
+    /// profile is rewritten to the observed time.
+    pub threshold: f64,
+}
+
+impl Default for RecalSpec {
+    fn default() -> RecalSpec {
+        RecalSpec {
+            alpha: 0.2,
+            threshold: 0.25,
+        }
+    }
+}
+
+impl RecalSpec {
+    /// Parse `--recal`: `[alpha=A][,threshold=T]`; `on` (or the empty
+    /// string) takes every default.
+    pub fn parse(spec: &str) -> Result<RecalSpec, String> {
+        let mut r = RecalSpec::default();
+        if spec.trim().is_empty() || spec.trim() == "on" {
+            return Ok(r);
+        }
+        for part in spec.split(',') {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("recal {spec:?}: {part:?} is not key=value"))?;
+            let v: f64 = v
+                .trim()
+                .parse()
+                .map_err(|_| format!("recal {spec:?}: {part:?} is not numeric"))?;
+            match k.trim() {
+                "alpha" => r.alpha = v,
+                "threshold" => r.threshold = v,
+                other => {
+                    return Err(format!(
+                        "recal {spec:?}: unknown key {other:?} (alpha, threshold)"
+                    ))
+                }
+            }
+        }
+        if !r.alpha.is_finite() || !(0.0..=1.0).contains(&r.alpha) || r.alpha == 0.0 {
+            return Err(format!("recal {spec:?}: alpha must be in (0, 1]"));
+        }
+        if !r.threshold.is_finite() || r.threshold <= 0.0 {
+            return Err(format!("recal {spec:?}: threshold must be > 0"));
+        }
+        Ok(r)
+    }
+}
+
+/// Simulated degradation of one substrate: each engine invocation slows
+/// it by `1 + rate * calls`, capped at `cap`x the base service time
+/// (`SimBackend::with_drift`) — the aging recalibration chases.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSpec {
+    /// Substrate name in the storm-target vocabulary.
+    pub substrate: String,
+    pub rate: f64,
+    pub cap: f64,
+}
+
+impl DriftSpec {
+    /// Parse `--drift`: `SUBSTRATE[:rate=R][,cap=C]`.
+    pub fn parse(spec: &str) -> Result<DriftSpec, String> {
+        let (substrate, rest) = match spec.split_once(':') {
+            Some((s, r)) => (s.trim(), Some(r)),
+            None => (spec.trim(), None),
+        };
+        if substrate.is_empty() {
+            return Err(format!("drift {spec:?}: empty substrate"));
+        }
+        let mut d = DriftSpec {
+            substrate: substrate.to_string(),
+            rate: 0.01,
+            cap: 4.0,
+        };
+        if let Some(rest) = rest {
+            for part in rest.split(',') {
+                let (k, v) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("drift {spec:?}: {part:?} is not key=value"))?;
+                let v: f64 = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("drift {spec:?}: {part:?} is not numeric"))?;
+                match k.trim() {
+                    "rate" => d.rate = v,
+                    "cap" => d.cap = v,
+                    other => {
+                        return Err(format!(
+                            "drift {spec:?}: unknown key {other:?} (rate, cap)"
+                        ))
+                    }
+                }
+            }
+        }
+        if !d.rate.is_finite() || d.rate <= 0.0 {
+            return Err(format!("drift {spec:?}: rate must be > 0"));
+        }
+        if !d.cap.is_finite() || d.cap < 1.0 {
+            return Err(format!("drift {spec:?}: cap must be >= 1"));
+        }
+        Ok(d)
+    }
+}
+
+/// The full campaign: every axis optional, all composable with every
+/// engine shape through `EngineBuilder`.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignSpec {
+    pub faults: Vec<FaultSpec>,
+    pub power: PowerSchedule,
+    pub recal: Option<RecalSpec>,
+    pub drift: Vec<DriftSpec>,
+}
+
+impl CampaignSpec {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+            && self.power.is_empty()
+            && self.recal.is_none()
+            && self.drift.is_empty()
+    }
+
+    /// The substrate-fault oracle engines route by.
+    pub fn calendar(&self) -> FaultCalendar {
+        FaultCalendar::from_faults(&self.faults)
+    }
+
+    /// Permanent node faults as `(node index, strike instant)` — merged
+    /// into the cluster's kill schedule (the PR-9 failover path).
+    pub fn node_faults(&self) -> Vec<(usize, Duration)> {
+        self.faults
+            .iter()
+            .filter_map(|f| match f.target {
+                FaultTarget::Node(n) => Some((n, f.at)),
+                FaultTarget::Substrate(_) => None,
+            })
+            .collect()
+    }
+
+    /// The drift configured for a substrate (storm-target matching), if
+    /// any.
+    pub fn drift_for(&self, substrate: &str) -> Option<&DriftSpec> {
+        self.drift
+            .iter()
+            .find(|d| target_matches(&d.substrate, substrate))
+    }
+
+    /// A copy for one cluster node: storms and drift ride into every
+    /// node, but the watt budget is fleet-wide — the cluster enforces it
+    /// over the *sum* of node draws, so per-node routers must not also
+    /// steer against the whole budget.  Node faults stay (they are
+    /// filtered to the kill schedule, harmless inside a node).
+    pub fn for_cluster_node(&self) -> CampaignSpec {
+        CampaignSpec {
+            power: PowerSchedule::default(),
+            ..self.clone()
+        }
+    }
+}
+
+/// Parse a `--campaign FILE` document.  Every axis reuses its CLI
+/// grammar as JSON strings, mirroring the trace-file convention:
+///
+/// ```json
+/// {
+///   "storms": ["dpu+vpu@3:recover=2", "tpu@8"],
+///   "power": "0=10,5=4,12=10",
+///   "recal": "alpha=0.2,threshold=0.3",
+///   "drift": ["dpu:rate=0.02,cap=2.0"]
+/// }
+/// ```
+pub fn parse_campaign_file(text: &str) -> Result<CampaignSpec, String> {
+    let doc = json::parse(text).map_err(|e| e.to_string())?;
+    if doc.as_obj().is_none() {
+        return Err("campaign file must be a JSON object".into());
+    }
+    let mut spec = CampaignSpec::default();
+    if let Some(storms) = doc.get("storms") {
+        let arr = storms
+            .as_arr()
+            .ok_or("\"storms\" must be an array of storm spec strings")?;
+        for s in arr {
+            let s = s.as_str().ok_or("\"storms\" entries must be strings")?;
+            spec.faults.extend(FaultSpec::parse(s)?);
+        }
+    }
+    if let Some(power) = doc.get("power") {
+        let s = power
+            .as_str()
+            .ok_or("\"power\" must be a power schedule string")?;
+        spec.power = PowerSchedule::parse(s)?;
+    }
+    if let Some(recal) = doc.get("recal") {
+        let s = recal.as_str().ok_or("\"recal\" must be a recal spec string")?;
+        spec.recal = Some(RecalSpec::parse(s)?);
+    }
+    if let Some(drift) = doc.get("drift") {
+        let arr = drift
+            .as_arr()
+            .ok_or("\"drift\" must be an array of drift spec strings")?;
+        for d in arr {
+            let d = d.as_str().ok_or("\"drift\" entries must be strings")?;
+            spec.drift.push(DriftSpec::parse(d)?);
+        }
+    }
+    let known = ["storms", "power", "recal", "drift"];
+    if let Some(obj) = doc.as_obj() {
+        if let Some(key) = obj.keys().find(|k| !known.contains(&k.as_str())) {
+            return Err(format!(
+                "campaign file: unknown key {key:?} (storms, power, recal, drift)"
+            ));
+        }
+    }
+    if spec.is_empty() {
+        return Err("campaign file specifies nothing".into());
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_grammar_parses_correlated_transient_and_permanent() {
+        // One correlated storm: two substrates struck at the same instant.
+        let storm = FaultSpec::parse("dpu+vpu@3:recover=2").unwrap();
+        assert_eq!(storm.len(), 2);
+        for (f, name) in storm.iter().zip(["dpu", "vpu"]) {
+            assert_eq!(f.target, FaultTarget::Substrate(name.into()));
+            assert_eq!(f.at, Duration::from_secs(3));
+            assert_eq!(
+                f.kind,
+                FaultKind::Transient {
+                    recover_after: Duration::from_secs(2)
+                }
+            );
+            assert_eq!(f.until(), Some(Duration::from_secs(5)));
+        }
+        // Permanent single-target fault.
+        let perm = FaultSpec::parse("tpu@1.5").unwrap();
+        assert_eq!(perm.len(), 1);
+        assert_eq!(perm[0].kind, FaultKind::Permanent);
+        assert_eq!(perm[0].until(), None);
+        // Node faults map to the cluster kill path.
+        let node = FaultSpec::parse("node2@4").unwrap();
+        assert_eq!(node[0].target, FaultTarget::Node(2));
+    }
+
+    #[test]
+    fn storm_grammar_rejects_malformed_specs() {
+        assert!(FaultSpec::parse("dpu").is_err()); // no @T
+        assert!(FaultSpec::parse("@3").is_err()); // empty target
+        assert!(FaultSpec::parse("dpu+@3").is_err()); // empty joined target
+        assert!(FaultSpec::parse("dpu@x").is_err()); // bad instant
+        assert!(FaultSpec::parse("dpu@-1").is_err()); // negative instant
+        assert!(FaultSpec::parse("dpu@1e12").is_err()); // out of range
+        assert!(FaultSpec::parse("dpu@3:recover=0").is_err()); // zero recovery
+        assert!(FaultSpec::parse("dpu@3:heal=2").is_err()); // unknown option
+        assert!(FaultSpec::parse("node1@3:recover=2").is_err()); // transient node
+        // "nodeX" with a non-numeric suffix is a substrate name, not a node.
+        let odd = FaultSpec::parse("nodeish@3").unwrap();
+        assert_eq!(odd[0].target, FaultTarget::Substrate("nodeish".into()));
+    }
+
+    #[test]
+    fn fault_windows_are_half_open() {
+        let f = &FaultSpec::parse("dpu@3:recover=2").unwrap()[0];
+        assert!(!f.active_at(Duration::from_millis(2999)));
+        assert!(f.active_at(Duration::from_secs(3))); // inclusive strike
+        assert!(f.active_at(Duration::from_millis(4999)));
+        assert!(!f.active_at(Duration::from_secs(5))); // exclusive recovery
+        let p = &FaultSpec::parse("dpu@3").unwrap()[0];
+        assert!(p.active_at(Duration::from_secs(1_000)));
+    }
+
+    #[test]
+    fn target_matching_bridges_accels_and_mode_labels() {
+        // Accel-name targets hit both pipeline stages and pool entries.
+        assert!(target_matches("dpu", "dpu"));
+        assert!(target_matches("dpu", "dpu-int8"));
+        assert!(target_matches("vpu", "vpu-fp16"));
+        // Mode-label targets hit the bare accel name too.
+        assert!(target_matches("dpu-int8", "dpu"));
+        assert!(target_matches("dpu-int8", "dpu-int8"));
+        // No cross-substrate bleed.
+        assert!(!target_matches("dpu", "vpu"));
+        assert!(!target_matches("dpu", "vpu-fp16"));
+        assert!(!target_matches("tpu-int8", "dpu"));
+    }
+
+    #[test]
+    fn calendar_resolves_substrate_windows_and_skips_nodes() {
+        let mut faults = FaultSpec::parse("dpu+vpu@3:recover=2").unwrap();
+        faults.extend(FaultSpec::parse("node1@4").unwrap());
+        let cal = FaultCalendar::from_faults(&faults);
+        assert!(!cal.is_empty());
+        let t = Duration::from_secs(4);
+        assert!(cal.faulted("dpu-int8", t));
+        assert!(cal.faulted("vpu", t));
+        assert!(!cal.faulted("tpu", t));
+        assert!(!cal.faulted("dpu-int8", Duration::from_secs(6))); // recovered
+        // Node faults never appear as substrate windows.
+        let node_only = FaultCalendar::from_faults(&FaultSpec::parse("node0@1").unwrap());
+        assert!(node_only.is_empty());
+    }
+
+    #[test]
+    fn power_schedule_parses_and_resolves_windows() {
+        let p = PowerSchedule::parse("0=10,5=4,12=10").unwrap();
+        assert_eq!(p.windows().len(), 3);
+        assert_eq!(p.budget_at(Duration::ZERO), Some(10.0));
+        assert_eq!(p.budget_at(Duration::from_millis(4999)), Some(10.0));
+        assert_eq!(p.budget_at(Duration::from_secs(5)), Some(4.0)); // eclipse
+        assert_eq!(p.budget_at(Duration::from_secs(11)), Some(4.0));
+        assert_eq!(p.budget_at(Duration::from_secs(12)), Some(10.0)); // sun
+        assert_eq!(p.window_index_at(Duration::from_secs(6)), Some(1));
+        // Bare watts = constant budget from t 0.
+        let flat = PowerSchedule::parse("7.5").unwrap();
+        assert_eq!(flat.budget_at(Duration::from_secs(99)), Some(7.5));
+        // Before the first window the run is unbudgeted.
+        let late = PowerSchedule::parse("5=4").unwrap();
+        assert_eq!(late.budget_at(Duration::ZERO), None);
+        assert_eq!(late.window_index_at(Duration::ZERO), None);
+    }
+
+    #[test]
+    fn power_schedule_rejects_malformed_specs() {
+        assert!(PowerSchedule::parse("").is_err());
+        assert!(PowerSchedule::parse("0=0").is_err()); // zero watts
+        assert!(PowerSchedule::parse("0=-3").is_err());
+        assert!(PowerSchedule::parse("0=nan").is_err());
+        assert!(PowerSchedule::parse("x=4").is_err());
+        assert!(PowerSchedule::parse("5=4,5=6").is_err()); // duplicate start
+        assert!(PowerSchedule::parse("5=4,3=6").is_err()); // out of order
+    }
+
+    #[test]
+    fn recal_spec_parses_defaults_and_bounds() {
+        assert_eq!(RecalSpec::parse("on").unwrap(), RecalSpec::default());
+        assert_eq!(RecalSpec::parse("").unwrap(), RecalSpec::default());
+        let r = RecalSpec::parse("alpha=0.5,threshold=0.1").unwrap();
+        assert_eq!(r.alpha, 0.5);
+        assert_eq!(r.threshold, 0.1);
+        assert!(RecalSpec::parse("alpha=0").is_err());
+        assert!(RecalSpec::parse("alpha=1.5").is_err());
+        assert!(RecalSpec::parse("threshold=0").is_err());
+        assert!(RecalSpec::parse("beta=1").is_err());
+        assert!(RecalSpec::parse("alpha").is_err());
+    }
+
+    #[test]
+    fn drift_spec_parses_defaults_and_bounds() {
+        let d = DriftSpec::parse("dpu").unwrap();
+        assert_eq!(d.substrate, "dpu");
+        assert_eq!((d.rate, d.cap), (0.01, 4.0));
+        let d = DriftSpec::parse("vpu:rate=0.05,cap=2.0").unwrap();
+        assert_eq!((d.rate, d.cap), (0.05, 2.0));
+        assert!(DriftSpec::parse("").is_err());
+        assert!(DriftSpec::parse("dpu:rate=0").is_err());
+        assert!(DriftSpec::parse("dpu:cap=0.5").is_err());
+        assert!(DriftSpec::parse("dpu:speed=2").is_err());
+    }
+
+    #[test]
+    fn campaign_spec_splits_axes_for_consumers() {
+        let mut spec = CampaignSpec::default();
+        assert!(spec.is_empty());
+        spec.faults = FaultSpec::parse("dpu+node1@3").unwrap();
+        spec.power = PowerSchedule::parse("0=8").unwrap();
+        spec.drift = vec![DriftSpec::parse("dpu:rate=0.02").unwrap()];
+        assert!(!spec.is_empty());
+        assert_eq!(spec.node_faults(), vec![(1, Duration::from_secs(3))]);
+        assert!(spec.calendar().faulted("dpu", Duration::from_secs(3)));
+        assert!(spec.drift_for("dpu-int8").is_some());
+        assert!(spec.drift_for("vpu").is_none());
+        // The per-node copy keeps storms/drift but drops the fleet budget.
+        let node = spec.for_cluster_node();
+        assert!(node.power.is_empty());
+        assert_eq!(node.faults, spec.faults);
+        assert_eq!(node.drift, spec.drift);
+    }
+
+    #[test]
+    fn campaign_file_parses_all_axes_and_rejects_junk() {
+        let text = r#"{
+          "storms": ["dpu+vpu@3:recover=2", "tpu@8"],
+          "power": "0=10,5=4,12=10",
+          "recal": "alpha=0.2,threshold=0.3",
+          "drift": ["dpu:rate=0.02,cap=2.0"]
+        }"#;
+        let spec = parse_campaign_file(text).unwrap();
+        assert_eq!(spec.faults.len(), 3);
+        assert_eq!(spec.power.windows().len(), 3);
+        assert_eq!(spec.recal.unwrap().threshold, 0.3);
+        assert_eq!(spec.drift.len(), 1);
+
+        assert!(parse_campaign_file("[]").is_err());
+        assert!(parse_campaign_file("{}").is_err()); // specifies nothing
+        assert!(parse_campaign_file(r#"{"storms": "dpu@1"}"#).is_err());
+        assert!(parse_campaign_file(r#"{"storms": ["dpu"]}"#).is_err());
+        assert!(parse_campaign_file(r#"{"eclipse": "0=4"}"#).is_err());
+        assert!(parse_campaign_file("not json").is_err());
+    }
+}

@@ -39,11 +39,12 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::campaign::{CampaignSpec, PowerSchedule};
 use crate::coordinator::config::Mode;
 use crate::coordinator::engine::{Completion, Engine};
 use crate::coordinator::placement::{AffinityKey, Placement};
 use crate::coordinator::policy::QosClass;
-use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::telemetry::{PowerRecord, Telemetry};
 
 /// Default hotspot-detection window on the virtual timeline.
 pub const DEFAULT_REBALANCE_WINDOW: Duration = Duration::from_secs(1);
@@ -219,6 +220,11 @@ pub struct Cluster {
     window_idx: u64,
     failovers: usize,
     migrations: u64,
+    /// Fleet-wide eclipse watt budget (campaign): the cluster enforces it
+    /// over the *sum* of node draws, so per-node routers never see it.
+    power: PowerSchedule,
+    /// Peak summed draw sampled per budget window (reported at drain).
+    power_peaks: Vec<f64>,
     record_cap: Option<usize>,
     drained: bool,
 }
@@ -264,9 +270,27 @@ impl Cluster {
             window_idx: 0,
             failovers: 0,
             migrations: 0,
+            power: PowerSchedule::default(),
+            power_peaks: Vec::new(),
             record_cap: None,
             drained: false,
         })
+    }
+
+    /// Arm the cluster with a campaign: node-level fault storms merge
+    /// into the kill schedule (reusing the failover machinery, so an
+    /// environment-scheduled node outage and a `--kill-node` are the same
+    /// event), and the eclipse watt budget is enforced fleet-wide over
+    /// the summed node draws.  Substrate storms, drift, and recal ride
+    /// *inside* each node (see [`CampaignSpec::for_cluster_node`]).
+    pub fn with_campaign(mut self, spec: &CampaignSpec) -> Cluster {
+        for (node, at) in spec.node_faults() {
+            self.kills.push(NodeKill { node, at });
+        }
+        self.kills.sort_by_key(|k| (k.at, k.node));
+        self.power = spec.power.clone();
+        self.power_peaks = vec![0.0; self.power.windows().len()];
+        self
     }
 
     /// Install the fault schedule (sorted internally; fires lazily as
@@ -476,7 +500,17 @@ impl Engine for Cluster {
         self.maybe_rebalance();
         self.qos.insert(batch.tenant, batch.qos);
         let node = self.route(batch)?;
-        self.submit_to(node, batch.clone())
+        self.submit_to(node, batch.clone())?;
+        // Sample the fleet's summed draw at the dispatch instant — rolling
+        // power only decays between submits, so per-window peaks sampled
+        // here are exact.
+        if let Some(w) = self.power.window_index_at(self.now) {
+            let rolling = Engine::modeled_power_w(self, self.now);
+            if rolling > self.power_peaks[w] {
+                self.power_peaks[w] = rolling;
+            }
+        }
+        Ok(())
     }
 
     /// Release every buffered completion virtual time has reached (all
@@ -519,6 +553,21 @@ impl Engine for Cluster {
         self.nodes.iter().map(|n| n.engine.fault_count()).sum::<usize>() + self.failovers
     }
 
+    /// Fleet draw: the summed modeled rolling power of every alive node.
+    fn modeled_power_w(&self, t: Duration) -> f64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.alive)
+            .map(|n| n.engine.modeled_power_w(t))
+            .sum()
+    }
+
+    fn power_state(&self, t: Duration) -> Option<(f64, f64)> {
+        self.power
+            .budget_at(t)
+            .map(|b| (Engine::modeled_power_w(self, t), b))
+    }
+
     fn drain(&mut self) -> Result<()> {
         for node in &mut self.nodes {
             if node.alive && !node.drained {
@@ -543,12 +592,26 @@ impl Engine for Cluster {
             out.measured_batch_s.extend(t.measured_batch_s);
             out.records_dropped += t.records_dropped;
             out.stale_events += t.stale_events;
+            out.storm_excluded += t.storm_excluded;
+            out.recalibrations += t.recalibrations;
+            out.power_shed += t.power_shed;
+            out.power.extend(t.power);
             if let Some(pc) = t.plan_cache {
                 out.plan_cache = Some(match out.plan_cache.take() {
                     Some(merged) => merged.merged(&pc),
                     None => pc,
                 });
             }
+        }
+        // Fleet budget windows (nodes carry no schedule of their own, so
+        // these are the only records a campaign cluster emits).
+        for (i, w) in self.power.windows().iter().enumerate() {
+            out.power.push(PowerRecord {
+                from: w.from,
+                budget_w: w.watts,
+                peak_w: self.power_peaks.get(i).copied().unwrap_or(0.0),
+                steered: 0,
+            });
         }
         out
     }
@@ -849,6 +912,52 @@ mod tests {
                 t.name()
             );
         }
+    }
+
+    #[test]
+    fn campaign_node_storm_rides_the_kill_schedule() {
+        use crate::coordinator::campaign::{CampaignSpec, FaultSpec};
+        // A campaign node fault is the same event as a --kill-node: the
+        // node dies at the scheduled instant and in-flight work fails
+        // over without losing a single admitted frame.
+        let spec = CampaignSpec {
+            faults: FaultSpec::parse("node0@0.9").unwrap(),
+            ..Default::default()
+        };
+        let mut c = cluster(3).with_campaign(&spec);
+        let out = run_workloads(&cfg(40), tiny_eval(), &mut c, &mix(6, 40)).unwrap();
+        assert_eq!(c.alive_count(), 2, "the campaign node fault must have fired");
+        for t in &out.telemetry.tenants {
+            assert_eq!(
+                t.completed, t.admitted,
+                "tenant {} lost frames across the campaign node storm",
+                t.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_power_state_sums_alive_nodes_and_records_windows() {
+        use crate::coordinator::campaign::{CampaignSpec, PowerSchedule};
+        let spec = CampaignSpec {
+            power: PowerSchedule::parse("0=1000").unwrap(),
+            ..Default::default()
+        };
+        let mut c = cluster(2).with_campaign(&spec);
+        // Idle fleet: zero draw against the 1 kW budget.
+        assert_eq!(c.power_state(Duration::ZERO), Some((0.0, 1000.0)));
+        c.submit(&raw_batch(0, &[0, 1, 2, 3], 10, QosClass::Realtime)).unwrap();
+        let (rolling, budget) = c.power_state(Duration::from_millis(10)).unwrap();
+        assert_eq!(budget, 1000.0);
+        assert!(rolling > 0.0, "a dispatched batch must register modeled draw");
+        c.drain().unwrap();
+        let _ = c.poll();
+        let t = c.take_telemetry();
+        // One fleet budget window, peak sampled at the dispatch instant.
+        assert_eq!(t.power.len(), 1);
+        assert_eq!(t.power[0].budget_w, 1000.0);
+        assert!(t.power[0].peak_w >= rolling);
+        assert_eq!(t.power[0].steered, 0);
     }
 
     #[test]

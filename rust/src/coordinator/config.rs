@@ -6,6 +6,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::accel::interconnect::{links, Link};
+use crate::coordinator::campaign::CampaignSpec;
 use crate::coordinator::clock::{Clock, SimClock, WallClock};
 use crate::coordinator::engine::EventQueueKind;
 use crate::coordinator::policy::{Constraints, QosClass};
@@ -373,8 +374,14 @@ pub struct Config {
     /// Use simulated backends (no artifacts / PJRT binding needed).
     pub sim: bool,
     /// Inject a fault every Nth infer on the pool's first backend (sim
-    /// backends only — failover demonstration).
+    /// backends only — failover demonstration).  Deprecated spelling of
+    /// the campaign fault axis; prefer `--storm SUBSTRATE@T`.
     pub fail_every: Option<usize>,
+    /// Space-environment campaign: scheduled fault storms, eclipse power
+    /// budgets, drift + online recalibration (`--campaign` / `--storm` /
+    /// `--power` / `--recal` / `--drift`).  Empty = environment off, and
+    /// every serve behaves exactly as before the campaign layer existed.
+    pub campaign: CampaignSpec,
     /// Constraints gating which pool backends may serve a batch.
     pub constraints: Constraints,
     /// Partition-aware pipelined serving: split the network across the
@@ -413,6 +420,7 @@ impl Default for Config {
             pool: Vec::new(),
             sim: false,
             fail_every: None,
+            campaign: CampaignSpec::default(),
             constraints: Constraints::default(),
             partition: None,
             plan_cache: true,

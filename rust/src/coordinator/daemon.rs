@@ -37,10 +37,12 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::Batcher;
+use crate::coordinator::campaign::STANDARD_SHED_OVERAGE;
 use crate::coordinator::config::{Config, Mode, Workload};
 use crate::coordinator::engine::{
     enqueue, Completion, Engine, EventQueueKind, ReadyQueue, TENANT_ID_SHIFT,
 };
+use crate::coordinator::policy::QosClass;
 use crate::coordinator::substrate::TenantId;
 use crate::coordinator::telemetry::{Telemetry, TenantRecord};
 use crate::coordinator::trace::{ArrivalPattern, ChurnAction, ChurnEvent, TenantTrace, TraceSource};
@@ -241,6 +243,7 @@ struct DaemonLoop {
     /// Sparse window map: only windows something landed in exist.
     windows: BTreeMap<u64, WindowAccum>,
     stale: u64,
+    power_shed: u64,
     joins: u64,
     leaves: u64,
     rerates: u64,
@@ -504,6 +507,27 @@ impl DaemonLoop {
                 self.slots[k].batcher.recycle(batch.frames);
                 continue;
             }
+            // Eclipse power shed (DESIGN.md §4.16), mirroring the fixed-run
+            // pump: while the modeled rolling draw overruns the watt
+            // budget, background sheds at any overage and standard only
+            // past the deeper [`STANDARD_SHED_OVERAGE`] deficit; realtime
+            // never power-sheds.  Counted per tenant, per window, and in
+            // the run-level `Telemetry::power_shed` — never silent.
+            let overage = match self.slots[k].w.qos {
+                QosClass::Realtime => None,
+                QosClass::Standard => Some(STANDARD_SHED_OVERAGE),
+                QosClass::Background => Some(1.0),
+            };
+            if let (Some(factor), Some((rolling, budget))) = (overage, engine.power_state(start)) {
+                if rolling > budget * factor {
+                    let n = batch.real_count() as u64;
+                    self.slots[k].shed += n;
+                    self.power_shed += n;
+                    self.win(now).wt(k).shed += n;
+                    self.slots[k].batcher.recycle(batch.frames);
+                    continue;
+                }
+            }
             engine.submit(&batch)?;
             // The engine cloned what outlives the submit; the frame
             // buffer goes back to the tenant's batcher for reuse.
@@ -630,6 +654,7 @@ pub fn run_daemon_with_ready(
         ready: ReadyQueue::with_tenants(ready_kind, n_joins),
         windows: BTreeMap::new(),
         stale: 0,
+        power_shed: 0,
         joins: 0,
         leaves: 0,
         rerates: 0,
@@ -664,6 +689,7 @@ pub fn run_daemon_with_ready(
 
     let mut telemetry = engine.take_telemetry();
     telemetry.stale_events = d.stale;
+    telemetry.power_shed += d.power_shed;
     if let Some(w) = clock.wall_elapsed() {
         telemetry.measured_elapsed_s = Some(w.as_secs_f64());
     }

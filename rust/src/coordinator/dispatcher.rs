@@ -33,13 +33,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::campaign::{CampaignSpec, FaultCalendar, PowerSchedule, RecalSpec};
 use crate::coordinator::clock::SimClock;
 use crate::coordinator::config::Mode;
 use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
+use crate::coordinator::plan_cache;
 use crate::coordinator::policy::{Constraints, ModeProfile};
 use crate::coordinator::scheduler::{decode_batch, prepare_batch, Backend, PoseEstimate};
 use crate::coordinator::substrate::SubstrateId;
-use crate::coordinator::telemetry::{BackendRecord, Telemetry};
+use crate::coordinator::telemetry::{BackendRecord, PowerRecord, Telemetry};
 use crate::pose::Pose;
 
 /// One pool member: a backend plus its routing state.
@@ -63,6 +65,9 @@ struct PoolEntry {
     /// Observed host inference time (fallback service estimator).
     observed_s: f64,
     observed_n: usize,
+    /// EWMA of *observed* per-frame service seconds (the recalibration
+    /// signal, DESIGN.md §4.16); `None` until the first serve.
+    ewma_s: Option<f64>,
     // -- accounting ---------------------------------------------------------
     batches: usize,
     frames: usize,
@@ -91,6 +96,24 @@ impl PoolEntry {
     fn estimated_completion(&self, t_ready: Duration, artifact_batch: usize, cost: f64) -> Duration {
         self.busy_until.max(t_ready) + self.service_estimate(artifact_batch, cost)
     }
+
+    /// Modeled draw while this backend serves (watts).  Uncharacterized
+    /// or energy-infeasible entries contribute 0 — their draw is unknown,
+    /// so the budget cannot meaningfully count them.
+    fn entry_power_w(&self) -> f64 {
+        self.profile
+            .as_ref()
+            .map(|p| p.power_w())
+            .filter(|w| w.is_finite())
+            .unwrap_or(0.0)
+    }
+}
+
+/// Per power-window accounting (peak modeled draw, steered dispatches).
+#[derive(Debug, Clone, Copy, Default)]
+struct PowerAccum {
+    peak_w: f64,
+    steered: u64,
 }
 
 /// Policy-routed pool of inference backends.
@@ -104,6 +127,20 @@ pub struct Dispatcher {
     clock: SimClock,
     /// Executed batches awaiting [`Engine::poll`].
     completed: Vec<Completion>,
+    // -- campaign state (DESIGN.md §4.16; all empty outside a campaign) -----
+    /// Scheduled substrate fault windows routed around during storms.
+    calendar: FaultCalendar,
+    /// Eclipse watt budget; routing steers to keep the modeled rolling
+    /// draw under the window in force.
+    power: PowerSchedule,
+    /// One accumulator per power window (same indices as the schedule).
+    power_accum: Vec<PowerAccum>,
+    /// Online-recalibration config (`None` = frozen profiles).
+    recal: Option<RecalSpec>,
+    /// Candidates excluded from routing by an active storm window.
+    storm_excluded: u64,
+    /// Profile rewrites triggered by modeled-vs-observed divergence.
+    recalibrations: u64,
     pub telemetry: Telemetry,
 }
 
@@ -117,8 +154,27 @@ impl Dispatcher {
             constraints,
             clock: SimClock::new(),
             completed: Vec::new(),
+            calendar: FaultCalendar::default(),
+            power: PowerSchedule::default(),
+            power_accum: Vec::new(),
+            recal: None,
+            storm_excluded: 0,
+            recalibrations: 0,
             telemetry: Telemetry::new(),
         }
+    }
+
+    /// Arm the space-environment campaign (DESIGN.md §4.16): storm
+    /// calendar, eclipse power budget, and online recalibration.  Drift
+    /// is applied at backend construction (`SimBackend::with_drift`);
+    /// the dispatcher only observes it through
+    /// [`Backend::modeled_service_s`].
+    pub fn with_campaign(mut self, spec: &CampaignSpec) -> Dispatcher {
+        self.calendar = spec.calendar();
+        self.power = spec.power.clone();
+        self.power_accum = vec![PowerAccum::default(); self.power.windows().len()];
+        self.recal = spec.recal;
+        self
     }
 
     /// Add a backend to the pool.  `profile` drives routing and constraint
@@ -134,6 +190,7 @@ impl Dispatcher {
             inflight: VecDeque::new(),
             observed_s: 0.0,
             observed_n: 0,
+            ewma_s: None,
             batches: 0,
             frames: 0,
             failures: 0,
@@ -180,6 +237,49 @@ impl Dispatcher {
             ca.cmp(&cb)
         });
 
+        // Storm windows: substrates inside an active fault window are
+        // routed around; they re-enter the pool the instant the window
+        // closes (time-indexed oracle, so replay is bit-identical).  If
+        // *every* candidate is stormed the full list stands — availability
+        // over outage, the failover loop still serves the frame.
+        if !self.calendar.is_empty() {
+            let healthy: Vec<usize> = order
+                .iter()
+                .copied()
+                .filter(|&i| !self.calendar.faulted(self.entries[i].substrate.name(), t_ready))
+                .collect();
+            if !healthy.is_empty() && healthy.len() < order.len() {
+                self.storm_excluded += (order.len() - healthy.len()) as u64;
+                order = healthy;
+            }
+        }
+
+        // Eclipse budget: stable-partition the candidates so dispatches
+        // that keep the modeled rolling draw within the window's budget
+        // come first (steering to low-energy modes).  If nothing fits the
+        // least-completion candidate still serves — realtime work is never
+        // starved by the budget; the pump sheds lower classes instead.
+        if let Some(budget) = self.power.budget_at(t_ready) {
+            let rolling = self.modeled_power_w(t_ready);
+            let first = order.first().copied();
+            let (mut fitting, rest): (Vec<usize>, Vec<usize>) = order.iter().partition(|&&i| {
+                let e = &self.entries[i];
+                let draw = e.entry_power_w();
+                let after = if e.busy_until > t_ready { rolling } else { rolling + draw };
+                after <= budget
+            });
+            if !fitting.is_empty() {
+                let steered = fitting.first().copied() != first;
+                fitting.extend(rest);
+                order = fitting;
+                if steered {
+                    if let Some(w) = self.power.window_index_at(t_ready) {
+                        self.power_accum[w].steered += 1;
+                    }
+                }
+            }
+        }
+
         let mut last_err = None;
         for idx in order {
             let service = self.entries[idx].service_estimate(self.batch, batch.cost);
@@ -192,11 +292,18 @@ impl Dispatcher {
                     entry.observed_s += infer_time.as_secs_f64();
                     entry.observed_n += 1;
                     // Uncharacterized backends are charged their measured
-                    // host time; modeled ones their profile service time.
-                    let service = if entry.profile.is_some() {
-                        service
-                    } else {
-                        infer_time
+                    // host time; modeled ones their profile service time —
+                    // unless the substrate reports a drifted per-frame
+                    // service, in which case the *actual* degraded time is
+                    // charged (routing estimates keep using the profile,
+                    // which is exactly the divergence recalibration chases).
+                    let modeled_s = entry.backend.modeled_service_s();
+                    let service = match (&entry.profile, modeled_s) {
+                        (Some(_), Some(per_frame)) => {
+                            Duration::from_secs_f64(per_frame * self.batch as f64 * batch.cost)
+                        }
+                        (Some(_), None) => service,
+                        (None, _) => infer_time,
                     };
                     while entry.inflight.front().is_some_and(|&c| c <= t_ready) {
                         entry.inflight.pop_front();
@@ -223,6 +330,15 @@ impl Dispatcher {
                         lead_in: Duration::ZERO,
                         service,
                     };
+                    self.recalibrate(idx, modeled_s);
+                    if let Some(w) = self.power.window_index_at(t_ready) {
+                        // Rolling draw only decays between dispatches, so
+                        // sampling at dispatch instants captures the peak.
+                        let rolling = self.modeled_power_w(t_ready);
+                        if rolling > self.power_accum[w].peak_w {
+                            self.power_accum[w].peak_w = rolling;
+                        }
+                    }
                     return Ok((estimates, completion, span));
                 }
                 Err(e) => {
@@ -237,6 +353,44 @@ impl Dispatcher {
         Err(last_err
             .unwrap_or_else(|| anyhow!("pool dispatch failed"))
             .context("every feasible backend rejected the batch"))
+    }
+
+    /// Modeled rolling power at simulated instant `t`: the summed draw of
+    /// every backend still serving backlog (`busy_until > t`), each at
+    /// its profile's energy-per-frame over service time.
+    fn modeled_power_w(&self, t: Duration) -> f64 {
+        self.entries
+            .iter()
+            .filter(|e| e.busy_until > t)
+            .map(|e| e.entry_power_w())
+            .sum()
+    }
+
+    /// Online recalibration (DESIGN.md §4.16): fold the just-observed
+    /// per-frame service into the entry's EWMA; once modeled vs observed
+    /// diverge past the threshold, rewrite the routing profile to the
+    /// observed time and evict plan-cache entries built from the stale
+    /// one.  `observed_per_frame_s` is `None` when the substrate reports
+    /// no drift — the observation then equals the profile and the EWMA
+    /// can never diverge, so un-drifted campaigns replay bit-identically.
+    fn recalibrate(&mut self, idx: usize, observed_per_frame_s: Option<f64>) {
+        let Some(recal) = self.recal else { return };
+        let entry = &mut self.entries[idx];
+        let Some(p) = entry.profile.as_mut() else { return };
+        let modeled = p.total_ms / 1e3;
+        let obs = observed_per_frame_s.unwrap_or(modeled);
+        let ewma = match entry.ewma_s {
+            Some(e) => recal.alpha * obs + (1.0 - recal.alpha) * e,
+            None => obs,
+        };
+        entry.ewma_s = Some(ewma);
+        if modeled > 0.0 && ((ewma - modeled).abs() / modeled) > recal.threshold {
+            let scale = ewma / modeled;
+            p.total_ms = ewma * 1e3;
+            p.inference_ms *= scale;
+            self.recalibrations += 1;
+            plan_cache::invalidate_global(&[entry.substrate.name()]);
+        }
     }
 
     /// Close accounting: compute utilization over the run window and move
@@ -264,6 +418,19 @@ impl Dispatcher {
                 max_queue_depth: e.max_queue_depth,
             });
         }
+        // Campaign accounting — one record per budget window, including
+        // untouched ones ("never silent"), plus the storm/recal counters.
+        for (i, w) in self.power.windows().iter().enumerate() {
+            let a = self.power_accum.get(i).copied().unwrap_or_default();
+            self.telemetry.power.push(PowerRecord {
+                from: w.from,
+                budget_w: w.watts,
+                peak_w: a.peak_w,
+                steered: a.steered,
+            });
+        }
+        self.telemetry.storm_excluded += self.storm_excluded;
+        self.telemetry.recalibrations += self.recalibrations;
     }
 }
 
@@ -305,6 +472,16 @@ impl Engine for Dispatcher {
 
     fn fault_count(&self) -> usize {
         self.entries.iter().map(|e| e.failures).sum()
+    }
+
+    fn modeled_power_w(&self, t: Duration) -> f64 {
+        Dispatcher::modeled_power_w(self, t)
+    }
+
+    fn power_state(&self, t: Duration) -> Option<(f64, f64)> {
+        self.power
+            .budget_at(t)
+            .map(|b| (Dispatcher::modeled_power_w(self, t), b))
     }
 
     fn drain(&mut self) -> Result<()> {
@@ -550,6 +727,172 @@ mod tests {
         // An empty pool errors (no panic) through the trait surface.
         let empty = Dispatcher::new(4, 6, 8, Constraints::default());
         assert!(Engine::primary_mode(&empty).is_err());
+    }
+
+    #[test]
+    fn storm_window_routes_around_then_restores() {
+        use crate::coordinator::campaign::{CampaignSpec, FaultSpec};
+        let spec = CampaignSpec {
+            faults: FaultSpec::parse("dpu@0:recover=1").unwrap(),
+            ..Default::default()
+        };
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+        ])
+        .with_campaign(&spec);
+        // Inside the storm window the faster DPU is routed around.
+        d.execute(&batch(&[0], 40)).unwrap();
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+        // After recovery the DPU serves again.
+        d.execute(&batch(&[1], 1100)).unwrap();
+        assert_eq!(d.telemetry.records.last().unwrap().mode, "dpu-int8");
+        d.finish();
+        assert_eq!(d.telemetry.storm_excluded, 1);
+        // No power budget armed: no window records, no power state.
+        assert!(d.telemetry.power.is_empty());
+        assert!(Engine::power_state(&d, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn correlated_storm_hitting_every_substrate_still_serves() {
+        use crate::coordinator::campaign::{CampaignSpec, FaultSpec};
+        let spec = CampaignSpec {
+            faults: FaultSpec::parse("dpu+vpu@0:recover=1").unwrap(),
+            ..Default::default()
+        };
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+        ])
+        .with_campaign(&spec);
+        // Every candidate is stormed: availability wins — the full order
+        // stands and the least-completion backend serves the frame.
+        let (est, _, _) = d.execute(&batch(&[0], 40)).unwrap();
+        assert_eq!(est.len(), 1);
+        assert_eq!(d.telemetry.records[0].mode, "dpu-int8");
+        d.finish();
+        assert_eq!(d.telemetry.storm_excluded, 0);
+    }
+
+    #[test]
+    fn eclipse_budget_steers_to_low_power_mode() {
+        use crate::coordinator::campaign::{CampaignSpec, PowerSchedule};
+        // DPU: 1.2 J over 60 ms = 20 W.  VPU: 1.0 J over 250 ms = 4 W.
+        let mut dpu = profile(Mode::DpuInt8, 60.0, 0.96);
+        dpu.energy_j = 1.2;
+        let mut vpu = profile(Mode::VpuFp16, 250.0, 0.69);
+        vpu.energy_j = 1.0;
+        assert_eq!(dpu.power_w(), 20.0);
+        assert_eq!(vpu.power_w(), 4.0);
+        let spec = CampaignSpec {
+            power: PowerSchedule::parse("0=10").unwrap(),
+            ..Default::default()
+        };
+        let mut d = pool(vec![
+            (mock(Mode::DpuInt8, None), Some(dpu)),
+            (mock(Mode::VpuFp16, None), Some(vpu)),
+        ])
+        .with_campaign(&spec);
+        // Unbudgeted the DPU would win on completion time; under a 10 W
+        // budget only the 4 W VPU fits, so routing steers to it.
+        d.execute(&batch(&[0], 10)).unwrap();
+        assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+        // While the VPU serves its backlog the modeled rolling draw is
+        // its 4 W, against the 10 W budget.
+        assert_eq!(
+            Engine::power_state(&d, Duration::from_millis(10)),
+            Some((4.0, 10.0))
+        );
+        d.finish();
+        assert_eq!(d.telemetry.power.len(), 1);
+        let w = &d.telemetry.power[0];
+        assert_eq!((w.budget_w, w.peak_w, w.steered), (10.0, 4.0, 1));
+    }
+
+    /// A mock whose modeled service degrades with every serve — the
+    /// campaign-drift observable without a full `SimBackend`.
+    struct DriftingMock {
+        inner: MockBackend,
+        base_s: f64,
+        rate: f64,
+        cap: f64,
+        served: usize,
+    }
+
+    impl Backend for DriftingMock {
+        fn mode(&self) -> Mode {
+            self.inner.mode
+        }
+
+        fn infer(
+            &mut self,
+            images: &crate::runtime::tensor::Tensor,
+        ) -> Result<(crate::runtime::tensor::Tensor, crate::runtime::tensor::Tensor)> {
+            self.served += 1;
+            self.inner.infer(images)
+        }
+
+        fn observe_truths(&mut self, truths: &[Pose]) {
+            self.inner.observe_truths(truths)
+        }
+
+        fn modeled_service_s(&self) -> Option<f64> {
+            Some(self.base_s * (1.0 + self.rate * self.served as f64).min(self.cap))
+        }
+    }
+
+    #[test]
+    fn recalibration_follows_drift_and_reroutes() {
+        use crate::coordinator::campaign::{CampaignSpec, RecalSpec};
+        let drifting = DriftingMock {
+            inner: MockBackend {
+                mode: Mode::DpuInt8,
+                bias: 0.0,
+                calls: 0,
+                fail_every: None,
+                truths: vec![
+                    Pose {
+                        loc: [0.0, 0.0, 5.0],
+                        quat: [1.0, 0.0, 0.0, 0.0],
+                    };
+                    4
+                ],
+            },
+            base_s: 0.06,
+            rate: 1.0,
+            cap: 6.0,
+            served: 0,
+        };
+        let spec = CampaignSpec {
+            recal: Some(RecalSpec {
+                alpha: 0.5,
+                threshold: 0.2,
+            }),
+            ..Default::default()
+        };
+        let mut d = pool(vec![
+            (Box::new(drifting), Some(profile(Mode::DpuInt8, 60.0, 0.96))),
+            (mock(Mode::VpuFp16, None), Some(profile(Mode::VpuFp16, 250.0, 0.69))),
+        ])
+        .with_campaign(&spec);
+        // The DPU profile says 60 ms/frame but the hardware degrades with
+        // every serve; the EWMA chases the observed time, rewrites the
+        // profile past the 20% divergence threshold, and routing abandons
+        // the drifted substrate once its recalibrated time beats 250 ms.
+        for k in 0..20u64 {
+            d.execute(&batch(&[k], 10 * (k + 1))).unwrap();
+        }
+        d.finish();
+        assert!(
+            d.telemetry.recalibrations >= 1,
+            "drift past threshold must recalibrate"
+        );
+        assert_eq!(
+            d.telemetry.records.last().unwrap().mode,
+            "vpu-fp16",
+            "recalibrated routing must abandon the drifted substrate"
+        );
     }
 
     #[test]

@@ -63,6 +63,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::campaign::STANDARD_SHED_OVERAGE;
 use crate::coordinator::clock::Clock;
 use crate::coordinator::config::{Config, Mode, Workload};
 use crate::coordinator::pipeline::plan_or_build;
@@ -151,6 +152,19 @@ pub trait Engine {
     /// Substrate faults observed so far (failed infer attempts that were
     /// failed over).
     fn fault_count(&self) -> usize;
+    /// Modeled rolling power draw at simulated instant `t` (watts): the
+    /// summed energy-per-frame-over-service draw of every substrate still
+    /// serving backlog.  Default 0 for engines without an energy model.
+    fn modeled_power_w(&self, _t: Duration) -> f64 {
+        0.0
+    }
+    /// `(rolling watts, budget watts)` when an eclipse power budget
+    /// (DESIGN.md §4.16) is in force at `t`; `None` outside a campaign or
+    /// before the budget's first window.  The serve pumps use this to
+    /// shed background/standard work while the fleet overruns.
+    fn power_state(&self, _t: Duration) -> Option<(f64, f64)> {
+        None
+    }
     /// Close accounting (utilization/occupancy records).  An asynchronous
     /// engine (the threaded executor) finishes its in-flight work here, so
     /// callers must issue one final [`Engine::poll`] *after* draining.
@@ -793,6 +807,7 @@ pub fn run_workloads_with_events(
     let mut ready = ReadyQueue::with_tenants(events, tenants.len());
     let mut queue = EventQueue::new(events, &tenants);
     let mut stale = 0u64;
+    let mut power_shed = 0u64;
     loop {
         let Some((now, event, k)) = queue.next(&tenants) else {
             break;
@@ -826,6 +841,27 @@ pub fn run_workloads_with_events(
                 t.batcher.recycle(batch.frames);
                 continue;
             }
+            // Eclipse power shed (DESIGN.md §4.16): while the modeled
+            // rolling draw overruns the watt budget, background sheds at
+            // any overage and standard only past the deeper
+            // [`STANDARD_SHED_OVERAGE`] deficit; realtime never
+            // power-sheds.  Counted per tenant AND in the run-level
+            // `Telemetry::power_shed` — never silent.
+            let overage = match t.w.qos {
+                QosClass::Realtime => None,
+                QosClass::Standard => Some(STANDARD_SHED_OVERAGE),
+                QosClass::Background => Some(1.0),
+            };
+            if let (Some(factor), Some((rolling, budget))) =
+                (overage, engine.power_state(start))
+            {
+                if rolling > budget * factor {
+                    t.shed += batch.real_count() as u64;
+                    power_shed += batch.real_count() as u64;
+                    t.batcher.recycle(batch.frames);
+                    continue;
+                }
+            }
             engine.submit(&batch)?;
             tenants[batch.tenant].batcher.recycle(batch.frames);
         }
@@ -848,6 +884,7 @@ pub fn run_workloads_with_events(
 
     let mut telemetry = engine.take_telemetry();
     telemetry.stale_events = stale;
+    telemetry.power_shed += power_shed;
     if let Some(d) = clock.wall_elapsed() {
         telemetry.measured_elapsed_s = Some(d.as_secs_f64());
     }

@@ -329,6 +329,15 @@ impl Engine for ThreadedExecutor {
         self.inner.fault_count()
     }
 
+    /// Campaign power is modeled on the inner engine's virtual timeline.
+    fn modeled_power_w(&self, t: Duration) -> f64 {
+        self.inner.modeled_power_w(t)
+    }
+
+    fn power_state(&self, t: Duration) -> Option<(f64, f64)> {
+        self.inner.power_state(t)
+    }
+
     /// Wait for every in-flight chain, then close the inner accounting.
     fn drain(&mut self) -> Result<()> {
         while !self.inflight.is_empty() {

@@ -6,6 +6,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod builder;
+pub mod campaign;
 pub mod clock;
 pub mod cluster;
 pub mod config;
@@ -27,6 +28,10 @@ pub mod trace;
 pub use backend::PjrtBackend;
 pub use batcher::{Batch, Batcher};
 pub use builder::{EngineBuilder, ServeSession};
+pub use campaign::{
+    parse_campaign_file, CampaignSpec, DriftSpec, FaultCalendar, FaultKind, FaultSpec,
+    FaultTarget, PowerSchedule, PowerWindow, RecalSpec, STANDARD_SHED_OVERAGE,
+};
 pub use clock::{Clock, ServiceMode, SimClock, WallClock};
 pub use cluster::{Cluster, ClusterSpec, NodeKill, DEFAULT_REBALANCE_WINDOW, NODE_CLASSES};
 pub use config::{
@@ -55,7 +60,7 @@ pub use server::run_with_engine;
 pub use server::{run, run_with_backend, run_with_pipeline, run_with_pool, serve_daemon};
 pub use sim::SimBackend;
 pub use substrate::{SubstrateId, TenantId};
-pub use telemetry::{BackendRecord, FrameRecord, StageRecord, Telemetry, TenantRecord};
+pub use telemetry::{BackendRecord, FrameRecord, PowerRecord, StageRecord, Telemetry, TenantRecord};
 pub use trace::{
     parse_trace_file, ArrivalPattern, ChurnAction, ChurnEvent, TenantTrace, TraceSource,
 };

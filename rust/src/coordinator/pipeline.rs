@@ -32,6 +32,7 @@ use crate::accel::estimate::{latency_from_stages, stage_latencies};
 use crate::accel::interconnect::Link;
 use crate::accel::traits::Accelerator;
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::campaign::{CampaignSpec, FaultCalendar};
 use crate::coordinator::clock::SimClock;
 use crate::coordinator::config::{ManualStage, Mode, PartitionSpec};
 use crate::coordinator::engine::{Completion, Engine, ServiceSpan};
@@ -485,6 +486,14 @@ pub struct PipelinedDispatcher {
     clock: SimClock,
     /// Executed batches awaiting [`Engine::poll`].
     completed: Vec<Completion>,
+    /// Scheduled outage windows (campaign fault storms): plans touching a
+    /// stormed substrate are skipped while the window is open and resume
+    /// on recovery — the calendar analogue of the reactive stage-fault
+    /// failover above.
+    calendar: FaultCalendar,
+    /// Plans passed over because a storm window covered one of their
+    /// stages (folded into [`Telemetry::storm_excluded`] at finish).
+    storm_excluded: u64,
     pub telemetry: Telemetry,
 }
 
@@ -506,8 +515,21 @@ impl PipelinedDispatcher {
             net_w,
             clock: SimClock::new(),
             completed: Vec::new(),
+            calendar: FaultCalendar::default(),
+            storm_excluded: 0,
             telemetry: Telemetry::new(),
         })
+    }
+
+    /// Arm the dispatcher with a campaign's fault-storm calendar.  Power
+    /// budgets are enforced upstream by the serve pump (whole-run
+    /// [`Engine::power_state`]) and drift rides on the backends, so only
+    /// the storm axis lands here: during a window every plan touching a
+    /// stormed substrate is skipped (counted, never silent), and the
+    /// ranked order is restored the instant the window closes.
+    pub fn with_campaign(mut self, spec: &CampaignSpec) -> PipelinedDispatcher {
+        self.calendar = spec.calendar();
+        self
     }
 
     /// Build a dispatcher straight from a partition request, resolving
@@ -591,6 +613,31 @@ impl PipelinedDispatcher {
         let t_ready = batch.t_ready;
         self.clock.advance_to(t_ready);
 
+        // Campaign storm windows: drop plans whose stages touch a substrate
+        // inside an open window at this batch's ready instant.  When the
+        // storm is total (every plan touches a stormed substrate) the full
+        // ranked list stands — availability beats the outage model, the
+        // same rule the whole-frame pool applies.
+        let storm_ok: Vec<bool> = if self.calendar.is_empty() {
+            vec![true; self.plans.len()]
+        } else {
+            let mut ok: Vec<bool> = self
+                .plans
+                .iter()
+                .map(|p| {
+                    !p.stages
+                        .iter()
+                        .any(|s| self.calendar.faulted(s.accel.name(), t_ready))
+                })
+                .collect();
+            if ok.iter().all(|&b| !b) {
+                ok = vec![true; self.plans.len()];
+            } else {
+                self.storm_excluded += ok.iter().filter(|&&b| !b).count() as u64;
+            }
+            ok
+        };
+
         let mut faulted: BTreeSet<SubstrateId> = BTreeSet::new();
         let mut last_err: Option<anyhow::Error> = None;
         // Split the borrows: plans are read while slots/telemetry mutate.
@@ -600,7 +647,10 @@ impl PipelinedDispatcher {
             telemetry,
             ..
         } = self;
-        'plans: for plan in plans.iter() {
+        'plans: for (plan, ok) in plans.iter().zip(&storm_ok) {
+            if !ok {
+                continue;
+            }
             if plan.stages.iter().any(|s| faulted.contains(&s.accel)) {
                 continue;
             }
@@ -700,6 +750,8 @@ impl PipelinedDispatcher {
     /// [`StageRecord`] per substrate.  Call once, after the last batch
     /// (the public path is [`Engine::drain`]).
     fn finish(&mut self) {
+        self.telemetry.storm_excluded += self.storm_excluded;
+        self.storm_excluded = 0;
         let window = self
             .slots
             .values()
@@ -1068,6 +1120,54 @@ mod tests {
         assert_eq!((vpu.failures, vpu.batches, vpu.frames), (0, 1, 2));
         // The batch was served by the fallback's mode.
         assert_eq!(d.telemetry.records[0].mode, "vpu-fp16");
+    }
+
+    #[test]
+    fn storm_window_excludes_plans_then_restores() {
+        use crate::coordinator::campaign::{CampaignSpec, FaultSpec};
+        let spec = CampaignSpec {
+            faults: FaultSpec::parse("dpu@0:recover=1").unwrap(),
+            ..Default::default()
+        };
+        let mut d = PipelinedDispatcher::new(vec![toy_plan(), vpu_fallback_plan()], 4, 6, 8)
+            .unwrap()
+            .with_campaign(&spec);
+        d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
+        d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
+
+        // Inside the storm window the two-stage primary (it engages the
+        // stormed dpu) is skipped: the batch serves on the vpu fallback
+        // and the exclusion is counted, never silent.
+        let (_, _, spans) = d.execute(&batch(&[0, 1], 40)).unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].substrate.name(), "vpu");
+        // The window is [0, 1 s): after recovery the primary serves again.
+        let (_, _, spans) = d.execute(&batch(&[2, 3], 1100)).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].substrate.name(), "dpu");
+        d.finish();
+        assert_eq!(d.telemetry.storm_excluded, 1);
+    }
+
+    #[test]
+    fn total_storm_keeps_serving_from_full_plan_list() {
+        use crate::coordinator::campaign::{CampaignSpec, FaultSpec};
+        let spec = CampaignSpec {
+            faults: FaultSpec::parse("dpu+vpu@0").unwrap(),
+            ..Default::default()
+        };
+        let mut d = PipelinedDispatcher::new(vec![toy_plan(), vpu_fallback_plan()], 4, 6, 8)
+            .unwrap()
+            .with_campaign(&spec);
+        d.add_stage_backend("dpu", sim(Mode::DpuInt8, 1, None));
+        d.add_stage_backend("vpu", sim(Mode::VpuFp16, 2, None));
+        // Every plan touches a stormed substrate: availability beats the
+        // outage model — the ranked order stands and the primary serves.
+        let (est, _, spans) = d.execute(&batch(&[0, 1], 40)).unwrap();
+        assert_eq!(est.len(), 2);
+        assert_eq!(spans.len(), 2);
+        d.finish();
+        assert_eq!(d.telemetry.storm_excluded, 0);
     }
 
     #[test]

@@ -303,6 +303,35 @@ impl PlanCache {
         self.entries.is_empty()
     }
 
+    /// Evict every entry whose plans run a stage on any of `substrates`
+    /// (storm-target matching: accel names and mode labels both hit).
+    /// Returns the number of keys evicted.  Untouched keys keep serving —
+    /// online recalibration (DESIGN.md §4.16) must never dump plans for
+    /// substrates whose profiles did not move, and after the eviction a
+    /// lookup rebuilds from the rewritten profile, so no stale plan is
+    /// ever served (property-tested in `coordinator::pipeline`).
+    pub fn invalidate_substrates(&mut self, substrates: &[&str]) -> usize {
+        let doomed: Vec<CacheKey> = self
+            .entries
+            .iter()
+            .filter(|(_, plans)| {
+                plans.iter().any(|p| {
+                    p.stages.iter().any(|s| {
+                        substrates
+                            .iter()
+                            .any(|t| crate::coordinator::campaign::target_matches(t, s.accel.name()))
+                    })
+                })
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &doomed {
+            self.entries.remove(k);
+            self.order.retain(|o| o != k);
+        }
+        doomed.len()
+    }
+
     /// Drop every entry and reset the counters (tests, benches).
     pub fn clear(&mut self) {
         self.entries.clear();
@@ -341,6 +370,13 @@ pub fn with_global<R>(f: impl FnOnce(&mut PlanCache) -> R) -> R {
 /// Counters of the process-wide cache.
 pub fn global_stats() -> PlanCacheStats {
     with_global(|c| c.stats())
+}
+
+/// Evict process-wide entries touching any of `substrates` (the
+/// recalibration hook: a rewritten profile must not keep serving plans
+/// built from the stale one).  Returns the number of keys evicted.
+pub fn invalidate_global(substrates: &[&str]) -> usize {
+    with_global(|c| c.invalidate_substrates(substrates))
 }
 
 #[cfg(test)]
@@ -520,6 +556,89 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert_eq!(c.stats().evictions, 0);
         assert_eq!(c.lookup(&k).unwrap()[0].label, "new");
+    }
+
+    #[test]
+    fn invalidation_evicts_only_matching_keys() {
+        use crate::coordinator::pipeline::StagePlan;
+        use std::time::Duration;
+        fn staged(accel: &str) -> Vec<PipelinePlan> {
+            vec![PipelinePlan {
+                label: format!("{accel} only"),
+                stages: vec![StagePlan {
+                    accel: SubstrateId::intern(accel),
+                    layers: (0, 1),
+                    service: Duration::from_millis(5),
+                    transfer: Duration::ZERO,
+                }],
+                steady_fps: 10.0,
+                serving_profile: None,
+            }]
+        }
+        let mut c = PlanCache::new(8);
+        let k_dpu = key(&["dpu"], &Constraints::default(), 4);
+        let k_vpu = key(&["vpu"], &Constraints::default(), 4);
+        c.insert(k_dpu.clone(), staged("dpu"));
+        c.insert(k_vpu.clone(), staged("vpu"));
+        // A mode-label target ("dpu-int8") hits accel-named stages
+        // ("dpu") through the storm-target naming bridge; the untouched
+        // substrate's entry keeps serving.
+        assert_eq!(c.invalidate_substrates(&["dpu-int8"]), 1);
+        assert!(c.lookup(&k_dpu).is_none(), "dpu entry must be evicted");
+        assert!(c.lookup(&k_vpu).is_some(), "vpu entry must survive");
+        assert_eq!(c.stats().entries, 1);
+        // Invalidating a substrate nothing references is a no-op.
+        assert_eq!(c.invalidate_substrates(&["tpu"]), 0);
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn invalidated_lookup_rebuilds_identical_to_cold_cache() {
+        // The recalibration contract: after invalidation the next
+        // `plan_or_build_in` miss re-runs the sweep, and its decisions
+        // are bit-identical to a cold cache's — no stale plan, no
+        // invalidation-shaped drift.
+        use crate::coordinator::pipeline::plan_or_build_in;
+        let g = compile(&ursonet::build_full());
+        let pool = ids(&["dpu", "vpu"]);
+        let build = |c: &mut PlanCache| {
+            plan_or_build_in(
+                c,
+                &g,
+                &pool,
+                &crate::accel::links::USB3,
+                &Constraints::default(),
+                4,
+                &PartitionSpec::Auto,
+                &[],
+            )
+            .unwrap()
+        };
+        let mut warm = PlanCache::new(8);
+        let first = build(&mut warm);
+        assert_eq!(warm.invalidate_substrates(&["dpu"]), 1);
+        let rebuilt = build(&mut warm);
+        let mut cold = PlanCache::new(8);
+        let cold_built = build(&mut cold);
+        let sig = |plans: &[PipelinePlan]| {
+            plans
+                .iter()
+                .map(|p| {
+                    (
+                        p.label.clone(),
+                        p.steady_fps.to_bits(),
+                        p.stages
+                            .iter()
+                            .map(|s| (s.accel.name().to_string(), s.layers))
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(sig(&rebuilt), sig(&cold_built), "rebuild diverged from cold");
+        assert_eq!(sig(&rebuilt), sig(&first), "rebuild diverged from pre-invalidation");
+        // One miss to seed, one miss after the eviction.
+        assert_eq!(warm.stats().misses, 2);
     }
 
     #[test]

@@ -34,7 +34,42 @@ pub struct ModeProfile {
     pub loce_m: f64,
     pub orie_deg: f64,
     /// Modeled energy per frame (J).
+    ///
+    /// **Contract:** an energy-infeasible mode (power model missing or
+    /// uncharacterized) is marked `f64::INFINITY`, never NaN.  Infinity
+    /// fails every set `max_energy_j` bound, sorts *after* every finite
+    /// energy under `Objective::MinEnergy` (`total_cmp`), and — unlike the
+    /// NaN it replaces — is totally ordered, so `MinEnergy` selection over
+    /// a mixed feasible/infeasible table is deterministic.  Producers go
+    /// through [`ModeProfile::feasible_energy`] to uphold this.
     pub energy_j: f64,
+}
+
+impl ModeProfile {
+    /// Normalize a modeled per-frame energy to the `energy_j` contract:
+    /// any non-finite or negative value (NaN from a hole in the power
+    /// model, a negative from a malformed calibration) becomes the
+    /// explicit infeasible marker `f64::INFINITY`.
+    pub fn feasible_energy(energy_j: f64) -> f64 {
+        if energy_j.is_finite() && energy_j >= 0.0 {
+            energy_j
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Modeled average power draw (W) while a frame of this mode is in
+    /// service: `energy_j / total_s`.  Infinite for an energy-infeasible
+    /// mode or a degenerate (non-positive) service time, so an
+    /// uncharacterized mode never fits inside a finite watt budget.
+    pub fn power_w(&self) -> f64 {
+        let service_s = self.total_ms / 1e3;
+        if self.energy_j.is_finite() && service_s > 0.0 {
+            self.energy_j / service_s
+        } else {
+            f64::INFINITY
+        }
+    }
 }
 
 /// Service class of a multi-tenant workload.  Classes are served under
@@ -81,8 +116,10 @@ pub struct Constraints {
 }
 
 impl Constraints {
-    /// Whether a profile satisfies every set constraint.  A NaN metric
-    /// (mode missing from the manifest) fails any bound set on it, so an
+    /// Whether a profile satisfies every set constraint.  Admission is
+    /// inclusive at the bound (`value <= max`).  A NaN metric (mode
+    /// missing from the manifest) or the explicit `f64::INFINITY`
+    /// energy-infeasible marker fails any bound set on it, so an
     /// uncharacterized mode is never selected under constraints.
     pub fn admits(&self, p: &ModeProfile) -> bool {
         fn within(limit: Option<f64>, value: f64) -> bool {
@@ -178,7 +215,7 @@ pub fn profile_modes(manifest: &Manifest) -> BTreeMap<Mode, ModeProfile> {
                 total_ms: (inference_s + pre_s) * 1e3,
                 loce_m: metrics.loce_m,
                 orie_deg: metrics.orie_deg,
-                energy_j: power.energy_j(busy_s, busy_s + pre_s),
+                energy_j: ModeProfile::feasible_energy(power.energy_j(busy_s, busy_s + pre_s)),
             },
         );
     }
@@ -343,6 +380,124 @@ mod tests {
             let sel = select(&with_nan, Constraints::default(), obj).unwrap();
             assert_ne!(sel.mode, Mode::CpuFp32, "{obj:?} picked the NaN mode");
         }
+    }
+
+    #[test]
+    fn infeasible_energy_is_infinity_not_nan() {
+        // Regression: a NaN energy used to *silently* fail `max_energy_j`
+        // admission while looking like a characterized value.  The
+        // contract is now an explicit marker: producers normalize through
+        // `feasible_energy`, so NaN / negative energies become INFINITY.
+        assert_eq!(ModeProfile::feasible_energy(f64::NAN), f64::INFINITY);
+        assert_eq!(ModeProfile::feasible_energy(f64::INFINITY), f64::INFINITY);
+        assert_eq!(ModeProfile::feasible_energy(-1.0), f64::INFINITY);
+        assert_eq!(ModeProfile::feasible_energy(0.0), 0.0);
+        assert_eq!(ModeProfile::feasible_energy(3.5), 3.5);
+        // Every profile the table produces honours the contract.
+        for prof in profile_modes(&manifest()).values() {
+            assert!(
+                !prof.energy_j.is_nan(),
+                "{:?} leaked a NaN energy",
+                prof.mode
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_energy_never_wins_min_energy() {
+        // An INFINITY-marked mode fails every set energy bound, is still
+        // admitted when unconstrained, and loses `MinEnergy` to any
+        // characterized mode — deterministically (INFINITY is ordered,
+        // unlike the NaN it replaces).
+        let mut p = profile_modes(&manifest());
+        p.get_mut(&Mode::DpuInt8).unwrap().energy_j = f64::INFINITY;
+        let marked = p[&Mode::DpuInt8];
+        assert!(Constraints::default().admits(&marked));
+        assert!(!Constraints {
+            max_energy_j: Some(1e12),
+            ..Default::default()
+        }
+        .admits(&marked));
+        let sel = select(&p, Constraints::default(), Objective::MinEnergy).unwrap();
+        assert_ne!(sel.mode, Mode::DpuInt8, "MinEnergy picked the infeasible mode");
+        assert!(sel.energy_j.is_finite());
+    }
+
+    #[test]
+    fn power_w_models_service_draw() {
+        let p = profile_modes(&manifest());
+        let dpu = p[&Mode::DpuInt8];
+        let expect = dpu.energy_j / (dpu.total_ms / 1e3);
+        assert!((dpu.power_w() - expect).abs() < 1e-9);
+        let infeasible = ModeProfile {
+            energy_j: f64::INFINITY,
+            ..dpu
+        };
+        assert_eq!(infeasible.power_w(), f64::INFINITY);
+        let degenerate = ModeProfile {
+            total_ms: 0.0,
+            ..dpu
+        };
+        assert_eq!(degenerate.power_w(), f64::INFINITY);
+    }
+
+    #[test]
+    fn admits_edge_cases_nan_inf_and_exact_bounds() {
+        let p = profile_modes(&manifest());
+        let dpu = p[&Mode::DpuInt8];
+
+        // Exactly-at-bound admission is inclusive on every axis.
+        assert!(Constraints {
+            max_total_ms: Some(dpu.total_ms),
+            max_loce_m: Some(dpu.loce_m),
+            max_orie_deg: Some(dpu.orie_deg),
+            max_energy_j: Some(dpu.energy_j),
+        }
+        .admits(&dpu));
+        // Epsilon under the bound rejects.
+        assert!(!Constraints {
+            max_total_ms: Some(dpu.total_ms * (1.0 - 1e-12)),
+            ..Default::default()
+        }
+        .admits(&dpu));
+
+        // An infinite bound admits every finite metric...
+        assert!(Constraints {
+            max_total_ms: Some(f64::INFINITY),
+            max_energy_j: Some(f64::INFINITY),
+            ..Default::default()
+        }
+        .admits(&dpu));
+        // ...including an INFINITY-marked metric (INFINITY <= INFINITY).
+        let marked = ModeProfile {
+            energy_j: f64::INFINITY,
+            ..dpu
+        };
+        assert!(Constraints {
+            max_energy_j: Some(f64::INFINITY),
+            ..Default::default()
+        }
+        .admits(&marked));
+
+        // A NaN *bound* admits nothing on that axis (value <= NaN is
+        // false): a corrupted constraint fails closed, not open.
+        assert!(!Constraints {
+            max_total_ms: Some(f64::NAN),
+            ..Default::default()
+        }
+        .admits(&dpu));
+
+        // NaN latency/accuracy metrics fail any set bound, pass unset.
+        let nan_lat = ModeProfile {
+            total_ms: f64::NAN,
+            ..dpu
+        };
+        assert!(Constraints::default().admits(&nan_lat));
+        assert!(!Constraints {
+            max_total_ms: Some(1e12),
+            ..Default::default()
+        }
+        .admits(&nan_lat));
     }
 
     #[test]

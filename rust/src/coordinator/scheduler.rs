@@ -36,6 +36,17 @@ pub trait Backend {
     /// (`SimBackend`); real backends ignore it (default no-op) — it never
     /// reaches the network input.
     fn observe_truths(&mut self, _truths: &[Pose]) {}
+    /// The backend's *current* modeled per-frame service time (s), if it
+    /// models one.  A drifting simulated substrate (campaign drift,
+    /// `SimBackend::with_drift`) reports its degraded time here so the
+    /// dispatcher charges what the hardware would actually take — the
+    /// observable that online recalibration (DESIGN.md §4.16) compares
+    /// against the frozen `ModeProfile`.  Default `None`: the dispatcher
+    /// keeps using the static profile / measured averages.
+    fn modeled_service_s(&self) -> Option<f64> {
+        None
+    }
+
     /// Execute stage `stage` of an `n_stages` pipeline on this backend.
     /// The default maps the final stage onto whole-network [`Backend::infer`]
     /// and passes features through unchanged on earlier stages — correct
@@ -69,6 +80,10 @@ impl Backend for Box<dyn Backend> {
 
     fn observe_truths(&mut self, truths: &[Pose]) {
         (**self).observe_truths(truths)
+    }
+
+    fn modeled_service_s(&self) -> Option<f64> {
+        (**self).modeled_service_s()
     }
 
     fn infer_stage(

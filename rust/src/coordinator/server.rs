@@ -95,13 +95,19 @@ pub(crate) fn build_pool_engine(config: &Config, manifest: &Manifest) -> Result<
                     sim = sim.with_fail_every(n);
                 }
             }
+            // Campaign drift rides on the backend: the profile stays
+            // frozen while the hardware degrades, which is exactly the
+            // gap online recalibration closes.
+            if let Some(d) = config.campaign.drift_for(mode.label()) {
+                sim = sim.with_drift(d.rate, d.cap);
+            }
             Box::new(sim)
         } else {
             Box::new(PjrtBackend::new(manifest, mode)?)
         };
         pool.add_backend(backend, profile);
     }
-    Ok(pool)
+    Ok(pool.with_campaign(&config.campaign))
 }
 
 /// Run with any single backend (mock in tests, PJRT in production) — a
@@ -237,7 +243,8 @@ pub(crate) fn build_pipeline_engine(
     }
 
     let (net_h, net_w, _) = manifest.net_input;
-    let mut pipeline = PipelinedDispatcher::new(plans, manifest.batch, net_h, net_w)?;
+    let mut pipeline = PipelinedDispatcher::new(plans, manifest.batch, net_h, net_w)?
+        .with_campaign(&config.campaign);
     if config.plan_cache {
         pipeline.telemetry.plan_cache = Some(plan_cache::global_stats().since(&cache_before));
     }
@@ -256,6 +263,9 @@ pub(crate) fn build_pipeline_engine(
             if let Some(n) = config.fail_every {
                 sim = sim.with_fail_every(n);
             }
+        }
+        if let Some(d) = config.campaign.drift_for(name) {
+            sim = sim.with_drift(d.rate, d.cap);
         }
         pipeline.add_stage_backend(name, Box::new(sim));
     }

@@ -50,6 +50,12 @@ pub struct SimBackend {
     /// hardware for wall-clock runs.
     service_s_per_frame: f64,
     service: ServiceMode,
+    /// Campaign drift: the device slows down as it ages.  The modeled
+    /// per-frame service time becomes `base * min(cap, 1 + rate * calls)`
+    /// — a pure function of the engine-invocation counter, so a drifting
+    /// run replays bit-identically.  `None` = no drift (report nothing
+    /// through `modeled_service_s`, the dispatcher keeps static profiles).
+    drift: Option<(f64, f64)>,
 }
 
 impl SimBackend {
@@ -79,6 +85,29 @@ impl SimBackend {
                 0.0
             },
             service: ServiceMode::Off,
+            drift: None,
+        }
+    }
+
+    /// Builder: slow the device down over its lifetime (space-environment
+    /// aging / thermal derating).  Each engine invocation multiplies the
+    /// modeled per-frame service time by `1 + rate * calls`, capped at
+    /// `cap`x the base — reported through [`Backend::modeled_service_s`]
+    /// so the dispatcher charges the degraded time and online
+    /// recalibration can observe the divergence.  Non-finite or negative
+    /// parameters disable drift.
+    pub fn with_drift(mut self, rate: f64, cap: f64) -> SimBackend {
+        if rate.is_finite() && rate > 0.0 && cap.is_finite() && cap >= 1.0 {
+            self.drift = Some((rate, cap));
+        }
+        self
+    }
+
+    /// Current drift multiplier (1.0 when drift is off).
+    fn drift_factor(&self) -> f64 {
+        match self.drift {
+            Some((rate, cap)) => (1.0 + rate * self.calls as f64).min(cap),
+            None => 1.0,
         }
     }
 
@@ -186,10 +215,16 @@ impl Backend for SimBackend {
         self.truths = truths.to_vec();
     }
 
+    fn modeled_service_s(&self) -> Option<f64> {
+        self.drift
+            .map(|_| self.service_s_per_frame * self.drift_factor())
+    }
+
     fn infer(&mut self, images: &Tensor) -> Result<(Tensor, Tensor)> {
         self.tick()?;
         let b = images.shape[0];
-        let service = std::time::Duration::from_secs_f64(self.service_s_per_frame * b as f64);
+        let per_frame = self.service_s_per_frame * self.drift_factor();
+        let service = std::time::Duration::from_secs_f64(per_frame * b as f64);
         self.service.serve(service);
         self.poses(b, self.loce_m, self.orie_deg)
     }
@@ -392,6 +427,27 @@ mod tests {
         let t0 = std::time::Instant::now();
         fast.infer(&images).unwrap();
         assert!(t0.elapsed() < std::time::Duration::from_millis(50));
+    }
+
+    #[test]
+    fn drift_degrades_modeled_service_deterministically() {
+        let base = 66.0 / 1e3;
+        let mut b = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3).with_drift(0.5, 2.0);
+        // Fresh device: no calls yet, factor 1.0.
+        assert!((b.modeled_service_s().unwrap() - base).abs() < 1e-12);
+        b.observe_truths(&truths(1));
+        let images = Tensor::zeros(vec![1, 6, 8, 3]);
+        b.infer(&images).unwrap(); // calls = 1 -> factor 1.5
+        assert!((b.modeled_service_s().unwrap() - base * 1.5).abs() < 1e-12);
+        b.infer(&images).unwrap(); // calls = 2 -> factor 2.0 (at cap)
+        b.infer(&images).unwrap(); // calls = 3 -> capped at 2.0
+        assert!((b.modeled_service_s().unwrap() - base * 2.0).abs() < 1e-12);
+        // Drift off: nothing reported, the dispatcher keeps its profile.
+        let plain = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3);
+        assert_eq!(plain.modeled_service_s(), None);
+        // Degenerate parameters disable drift rather than corrupting it.
+        let bad = SimBackend::new(Mode::DpuInt8, &profile(0.5, 5.0), 3).with_drift(f64::NAN, 0.0);
+        assert_eq!(bad.modeled_service_s(), None);
     }
 
     #[test]

@@ -117,6 +117,24 @@ impl TenantRecord {
     }
 }
 
+/// One eclipse-budget window's accounting (campaign runs only,
+/// DESIGN.md §4.16).  Every window of the schedule gets a record — even
+/// untouched ones — so the power story is never silent.  `PartialEq` so
+/// daemon/bench replay checks can compare whole vectors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerRecord {
+    /// Window start on the simulated timeline.
+    pub from: Duration,
+    /// Watt budget in force over the window.
+    pub budget_w: f64,
+    /// Peak modeled rolling draw observed in the window (0 if no
+    /// dispatch landed in it).
+    pub peak_w: f64,
+    /// Dispatches steered away from the unconstrained routing choice to
+    /// keep the rolling draw within budget.
+    pub steered: u64,
+}
+
 /// Aggregated run telemetry.
 #[derive(Debug, Default)]
 pub struct Telemetry {
@@ -163,6 +181,20 @@ pub struct Telemetry {
     /// Frame records dropped past `frame_record_cap` (aggregate stats
     /// like accuracy then cover the retained prefix only).
     pub records_dropped: u64,
+    /// Eclipse-budget window accounting (one entry per window of the
+    /// campaign's power schedule; empty outside a campaign).
+    pub power: Vec<PowerRecord>,
+    /// Routing candidates excluded by active storm fault windows
+    /// (campaign runs only; routine during a storm — counted, never
+    /// silent).
+    pub storm_excluded: u64,
+    /// Profile rewrites by online recalibration (modeled-vs-observed
+    /// divergence past the campaign threshold).
+    pub recalibrations: u64,
+    /// Frames power-shed by the serve pump while the modeled rolling
+    /// draw overran the eclipse budget (also counted in the owning
+    /// tenant's `shed`).
+    pub power_shed: u64,
 }
 
 impl Telemetry {
@@ -407,6 +439,29 @@ impl Telemetry {
                 let _ = write!(s, "  plan {plan}");
             }
         }
+        for w in &self.power {
+            let _ = write!(
+                s,
+                "\npower window @{:>6.1} s  budget {:>6.1} W  peak {:>6.1} W  steered {:>4}",
+                w.from.as_secs_f64(),
+                w.budget_w,
+                w.peak_w,
+                w.steered,
+            );
+        }
+        if self.storm_excluded > 0 {
+            let _ = write!(
+                s,
+                "\nstorm windows excluded {} routing candidates",
+                self.storm_excluded
+            );
+        }
+        if self.recalibrations > 0 {
+            let _ = write!(s, "\nonline recalibrations: {}", self.recalibrations);
+        }
+        if self.power_shed > 0 {
+            let _ = write!(s, "\npower-shed frames: {}", self.power_shed);
+        }
         if self.stale_events > 0 {
             let _ = write!(
                 s,
@@ -569,6 +624,41 @@ mod tests {
         assert!(r.contains("tenant rt"), "{r}");
         assert!(r.contains("shed    2"), "{r}");
         assert!(r.contains("misses    1"), "{r}");
+    }
+
+    #[test]
+    fn report_covers_campaign_blocks_only_when_present() {
+        let mut t = Telemetry::new();
+        t.record(rec(0, 10, 1.0));
+        // Outside a campaign none of the blocks appear.
+        let r = t.report();
+        assert!(!r.contains("power window"), "{r}");
+        assert!(!r.contains("storm"), "{r}");
+        assert!(!r.contains("recalibrations"), "{r}");
+        assert!(!r.contains("power-shed"), "{r}");
+        // Every power window reports, including untouched ones.
+        t.power.push(PowerRecord {
+            from: Duration::ZERO,
+            budget_w: 10.0,
+            peak_w: 4.0,
+            steered: 2,
+        });
+        t.power.push(PowerRecord {
+            from: Duration::from_secs(5),
+            budget_w: 4.0,
+            peak_w: 0.0,
+            steered: 0,
+        });
+        t.storm_excluded = 3;
+        t.recalibrations = 1;
+        t.power_shed = 7;
+        let r = t.report();
+        assert!(r.contains("budget   10.0 W"), "{r}");
+        assert!(r.contains("peak    4.0 W"), "{r}");
+        assert!(r.contains("budget    4.0 W"), "{r}");
+        assert!(r.contains("storm windows excluded 3"), "{r}");
+        assert!(r.contains("online recalibrations: 1"), "{r}");
+        assert!(r.contains("power-shed frames: 7"), "{r}");
     }
 
     #[test]

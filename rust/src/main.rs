@@ -20,9 +20,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use mpai::accel::interconnect::{links, Link};
 use mpai::accel::{deployed_latency, partition_latency, Accelerator, Cpu, Dpu, Tpu, Vpu};
 use mpai::coordinator::{
-    self, parse_tenant_file, parse_trace_file, ArrivalPattern, ChurnEvent, ClusterSpec, Config,
-    Constraints, DaemonSpec, EngineBuilder, EventQueueKind, ExecutorKind, Mode, Objective,
-    PartitionSpec, TenantTrace, WindowRecord, Workload,
+    self, parse_campaign_file, parse_tenant_file, parse_trace_file, ArrivalPattern, CampaignSpec,
+    ChurnEvent, ClusterSpec, Config, Constraints, DaemonSpec, DriftSpec, EngineBuilder,
+    EventQueueKind, ExecutorKind, FaultSpec, Mode, Objective, PartitionSpec, PowerSchedule,
+    RecalSpec, TenantTrace, WindowRecord, Workload,
 };
 use mpai::net::compiler::{compile, enumerate_cuts, select_cut, Partition};
 use mpai::net::models;
@@ -113,7 +114,11 @@ fn engine_options() -> Vec<(&'static str, &'static str, &'static str)> {
             "SPEC",
             "';'-separated per-node pools, cycled: class (dpu-heavy|vpu-heavy|tpu-heavy|mixed) or mode list",
         ),
-        ("kill-node", "SPEC", "repeatable: IDX@SECONDS — node fault injection (needs --nodes)"),
+        (
+            "kill-node",
+            "SPEC",
+            "repeatable: IDX@SECONDS — node fault injection (needs --nodes; deprecated spelling of --storm nodeIDX@T)",
+        ),
         ("link", "NAME", "boundary link: usb3|usb2|axi-hp|pcie-x1|csi2 (default usb3)"),
         ("executor", "KIND", "sim (deterministic replay) | threaded (wall-clock workers)"),
         ("time-scale", "X", "threaded: wall seconds per virtual second (default 0.01)"),
@@ -124,7 +129,32 @@ fn engine_options() -> Vec<(&'static str, &'static str, &'static str)> {
             "",
             "bypass the content-addressed plan cache (fresh partition sweep per request)",
         ),
-        ("fail-every", "N", "inject a fault every Nth infer on the first backend (sim)"),
+        (
+            "fail-every",
+            "N",
+            "inject a fault every Nth infer on the first backend (sim; deprecated — prefer --storm)",
+        ),
+        (
+            "storm",
+            "SPEC",
+            "repeatable: TARGET[+TARGET..]@T[:recover=S] — correlated fault storm over substrates/modes/nodeN (sim)",
+        ),
+        ("power", "SPEC", "eclipse power budget: T=W[,T=W..] or a bare wattage W (sim)"),
+        (
+            "recal",
+            "[SPEC]",
+            "online recalibration: bare flag or `on` = defaults, else alpha=A[,threshold=T]",
+        ),
+        (
+            "drift",
+            "SPEC",
+            "repeatable: SUBSTRATE[:rate=R][,cap=C] — per-call service-time drift (sim)",
+        ),
+        (
+            "campaign",
+            "FILE",
+            "JSON space-environment campaign: {\"storms\":[..], \"power\":\"..\", \"recal\":\"..\", \"drift\":[..]}",
+        ),
         ("timeout-ms", "MS", "batcher timeout (default 50)"),
         ("max-ms", "X", "constraint: max modeled total latency (ms)"),
         ("max-loce", "X", "constraint: max localization error (m)"),
@@ -143,6 +173,7 @@ struct EngineArgs {
     cluster: Option<ClusterSpec>,
     boundary_link: Link,
     fail_every: Option<usize>,
+    campaign: CampaignSpec,
     executor: ExecutorKind,
     time_scale: f64,
     events: EventQueueKind,
@@ -196,6 +227,38 @@ impl EngineArgs {
             Some(_) => Some(a.get_usize("fail-every", 0)?),
             None => None,
         };
+        // The space-environment campaign: a JSON file sets the base, then
+        // the per-axis CLI options layer on (storms/drifts append, power
+        // and recal replace).
+        let mut campaign = match a.get("campaign") {
+            None => CampaignSpec::default(),
+            Some(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading --campaign file {path:?}"))?;
+                parse_campaign_file(&text).map_err(|e| anyhow!("bad --campaign {path:?}: {e}"))?
+            }
+        };
+        for s in a.get_all("storm") {
+            campaign
+                .faults
+                .extend(FaultSpec::parse(s).map_err(|e| anyhow!("bad --storm: {e}"))?);
+        }
+        if let Some(s) = a.get("power") {
+            campaign.power = PowerSchedule::parse(s).map_err(|e| anyhow!("bad --power: {e}"))?;
+        }
+        if let Some(s) = a.get("recal") {
+            campaign.recal = Some(RecalSpec::parse(s).map_err(|e| anyhow!("bad --recal: {e}"))?);
+        } else if a.flag("recal") {
+            campaign.recal = Some(RecalSpec::default());
+        }
+        for s in a.get_all("drift") {
+            campaign
+                .drift
+                .push(DriftSpec::parse(s).map_err(|e| anyhow!("bad --drift: {e}"))?);
+        }
+        if cluster.is_none() && !campaign.node_faults().is_empty() {
+            bail!("--storm nodeIDX@T needs --nodes N");
+        }
         let executor = ExecutorKind::parse(a.get_or("executor", "sim"))
             .context("bad --executor (sim | threaded)")?;
         let events = EventQueueKind::parse(a.get_or("events", "sharded"))
@@ -206,6 +269,7 @@ impl EngineArgs {
             cluster,
             boundary_link,
             fail_every,
+            campaign,
             executor,
             time_scale: a.get_f64("time-scale", 0.01)?,
             events,
@@ -224,6 +288,7 @@ impl EngineArgs {
             pool: self.pool.clone(),
             sim: self.sim,
             fail_every: self.fail_every,
+            campaign: self.campaign.clone(),
             constraints: self.constraints,
             partition: self.partition.clone(),
             boundary_link: self.boundary_link,
@@ -259,7 +324,26 @@ impl EngineArgs {
             Some(c) => format!(" nodes {} ({} kill(s))", c.nodes.len(), c.kills.len()),
             None => String::new(),
         };
-        format!("{split}{nodes}")
+        let campaign = if self.campaign.is_empty() {
+            String::new()
+        } else {
+            let c = &self.campaign;
+            let mut axes = Vec::new();
+            if !c.faults.is_empty() {
+                axes.push(format!("{} storm window(s)", c.faults.len()));
+            }
+            if !c.power.is_empty() {
+                axes.push(format!("{} power window(s)", c.power.windows().len()));
+            }
+            if c.recal.is_some() {
+                axes.push("recal".to_string());
+            }
+            if !c.drift.is_empty() {
+                axes.push(format!("{} drift(s)", c.drift.len()));
+            }
+            format!(" campaign [{}]", axes.join(", "))
+        };
+        format!("{split}{nodes}{campaign}")
     }
 }
 
